@@ -1,0 +1,90 @@
+//! **The end-to-end driver** (EXPERIMENTS.md §E2E): loads the three
+//! build-time-trained transformers, quantizes each with the paper's method
+//! grid, and evaluates perplexity (3 held-out streams) and QA (7 probe
+//! suites) through the AOT-compiled PJRT executables — the full Table-1
+//! analog, proving L3 (solvers + coordinator) × L2 (HLO model) × runtime
+//! compose.
+//!
+//! Usage:
+//!   cargo run --release --example quantize_model            # full grid
+//!   cargo run --release --example quantize_model -- --model small
+//!   cargo run --release --example quantize_model -- --setting per-tensor
+//!   cargo run --release --example quantize_model -- --fast  # wgm+fp only
+
+use anyhow::Result;
+use msb_quant::cli::Args;
+use msb_quant::harness::{eval_quantized, Artifacts};
+use msb_quant::pipeline::Method;
+use msb_quant::quant::QuantConfig;
+use msb_quant::runtime::ModelRunner;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let arts = Artifacts::load()?;
+    let model_filter = args.get("model").map(String::from);
+    let setting = args.str_or("setting", "block").to_string();
+    let fast = args.has("fast");
+    let threads = args.usize_or("threads", 1)?;
+
+    let (cfg, per_tensor, label) = match setting.as_str() {
+        "block" => (QuantConfig::block_wise(4, 64).with_window(1), false, "4-bit block-wise"),
+        "per-tensor" => (QuantConfig::per_tensor(6).with_window(64), true, "6-bit per-tensor"),
+        s => anyhow::bail!("--setting {s}? use block|per-tensor"),
+    };
+
+    let mut grid = vec![Method::Fp];
+    if fast {
+        grid.push(Method::Wgm);
+    } else {
+        grid.extend(Method::table1_grid(per_tensor));
+    }
+
+    println!("=== Table 1 analog: {label} ===");
+    println!(
+        "(models are the build-time-trained stand-ins; see DESIGN.md Substitutions)\n"
+    );
+
+    let mut rows = Vec::new();
+    for spec in arts.manifest.models.clone() {
+        if let Some(f) = &model_filter {
+            if &spec.name != f {
+                continue;
+            }
+        }
+        println!("-- model {} ({} params) --", spec.name, spec.total_params());
+        let weights = arts.weights(&spec)?;
+        let mut runner = ModelRunner::new(&arts.manifest, &spec, &weights)?;
+        for &method in &grid {
+            let report =
+                eval_quantized(&arts, &spec, &mut runner, &weights, method, &cfg, threads)?;
+            println!("  {}", report.row());
+            rows.push(report);
+        }
+        println!();
+    }
+
+    // paper-shaped summary: does WGM beat GPTQ/RTN and track FP?
+    println!("=== summary ===");
+    for chunk in rows.chunks_exact(grid.len()) {
+        let fp = &chunk[0];
+        let best_q = chunk[1..]
+            .iter()
+            .min_by(|a, b| a.avg_ppl().total_cmp(&b.avg_ppl()))
+            .unwrap();
+        let wgm = chunk.iter().find(|r| r.method == "wgm");
+        println!(
+            "{:<6}: FP ppl {:.2}; best quantized = {} ({:.2}){}",
+            fp.model,
+            fp.avg_ppl(),
+            best_q.method,
+            best_q.avg_ppl(),
+            wgm.map(|w| format!(
+                "; wgm {:.2} ({:+.1}% vs FP)",
+                w.avg_ppl(),
+                (w.avg_ppl() / fp.avg_ppl() - 1.0) * 100.0
+            ))
+            .unwrap_or_default()
+        );
+    }
+    Ok(())
+}

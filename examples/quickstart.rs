@@ -1,0 +1,72 @@
+//! Quickstart: quantize a synthetic weight matrix with every
+//! calibration-free method and compare reconstruction error — no artifacts
+//! required. Run with `cargo run --release --example quickstart`.
+
+use msb_quant::msb::{lambda, Algo, Solver, SortedMags};
+use msb_quant::quant::{
+    hqq::HqqQuantizer, msb::MsbQuantizer, nf4::Nf4Quantizer, rtn::RtnQuantizer,
+    xnor::XnorQuantizer, QuantConfig, Quantizer,
+};
+use msb_quant::stats::Rng;
+use msb_quant::tensor::Matrix;
+
+fn main() {
+    // A heavy-tailed "LLM-like" weight matrix: Gaussian bulk + outliers.
+    let mut rng = Rng::new(42);
+    let w = Matrix::weightlike(512, 512, &mut rng);
+    println!("matrix 512x512, ||W||_F = {:.3}\n", w.fro_norm());
+
+    // --- 4-bit block-wise (the paper's primary setting) ------------------
+    let cfg = QuantConfig::block_wise(4, 64);
+    println!("4-bit block-wise (t=64):        SSE        bits/weight");
+    let methods: Vec<Box<dyn Quantizer>> = vec![
+        Box::new(RtnQuantizer::symmetric()),
+        Box::new(Nf4Quantizer::nf4()),
+        Box::new(HqqQuantizer::default()),
+        Box::new(XnorQuantizer::blocked()),
+        Box::new(MsbQuantizer::wgm()),
+    ];
+    for m in &methods {
+        let t0 = std::time::Instant::now();
+        let q = m.quantize(&w, &cfg);
+        println!(
+            "  {:<14} {:>12.4}   {:>6.2}   ({:.2}s)",
+            m.name(),
+            q.mse(&w),
+            q.effective_bits,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    // --- 6-bit per-tensor --------------------------------------------------
+    let cfg6 = QuantConfig::per_tensor(6);
+    println!("\n6-bit per-tensor (w=64):");
+    for m in [MsbQuantizer::wgm(), MsbQuantizer::wgm_lo()] {
+        let t0 = std::time::Instant::now();
+        let q = m.quantize(&w, &cfg6);
+        println!(
+            "  {:<14} {:>12.4}   {:>6.2}   ({:.2}s)",
+            m.name(),
+            q.mse(&w),
+            q.effective_bits,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    // --- the objective itself -----------------------------------------------
+    let sm = SortedMags::from_values(&w.data);
+    println!(
+        "\nλ boundary theory (Appendix C): λ_min ≈ {:.3e}, λ_max ≈ {:.3e}, Λ(0.75) = {:.3e}",
+        lambda::lambda_min(&sm.mags),
+        lambda::lambda_max(&sm.mags),
+        lambda::lambda_of(0.75, &sm.mags),
+    );
+
+    // one-group MSB == XNOR, the conceptual anchor (§2.2)
+    let xnor_like = Solver::new(Algo::Gg).quantize(&w.data, 1);
+    println!(
+        "MSB with g=1 degenerates to XNOR: single scale α = {:.5} (mean |w| = {:.5})",
+        xnor_like.levels[0],
+        w.data.iter().map(|v| v.abs() as f64).sum::<f64>() / w.len() as f64
+    );
+}

@@ -1,0 +1,115 @@
+//! Serving demo: a long-lived eval server owns the PJRT-compiled model,
+//! dynamic-batches concurrent scoring requests, and reports latency /
+//! throughput / batch-fill telemetry — the request path with Python
+//! nowhere in sight.
+//!
+//!   cargo run --release --example serve_eval -- [--model small]
+//!       [--requests 64] [--clients 8] [--method wgm]
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use msb_quant::cli::Args;
+use msb_quant::harness::Artifacts;
+use msb_quant::pipeline::{quantize_model, Method};
+use msb_quant::quant::QuantConfig;
+use msb_quant::runtime::ModelRunner;
+use msb_quant::server::EvalServer;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let arts = Artifacts::load()?;
+    let spec = arts.manifest.model(args.str_or("model", "small"))?.clone();
+    let n_requests = args.usize_or("requests", 64)?;
+    let n_clients = args.usize_or("clients", 8)?;
+    let method = Method::parse(args.str_or("method", "wgm"))?;
+
+    // offline PTQ step (L3 coordinator), then serve the quantized model
+    let weights = arts.weights(&spec)?;
+    let cfg = QuantConfig::block_wise(4, 64);
+    let calib;
+    let calib_ref = if method.needs_calibration() {
+        calib = arts.calib(&spec)?;
+        Some(&calib)
+    } else {
+        None
+    };
+    let qm = quantize_model(&spec, &weights, calib_ref, method, &cfg, 1)?;
+    println!(
+        "serving {} quantized with {} ({:.2} bits/weight, PTQ took {:.2}s)",
+        spec.name,
+        method.name(),
+        if qm.layers.is_empty() { 16.0 } else { qm.mean_effective_bits() },
+        qm.wall_seconds
+    );
+
+    // PJRT handles are not Send: the server thread builds the runner itself
+    let manifest = arts.manifest.clone();
+    let spec_for_server = spec.clone();
+    let qweights = qm.weights.clone();
+    let base_weights = weights.clone();
+    let (server, client) = EvalServer::spawn_with(
+        move || {
+            let mut runner = ModelRunner::new(&manifest, &spec_for_server, &base_weights)
+                .expect("compile model in server thread");
+            runner.update_weights(&qweights).expect("swap quantized weights");
+            runner
+        },
+        Duration::from_millis(5),
+    );
+
+    // fire concurrent clients scoring held-out windows
+    let stream = arts.eval_stream("eval_wk")?.to_vec();
+    let seq = spec.seq;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let client = client.clone();
+        let stream = stream.clone();
+        let per_client = n_requests / n_clients;
+        handles.push(std::thread::spawn(move || -> (f64, Vec<f64>) {
+            let mut nll = 0.0;
+            let mut lat = Vec::new();
+            let mut count = 0usize;
+            for r in 0..per_client {
+                let start = ((c * 7919 + r * 104729) % (stream.len() - seq)) as usize;
+                let toks = stream[start..start + seq].to_vec();
+                let t = Instant::now();
+                let resp = client.score(toks).expect("score");
+                lat.push(t.elapsed().as_secs_f64() * 1e3);
+                nll -= resp.logprobs.iter().sum::<f64>() / resp.logprobs.len() as f64;
+                count += 1;
+            }
+            (nll / count as f64, lat)
+        }));
+    }
+    let mut all_lat = Vec::new();
+    let mut mean_nll = 0.0;
+    for h in handles {
+        let (nll, lat) = h.join().expect("client thread");
+        mean_nll += nll / n_clients as f64;
+        all_lat.extend(lat);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(client);
+    let stats = server.shutdown();
+
+    all_lat.sort_by(f64::total_cmp);
+    let p = |q: f64| all_lat[((all_lat.len() - 1) as f64 * q) as usize];
+    println!("\n{} requests over {} clients in {:.2}s", stats.requests, n_clients, wall);
+    println!(
+        "throughput {:.1} req/s | latency p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms",
+        stats.requests as f64 / wall,
+        p(0.5),
+        p(0.9),
+        p(0.99)
+    );
+    println!(
+        "batches {} (mean fill {:.2}, max {}) | stream ppl≈{:.2}",
+        stats.batches,
+        stats.requests as f64 / stats.batches.max(1) as f64,
+        stats.max_batch_fill,
+        mean_nll.exp()
+    );
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Solver playground: the four algorithms head-to-head on synthetic
+//! instances — oracle gap, speed-quality tradeoff, window sensitivity.
+//! No artifacts needed.
+//!
+//!   cargo run --release --example solver_playground [-- --n 262144]
+
+use msb_quant::cli::Args;
+use msb_quant::msb::{Algo, Solver};
+use msb_quant::stats::Rng;
+
+fn run(algo: Algo, vals: &[f32], groups: usize) -> (f64, f64) {
+    let solver = Solver::new(algo).with_lambda(0.75);
+    let t0 = std::time::Instant::now();
+    let code = solver.quantize(vals, groups);
+    (code.sse(vals), t0.elapsed().as_secs_f64())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let n = args.usize_or("n", 1 << 16)?;
+    let groups = args.usize_or("groups", 8)?;
+    let mut rng = Rng::new(args.usize_or("seed", 3)? as u64);
+    let mut vals = vec![0.0f32; n];
+    rng.fill_normal(&mut vals, 1.0);
+
+    println!("instance: N(0,1), n = {n}, target groups = {groups}\n");
+    println!("{:<22} {:>14} {:>10} {:>12}", "solver", "SSE", "time (s)", "Melem/s");
+
+    // DG oracle only on a subsample (O(n²) — same infeasibility the paper
+    // reports in Table 4)
+    let dg_n = n.min(2048);
+    let (dg_sse, dg_t) = run(Algo::Dg, &vals[..dg_n], groups);
+    println!(
+        "{:<22} {:>14.4} {:>10.3} {:>12.2}   (on first {} elems only)",
+        "dg (oracle)", dg_sse, dg_t, dg_n as f64 / dg_t / 1e6, dg_n
+    );
+    // heuristics on the same subsample for a direct gap readout
+    for (name, algo) in [
+        ("gg @dg-subsample", Algo::Gg),
+        ("wgm w=16 @subsample", Algo::Wgm { window: 16 }),
+    ] {
+        let (sse, t) = run(algo, &vals[..dg_n], groups);
+        println!(
+            "{:<22} {:>14.4} {:>10.3} {:>12.2}   (gap {:+.2}%)",
+            name,
+            sse,
+            t,
+            dg_n as f64 / t / 1e6,
+            (sse / dg_sse - 1.0) * 100.0
+        );
+    }
+    println!();
+
+    // full instance: the production solvers
+    for (name, algo) in [
+        ("gg", Algo::Gg),
+        ("wgm w=16", Algo::Wgm { window: 16 }),
+        ("wgm w=64", Algo::Wgm { window: 64 }),
+        ("wgm w=256", Algo::Wgm { window: 256 }),
+        (
+            "wgm-lo (256 bins)",
+            Algo::WgmLo { bins: 256, range: 32, max_iters: 12, patience: 3 },
+        ),
+    ] {
+        let (sse, t) = run(algo, &vals, groups);
+        println!("{:<22} {:>14.4} {:>10.3} {:>12.2}", name, sse, t, n as f64 / t / 1e6);
+    }
+
+    println!(
+        "\nexpected shape (paper §3.3): SSE dg ≤ gg ≤ wgm(w↑), time gg ≫ wgm ≫ wgm-lo"
+    );
+    Ok(())
+}

@@ -1,0 +1,276 @@
+"""AOT build: corpus -> train -> calibrate -> export artifacts/.
+
+Run once via ``make artifacts``. Outputs (all consumed by the rust layer,
+never by python at runtime):
+
+    manifest.json            model configs, ABI order, file index
+    corpus_tokens.msbt       train excerpt + 3 held-out eval streams
+    probes.msbt              7 QA probe suites (flattened int arrays)
+    {model}_weights.msbt     trained f32 weights (ABI names)
+    {model}_calib.msbt       per-layer Gram matrices H = X^T X for GPTQ
+    {model}_fwd.hlo.txt      logits executable, tokens [B, T] + flat weights
+    small_fwd_msb.hlo.txt    native MSB path: Pallas kernel on (codes, scales)
+    training_log.json        loss curves (EXPERIMENTS.md e2e record)
+
+HLO **text** is the interchange format (not serialized protos): jax >= 0.5
+emits 64-bit instruction ids that the crate's xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus as corpus_mod
+from .kernels.ref import msb_quantize_ref
+from .model import ModelConfig, forward_flat, forward_msb_flat, model_zoo, param_specs
+from .msbt import write_msbt
+from .tokenizer import CharTokenizer
+from .train import train_model
+
+SEED = 1234
+EVAL_BATCH = 8
+TRAIN_SENTENCES = 4000
+EVAL_SENTENCES = 400
+PROBES_PER_SUITE = 100
+CALIB_SEQUENCES = 32
+MSB_BLOCK = 64
+TRAIN_STEPS = {"tiny": 300, "small": 300, "base": 350}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# GPTQ calibration: capture linear-layer inputs, accumulate Gram matrices.
+# Reimplements the forward with taps (non-jit) — build-time only, small cost.
+# ---------------------------------------------------------------------------
+
+def calib_grams(cfg: ModelConfig, params: dict, toks: np.ndarray) -> dict[str, np.ndarray]:
+    from .model import _attention, _rmsnorm  # internals, build-time only
+
+    grams: dict[str, np.ndarray] = {}
+
+    def tap(name: str, x: jnp.ndarray):
+        flat = np.asarray(x, dtype=np.float64).reshape(-1, x.shape[-1])
+        g = flat.T @ flat
+        grams[name] = grams.get(name, 0.0) + g
+
+    def lin(x, w):
+        return x @ w.T
+
+    x = params["tok_emb"][jnp.asarray(toks)] + params["pos_emb"][: toks.shape[1]][None]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        z1 = _rmsnorm(x, params[p + "ln1_g"])
+        for nm in ("wq", "wk", "wv"):
+            tap(p + nm, z1)
+        # re-run attention but capture the pre-wo activation
+        b, t, d = z1.shape
+        h_, hd = cfg.heads, cfg.head_dim
+        q = lin(z1, params[p + "wq"]).reshape(b, t, h_, hd).transpose(0, 2, 1, 3)
+        k = lin(z1, params[p + "wk"]).reshape(b, t, h_, hd).transpose(0, 2, 1, 3)
+        v = lin(z1, params[p + "wv"]).reshape(b, t, h_, hd).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd)
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        att = jax.nn.softmax(jnp.where(mask, att, -1e9), axis=-1)
+        y = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3).reshape(b, t, d)
+        tap(p + "wo", y)
+        h = x + lin(y, params[p + "wo"])
+        z2 = _rmsnorm(h, params[p + "ln2_g"])
+        tap(p + "w_gate", z2)
+        tap(p + "w_up", z2)
+        mid = jax.nn.silu(lin(z2, params[p + "w_gate"])) * lin(z2, params[p + "w_up"])
+        tap(p + "w_down", mid)
+        x = h + lin(mid, params[p + "w_down"])
+    return {k: v.astype(np.float32) for k, v in grams.items()}
+
+
+# ---------------------------------------------------------------------------
+# Probe flattening
+# ---------------------------------------------------------------------------
+
+def flatten_probes(suites, tok: CharTokenizer) -> tuple[dict[str, np.ndarray], list[dict]]:
+    tensors: dict[str, np.ndarray] = {}
+    meta = []
+    for s in suites:
+        p_tok, p_off = [], [0]
+        c_tok, c_off = [], [0]
+        c_cnt, ans = [], []
+        for pr in s.probes:
+            ids = tok.encode(pr.prompt)
+            p_tok += ids
+            p_off.append(len(p_tok))
+            for c in pr.candidates:
+                cids = tok.encode(c)
+                c_tok += cids
+                c_off.append(len(c_tok))
+            c_cnt.append(len(pr.candidates))
+            ans.append(pr.answer)
+        pre = s.name
+        tensors[f"{pre}.prompt_tok"] = np.asarray(p_tok, np.int32)
+        tensors[f"{pre}.prompt_off"] = np.asarray(p_off, np.int32)
+        tensors[f"{pre}.cand_tok"] = np.asarray(c_tok, np.int32)
+        tensors[f"{pre}.cand_off"] = np.asarray(c_off, np.int32)
+        tensors[f"{pre}.cand_count"] = np.asarray(c_cnt, np.int32)
+        tensors[f"{pre}.answer"] = np.asarray(ans, np.int32)
+        meta.append({"name": s.name, "n": len(s.probes)})
+    return tensors, meta
+
+
+# ---------------------------------------------------------------------------
+# Main build
+# ---------------------------------------------------------------------------
+
+def build(out_dir: str, quick: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    tok = CharTokenizer()
+    t_start = time.time()
+
+    n_train = 400 if quick else TRAIN_SENTENCES
+    n_eval = 80 if quick else EVAL_SENTENCES
+    steps = {k: (30 if quick else v) for k, v in TRAIN_STEPS.items()}
+
+    print("== corpus ==", flush=True)
+    train_text = corpus_mod.build_training_corpus(n_train, SEED)
+    eval_texts = corpus_mod.build_eval_corpora(n_eval, SEED)
+    train_stream = np.asarray(tok.encode(train_text), np.int32)
+    eval_streams = {f: np.asarray(tok.encode(t), np.int32) for f, t in eval_texts.items()}
+    print(f"  train tokens: {len(train_stream)}; eval: "
+          f"{ {f: len(s) for f, s in eval_streams.items()} }")
+
+    suites = corpus_mod.build_probe_suites(8 if quick else PROBES_PER_SUITE, SEED)
+    probe_tensors, probe_meta = flatten_probes(suites, tok)
+    write_msbt(os.path.join(out_dir, "probes.msbt"), probe_tensors)
+
+    tokens_out = {"train_excerpt": train_stream[:50_000]}
+    for f, s in eval_streams.items():
+        tokens_out[f"eval_{f}"] = s
+    write_msbt(os.path.join(out_dir, "corpus_tokens.msbt"), tokens_out)
+
+    zoo = model_zoo(tok.vocab_size)
+    if quick:
+        zoo = zoo[:1]
+    manifest: dict = {
+        "seed": SEED,
+        "vocab": tok.vocab_size,
+        "msb_block": MSB_BLOCK,
+        "eval_batch": EVAL_BATCH,
+        "eval_streams": sorted(f"eval_{f}" for f in eval_streams),
+        "probe_suites": probe_meta,
+        "models": [],
+    }
+    training_log = {}
+
+    for cfg in zoo:
+        print(f"== train {cfg.name} (d={cfg.d} L={cfg.layers}) ==", flush=True)
+        params, log = train_model(cfg, train_stream, steps[cfg.name], seed=SEED)
+        training_log[cfg.name] = log
+
+        np_params = {k: np.asarray(v) for k, v in params.items()}
+        write_msbt(os.path.join(out_dir, f"{cfg.name}_weights.msbt"), np_params)
+
+        print(f"== calibrate {cfg.name} (GPTQ Grams) ==", flush=True)
+        rng = np.random.default_rng(SEED + 7)
+        starts = rng.integers(0, len(train_stream) - cfg.seq, CALIB_SEQUENCES)
+        calib_toks = np.stack([train_stream[s : s + cfg.seq] for s in starts])
+        grams = calib_grams(cfg, params, calib_toks)
+        write_msbt(os.path.join(out_dir, f"{cfg.name}_calib.msbt"), grams)
+
+        print(f"== lower {cfg.name}_fwd ==", flush=True)
+        tok_spec = jax.ShapeDtypeStruct((EVAL_BATCH, cfg.seq), jnp.int32)
+        w_specs = [
+            jax.ShapeDtypeStruct(shape, jnp.float32)
+            for _, shape, _ in param_specs(cfg)
+        ]
+        fn = lambda tokens, *flat: (forward_flat(cfg, tokens, *flat),)
+        lowered = jax.jit(fn).lower(tok_spec, *w_specs)
+        hlo = to_hlo_text(lowered)
+        hlo_path = f"{cfg.name}_fwd.hlo.txt"
+        with open(os.path.join(out_dir, hlo_path), "w") as f:
+            f.write(hlo)
+        print(f"  wrote {hlo_path} ({len(hlo)} chars)")
+
+        manifest["models"].append(
+            {
+                "name": cfg.name,
+                "d": cfg.d,
+                "layers": cfg.layers,
+                "heads": cfg.heads,
+                "ff": cfg.ff,
+                "seq": cfg.seq,
+                "params": [
+                    {"name": n, "shape": list(s), "quant": q}
+                    for n, s, q in param_specs(cfg)
+                ],
+                "weights": f"{cfg.name}_weights.msbt",
+                "calib": f"{cfg.name}_calib.msbt",
+                "fwd_hlo": hlo_path,
+            }
+        )
+
+    # Native MSB-kernel executable for the `small` model (L1 integration
+    # proof): quantizable linears consume (codes, scales) via the Pallas
+    # kernel. Skipped in --quick mode (tiny-only zoo).
+    kernel_model = next((m for m in zoo if m.name == "small"), None)
+    if kernel_model is not None:
+        cfg = kernel_model
+        print("== lower small_fwd_msb (Pallas MSB kernel path) ==", flush=True)
+        specs = param_specs(cfg)
+        flat_specs: list[jax.ShapeDtypeStruct] = []
+        for n, s, q in specs:
+            if not q:
+                flat_specs.append(jax.ShapeDtypeStruct(s, jnp.float32))
+        levels = 8  # 4-bit: 2^(b-1)
+        for n, s, q in specs:
+            if q:
+                out_d, in_d = s
+                flat_specs.append(jax.ShapeDtypeStruct((out_d, in_d), jnp.int8))
+                flat_specs.append(
+                    jax.ShapeDtypeStruct((out_d, in_d // MSB_BLOCK, levels), jnp.float32)
+                )
+        tok_spec = jax.ShapeDtypeStruct((4, cfg.seq), jnp.int32)
+        fn = lambda tokens, *flat: (forward_msb_flat(cfg, MSB_BLOCK, tokens, *flat),)
+        lowered = jax.jit(fn).lower(tok_spec, *flat_specs)
+        hlo = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, "small_fwd_msb.hlo.txt"), "w") as f:
+            f.write(hlo)
+        print(f"  wrote small_fwd_msb.hlo.txt ({len(hlo)} chars)")
+        manifest["msb_kernel_model"] = {
+            "name": "small",
+            "hlo": "small_fwd_msb.hlo.txt",
+            "batch": 4,
+            "levels": levels,
+        }
+
+    with open(os.path.join(out_dir, "training_log.json"), "w") as f:
+        json.dump(training_log, f, indent=1)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"== artifacts complete in {time.time() - t_start:.1f}s ==")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny-only, few steps; for CI smoke")
+    args = ap.parse_args()
+    build(args.out, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

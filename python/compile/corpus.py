@@ -1,0 +1,256 @@
+"""Deterministic synthetic corpus + QA probe generators.
+
+The paper evaluates on WikiText-2 / PTB / C4 perplexity and seven zero-shot
+QA suites. We have no license-clean copies of those in this offline image,
+so we substitute three differently-flavoured synthetic sub-corpora (``wk``:
+narrative prose, ``pt``: telegraphic headlines, ``c4``: web boilerplate) and
+seven synthetic multiple-choice probe families whose answers are learnable
+from the training corpus. The *evaluation mechanism* (perplexity deltas and
+argmax-logprob multiple choice) is identical to the paper's; see
+DESIGN.md "Substitutions".
+
+Everything is driven by ``random.Random(seed)`` so artifacts are
+reproducible bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+NOUNS = [
+    "cat", "dog", "bird", "fish", "tree", "river", "stone", "cloud",
+    "house", "road", "ship", "star", "field", "horse", "wolf", "crow",
+]
+ADJS = [
+    "old", "small", "quiet", "bright", "dark", "slow", "quick", "cold",
+    "warm", "tall", "short", "pale", "loud", "soft", "sharp", "plain",
+]
+VERBS = [
+    "sees", "finds", "follows", "carries", "watches", "passes", "guards",
+    "holds", "meets", "leaves", "crosses", "circles", "avoids", "greets",
+]
+PLACES = ["hill", "lake", "wall", "gate", "bridge", "market", "harbor", "tower"]
+
+# fixed subject -> sound association used by the "agreement" probe family
+SOUND_OF = {
+    "cat": "purrs", "dog": "barks", "bird": "sings", "wolf": "howls",
+    "crow": "caws", "horse": "neighs", "fish": "bubbles", "river": "murmurs",
+}
+
+# fixed key -> value table used by the "retrieval" probe family
+KV_KEYS = [f"k{i}" for i in range(8)]
+KV_VALS = [f"v{i}" for i in range(8)]
+
+
+def _sentence_wk(rng: random.Random) -> str:
+    a, b = rng.choice(ADJS), rng.choice(ADJS)
+    n1, n2 = rng.choice(NOUNS), rng.choice(NOUNS)
+    v = rng.choice(VERBS)
+    p = rng.choice(PLACES)
+    return f"the {a} {n1} {v} the {b} {n2} near the {p} ."
+
+
+def _sentence_pt(rng: random.Random) -> str:
+    n1, n2 = rng.choice(NOUNS), rng.choice(NOUNS)
+    v = rng.choice(VERBS)
+    a = rng.choice(ADJS)
+    return f"{n1} {v} {n2} ; {n2} {a} ."
+
+
+def _sentence_c4(rng: random.Random) -> str:
+    n = rng.choice(NOUNS)
+    a = rng.choice(ADJS)
+    k = rng.randrange(100)
+    return f"item {k} : {a} {n} | click here | page {k % 10} of 10 ."
+
+
+def _pattern_agreement(rng: random.Random) -> str:
+    s = rng.choice(list(SOUND_OF))
+    return f"the {s} {SOUND_OF[s]} ."
+
+
+def _pattern_ordering(rng: random.Random) -> str:
+    start = rng.randrange(0, 22)
+    run = "abcdefghijklmnopqrstuvwxyz"[start : start + 5]
+    return " ".join(run) + " ."
+
+
+def _pattern_copy(rng: random.Random) -> str:
+    w = rng.choice(NOUNS)
+    return f"{w} {w} {w} {w} ."
+
+
+def _pattern_arith(rng: random.Random) -> str:
+    a = rng.randrange(0, 5)
+    b = rng.randrange(0, 5)
+    return f"{a} + {b} = {a + b} ."
+
+
+def _pattern_parity(rng: random.Random) -> str:
+    n = rng.randrange(0, 10)
+    word = "even" if n % 2 == 0 else "odd"
+    return f"{n} is {word} ."
+
+
+def _pattern_retrieval(rng: random.Random) -> str:
+    i = rng.randrange(len(KV_KEYS))
+    return f"key {KV_KEYS[i]} value {KV_VALS[i]} . recall {KV_KEYS[i]} gives {KV_VALS[i]} ."
+
+
+_FLAVOURS = {
+    "wk": _sentence_wk,
+    "pt": _sentence_pt,
+    "c4": _sentence_c4,
+}
+
+_PATTERNS = [
+    _pattern_agreement,
+    _pattern_ordering,
+    _pattern_copy,
+    _pattern_arith,
+    _pattern_parity,
+    _pattern_retrieval,
+]
+
+
+def build_corpus(flavour: str, n_sentences: int, seed: int) -> str:
+    """One flavoured sub-corpus, with probe-pattern lines interleaved so the
+    trained model can score above chance on the QA suites."""
+    rng = random.Random((seed, flavour).__hash__() & 0x7FFFFFFF)
+    gen = _FLAVOURS[flavour]
+    out = []
+    for i in range(n_sentences):
+        out.append(gen(rng))
+        if i % 3 == 2:  # dense pattern supervision
+            out.append(_PATTERNS[rng.randrange(len(_PATTERNS))](rng))
+    return "\n".join(out) + "\n"
+
+
+def build_training_corpus(n_sentences_per_flavour: int, seed: int) -> str:
+    parts = [build_corpus(f, n_sentences_per_flavour, seed) for f in _FLAVOURS]
+    return "".join(parts)
+
+
+def build_eval_corpora(n_sentences: int, seed: int) -> dict[str, str]:
+    """Held-out eval streams; seed offset keeps them disjoint from training."""
+    return {f: build_corpus(f, n_sentences, seed + 10_001) for f in _FLAVOURS}
+
+
+# ----------------------------------------------------------------------------
+# QA probes: 7 task families, each a list of (prompt, candidates, answer_idx)
+# ----------------------------------------------------------------------------
+
+
+@dataclass
+class Probe:
+    prompt: str
+    candidates: list[str]
+    answer: int
+
+
+@dataclass
+class ProbeSuite:
+    name: str
+    probes: list[Probe] = field(default_factory=list)
+
+
+def _distractors(rng: random.Random, pool: list[str], correct: str, k: int) -> list[str]:
+    ds = [w for w in pool if w != correct]
+    rng.shuffle(ds)
+    return ds[:k]
+
+
+def _mk_probe(rng: random.Random, prompt: str, correct: str, pool: list[str]) -> Probe:
+    cands = _distractors(rng, pool, correct, 3) + [correct]
+    rng.shuffle(cands)
+    return Probe(prompt, cands, cands.index(correct))
+
+
+def _suite_cloze(rng: random.Random, n: int) -> ProbeSuite:
+    s = ProbeSuite("cloze")
+    for _ in range(n):
+        a, b = rng.choice(ADJS), rng.choice(ADJS)
+        n1, n2 = rng.choice(NOUNS), rng.choice(NOUNS)
+        v = rng.choice(VERBS)
+        p = rng.choice(PLACES)
+        prompt = f"the {a} {n1} {v} the {b} {n2} near the"
+        s.probes.append(_mk_probe(rng, prompt, f" {p}", [f" {x}" for x in PLACES]))
+    return s
+
+
+def _suite_agreement(rng: random.Random, n: int) -> ProbeSuite:
+    s = ProbeSuite("agreement")
+    sounds = sorted(set(SOUND_OF.values()))
+    for _ in range(n):
+        subj = rng.choice(list(SOUND_OF))
+        prompt = f"the {subj}"
+        s.probes.append(_mk_probe(rng, prompt, f" {SOUND_OF[subj]}", [f" {x}" for x in sounds]))
+    return s
+
+
+def _suite_ordering(rng: random.Random, n: int) -> ProbeSuite:
+    s = ProbeSuite("ordering")
+    alpha = "abcdefghijklmnopqrstuvwxyz"
+    for _ in range(n):
+        start = rng.randrange(0, 21)
+        prompt = " ".join(alpha[start : start + 4])
+        correct = f" {alpha[start + 4]}"
+        pool = [f" {c}" for c in alpha]
+        s.probes.append(_mk_probe(rng, prompt, correct, pool))
+    return s
+
+
+def _suite_copy(rng: random.Random, n: int) -> ProbeSuite:
+    s = ProbeSuite("copy")
+    for _ in range(n):
+        w = rng.choice(NOUNS)
+        prompt = f"{w} {w} {w}"
+        s.probes.append(_mk_probe(rng, prompt, f" {w}", [f" {x}" for x in NOUNS]))
+    return s
+
+
+def _suite_arith(rng: random.Random, n: int) -> ProbeSuite:
+    s = ProbeSuite("arith")
+    digits = [f" {d}" for d in range(10)]
+    for _ in range(n):
+        a = rng.randrange(0, 5)
+        b = rng.randrange(0, 5)
+        prompt = f"{a} + {b} ="
+        s.probes.append(_mk_probe(rng, prompt, f" {a + b}", digits))
+    return s
+
+
+def _suite_parity(rng: random.Random, n: int) -> ProbeSuite:
+    s = ProbeSuite("parity")
+    for _ in range(n):
+        k = rng.randrange(0, 10)
+        prompt = f"{k} is"
+        correct = " even" if k % 2 == 0 else " odd"
+        s.probes.append(Probe(prompt, [" even", " odd"], 0 if k % 2 == 0 else 1))
+    return s
+
+
+def _suite_retrieval(rng: random.Random, n: int) -> ProbeSuite:
+    s = ProbeSuite("retrieval")
+    for _ in range(n):
+        i = rng.randrange(len(KV_KEYS))
+        prompt = f"key {KV_KEYS[i]} value {KV_VALS[i]} . recall {KV_KEYS[i]} gives"
+        s.probes.append(_mk_probe(rng, prompt, f" {KV_VALS[i]}", [f" {v}" for v in KV_VALS]))
+    return s
+
+
+_SUITES = [
+    _suite_cloze,
+    _suite_agreement,
+    _suite_ordering,
+    _suite_copy,
+    _suite_arith,
+    _suite_parity,
+    _suite_retrieval,
+]
+
+
+def build_probe_suites(n_per_suite: int, seed: int) -> list[ProbeSuite]:
+    rng = random.Random(seed + 777)
+    return [mk(rng, n_per_suite) for mk in _SUITES]

@@ -1,0 +1,1 @@
+from . import msb_dequant, ref  # noqa: F401

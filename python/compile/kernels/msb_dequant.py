@@ -1,0 +1,116 @@
+"""L1: Pallas MSB dequant-matmul kernel.
+
+Computes ``y = x @ dequant(codes, scales).T`` where the weight matrix is
+stored in the paper's MSB form: int8 sign+level codes and per-(row, block)
+scale tables (see kernels/ref.py for the exact representation).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel tiles M and N on
+the grid; each program instance streams the full K stripe of its x / codes
+tiles through VMEM, decodes the int8 codes to a bf16/f32 tile in-register
+(an L-entry table gather — L <= 8 at 4-bit so the table is VMEM-resident
+scratch), and feeds the MXU with a dense ``(bm, K) @ (K, bn)`` product.
+Storing codes as int8 is the 4x HBM-traffic saving the paper's storage
+analysis targets.
+
+CPU note: lowered with ``interpret=True`` — real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. interpret mode still goes
+through the Pallas machinery (BlockSpec slicing, per-program invocation), so
+shape/indexing logic is exercised; numerics are validated against
+kernels/ref.py by python/tests/test_kernel.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _msb_matmul_kernel(x_ref, codes_ref, scales_ref, o_ref, *, block: int):
+    """One (bm, bn) output tile.
+
+    x_ref:      f32 [bm, K]
+    codes_ref:  i8  [bn, K]
+    scales_ref: f32 [bn, K // block, L]
+    o_ref:      f32 [bm, bn]
+    """
+    x = x_ref[...]
+    codes = codes_ref[...].astype(jnp.int32)
+    scales = scales_ref[...]
+
+    bn, k = codes.shape
+    lvl = jnp.abs(codes)                      # 0 or 1..L
+    sgn = jnp.sign(codes).astype(x.dtype)
+    blk = jax.lax.broadcasted_iota(jnp.int32, (bn, k), 1) // block
+    # gather scale per element: scales[n, blk, lvl-1]
+    l = scales.shape[-1]
+    idx = jnp.clip(lvl - 1, 0, l - 1)
+    # flatten the (block, level) axes for a single take_along_axis
+    flat = scales.reshape(bn, -1)             # [bn, K//block * L]
+    w = jnp.take_along_axis(flat, blk * l + idx, axis=1)
+    w = sgn * w                               # [bn, K] decoded tile
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bm", "bn", "interpret"))
+def msb_matmul(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    scales: jnp.ndarray,
+    *,
+    block: int = 64,
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """x [M, K] (f32) @ dequant(codes [N, K] i8, scales [N, K//block, L]).T."""
+    m, k = x.shape
+    n, k2 = codes.shape
+    assert k == k2, (x.shape, codes.shape)
+    nb, l = scales.shape[1], scales.shape[2]
+    assert nb * block == k, (scales.shape, block, k)
+
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_msb_matmul_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, nb, l), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, codes, scales)
+
+
+def vmem_footprint_bytes(k: int, bm: int, bn: int, block: int, levels: int) -> dict:
+    """Static VMEM budget estimate for one program instance (TPU target).
+
+    Used by DESIGN/EXPERIMENTS §Perf: interpret-mode wall-clock is not a TPU
+    proxy, so we reason about the schedule structurally.
+    """
+    x_tile = bm * k * 4
+    code_tile = bn * k * 1
+    scale_tile = bn * (k // block) * levels * 4
+    out_tile = bm * bn * 4
+    decoded = bn * k * 4  # the in-register decoded stripe
+    total = x_tile + code_tile + scale_tile + out_tile + decoded
+    return {
+        "x_tile": x_tile,
+        "code_tile": code_tile,
+        "scale_tile": scale_tile,
+        "out_tile": out_tile,
+        "decoded_tile": decoded,
+        "total": total,
+        "fits_16MiB_vmem": total <= 16 * 1024 * 1024,
+    }

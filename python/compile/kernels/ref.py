@@ -1,0 +1,82 @@
+"""Pure-jnp oracle for the MSB dequant-matmul kernel.
+
+Representation (matches rust/src/msb/codebook.rs):
+
+* weight matrix ``W`` is stored as ``[out, in]`` (a linear layer computes
+  ``y = x @ W.T``);
+* each output row is split into blocks of ``t`` consecutive input elements;
+* a block owns ``L = 2**(b-1)`` positive scales ``alpha_z``;
+* each weight is coded as int8 ``c``: ``c == 0`` -> exact zero (kept as a
+  zero-loss special group, paper §3.2), else ``w_hat = sign(c) *
+  scales[row, k // t, |c| - 1]``.
+
+The oracle is deliberately written with the most obvious jnp ops so that the
+Pallas kernel (python/compile/kernels/msb_dequant.py) has an independent
+reference to converge against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def msb_dequant_ref(codes: jnp.ndarray, scales: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Decode int8 MSB codes back to float weights.
+
+    codes:  int8 [N, K]
+    scales: f32  [N, K // block, L]
+    returns f32 [N, K]
+    """
+    n, k = codes.shape
+    lvl = jnp.abs(codes).astype(jnp.int32)           # 0 (zero) or 1..L
+    sgn = jnp.sign(codes).astype(scales.dtype)
+    blk = jnp.arange(k) // block                     # [K]
+    sc = scales[:, blk, :]                           # [N, K, L]
+    idx = jnp.clip(lvl - 1, 0, scales.shape[-1] - 1)
+    val = jnp.take_along_axis(sc, idx[..., None], axis=-1)[..., 0]
+    return sgn * val
+
+
+def msb_matmul_ref(
+    x: jnp.ndarray, codes: jnp.ndarray, scales: jnp.ndarray, block: int
+) -> jnp.ndarray:
+    """x [M, K] @ dequant(codes, scales).T -> [M, N]."""
+    w = msb_dequant_ref(codes, scales, block)
+    return x @ w.T
+
+
+def msb_quantize_ref(w, block: int, levels: int):
+    """A simple *reference* MSB quantizer used only by the python tests: an
+    equal-population grouping of |w| per block into ``levels`` groups, each
+    group's scale = mean |w| of the group. This is NOT the paper's optimized
+    grouping (that lives in rust); it just produces valid (codes, scales)
+    pairs for kernel round-trip tests.
+    """
+    import numpy as np
+
+    w = np.asarray(w, dtype=np.float32)
+    n, k = w.shape
+    assert k % block == 0
+    nb = k // block
+    codes = np.zeros((n, k), dtype=np.int8)
+    scales = np.zeros((n, nb, levels), dtype=np.float32)
+    for r in range(n):
+        for b in range(nb):
+            seg = w[r, b * block : (b + 1) * block]
+            mags = np.abs(seg)
+            nz = mags > 0
+            nnz = int(nz.sum())
+            if nnz == 0:
+                continue
+            nz_idx = np.flatnonzero(nz)
+            order = np.argsort(mags[nz_idx], kind="stable")
+            nz_idx = nz_idx[order]
+            bounds = np.linspace(0, nnz, levels + 1).astype(int)
+            for z in range(levels):
+                sel = nz_idx[bounds[z] : bounds[z + 1]]
+                if len(sel) == 0:
+                    scales[r, b, z] = scales[r, b, z - 1] if z else 0.0
+                    continue
+                scales[r, b, z] = mags[sel].mean()
+                codes[r, b * block + sel] = (np.sign(seg[sel]) * (z + 1)).astype(np.int8)
+    return jnp.asarray(codes), jnp.asarray(scales)

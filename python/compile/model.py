@@ -1,0 +1,233 @@
+"""L2: GPT-style decoder-only transformer in JAX (build-time only).
+
+Design points driven by the reproduction:
+
+* Weight matrices are stored ``[out, in]`` and linears compute
+  ``y = x @ W.T`` — the exact orientation the rust quantizers and the L1
+  Pallas kernel assume (64-element groups run along ``in`` within a row).
+* ``forward(tokens, *flat_weights)`` takes the weights as *runtime
+  arguments*, so a single AOT-lowered executable serves both the
+  full-precision model and every simulated-quantization variant: rust
+  dequantizes to f32 and feeds the same executable (paper §4.1 "All
+  quantized values are decoded and stored in bfloat16" — we decode to f32
+  through a bf16 round-trip on the rust side).
+* ``forward_msb`` swaps every quantizable linear for the Pallas MSB kernel
+  taking (codes, scales) pairs — the native-representation execution path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.msb_dequant import msb_matmul
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d: int
+    layers: int
+    heads: int
+    ff: int
+    seq: int  # train/eval context length
+
+    @property
+    def head_dim(self) -> int:
+        return self.d // self.heads
+
+
+# the three "model family" stand-ins (DESIGN.md "Substitutions")
+def model_zoo(vocab: int) -> list[ModelConfig]:
+    return [
+        ModelConfig("tiny", vocab, d=64, layers=2, heads=2, ff=256, seq=96),
+        ModelConfig("small", vocab, d=128, layers=3, heads=4, ff=512, seq=96),
+        ModelConfig("base", vocab, d=192, layers=4, heads=6, ff=768, seq=96),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Parameters. Stable name order defines the flat-argument ABI of the HLO.
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...], bool]]:
+    """(name, shape, quantizable) in ABI order."""
+    specs: list[tuple[str, tuple[int, ...], bool]] = [
+        ("tok_emb", (cfg.vocab, cfg.d), False),
+        ("pos_emb", (cfg.seq, cfg.d), False),
+    ]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1_g", (cfg.d,), False),
+            (p + "wq", (cfg.d, cfg.d), True),
+            (p + "wk", (cfg.d, cfg.d), True),
+            (p + "wv", (cfg.d, cfg.d), True),
+            (p + "wo", (cfg.d, cfg.d), True),
+            (p + "ln2_g", (cfg.d,), False),
+            (p + "w_gate", (cfg.ff, cfg.d), True),
+            (p + "w_up", (cfg.ff, cfg.d), True),
+            (p + "w_down", (cfg.d, cfg.ff), True),
+        ]
+    specs.append(("ln_f_g", (cfg.d,), False))
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int) -> dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape, _ in param_specs(cfg):
+        if name.endswith("_g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name in ("tok_emb", "pos_emb"):
+            params[name] = jnp.asarray(
+                rng.standard_normal(shape).astype(np.float32) * 0.02
+            )
+        else:
+            fan_in = shape[1]
+            params[name] = jnp.asarray(
+                rng.standard_normal(shape).astype(np.float32) / np.sqrt(fan_in)
+            )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _rmsnorm(x: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def _linear(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return x @ w.T  # w is [out, in]
+
+
+def _attention(cfg: ModelConfig, x, wq, wk, wv, wo, lin):
+    b, t, d = x.shape
+    h, hd = cfg.heads, cfg.head_dim
+    q = lin(x, wq).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = lin(x, wk).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = lin(x, wv).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return lin(y, wo)
+
+
+def _block(cfg: ModelConfig, x, p, i, lin):
+    g = lambda s: p[f"layer{i}.{s}"]
+    h = x + _attention(
+        cfg, _rmsnorm(x, g("ln1_g")), g("wq"), g("wk"), g("wv"), g("wo"), lin
+    )
+    z = _rmsnorm(h, g("ln2_g"))
+    mlp = lin(jax.nn.silu(lin(z, g("w_gate"))) * lin(z, g("w_up")), g("w_down"))
+    return h + mlp
+
+
+def forward(cfg: ModelConfig, params: dict[str, jnp.ndarray], tokens: jnp.ndarray):
+    """tokens [B, T] int32 -> logits [B, T, V] f32. Head tied to tok_emb."""
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:t][None]
+    for i in range(cfg.layers):
+        x = _block(cfg, x, params, i, _linear)
+    x = _rmsnorm(x, params["ln_f_g"])
+    return x @ params["tok_emb"].T
+
+
+def forward_flat(cfg: ModelConfig, tokens: jnp.ndarray, *flat):
+    """ABI entrypoint: weights in param_specs() order. This is what aot.py
+    lowers; rust marshals literals in the same order."""
+    names = [n for n, _, _ in param_specs(cfg)]
+    return forward(cfg, dict(zip(names, flat)), tokens)
+
+
+# ---------------------------------------------------------------------------
+# Native MSB execution path (L1 kernel integration)
+# ---------------------------------------------------------------------------
+
+def forward_msb(
+    cfg: ModelConfig,
+    params: dict[str, jnp.ndarray],
+    qparams: dict[str, tuple[jnp.ndarray, jnp.ndarray]],
+    tokens: jnp.ndarray,
+    block: int = 64,
+):
+    """Forward where quantizable linears run the Pallas MSB kernel on
+    (codes, scales); non-quantizable params stay f32 from ``params``."""
+
+    def lin(x, w_name_or_arr):
+        # dispatched by identity: quantized layers pass their name
+        if isinstance(w_name_or_arr, str):
+            codes, scales = qparams[w_name_or_arr]
+            shp = x.shape
+            x2 = x.reshape(-1, shp[-1])
+            m = x2.shape[0]
+            bm = m if m < 128 else 128
+            # pad rows so M % bm == 0
+            pad = (-m) % bm
+            if pad:
+                x2 = jnp.concatenate([x2, jnp.zeros((pad, shp[-1]), x2.dtype)])
+            n = codes.shape[0]
+            bn = n if n < 128 else 128
+            y = msb_matmul(x2, codes, scales, block=block, bm=bm, bn=bn)
+            if pad:
+                y = y[:m]
+            return y.reshape(*shp[:-1], n)
+        return x @ w_name_or_arr.T
+
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:t][None]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        named = {
+            k: (p + k if (p + k) in qparams else params[p + k])
+            for k in ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+        }
+        g = lambda s: params[p + s]
+        h = x + _attention(
+            cfg, _rmsnorm(x, g("ln1_g")),
+            named["wq"], named["wk"], named["wv"], named["wo"], lin,
+        )
+        z = _rmsnorm(h, g("ln2_g"))
+        mlp = lin(jax.nn.silu(lin(z, named["w_gate"])) * lin(z, named["w_up"]),
+                  named["w_down"])
+        x = h + mlp
+    x = _rmsnorm(x, params["ln_f_g"])
+    return x @ params["tok_emb"].T
+
+
+def forward_msb_flat(cfg: ModelConfig, block: int, tokens: jnp.ndarray, *flat):
+    """ABI entrypoint for the MSB-kernel executable: non-quantizable params
+    first (in spec order), then (codes, scales) pairs for each quantizable
+    matrix (in spec order)."""
+    specs = param_specs(cfg)
+    params, qparams = {}, {}
+    it = iter(flat)
+    for name, _, quant in specs:
+        if not quant:
+            params[name] = next(it)
+    for name, _, quant in specs:
+        if quant:
+            qparams[name] = (next(it), next(it))
+    return forward_msb(cfg, params, qparams, tokens, block=block)
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+def nll_loss(cfg: ModelConfig, params, tokens):
+    """Mean next-token NLL over [B, T] tokens."""
+    logits = forward(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -picked.mean()

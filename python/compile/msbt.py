@@ -1,0 +1,69 @@
+"""`.msbt` — the tensor container shared between python (writer) and rust
+(reader, rust/src/io/msbt.rs). Custom format because the offline crate set
+has no npz/serde; the layout is trivially parseable:
+
+    magic   b"MSBT"
+    version u32 LE (=1)
+    count   u32 LE
+    count * {
+        name_len u16 LE, name utf-8,
+        dtype    u8   (0=f32, 1=i32, 2=bf16 (u16 payload), 3=i8),
+        ndim     u8,
+        dims     ndim * u32 LE,
+        nbytes   u64 LE,
+        data     raw LE bytes
+    }
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+_DTYPES = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.int32): 1,
+    np.dtype(np.uint16): 2,  # bf16 payload
+    np.dtype(np.int8): 3,
+}
+_NP_OF = {v: k for k, v in _DTYPES.items()}
+
+
+def write_msbt(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(b"MSBT")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype == np.int64:
+                arr = arr.astype(np.int32)
+            if arr.dtype == np.float64:
+                arr = arr.astype(np.float32)
+            code = _DTYPES[arr.dtype]
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def read_msbt(path: str) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"MSBT"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == 1
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            raw = f.read(nbytes)
+            out[name] = np.frombuffer(raw, dtype=_NP_OF[code]).reshape(dims).copy()
+    return out

@@ -1,0 +1,32 @@
+"""Char-level tokenizer with a fixed, corpus-independent vocabulary.
+
+A fixed vocab keeps the L2 HLO interface stable across corpus regenerations:
+token ids never shift, so previously exported executables stay valid.
+"""
+
+from __future__ import annotations
+
+# printable subset that the corpus generators can emit
+_ALPHABET = (
+    "\n !\"#$%&'()*+,-./0123456789:;<=>?@"
+    "ABCDEFGHIJKLMNOPQRSTUVWXYZ[\\]^_`"
+    "abcdefghijklmnopqrstuvwxyz{|}~"
+)
+
+PAD_ID = 0  # reserved; never produced by encode()
+
+
+class CharTokenizer:
+    def __init__(self) -> None:
+        self.itos = ["<pad>"] + list(_ALPHABET)
+        self.stoi = {c: i for i, c in enumerate(self.itos)}
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.itos)
+
+    def encode(self, text: str) -> list[int]:
+        return [self.stoi[c] for c in text if c in self.stoi]
+
+    def decode(self, ids: list[int]) -> str:
+        return "".join(self.itos[i] for i in ids if 0 < i < len(self.itos))

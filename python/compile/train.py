@@ -1,0 +1,72 @@
+"""Build-time training of the three stand-in models (hand-rolled AdamW; the
+offline image has no optax). Python never runs at request time — these
+weights are exported once to artifacts/ and consumed by the rust coordinator.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import ModelConfig, init_params, nll_loss
+
+
+def adamw_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": 0}
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-3, wd: float = 0.01,
+                    b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8):
+    loss_fn = lambda p, toks: nll_loss(cfg, p, toks)
+
+    @jax.jit
+    def step(params, opt, toks):
+        loss, grads = jax.value_and_grad(loss_fn)(params, toks)
+        t = opt["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1**t), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2**t), v)
+        params = jax.tree.map(
+            lambda p, mh_, vh_: p - lr * (mh_ / (jnp.sqrt(vh_) + eps) + wd * p),
+            params, mh, vh,
+        )
+        return params, {"m": m, "v": v, "t": t}, loss
+
+    return step
+
+
+def sample_batch(rng: np.random.Generator, stream: np.ndarray, batch: int, seq: int):
+    starts = rng.integers(0, len(stream) - seq - 1, size=batch)
+    return jnp.asarray(
+        np.stack([stream[s : s + seq + 1] for s in starts]).astype(np.int32)
+    )
+
+
+def train_model(
+    cfg: ModelConfig,
+    stream: np.ndarray,
+    steps: int,
+    batch: int = 16,
+    seed: int = 0,
+    log_every: int = 25,
+) -> tuple[dict, list[dict]]:
+    params = init_params(cfg, seed)
+    opt = adamw_init(params)
+    step = make_train_step(cfg)
+    rng = np.random.default_rng(seed + 1)
+    log: list[dict] = []
+    t0 = time.time()
+    for it in range(steps):
+        toks = sample_batch(rng, stream, batch, cfg.seq)
+        params, opt, loss = step(params, opt, toks)
+        if it % log_every == 0 or it == steps - 1:
+            entry = {"step": it, "loss": float(loss), "elapsed_s": round(time.time() - t0, 2)}
+            log.append(entry)
+            print(f"  [{cfg.name}] step {it:4d} loss {float(loss):.4f} "
+                  f"({entry['elapsed_s']}s)", flush=True)
+    return params, log

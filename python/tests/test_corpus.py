@@ -1,0 +1,80 @@
+"""Corpus and probe generators: determinism, vocab coverage, disjointness,
+and probe well-formedness."""
+
+import pytest
+
+from compile import corpus
+from compile.tokenizer import CharTokenizer
+
+
+def test_corpus_deterministic():
+    a = corpus.build_training_corpus(50, 1234)
+    b = corpus.build_training_corpus(50, 1234)
+    assert a == b
+    c = corpus.build_training_corpus(50, 999)
+    assert a != c
+
+
+def test_eval_disjoint_from_train_seed():
+    train = corpus.build_corpus("wk", 100, 1234)
+    evals = corpus.build_eval_corpora(100, 1234)
+    assert evals["wk"] != train
+    assert set(evals) == {"wk", "pt", "c4"}
+
+
+def test_flavours_differ():
+    evals = corpus.build_eval_corpora(50, 1)
+    assert evals["wk"] != evals["pt"] != evals["c4"]
+
+
+def test_tokenizer_covers_corpus():
+    tok = CharTokenizer()
+    text = corpus.build_training_corpus(200, 7)
+    ids = tok.encode(text)
+    assert len(ids) == len(text), "corpus contains chars outside the fixed vocab"
+    assert tok.decode(ids) == text
+
+
+def test_tokenizer_roundtrip_and_pad():
+    tok = CharTokenizer()
+    assert tok.stoi["a"] > 0
+    assert tok.decode([0]) == ""  # pad never decodes
+    s = "the old cat sees ."
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_probe_suites_shape():
+    suites = corpus.build_probe_suites(20, 1234)
+    assert [s.name for s in suites] == [
+        "cloze", "agreement", "ordering", "copy", "arith", "parity", "retrieval",
+    ]
+    for s in suites:
+        assert len(s.probes) == 20
+        for p in s.probes:
+            assert 0 <= p.answer < len(p.candidates)
+            assert len(set(p.candidates)) == len(p.candidates)
+            assert 2 <= len(p.candidates) <= 4
+
+
+def test_probe_answers_consistent_with_rules():
+    suites = {s.name: s for s in corpus.build_probe_suites(30, 5)}
+    for p in suites["parity"].probes:
+        n = int(p.prompt.split()[0])
+        want = " even" if n % 2 == 0 else " odd"
+        assert p.candidates[p.answer] == want
+    for p in suites["arith"].probes:
+        a, _, b, _ = p.prompt.split()
+        assert p.candidates[p.answer] == f" {int(a) + int(b)}"
+    for p in suites["copy"].probes:
+        w = p.prompt.split()[0]
+        assert p.candidates[p.answer] == f" {w}"
+
+
+def test_patterns_present_in_training_corpus():
+    """The probe families must be learnable: their supervision patterns must
+    actually appear in the training text."""
+    text = corpus.build_training_corpus(2000, 1234)
+    assert " + " in text and " = " in text       # arith
+    assert " is even ." in text and " is odd ." in text  # parity
+    assert "recall" in text and "gives" in text  # retrieval
+    assert "a b c d e" in text or "b c d e f" in text  # ordering

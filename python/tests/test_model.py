@@ -1,0 +1,113 @@
+"""L2 model: shapes, ABI stability, training smoke, MSB-path equivalence."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels.ref import msb_quantize_ref
+from compile.model import (
+    ModelConfig,
+    forward,
+    forward_flat,
+    forward_msb,
+    init_params,
+    model_zoo,
+    nll_loss,
+    param_specs,
+)
+from compile.tokenizer import CharTokenizer
+
+CFG = ModelConfig("test", vocab=97, d=32, layers=2, heads=2, ff=64, seq=32)
+
+
+def test_param_specs_abi_is_stable():
+    names = [n for n, _, _ in param_specs(CFG)]
+    assert names[0] == "tok_emb" and names[1] == "pos_emb"
+    assert names[-1] == "ln_f_g"
+    assert names.count("layer0.wq") == 1
+    # quantizable = exactly the 7 projection matrices per layer
+    quant = [n for n, _, q in param_specs(CFG) if q]
+    assert len(quant) == 7 * CFG.layers
+    assert all(s[1][0] > 0 for s in param_specs(CFG) if len(s[1]) > 1)
+
+
+def test_forward_shapes_and_determinism():
+    params = init_params(CFG, 0)
+    toks = jnp.arange(2 * 16, dtype=jnp.int32).reshape(2, 16) % CFG.vocab
+    logits = forward(CFG, params, toks)
+    assert logits.shape == (2, 16, CFG.vocab)
+    logits2 = forward(CFG, params, toks)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits2))
+
+
+def test_forward_flat_matches_dict():
+    params = init_params(CFG, 0)
+    toks = jnp.ones((1, 8), jnp.int32)
+    flat = [params[n] for n, _, _ in param_specs(CFG)]
+    a = forward(CFG, params, toks)
+    b = forward_flat(CFG, toks, *flat)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    params = init_params(CFG, 0)
+    t1 = jnp.ones((1, 16), jnp.int32)
+    t2 = t1.at[0, 10].set(5)
+    l1 = forward(CFG, params, t1)
+    l2 = forward(CFG, params, t2)
+    np.testing.assert_allclose(np.asarray(l1[0, :10]), np.asarray(l2[0, :10]), atol=1e-5)
+    assert not np.allclose(np.asarray(l1[0, 10:]), np.asarray(l2[0, 10:]))
+
+
+def test_loss_decreases_smoke():
+    from compile.train import adamw_init, make_train_step
+
+    params = init_params(CFG, 0)
+    step = make_train_step(CFG, lr=1e-2)
+    opt = adamw_init(params)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(1, 30, (8, CFG.seq + 1)).astype(np.int32))
+    first = None
+    for _ in range(30):
+        params, opt, loss = step(params, opt, toks)
+        first = first if first is not None else float(loss)
+    assert float(loss) < first * 0.7, (first, float(loss))
+
+
+def test_msb_forward_matches_dense_on_dequant():
+    """forward_msb(codes, scales) == forward(dequantized weights): the
+    native-representation path and the simulated path must agree."""
+    cfg = ModelConfig("t2", vocab=97, d=64, layers=1, heads=2, ff=128, seq=16)
+    params = init_params(cfg, 1)
+    toks = jnp.asarray(np.arange(16, dtype=np.int32)[None] % 90)
+
+    from compile.kernels.ref import msb_dequant_ref
+
+    qparams, dq = {}, dict(params)
+    for n, shape, q in param_specs(cfg):
+        if q:
+            codes, scales = msb_quantize_ref(np.asarray(params[n]), 64, 8)
+            qparams[n] = (codes, scales)
+            dq[n] = msb_dequant_ref(codes, scales, 64)
+    ref = forward(cfg, dq, toks)
+    out = forward_msb(cfg, params, qparams, toks, block=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_model_zoo_sizes_increase():
+    zoo = model_zoo(97)
+    counts = []
+    for cfg in zoo:
+        n = sum(int(np.prod(s)) for _, s, _ in param_specs(cfg))
+        counts.append(n)
+    assert counts == sorted(counts)
+    assert counts[0] > 50_000  # non-trivial models
+
+
+def test_nll_loss_near_uniform_at_init():
+    params = init_params(CFG, 0)
+    toks = jnp.asarray(np.random.default_rng(0).integers(1, 97, (4, 33)).astype(np.int32))
+    loss = float(nll_loss(CFG, params, toks))
+    assert abs(loss - np.log(97)) < 0.5

@@ -1,0 +1,68 @@
+"""`.msbt` container: python round-trip + byte-layout golden checks (the rust
+reader parses the same bytes; the golden test pins the layout)."""
+
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.msbt import read_msbt, write_msbt
+
+
+def test_roundtrip_basic(tmp_path):
+    p = tmp_path / "t.msbt"
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b.codes": (np.arange(8) - 4).astype(np.int8),
+        "c": np.asarray([[1, 2], [3, 4]], np.int32),
+        "scalar": np.asarray(7, np.int32),
+    }
+    write_msbt(str(p), tensors)
+    back = read_msbt(str(p))
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    shape=st.lists(st.integers(1, 5), min_size=0, max_size=3),
+    dtype=st.sampled_from([np.float32, np.int32, np.int8, np.uint16]),
+    seed=st.integers(0, 1000),
+)
+def test_roundtrip_hypothesis(tmp_path_factory, shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    arr = (rng.standard_normal(shape) * 10).astype(dtype)
+    p = tmp_path_factory.mktemp("msbt") / "h.msbt"
+    write_msbt(str(p), {"x": arr})
+    back = read_msbt(str(p))["x"]
+    np.testing.assert_array_equal(back, arr)
+
+
+def test_byte_layout_golden(tmp_path):
+    """Pin the exact on-disk layout the rust reader assumes."""
+    p = tmp_path / "g.msbt"
+    write_msbt(str(p), {"ab": np.asarray([1.0], np.float32)})
+    raw = p.read_bytes()
+    assert raw[:4] == b"MSBT"
+    version, count = struct.unpack_from("<II", raw, 4)
+    assert (version, count) == (1, 1)
+    nlen = struct.unpack_from("<H", raw, 12)[0]
+    assert nlen == 2 and raw[14:16] == b"ab"
+    dtype, ndim = struct.unpack_from("<BB", raw, 16)
+    assert (dtype, ndim) == (0, 1)
+    dim0 = struct.unpack_from("<I", raw, 18)[0]
+    assert dim0 == 1
+    nbytes = struct.unpack_from("<Q", raw, 22)[0]
+    assert nbytes == 4
+    assert struct.unpack_from("<f", raw, 30)[0] == 1.0
+
+
+def test_int64_float64_are_downcast(tmp_path):
+    p = tmp_path / "d.msbt"
+    write_msbt(str(p), {"i": np.asarray([1, 2], np.int64), "f": np.asarray([1.5], np.float64)})
+    back = read_msbt(str(p))
+    assert back["i"].dtype == np.int32
+    assert back["f"].dtype == np.float32

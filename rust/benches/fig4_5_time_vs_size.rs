@@ -1,0 +1,48 @@
+//! Figures 4 & 5 — quantization wall-clock vs matrix size on N(0,1)
+//! instances: XNOR/BLOCKED-XNOR fastest, WGM orders faster than GG, DG
+//! infeasible beyond small sizes.
+
+use msb_quant::benchlib::{self, time_median};
+use msb_quant::quant::{msb::MsbQuantizer, xnor::XnorQuantizer, QuantConfig, Quantizer};
+use msb_quant::stats::Rng;
+use msb_quant::tensor::Matrix;
+
+fn main() {
+    let cfg = QuantConfig::per_tensor(4).no_bf16().with_lambda(0.0);
+    let bcfg = QuantConfig::block_wise(4, 64).no_bf16().with_lambda(0.0);
+
+    benchlib::header("Fig 4 analog — small-matrix quantization time (s)");
+    println!("n,dg,gg,wgm_w16,xnor,blocked_xnor");
+    let small: Vec<usize> =
+        if benchlib::fast_mode() { vec![8, 32] } else { vec![8, 16, 32, 64, 96, 128] };
+    for n in small {
+        let mut rng = Rng::new(3000 + n as u64);
+        let w = Matrix::randn(n, n, &mut rng);
+        let t_dg = time_median(3, || MsbQuantizer::dg().quantize(&w, &cfg));
+        let t_gg = time_median(3, || MsbQuantizer::gg().quantize(&w, &cfg));
+        let t_w = time_median(3, || {
+            MsbQuantizer::wgm().quantize(&w, &cfg.clone().with_window(16))
+        });
+        let t_x = time_median(3, || XnorQuantizer::whole().quantize(&w, &cfg));
+        let t_b = time_median(3, || XnorQuantizer::blocked().quantize(&w, &bcfg));
+        println!("{n},{t_dg:.5},{t_gg:.5},{t_w:.5},{t_x:.6},{t_b:.6}");
+    }
+
+    benchlib::header("Fig 5 analog — large-matrix quantization time (s); DG omitted");
+    println!("n,gg,wgm_w64,wgm_lo,xnor,blocked_xnor");
+    let large: Vec<usize> =
+        if benchlib::fast_mode() { vec![256] } else { vec![256, 512, 1024, 2048] };
+    for n in large {
+        let mut rng = Rng::new(4000 + n as u64);
+        let w = Matrix::randn(n, n, &mut rng);
+        let t_gg = time_median(1, || MsbQuantizer::gg().quantize(&w, &cfg));
+        let t_w = time_median(1, || {
+            MsbQuantizer::wgm().quantize(&w, &cfg.clone().with_window(64))
+        });
+        let t_lo = time_median(1, || MsbQuantizer::wgm_lo().quantize(&w, &cfg));
+        let t_x = time_median(3, || XnorQuantizer::whole().quantize(&w, &cfg));
+        let t_b = time_median(3, || XnorQuantizer::blocked().quantize(&w, &bcfg));
+        println!("{n},{t_gg:.4},{t_w:.4},{t_lo:.4},{t_x:.5},{t_b:.5}");
+    }
+    println!("\npaper shape: time(gg) ≫ time(wgm) ≥ time(wgm-lo) ≫ time(xnor).");
+}

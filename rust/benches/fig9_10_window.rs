@@ -1,0 +1,35 @@
+//! Figures 9 & 10 — window size w vs loss and vs speed on a 512×512 N(0,1)
+//! matrix: MSE near-minimal below w≈64, speed gains flatten past w≈64-1024
+//! — the basis for the paper's w=64 default.
+
+use msb_quant::benchlib::{self, time_once};
+use msb_quant::msb::{Algo, Solver};
+use msb_quant::stats::Rng;
+use msb_quant::tensor::Matrix;
+
+fn main() {
+    let n = if benchlib::fast_mode() { 128 } else { 512 };
+    let mut rng = Rng::new(8);
+    let w = Matrix::randn(n, n, &mut rng);
+
+    // g=256 as in the paper's D.6 sweep (w is swept at high group budget)
+    benchlib::header(&format!("Fig 9/10 analog — window size vs MSE & time ({n}x{n}, g=256)"));
+    println!("w,mse,time");
+    let windows: Vec<usize> = if benchlib::fast_mode() {
+        vec![1, 16, 256]
+    } else {
+        vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024]
+    };
+    let mut rows = Vec::new();
+    for win in windows {
+        let (code, t) =
+            time_once(|| Solver::new(Algo::Wgm { window: win }).quantize(&w.data, 256));
+        let mse = code.sse(&w.data);
+        println!("{win},{mse:.4},{t:.4}");
+        rows.push((win, mse, t));
+    }
+    // shape check: small windows near-best MSE
+    let best = rows.iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
+    assert!((rows[0].1 - best).abs() < best * 0.15 + 1e-9, "w=1 should be ~best");
+    println!("\npaper shape: MSE flat below w≈64 then rises; time falls as w grows.");
+}

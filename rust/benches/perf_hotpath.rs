@@ -1,0 +1,99 @@
+//! §Perf — solver hot-path throughput + the lazy-invalidation ablation
+//! (DESIGN.md "Design choices" #2). Reports elements/second for the
+//! production paths and compares the generation-counter heap against a
+//! naive rebuild-the-heap merger.
+
+use std::collections::BTreeMap;
+
+use msb_quant::benchlib::{self, time_median};
+use msb_quant::msb::{Algo, CostParams, Grouping, Prefix, Solver, SortedMags};
+use msb_quant::quant::{msb::MsbQuantizer, QuantConfig, Quantizer};
+use msb_quant::stats::Rng;
+use msb_quant::tensor::Matrix;
+
+/// Naive ablation: adjacent merging with a fully re-scanned cost array per
+/// step (no heap, no lazy invalidation) — O(g²) merges.
+fn naive_merge(prefix: &Prefix, target: usize, params: &CostParams) -> Grouping {
+    let n = prefix.len();
+    let mut bounds: Vec<usize> = (1..=n).collect();
+    while bounds.len() > target {
+        let mut best = (f64::INFINITY, 0usize);
+        let mut start = 0usize;
+        for k in 0..bounds.len() - 1 {
+            let (a, b, c) = (start, bounds[k], bounds[k + 1]);
+            let delta = prefix.cost(a, c, params)
+                - prefix.cost(a, b, params)
+                - prefix.cost(b, c, params);
+            if delta < best.0 {
+                best = (delta, k);
+            }
+            start = bounds[k];
+        }
+        bounds.remove(best.1);
+    }
+    Grouping::new(bounds)
+}
+
+fn main() {
+    let fast = benchlib::fast_mode();
+    let mut results: BTreeMap<String, f64> = BTreeMap::new();
+
+    // --- production per-tensor path -------------------------------------
+    let n = if fast { 1 << 16 } else { 1 << 22 }; // 4M elements ≈ a 2048x2048 layer
+    let mut rng = Rng::new(1);
+    let mut vals = vec![0.0f32; n];
+    rng.fill_normal(&mut vals, 1.0);
+    benchlib::header(&format!("solver throughput (n = {n})"));
+    for (name, algo, groups) in [
+        ("wgm w=64 g=32 (paper per-tensor)", Algo::Wgm { window: 64 }, 32),
+        ("wgm w=256 g=256", Algo::Wgm { window: 256 }, 256),
+        (
+            "wgm-lo (256 bins)",
+            Algo::WgmLo { bins: 256, range: 32, max_iters: 12, patience: 3 },
+            32,
+        ),
+    ] {
+        let solver = Solver::new(algo).with_lambda(0.75);
+        let t = time_median(if fast { 1 } else { 3 }, || solver.quantize(&vals, groups));
+        let meps = n as f64 / t / 1e6;
+        println!("  {name:<36} {t:>8.3} s   {meps:>8.2} Melem/s");
+        results.insert(name.into(), meps);
+    }
+
+    // --- production block-wise path --------------------------------------
+    let dim = if fast { 256 } else { 2048 };
+    let w = Matrix::weightlike(dim, dim, &mut rng);
+    let cfg = QuantConfig::block_wise(4, 64).with_window(1).no_bf16();
+    let t = time_median(if fast { 1 } else { 3 }, || MsbQuantizer::wgm().quantize(&w, &cfg));
+    println!(
+        "  {:<36} {t:>8.3} s   {:>8.2} Melem/s",
+        format!("block-wise wgm t=64 ({dim}x{dim})"),
+        w.len() as f64 / t / 1e6
+    );
+
+    // --- lazy invalidation ablation --------------------------------------
+    let n2 = if fast { 2_000 } else { 20_000 };
+    let mut small = vec![0.0f32; n2];
+    rng.fill_normal(&mut small, 1.0);
+    let sm = SortedMags::from_values(&small);
+    let prefix = Prefix::new(&sm.mags);
+    let params = CostParams::unnormalized(0.0);
+    benchlib::header(&format!("lazy-invalidation ablation (n = {n2}, g = 16)"));
+    let t_heap = time_median(3, || {
+        Solver::new(Algo::Gg).with_lambda(0.0).solve_sorted(&sm, 16)
+    });
+    let t_naive = time_median(if fast { 1 } else { 1 }, || naive_merge(&prefix, 16, &params));
+    // equivalence of result quality
+    let g_heap = Solver::new(Algo::Gg).with_lambda(0.0).solve_sorted(&sm, 16);
+    let g_naive = naive_merge(&prefix, 16, &params);
+    println!(
+        "  heap+lazy {t_heap:>8.4} s | naive rescan {t_naive:>8.4} s | speedup {:>6.1}x",
+        t_naive / t_heap
+    );
+    println!(
+        "  sse heap {:.4} vs naive {:.4} (same greedy, same answer modulo ties)",
+        g_heap.sse(&prefix),
+        g_naive.sse(&prefix)
+    );
+    assert!(t_heap < t_naive, "lazy heap must beat O(g^2) rescan");
+}

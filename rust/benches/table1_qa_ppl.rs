@@ -1,0 +1,104 @@
+//! **Table 1** — the headline grid: average QA (7 suites) and average PPL
+//! (3 held-out streams) for every (model × method) cell under 4-bit
+//! block-wise AND 6-bit per-tensor quantization, via the full PJRT
+//! evaluation path. "/" cells match the paper (BnB/GPTQ have no per-tensor
+//! variant; WGM-LO is per-tensor-only).
+//!
+//! Paper shape to reproduce: block-wise — all methods within a few % of FP
+//! with calibration-free ones competitive; per-tensor — RTN/HQQ collapse
+//! while WGM/WGM-LO stay near FP.
+
+use msb_quant::benchlib;
+use msb_quant::harness::{eval_quantized, Artifacts, EvalReport};
+use msb_quant::pipeline::Method;
+use msb_quant::quant::QuantConfig;
+use msb_quant::runtime::ModelRunner;
+
+fn cell(r: &EvalReport) -> (String, String) {
+    (format!("{:.3}", r.avg_qa()), format!("{:.2}", r.avg_ppl()))
+}
+
+fn main() {
+    let arts = match Artifacts::load() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("artifacts required: {e}");
+            return;
+        }
+    };
+    let models: Vec<_> = if benchlib::fast_mode() {
+        arts.manifest.models.iter().take(1).cloned().collect()
+    } else {
+        arts.manifest.models.clone()
+    };
+
+    let bw_cfg = QuantConfig::block_wise(4, 64).with_window(1);
+    let pt_cfg = QuantConfig::per_tensor(6).with_window(64);
+    // Our trained stand-ins are far more noise-robust than billion-param
+    // LLMs: the fragility the paper observes at 6-bit per-tensor appears
+    // here around 3-bit, so we additionally report a 3-bit "stress" column
+    // where the paper's per-tensor method ordering becomes visible.
+    let pt3_cfg = QuantConfig::per_tensor(3).with_window(64);
+    let bw_methods =
+        [Method::Fp, Method::Gptq, Method::Rtn, Method::Bnb, Method::Hqq, Method::Wgm];
+    let pt_methods = [Method::Rtn, Method::Hqq, Method::Wgm, Method::WgmLo];
+
+    benchlib::header("Table 1 analog — QA↑ / PPL↓ per model and method");
+    println!(
+        "{}",
+        benchlib::row(
+            &["model", "method", "QA 4b-bw", "PPL 4b-bw", "QA 6b-pt", "PPL 6b-pt",
+              "QA 3b-pt", "PPL 3b-pt"]
+                .map(String::from)
+        )
+    );
+
+    for spec in &models {
+        let weights = arts.weights(spec).expect("weights");
+        let mut runner = ModelRunner::new(&arts.manifest, spec, &weights).expect("runner");
+        // collect all settings per method for the merged table
+        let mut lines: Vec<(String, [String; 6])> = Vec::new();
+        for method in bw_methods {
+            let rep = eval_quantized(&arts, spec, &mut runner, &weights, method, &bw_cfg, 1)
+                .expect("bw eval");
+            let (qa, ppl) = cell(&rep);
+            let rest = if method == Method::Fp {
+                [qa.clone(), ppl.clone(), qa.clone(), ppl.clone()] // FP is setting-free
+            } else {
+                ["/".into(), "/".into(), "/".into(), "/".into()]
+            };
+            lines.push((
+                method.name().to_string(),
+                [qa, ppl, rest[0].clone(), rest[1].clone(), rest[2].clone(), rest[3].clone()],
+            ));
+        }
+        for method in pt_methods {
+            let rep6 = eval_quantized(&arts, spec, &mut runner, &weights, method, &pt_cfg, 1)
+                .expect("pt6 eval");
+            let rep3 = eval_quantized(&arts, spec, &mut runner, &weights, method, &pt3_cfg, 1)
+                .expect("pt3 eval");
+            let (qa6, ppl6) = cell(&rep6);
+            let (qa3, ppl3) = cell(&rep3);
+            if let Some(line) = lines.iter_mut().find(|(m, _)| *m == method.name()) {
+                line.1[2] = qa6;
+                line.1[3] = ppl6;
+                line.1[4] = qa3;
+                line.1[5] = ppl3;
+            } else {
+                lines.push((
+                    method.name().to_string(),
+                    ["/".into(), "/".into(), qa6, ppl6, qa3, ppl3],
+                ));
+            }
+        }
+        for (m, cells) in lines {
+            let mut all = vec![spec.name.clone(), m];
+            all.extend(cells);
+            println!("{}", benchlib::row(&all));
+        }
+        println!();
+    }
+    println!("paper shape: per-tensor RTN/HQQ degrade first while WGM/WGM-LO track FP");
+    println!("(visible in the 3b-pt stress column for these robust stand-ins);");
+    println!("block-wise: everything close, WGM competitive without calibration.");
+}

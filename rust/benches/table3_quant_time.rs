@@ -1,0 +1,47 @@
+//! Table 3 — full-model quantization wall-clock: every method over all
+//! three trained models (4-bit block-wise). The paper's shape: WGM is
+//! 1-2 orders slower than RTN/HQQ/BnB but still tractable on CPU; GPTQ in
+//! between.
+
+use msb_quant::benchlib;
+use msb_quant::harness::Artifacts;
+use msb_quant::pipeline::{quantize_model, Method};
+use msb_quant::quant::QuantConfig;
+
+fn main() {
+    let arts = match Artifacts::load() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("artifacts required: {e}");
+            return;
+        }
+    };
+    let cfg = QuantConfig::block_wise(4, 64).with_window(1);
+    let methods =
+        [Method::Gptq, Method::Bnb, Method::Hqq, Method::Rtn, Method::Wgm];
+    benchlib::header("Table 3 analog — full-model quantization time (s)");
+    println!(
+        "{}",
+        benchlib::row(
+            &["model", "params", "gptq", "bnb", "hqq", "rtn", "wgm"].map(String::from)
+        )
+    );
+    let models: Vec<_> = if benchlib::fast_mode() {
+        arts.manifest.models.iter().take(1).cloned().collect()
+    } else {
+        arts.manifest.models.clone()
+    };
+    for spec in &models {
+        let weights = arts.weights(spec).expect("weights");
+        let calib = arts.calib(spec).expect("calib");
+        let mut cells = vec![spec.name.clone(), spec.total_params().to_string()];
+        for method in methods {
+            let calib_ref = method.needs_calibration().then_some(&calib);
+            let qm = quantize_model(spec, &weights, calib_ref, method, &cfg, 1)
+                .expect("quantize");
+            cells.push(benchlib::fmt_f(qm.wall_seconds, 2));
+        }
+        println!("{}", benchlib::row(&cells));
+    }
+    println!("\npaper shape: t(wgm) ≫ t(gptq) > t(bnb) ≈ t(hqq) ≈ t(rtn); scales with params.");
+}

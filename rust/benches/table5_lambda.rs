@@ -1,0 +1,76 @@
+//! Table 5 / Table 10 — λ sensitivity: per-tensor WGM (w=256, g=256) over
+//! λ̃ ∈ {0, 0.1, …, 1.0}, full PPL evaluation on the tiny model. The
+//! paper's finding (reproduced here): PPL is flat in λ because GG/WGM take
+//! the group count externally — λ only matters for Algorithm 1.
+
+use msb_quant::benchlib::{self, time_once};
+use msb_quant::eval;
+use msb_quant::harness::Artifacts;
+use msb_quant::io::msbt::Tensor;
+use msb_quant::quant::{msb::MsbQuantizer, QuantConfig, Quantizer};
+use msb_quant::runtime::ModelRunner;
+
+fn main() {
+    let arts = match Artifacts::load() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("artifacts required: {e}");
+            return;
+        }
+    };
+    let spec = arts.manifest.model("tiny").expect("tiny").clone();
+    let weights = arts.weights(&spec).expect("weights");
+    let mut runner = ModelRunner::new(&arts.manifest, &spec, &weights).expect("runner");
+
+    benchlib::header("Table 5 analog — λ sweep (per-tensor WGM, w=256, g=256, tiny model)");
+    println!(
+        "{}",
+        benchlib::row(&["λ̃", "quant (s)", "wk", "pt", "c4", "avg PPL"].map(String::from))
+    );
+
+    let tildes: Vec<f64> = if benchlib::fast_mode() {
+        vec![0.0, 0.5, 1.0]
+    } else {
+        (0..=10).map(|i| i as f64 / 10.0).collect()
+    };
+    let mut avgs = Vec::new();
+    for tilde in tildes {
+        let (qweights, dt) = time_once(|| {
+            let mut out = weights.clone();
+            for p in spec.quantizable() {
+                let w = weights.get(&p.name).unwrap().to_matrix().unwrap();
+                // QuantConfig.lambda *is* λ̃ — the quantizer applies the
+                // Appendix C Λ map per instance
+                let cfg = QuantConfig::per_tensor(9) // g=256 => 2^(9-1)
+                    .with_window(256)
+                    .with_lambda(tilde);
+                let q = MsbQuantizer::wgm().quantize(&w, &cfg);
+                out.insert(p.name.clone(), Tensor::f32(p.shape.clone(), q.dequant.data));
+            }
+            out
+        });
+        runner.update_weights(&qweights).expect("swap");
+        let mut ppls = Vec::new();
+        for s in &arts.manifest.eval_streams {
+            ppls.push(eval::perplexity(&runner, arts.eval_stream(s).unwrap()).unwrap());
+        }
+        let avg = ppls.iter().sum::<f64>() / ppls.len() as f64;
+        avgs.push(avg);
+        println!(
+            "{}",
+            benchlib::row(&[
+                format!("{tilde:.1}"),
+                benchlib::fmt_f(dt, 2),
+                benchlib::fmt_f(ppls[2], 3), // eval_wk (sorted c4, pt, wk)
+                benchlib::fmt_f(ppls[1], 3),
+                benchlib::fmt_f(ppls[0], 3),
+                benchlib::fmt_f(avg, 3),
+            ])
+        );
+    }
+    let spread = avgs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        - avgs.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "\nPPL spread across λ̃: {spread:.4} — paper shape: negligible (λ is inert for WGM)."
+    );
+}

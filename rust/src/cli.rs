@@ -1,0 +1,112 @@
+//! Dependency-free CLI argument parsing (no clap offline): positional
+//! subcommand + `--key value` / `--flag` pairs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut it = argv.into_iter();
+        let command = it.next().unwrap_or_default();
+        let mut flags = BTreeMap::new();
+        let mut pending: Option<String> = None;
+        for a in it {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(key) = pending.take() {
+                    flags.insert(key, "true".into()); // bare flag
+                }
+                pending = Some(stripped.to_string());
+            } else if let Some(key) = pending.take() {
+                flags.insert(key, a);
+            } else {
+                anyhow::bail!("unexpected positional argument '{a}'");
+            }
+        }
+        if let Some(key) = pending.take() {
+            flags.insert(key, "true".into());
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}: not an integer")),
+        }
+    }
+
+    pub fn u32_or(&self, key: &str, default: u32) -> Result<u32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}: not an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}: not a number")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn basic() {
+        let a = parse("eval --model base --bits 4 --verbose");
+        assert_eq!(a.command, "eval");
+        assert_eq!(a.get("model"), Some("base"));
+        assert_eq!(a.u32_or("bits", 0).unwrap(), 4);
+        assert!(a.has("verbose"));
+        assert_eq!(a.str_or("method", "wgm"), "wgm");
+    }
+
+    #[test]
+    fn empty() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "");
+    }
+
+    #[test]
+    fn bad_positional_rejected() {
+        assert!(Args::parse(["x".into(), "stray".into()]).is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let a = parse("x --bits four");
+        assert!(a.u32_or("bits", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_bare_flag() {
+        let a = parse("x --fast");
+        assert!(a.has("fast"));
+    }
+}

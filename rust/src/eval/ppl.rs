@@ -1,0 +1,92 @@
+//! Perplexity: exp(mean next-token NLL) over a token stream, computed by
+//! chunking the stream into non-overlapping [seq]-windows and batching them
+//! through a [`LogitsFn`] — the standard strided PPL protocol the paper
+//! inherits from GPTQ/BiLLM evaluations.
+
+use anyhow::Result;
+
+use super::LogProbs;
+use crate::runtime::LogitsFn;
+
+/// Perplexity of `stream` under `model`. Windows shorter than `seq` at the
+/// stream tail are dropped (standard protocol); padding rows added to fill
+/// the final batch are masked out of the average.
+pub fn perplexity<M: LogitsFn + ?Sized>(model: &M, stream: &[i32]) -> Result<f64> {
+    let (b, t, v) = (model.batch(), model.seq(), model.vocab());
+    let windows: Vec<&[i32]> = stream.chunks_exact(t).collect();
+    anyhow::ensure!(!windows.is_empty(), "stream shorter than one window ({t})");
+
+    let mut total_nll = 0.0f64;
+    let mut total_tok = 0usize;
+    for batch in windows.chunks(b) {
+        let mut tokens = vec![0i32; b * t];
+        for (row, win) in batch.iter().enumerate() {
+            tokens[row * t..(row + 1) * t].copy_from_slice(win);
+        }
+        let logits = model.logits(&tokens)?;
+        anyhow::ensure!(logits.len() == b * t * v, "bad logits size");
+        let lp = LogProbs::new(&logits, v);
+        for (row, win) in batch.iter().enumerate() {
+            // position p predicts token p+1
+            for p in 0..t - 1 {
+                let target = win[p + 1] as usize;
+                total_nll -= lp.logp(row * t + p, target);
+                total_tok += 1;
+            }
+        }
+    }
+    Ok((total_nll / total_tok as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::mock::SuccessorModel;
+
+    #[test]
+    fn uniform_model_gives_vocab_ppl() {
+        let m = SuccessorModel { batch: 2, seq: 8, vocab: 16, boost: 0.0 };
+        let stream: Vec<i32> = (0..64).map(|i| i % 16).collect();
+        let ppl = perplexity(&m, &stream).unwrap();
+        crate::testing::assert_close(ppl, 16.0, 1e-9, 0.0);
+    }
+
+    #[test]
+    fn successor_stream_scores_low() {
+        // stream of consecutive tokens == exactly what SuccessorModel likes
+        let m = SuccessorModel { batch: 2, seq: 8, vocab: 16, boost: 8.0 };
+        let stream: Vec<i32> = (0..64).map(|i| i % 16).collect();
+        let good = perplexity(&m, &stream).unwrap();
+        // anti-correlated stream: constant token (successor never matches)
+        let bad_stream = vec![3i32; 64];
+        let bad = perplexity(&m, &bad_stream).unwrap();
+        assert!(good < 2.0, "{good}");
+        assert!(bad > good * 4.0, "{bad} vs {good}");
+    }
+
+    #[test]
+    fn tail_dropped_and_padding_masked() {
+        let m = SuccessorModel { batch: 4, seq: 8, vocab: 16, boost: 2.0 };
+        let stream: Vec<i32> = (0..8 * 5 + 3).map(|i| i % 16).collect(); // 5 windows + ragged tail
+        let a = perplexity(&m, &stream).unwrap();
+        let b = perplexity(&m, &stream[..8 * 5]).unwrap();
+        crate::testing::assert_close(a, b, 1e-12, 0.0);
+    }
+
+    #[test]
+    fn too_short_stream_errors() {
+        let m = SuccessorModel { batch: 1, seq: 8, vocab: 4, boost: 0.0 };
+        assert!(perplexity(&m, &[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn degraded_logits_raise_ppl() {
+        // the core signal the paper measures: noisier models => higher PPL
+        let sharp = SuccessorModel { batch: 2, seq: 8, vocab: 16, boost: 8.0 };
+        let blunt = SuccessorModel { batch: 2, seq: 8, vocab: 16, boost: 1.0 };
+        let stream: Vec<i32> = (0..128).map(|i| i % 16).collect();
+        assert!(
+            perplexity(&sharp, &stream).unwrap() < perplexity(&blunt, &stream).unwrap()
+        );
+    }
+}

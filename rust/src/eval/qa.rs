@@ -1,0 +1,232 @@
+//! Zero-shot multiple-choice QA scoring: pick the candidate with the best
+//! length-normalized logprob given the prompt — the lm-eval-harness
+//! protocol behind the paper's seven QA columns.
+
+use anyhow::{Context, Result};
+
+use super::LogProbs;
+use crate::io::msbt::TensorMap;
+use crate::runtime::LogitsFn;
+
+#[derive(Clone, Debug)]
+pub struct Probe {
+    pub prompt: Vec<i32>,
+    pub candidates: Vec<Vec<i32>>,
+    pub answer: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ProbeSuite {
+    pub name: String,
+    pub probes: Vec<Probe>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct QaScore {
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl QaScore {
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.total.max(1) as f64
+    }
+}
+
+/// Decode the flattened probe arrays written by python/compile/aot.py.
+pub fn load_probe_suites(tensors: &TensorMap, names: &[String]) -> Result<Vec<ProbeSuite>> {
+    let mut suites = Vec::new();
+    for name in names {
+        let get = |suffix: &str| -> Result<&[i32]> {
+            tensors
+                .get(&format!("{name}.{suffix}"))
+                .with_context(|| format!("probes missing {name}.{suffix}"))?
+                .as_i32()
+        };
+        let p_tok = get("prompt_tok")?;
+        let p_off = get("prompt_off")?;
+        let c_tok = get("cand_tok")?;
+        let c_off = get("cand_off")?;
+        let c_cnt = get("cand_count")?;
+        let answer = get("answer")?;
+        let n = c_cnt.len();
+        anyhow::ensure!(p_off.len() == n + 1 && answer.len() == n, "{name}: ragged");
+        let mut probes = Vec::with_capacity(n);
+        let mut cand_idx = 0usize;
+        for i in 0..n {
+            let prompt = p_tok[p_off[i] as usize..p_off[i + 1] as usize].to_vec();
+            let mut candidates = Vec::with_capacity(c_cnt[i] as usize);
+            for _ in 0..c_cnt[i] {
+                let s = c_off[cand_idx] as usize;
+                let e = c_off[cand_idx + 1] as usize;
+                candidates.push(c_tok[s..e].to_vec());
+                cand_idx += 1;
+            }
+            probes.push(Probe { prompt, candidates, answer: answer[i] as usize });
+        }
+        suites.push(ProbeSuite { name: name.clone(), probes });
+    }
+    Ok(suites)
+}
+
+/// One scoring unit: a (probe, candidate) pair packed as a sequence.
+struct Item {
+    probe: usize,
+    cand: usize,
+    /// prompt+candidate tokens, truncated to seq
+    tokens: Vec<i32>,
+    /// candidate token span [start, end) within `tokens`
+    span: (usize, usize),
+}
+
+/// Score one suite: batch all (probe, candidate) sequences through the
+/// model, pick argmax_c mean-logprob(candidate | prompt).
+pub fn score_suite<M: LogitsFn + ?Sized>(model: &M, suite: &ProbeSuite) -> Result<QaScore> {
+    let (b, t, v) = (model.batch(), model.seq(), model.vocab());
+
+    let mut items = Vec::new();
+    for (pi, probe) in suite.probes.iter().enumerate() {
+        for (ci, cand) in probe.candidates.iter().enumerate() {
+            let mut tokens = probe.prompt.clone();
+            tokens.extend_from_slice(cand);
+            if tokens.len() > t {
+                // keep the tail (the candidate must stay in-window)
+                let cut = tokens.len() - t;
+                tokens.drain(..cut);
+            }
+            let end = tokens.len();
+            // candidate occupies the tail; position 0 has no predictor, so
+            // clamp the span start to 1 if truncation ate the whole prompt
+            let start = end.saturating_sub(cand.len()).max(1).min(end);
+            items.push(Item { probe: pi, cand: ci, tokens, span: (start, end) });
+        }
+    }
+
+    // batched scoring
+    let mut scores: Vec<Vec<f64>> =
+        suite.probes.iter().map(|p| vec![f64::NEG_INFINITY; p.candidates.len()]).collect();
+    for chunk in items.chunks(b) {
+        let mut tokens = vec![0i32; b * t];
+        for (row, item) in chunk.iter().enumerate() {
+            tokens[row * t..row * t + item.tokens.len()].copy_from_slice(&item.tokens);
+        }
+        let logits = model.logits(&tokens)?;
+        let lp = LogProbs::new(&logits, v);
+        for (row, item) in chunk.iter().enumerate() {
+            let (s, e) = item.span;
+            let mut acc = 0.0f64;
+            for p in s..e {
+                // token at p is predicted by logits at p-1
+                acc += lp.logp(row * t + p - 1, item.tokens[p] as usize);
+            }
+            scores[item.probe][item.cand] = acc / (e - s).max(1) as f64;
+        }
+    }
+
+    let mut correct = 0usize;
+    for (pi, probe) in suite.probes.iter().enumerate() {
+        let best = scores[pi]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if best == probe.answer {
+            correct += 1;
+        }
+    }
+    Ok(QaScore { correct, total: suite.probes.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::mock::SuccessorModel;
+
+    fn successor_suite(vocab: i32) -> ProbeSuite {
+        // prompt [a, a+1, a+2]; correct candidate continues the run
+        let mut probes = Vec::new();
+        for a in 0..10 {
+            let prompt = vec![a, a + 1, a + 2];
+            let candidates = vec![
+                vec![a + 3, a + 4],        // correct successor run
+                vec![a + 7, a + 2],        // wrong
+                vec![a, a],                // wrong
+            ];
+            probes.push(Probe { prompt, candidates, answer: 0 });
+        }
+        let _ = vocab;
+        ProbeSuite { name: "succ".into(), probes }
+    }
+
+    #[test]
+    fn successor_model_aces_successor_suite() {
+        let m = SuccessorModel { batch: 4, seq: 16, vocab: 32, boost: 10.0 };
+        let score = score_suite(&m, &successor_suite(32)).unwrap();
+        assert_eq!(score.correct, score.total);
+        crate::testing::assert_close(score.accuracy(), 1.0, 0.0, 0.0);
+    }
+
+    #[test]
+    fn uniform_model_ties_resolve_to_last_candidate() {
+        // uniform logits => equal-length candidates all tie; Rust's
+        // max_by keeps the *last* maximum, so only answers at the last
+        // index win. This pins the deterministic tie-break behaviour.
+        let m = SuccessorModel { batch: 4, seq: 16, vocab: 32, boost: 0.0 };
+        let score = score_suite(&m, &successor_suite(32)).unwrap();
+        assert_eq!(score.correct, 0, "answer=0 never wins a tie");
+        let mut suite = successor_suite(32);
+        for p in &mut suite.probes {
+            let last = p.candidates.len() - 1;
+            p.answer = last;
+        }
+        let score = score_suite(&m, &suite).unwrap();
+        assert_eq!(score.correct, score.total, "last index wins ties");
+    }
+
+    #[test]
+    fn length_normalization_matters() {
+        // a longer all-successor candidate must not lose to a shorter one
+        // just for accumulating more logprob mass
+        let m = SuccessorModel { batch: 2, seq: 16, vocab: 32, boost: 10.0 };
+        let probe = Probe {
+            prompt: vec![1, 2, 3],
+            candidates: vec![vec![4, 5, 6, 7, 8], vec![9]],
+            answer: 0,
+        };
+        let suite = ProbeSuite { name: "ln".into(), probes: vec![probe] };
+        let score = score_suite(&m, &suite).unwrap();
+        assert_eq!(score.correct, 1);
+    }
+
+    #[test]
+    fn roundtrip_probe_container() {
+        use crate::io::msbt::{Tensor, TensorMap};
+        let mut t = TensorMap::new();
+        t.insert("x.prompt_tok".into(), Tensor::i32(vec![4], vec![1, 2, 3, 4]));
+        t.insert("x.prompt_off".into(), Tensor::i32(vec![3], vec![0, 2, 4]));
+        t.insert("x.cand_tok".into(), Tensor::i32(vec![4], vec![5, 6, 7, 8]));
+        t.insert("x.cand_off".into(), Tensor::i32(vec![5], vec![0, 1, 2, 3, 4]));
+        t.insert("x.cand_count".into(), Tensor::i32(vec![2], vec![2, 2]));
+        t.insert("x.answer".into(), Tensor::i32(vec![2], vec![1, 0]));
+        let suites = load_probe_suites(&t, &["x".to_string()]).unwrap();
+        assert_eq!(suites.len(), 1);
+        assert_eq!(suites[0].probes.len(), 2);
+        assert_eq!(suites[0].probes[0].prompt, vec![1, 2]);
+        assert_eq!(suites[0].probes[0].candidates, vec![vec![5], vec![6]]);
+        assert_eq!(suites[0].probes[1].answer, 0);
+    }
+
+    #[test]
+    fn long_prompt_truncation_keeps_candidate() {
+        let m = SuccessorModel { batch: 1, seq: 8, vocab: 32, boost: 10.0 };
+        let probe = Probe {
+            prompt: (0..20).collect(),
+            candidates: vec![vec![20, 21], vec![3, 9]],
+            answer: 0,
+        };
+        let suite = ProbeSuite { name: "trunc".into(), probes: vec![probe] };
+        let score = score_suite(&m, &suite).unwrap();
+        assert_eq!(score.correct, 1);
+    }
+}

@@ -1,0 +1,160 @@
+//! End-to-end harness glue shared by the CLI, the examples and the
+//! Table-1 bench: load artifacts, quantize a model with a method, run the
+//! PJRT evaluation (PPL over the three held-out streams + the 7 QA suites),
+//! and report the paper-shaped row.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::eval::{self, qa::ProbeSuite};
+use crate::io::manifest::{Manifest, ModelSpec};
+use crate::io::msbt::{self, TensorMap};
+use crate::pipeline::{self, Method, QuantizedModel};
+use crate::quant::QuantConfig;
+use crate::runtime::ModelRunner;
+
+/// Everything loaded from artifacts/ once.
+pub struct Artifacts {
+    pub manifest: Manifest,
+    pub tokens: TensorMap,
+    pub probes: Vec<ProbeSuite>,
+}
+
+impl Artifacts {
+    pub fn load() -> Result<Self> {
+        let manifest = Manifest::load(crate::artifacts_dir())?;
+        let tokens = msbt::read_file(manifest.path("corpus_tokens.msbt"))
+            .context("loading corpus_tokens.msbt")?;
+        let probe_tensors =
+            msbt::read_file(manifest.path("probes.msbt")).context("loading probes.msbt")?;
+        let names: Vec<String> =
+            manifest.probe_suites.iter().map(|s| s.name.clone()).collect();
+        let probes = eval::load_probe_suites(&probe_tensors, &names)?;
+        Ok(Artifacts { manifest, tokens, probes })
+    }
+
+    pub fn weights(&self, spec: &ModelSpec) -> Result<TensorMap> {
+        msbt::read_file(self.manifest.path(&spec.weights_file))
+            .with_context(|| format!("loading {}", spec.weights_file))
+    }
+
+    pub fn calib(&self, spec: &ModelSpec) -> Result<TensorMap> {
+        msbt::read_file(self.manifest.path(&spec.calib_file))
+            .with_context(|| format!("loading {}", spec.calib_file))
+    }
+
+    pub fn eval_stream(&self, name: &str) -> Result<&[i32]> {
+        self.tokens
+            .get(name)
+            .with_context(|| format!("stream '{name}' missing"))?
+            .as_i32()
+    }
+}
+
+/// One Table-1 cell set: per-stream PPL, per-suite QA, and the averages.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub model: String,
+    pub method: String,
+    pub bits: u32,
+    pub ppl: Vec<(String, f64)>,
+    pub qa: Vec<(String, f64)>,
+    pub quant_seconds: f64,
+    pub eval_seconds: f64,
+    pub effective_bits: f64,
+}
+
+impl EvalReport {
+    pub fn avg_ppl(&self) -> f64 {
+        self.ppl.iter().map(|p| p.1).sum::<f64>() / self.ppl.len().max(1) as f64
+    }
+
+    pub fn avg_qa(&self) -> f64 {
+        self.qa.iter().map(|q| q.1).sum::<f64>() / self.qa.len().max(1) as f64
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<6} {:<8} {:>2}b  QA {:.3}  PPL {:>8.2}   (quant {:.1}s, eval {:.1}s, {:.2} bits/w)",
+            self.model,
+            self.method,
+            self.bits,
+            self.avg_qa(),
+            self.avg_ppl(),
+            self.quant_seconds,
+            self.eval_seconds,
+            self.effective_bits
+        )
+    }
+}
+
+/// Quantize `model` with `method` under `cfg` and evaluate it end-to-end.
+/// `runner` is reused across calls (weights swapped, executable cached).
+pub fn eval_quantized(
+    arts: &Artifacts,
+    spec: &ModelSpec,
+    runner: &mut ModelRunner,
+    base_weights: &TensorMap,
+    method: Method,
+    cfg: &QuantConfig,
+    threads: usize,
+) -> Result<EvalReport> {
+    let calib;
+    let calib_ref = if method.needs_calibration() {
+        calib = arts.calib(spec)?;
+        Some(&calib)
+    } else {
+        None
+    };
+    let qm: QuantizedModel =
+        pipeline::quantize_model(spec, base_weights, calib_ref, method, cfg, threads)?;
+    runner.update_weights(&qm.weights)?;
+
+    let t0 = Instant::now();
+    let mut ppl = Vec::new();
+    for stream_name in &arts.manifest.eval_streams {
+        let stream = arts.eval_stream(stream_name)?;
+        ppl.push((stream_name.clone(), eval::perplexity(runner, stream)?));
+    }
+    let mut qa = Vec::new();
+    for suite in &arts.probes {
+        let score = eval::score_suite(runner, suite)?;
+        qa.push((suite.name.clone(), score.accuracy()));
+    }
+    Ok(EvalReport {
+        model: spec.name.clone(),
+        method: method.name().to_string(),
+        bits: cfg.bits,
+        ppl,
+        qa,
+        quant_seconds: qm.wall_seconds,
+        eval_seconds: t0.elapsed().as_secs_f64(),
+        effective_bits: if qm.layers.is_empty() { 16.0 } else { qm.mean_effective_bits() },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_load_if_present() {
+        if !crate::artifacts_dir().join("manifest.json").exists() {
+            return;
+        }
+        let arts = Artifacts::load().unwrap();
+        assert_eq!(arts.probes.len(), arts.manifest.probe_suites.len());
+        for s in &arts.manifest.eval_streams {
+            assert!(arts.eval_stream(s).unwrap().len() > 1000);
+        }
+        // probes decoded sanely
+        for suite in &arts.probes {
+            assert!(!suite.probes.is_empty());
+            for p in &suite.probes {
+                assert!(p.answer < p.candidates.len());
+                assert!(!p.prompt.is_empty());
+            }
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+//! The manifest defines the HLO executable ABI: parameter order, shapes and
+//! quantizability flags — rust marshals literals in exactly this order.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::json::{self, Value};
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub quant: bool,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ff: usize,
+    pub seq: usize,
+    pub params: Vec<ParamSpec>,
+    pub weights_file: String,
+    pub calib_file: String,
+    pub fwd_hlo: String,
+}
+
+impl ModelSpec {
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    pub fn quantizable(&self) -> impl Iterator<Item = &ParamSpec> {
+        self.params.iter().filter(|p| p.quant)
+    }
+
+    pub fn param(&self, name: &str) -> Option<&ParamSpec> {
+        self.params.iter().find(|p| p.name == name)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ProbeSuiteMeta {
+    pub name: String,
+    pub n: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct MsbKernelModel {
+    pub name: String,
+    pub hlo: String,
+    pub batch: usize,
+    pub levels: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seed: u64,
+    pub vocab: usize,
+    pub msb_block: usize,
+    pub eval_batch: usize,
+    pub eval_streams: Vec<String>,
+    pub probe_suites: Vec<ProbeSuiteMeta>,
+    pub models: Vec<ModelSpec>,
+    pub msb_kernel_model: Option<MsbKernelModel>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+        Self::from_value(dir, &v)
+    }
+
+    fn from_value(dir: PathBuf, v: &Value) -> Result<Self> {
+        let mut models = Vec::new();
+        for m in v.req("models")?.as_arr().unwrap_or(&[]) {
+            let mut params = Vec::new();
+            for p in m.req("params")?.as_arr().unwrap_or(&[]) {
+                params.push(ParamSpec {
+                    name: p.req_str("name")?.to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|x| x.as_usize())
+                        .collect(),
+                    quant: p.req("quant")?.as_bool().unwrap_or(false),
+                });
+            }
+            models.push(ModelSpec {
+                name: m.req_str("name")?.to_string(),
+                d: m.req_usize("d")?,
+                layers: m.req_usize("layers")?,
+                heads: m.req_usize("heads")?,
+                ff: m.req_usize("ff")?,
+                seq: m.req_usize("seq")?,
+                params,
+                weights_file: m.req_str("weights")?.to_string(),
+                calib_file: m.req_str("calib")?.to_string(),
+                fwd_hlo: m.req_str("fwd_hlo")?.to_string(),
+            });
+        }
+        let probe_suites = v
+            .req("probe_suites")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|s| {
+                Ok(ProbeSuiteMeta {
+                    name: s.req_str("name")?.to_string(),
+                    n: s.req_usize("n")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let msb_kernel_model = match v.get("msb_kernel_model") {
+            Some(k) => Some(MsbKernelModel {
+                name: k.req_str("name")?.to_string(),
+                hlo: k.req_str("hlo")?.to_string(),
+                batch: k.req_usize("batch")?,
+                levels: k.req_usize("levels")?,
+            }),
+            None => None,
+        };
+        Ok(Manifest {
+            dir,
+            seed: v.req_usize("seed")? as u64,
+            vocab: v.req_usize("vocab")?,
+            msb_block: v.req_usize("msb_block")?,
+            eval_batch: v.req_usize("eval_batch")?,
+            eval_streams: v
+                .req("eval_streams")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|s| s.as_str().map(String::from))
+                .collect(),
+            probe_suites,
+            models,
+            msb_kernel_model,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow::anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "seed": 1234, "vocab": 97, "msb_block": 64, "eval_batch": 8,
+        "eval_streams": ["eval_wk", "eval_pt"],
+        "probe_suites": [{"name": "cloze", "n": 100}],
+        "models": [{
+            "name": "tiny", "d": 64, "layers": 2, "heads": 2, "ff": 256,
+            "seq": 96,
+            "params": [
+                {"name": "tok_emb", "shape": [97, 64], "quant": false},
+                {"name": "layer0.wq", "shape": [64, 64], "quant": true}
+            ],
+            "weights": "tiny_weights.msbt",
+            "calib": "tiny_calib.msbt",
+            "fwd_hlo": "tiny_fwd.hlo.txt"
+        }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_value(PathBuf::from("/tmp"), &v).unwrap();
+        assert_eq!(m.vocab, 97);
+        assert_eq!(m.models.len(), 1);
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.params.len(), 2);
+        assert_eq!(tiny.quantizable().count(), 1);
+        assert_eq!(tiny.total_params(), 97 * 64 + 64 * 64);
+        assert!(m.model("nope").is_err());
+        assert!(m.msb_kernel_model.is_none());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.vocab > 90);
+        assert_eq!(m.msb_block, 64);
+        for model in &m.models {
+            // ABI sanity: every quantizable matrix is 2-D with cols % block == 0
+            for p in model.quantizable() {
+                assert_eq!(p.shape.len(), 2, "{}", p.name);
+                assert_eq!(p.shape[1] % m.msb_block, 0, "{}", p.name);
+            }
+            assert!(m.path(&model.weights_file).exists());
+            assert!(m.path(&model.fwd_hlo).exists());
+        }
+    }
+}

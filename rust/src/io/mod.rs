@@ -1,0 +1,7 @@
+//! IO substrate: the `.msbt` tensor container (shared with
+//! `python/compile/msbt.py`), a dependency-free JSON parser for
+//! `manifest.json`, and the typed manifest model.
+
+pub mod json;
+pub mod manifest;
+pub mod msbt;

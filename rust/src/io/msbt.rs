@@ -1,0 +1,332 @@
+//! `.msbt` tensor container — byte-compatible with `python/compile/msbt.py`:
+//!
+//! ```text
+//! magic b"MSBT" | version u32 | count u32 | count * record
+//! record: name_len u16, name, dtype u8, ndim u8, dims u32*, nbytes u64, data
+//! ```
+//! All integers little-endian. dtype: 0=f32, 1=i32, 2=bf16(u16), 3=i8.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Bf16(Vec<u16>),
+    I8(Vec<i8>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::Bf16(v) => v.len(),
+            TensorData::I8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn dtype_code(&self) -> u8 {
+        match self {
+            TensorData::F32(_) => 0,
+            TensorData::I32(_) => 1,
+            TensorData::Bf16(_) => 2,
+            TensorData::I8(_) => 3,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data: TensorData::I32(data) }
+    }
+
+    pub fn i8(dims: Vec<usize>, data: Vec<i8>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data: TensorData::I8(data) }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got dtype {}", other.dtype_code()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            other => bail!("expected i32 tensor, got dtype {}", other.dtype_code()),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            TensorData::I8(v) => Ok(v),
+            other => bail!("expected i8 tensor, got dtype {}", other.dtype_code()),
+        }
+    }
+
+    /// 2-D f32 tensors convert to the quantizers' [`Matrix`].
+    pub fn to_matrix(&self) -> Result<crate::tensor::Matrix> {
+        if self.dims.len() != 2 {
+            bail!("to_matrix on {}-d tensor", self.dims.len());
+        }
+        Ok(crate::tensor::Matrix::from_vec(
+            self.dims[0],
+            self.dims[1],
+            self.as_f32()?.to_vec(),
+        ))
+    }
+}
+
+/// BTreeMap keeps deterministic write order (stable artifacts & tests).
+pub type TensorMap = BTreeMap<String, Tensor>;
+
+pub fn read_file(path: impl AsRef<Path>) -> Result<TensorMap> {
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    read_bytes(&bytes)
+}
+
+pub fn read_bytes(bytes: &[u8]) -> Result<TensorMap> {
+    let mut r = Cursor { bytes, pos: 0 };
+    let magic = r.take(4)?;
+    if magic != b"MSBT" {
+        bail!("bad magic {:?}", &magic[..4.min(magic.len())]);
+    }
+    let version = r.u32()?;
+    if version != 1 {
+        bail!("unsupported msbt version {version}");
+    }
+    let count = r.u32()? as usize;
+    let mut out = TensorMap::new();
+    for _ in 0..count {
+        let name_len = r.u16()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+        let dtype = r.u8()?;
+        let ndim = r.u8()? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(r.u32()? as usize);
+        }
+        let nbytes = r.u64()? as usize;
+        let raw = r.take(nbytes)?;
+        let n: usize = dims.iter().product();
+        let data = match dtype {
+            0 => {
+                if nbytes != n * 4 {
+                    bail!("{name}: f32 byte count mismatch");
+                }
+                TensorData::F32(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                )
+            }
+            1 => {
+                if nbytes != n * 4 {
+                    bail!("{name}: i32 byte count mismatch");
+                }
+                TensorData::I32(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                )
+            }
+            2 => {
+                if nbytes != n * 2 {
+                    bail!("{name}: bf16 byte count mismatch");
+                }
+                TensorData::Bf16(
+                    raw.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect(),
+                )
+            }
+            3 => {
+                if nbytes != n {
+                    bail!("{name}: i8 byte count mismatch");
+                }
+                TensorData::I8(raw.iter().map(|&b| b as i8).collect())
+            }
+            d => bail!("{name}: unknown dtype {d}"),
+        };
+        out.insert(name, Tensor { dims, data });
+    }
+    Ok(out)
+}
+
+pub fn write_file(path: impl AsRef<Path>, tensors: &TensorMap) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    f.write_all(b"MSBT")?;
+    f.write_all(&1u32.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u16).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&[t.data.dtype_code(), t.dims.len() as u8])?;
+        for &d in &t.dims {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                f.write_all(&((v.len() * 4) as u64).to_le_bytes())?;
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::I32(v) => {
+                f.write_all(&((v.len() * 4) as u64).to_le_bytes())?;
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::Bf16(v) => {
+                f.write_all(&((v.len() * 2) as u64).to_le_bytes())?;
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::I8(v) => {
+                f.write_all(&(v.len() as u64).to_le_bytes())?;
+                let bytes: Vec<u8> = v.iter().map(|&x| x as u8).collect();
+                f.write_all(&bytes)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("msbt truncated at {} (+{n})", self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TensorMap {
+        let mut m = TensorMap::new();
+        m.insert("w".into(), Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        m.insert("codes".into(), Tensor::i8(vec![4], vec![-3, 0, 1, 7]));
+        m.insert("ids".into(), Tensor::i32(vec![2], vec![-1, 2_000_000]));
+        m
+    }
+
+    #[test]
+    fn roundtrip_memory() {
+        let m = sample();
+        let dir = std::env::temp_dir().join(format!("msbt_rt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.msbt");
+        write_file(&p, &m).unwrap();
+        let back = read_file(&p).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn golden_layout() {
+        // must match python/tests/test_msbt.py::test_byte_layout_golden
+        let mut m = TensorMap::new();
+        m.insert("ab".into(), Tensor::f32(vec![1], vec![1.0]));
+        let dir = std::env::temp_dir().join(format!("msbt_g_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.msbt");
+        write_file(&p, &m).unwrap();
+        let raw = std::fs::read(&p).unwrap();
+        assert_eq!(&raw[..4], b"MSBT");
+        assert_eq!(u32::from_le_bytes(raw[4..8].try_into().unwrap()), 1);
+        assert_eq!(u32::from_le_bytes(raw[8..12].try_into().unwrap()), 1);
+        assert_eq!(u16::from_le_bytes(raw[12..14].try_into().unwrap()), 2);
+        assert_eq!(&raw[14..16], b"ab");
+        assert_eq!(raw[16], 0); // f32
+        assert_eq!(raw[17], 1); // ndim
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(read_bytes(b"NOPE\0\0\0\0").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let m = sample();
+        let dir = std::env::temp_dir().join(format!("msbt_tr_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.msbt");
+        write_file(&p, &m).unwrap();
+        let raw = std::fs::read(&p).unwrap();
+        for cut in [5, 13, raw.len() - 1] {
+            assert!(read_bytes(&raw[..cut]).is_err(), "cut {cut}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn to_matrix() {
+        let t = Tensor::f32(vec![2, 2], vec![1., 2., 3., 4.]);
+        let m = t.to_matrix().unwrap();
+        assert_eq!(m.at(1, 0), 3.0);
+        let t1 = Tensor::f32(vec![4], vec![0.0; 4]);
+        assert!(t1.to_matrix().is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = Tensor::i32(vec![1], vec![5]);
+        assert!(t.as_f32().is_err());
+        assert!(t.as_i32().is_ok());
+    }
+}

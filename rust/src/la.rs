@@ -1,0 +1,207 @@
+//! Small dense linear algebra substrate (no external LA crates offline):
+//! Cholesky factorization / inversion over row-major `Vec<f64>` square
+//! matrices. Sized for GPTQ's Hessian work (in-dim ≤ 1024 here).
+
+use anyhow::{bail, Result};
+
+/// Row-major square matrix of f64.
+#[derive(Clone, Debug)]
+pub struct SquareMat {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl SquareMat {
+    pub fn zeros(n: usize) -> Self {
+        SquareMat { n, a: vec![0.0; n * n] }
+    }
+
+    pub fn from_vec(n: usize, a: Vec<f64>) -> Self {
+        assert_eq!(a.len(), n * n);
+        SquareMat { n, a }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            m.a[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.a[r * self.n + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.a[r * self.n + c] = v;
+    }
+
+    /// Add `eps` to the diagonal (Hessian damping).
+    pub fn add_diag(&mut self, eps: f64) {
+        for i in 0..self.n {
+            self.a[i * self.n + i] += eps;
+        }
+    }
+
+    pub fn mean_diag(&self) -> f64 {
+        (0..self.n).map(|i| self.at(i, i)).sum::<f64>() / self.n as f64
+    }
+
+    /// Lower Cholesky: A = L·Lᵀ. Errors on non-PD input.
+    pub fn cholesky(&self) -> Result<SquareMat> {
+        let n = self.n;
+        let mut l = SquareMat::zeros(n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = self.at(i, j);
+                for k in 0..j {
+                    sum -= l.at(i, k) * l.at(j, k);
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        bail!("matrix not positive definite at pivot {i} (sum {sum})");
+                    }
+                    l.set(i, j, sum.sqrt());
+                } else {
+                    l.set(i, j, sum / l.at(j, j));
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// Inverse via Cholesky (A must be PD): A⁻¹ = L⁻ᵀ·L⁻¹.
+    pub fn inverse_pd(&self) -> Result<SquareMat> {
+        let n = self.n;
+        let l = self.cholesky()?;
+        // forward-solve L·X = I column by column => X = L⁻¹
+        let mut linv = SquareMat::zeros(n);
+        for col in 0..n {
+            for i in col..n {
+                let mut sum = if i == col { 1.0 } else { 0.0 };
+                for k in col..i {
+                    sum -= l.at(i, k) * linv.at(k, col);
+                }
+                linv.set(i, col, sum / l.at(i, i));
+            }
+        }
+        // A⁻¹ = Linvᵀ · Linv
+        let mut inv = SquareMat::zeros(n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = 0.0;
+                for k in i.max(j)..n {
+                    sum += linv.at(k, i) * linv.at(k, j);
+                }
+                inv.set(i, j, sum);
+                inv.set(j, i, sum);
+            }
+        }
+        Ok(inv)
+    }
+
+    pub fn matmul(&self, other: &SquareMat) -> SquareMat {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = SquareMat::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let aik = self.at(i, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.a[i * n + j] += aik * other.at(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &SquareMat) -> f64 {
+        self.a
+            .iter()
+            .zip(&other.a)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Rng;
+
+    fn random_pd(n: usize, seed: u64) -> SquareMat {
+        // A = BᵀB + n·I is PD
+        let mut rng = Rng::new(seed);
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = SquareMat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[k * n + i] * b[k * n + j];
+                }
+                a.set(i, j, s);
+            }
+        }
+        a.add_diag(n as f64);
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_pd(24, 1);
+        let l = a.cholesky().unwrap();
+        let mut ll = SquareMat::zeros(a.n);
+        for i in 0..a.n {
+            for j in 0..a.n {
+                let mut s = 0.0;
+                for k in 0..a.n {
+                    s += l.at(i, k) * l.at(j, k);
+                }
+                ll.set(i, j, s);
+            }
+        }
+        assert!(ll.max_abs_diff(&a) < 1e-9, "{}", ll.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn inverse_pd_identity() {
+        let a = random_pd(16, 2);
+        let inv = a.inverse_pd().unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.max_abs_diff(&SquareMat::identity(16)) < 1e-8);
+    }
+
+    #[test]
+    fn rejects_non_pd() {
+        let mut a = SquareMat::identity(4);
+        a.set(0, 0, -1.0);
+        assert!(a.cholesky().is_err());
+    }
+
+    #[test]
+    fn damping_enables_cholesky() {
+        let mut a = SquareMat::zeros(8);
+        for i in 0..8 {
+            for j in 0..8 {
+                a.set(i, j, 1.0); // rank-1
+            }
+        }
+        assert!(a.cholesky().is_err());
+        a.add_diag(0.01);
+        assert!(a.cholesky().is_ok());
+    }
+
+    #[test]
+    fn identity_inverse_is_identity() {
+        let i = SquareMat::identity(10);
+        let inv = i.inverse_pd().unwrap();
+        assert!(inv.max_abs_diff(&SquareMat::identity(10)) < 1e-12);
+    }
+}

@@ -1,0 +1,58 @@
+//! # msb-quant
+//!
+//! Reproduction of *"Calibration and Transformation-Free Weight-Only LLMs
+//! Quantization via Dynamic Grouping"* (MSB PTQ) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: the MSB objective
+//!   and its four CPU solvers ([`msb`]), the baseline quantizer zoo
+//!   ([`quant`]), the quantization pipeline coordinator ([`pipeline`]), and
+//!   the PJRT-backed evaluation runtime ([`runtime`], [`eval`], [`server`]).
+//! * **Layer 2** — a JAX transformer lowered at build time to HLO text
+//!   (`python/compile/model.py` → `artifacts/*_fwd.hlo.txt`).
+//! * **Layer 1** — a Pallas MSB dequant-matmul kernel
+//!   (`python/compile/kernels/msb_dequant.py`) embedded in the
+//!   `small_fwd_msb` executable.
+//!
+//! Python never runs on the request path: after `make artifacts`, everything
+//! here is self-contained.
+//!
+//! Quick taste (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use msb_quant::{quant, quant::Quantizer, stats, tensor::Matrix};
+//! let mut rng = stats::Rng::new(7);
+//! let w = Matrix::randn(256, 256, &mut rng);
+//! let cfg = quant::QuantConfig::block_wise(4, 64).with_window(1);
+//! let q = quant::msb::MsbQuantizer::wgm().quantize(&w, &cfg);
+//! println!("4-bit block-wise MSE = {}", q.mse(&w));
+//! ```
+
+pub mod cli;
+pub mod eval;
+pub mod harness;
+pub mod io;
+pub mod la;
+pub mod msb;
+pub mod pipeline;
+pub mod pool;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod stats;
+pub mod tensor;
+
+#[doc(hidden)]
+pub mod benchlib;
+#[doc(hidden)]
+pub mod testing;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default artifacts directory (overridable via `MSB_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("MSB_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,259 @@
+//! `msb` — the L3 coordinator CLI.
+//!
+//! ```text
+//! msb info                              artifact + model summary
+//! msb solve   --algo wgm --n 65536 --groups 32 --window 64
+//! msb quantize --model base --method wgm --bits 4 --granularity block
+//! msb eval    --model base --method wgm --bits 4 --granularity block
+//! msb kernel  run the Pallas-MSB native executable (small model)
+//! ```
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use msb_quant::cli::Args;
+use msb_quant::harness::{eval_quantized, Artifacts};
+use msb_quant::io::msbt;
+use msb_quant::msb::{Algo, Solver};
+use msb_quant::pipeline::{quantize_model, Method};
+use msb_quant::quant::QuantConfig;
+use msb_quant::runtime::ModelRunner;
+use msb_quant::stats::Rng;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let r = match args.command.as_str() {
+        "info" => cmd_info(),
+        "solve" => cmd_solve(&args),
+        "quantize" => cmd_quantize(&args),
+        "eval" => cmd_eval(&args),
+        "kernel" => cmd_kernel(),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown command '{other}'\n{HELP}")),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+msb — MSB dynamic-grouping PTQ (paper reproduction)
+
+commands:
+  info       artifact and model summary
+  solve      run a solver on a synthetic N(0,1) instance
+             --algo dg|gg|wgm|wgm-lo --n <elems> --groups <g> --window <w>
+  quantize   quantize a trained model, write <model>_<method>.msbt
+             --model tiny|small|base --method rtn|bnb|hqq|gptq|wgm|wgm-lo|...
+             --bits B --granularity block|tensor --block T --window W
+  eval       quantize + PPL/QA evaluation through the PJRT runtime
+             (same flags as quantize; --method fp for the baseline row)
+  kernel     execute the native Pallas-MSB HLO for the small model
+";
+
+fn parse_cfg(args: &Args) -> Result<QuantConfig> {
+    let bits = args.u32_or("bits", 4)?;
+    let block = args.usize_or("block", 64)?;
+    let gran = args.str_or("granularity", "block");
+    let mut cfg = match gran {
+        "block" | "blockwise" => QuantConfig::block_wise(bits, block),
+        "tensor" | "per-tensor" => QuantConfig::per_tensor(bits),
+        g => anyhow::bail!("bad --granularity '{g}'"),
+    };
+    if let Some(w) = args.get("window") {
+        cfg = cfg.with_window(w.parse().context("--window")?);
+    }
+    if let Some(l) = args.get("lambda") {
+        cfg = cfg.with_lambda(l.parse().context("--lambda")?);
+    }
+    Ok(cfg)
+}
+
+fn cmd_info() -> Result<()> {
+    let arts = Artifacts::load()?;
+    let m = &arts.manifest;
+    println!("artifacts: {}", m.dir.display());
+    println!("vocab {} | msb block {} | eval batch {}", m.vocab, m.msb_block, m.eval_batch);
+    println!("eval streams: {:?}", m.eval_streams);
+    println!(
+        "probe suites: {:?}",
+        m.probe_suites.iter().map(|s| format!("{}({})", s.name, s.n)).collect::<Vec<_>>()
+    );
+    for spec in &m.models {
+        println!(
+            "model {:<6} d={} L={} heads={} ff={} seq={}  params={}  quantizable={}",
+            spec.name,
+            spec.d,
+            spec.layers,
+            spec.heads,
+            spec.ff,
+            spec.seq,
+            spec.total_params(),
+            spec.quantizable().count()
+        );
+    }
+    if let Some(k) = &m.msb_kernel_model {
+        println!("native MSB-kernel executable: {} ({} levels)", k.hlo, k.levels);
+    }
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 65_536)?;
+    let groups = args.usize_or("groups", 32)?;
+    let window = args.usize_or("window", 64)?;
+    let seed = args.usize_or("seed", 7)? as u64;
+    let algo = match args.str_or("algo", "wgm") {
+        "dg" => Algo::Dg,
+        "gg" => Algo::Gg,
+        "wgm" => Algo::Wgm { window },
+        "wgm-lo" => Algo::WgmLo { bins: 256, range: 32, max_iters: 12, patience: 3 },
+        a => anyhow::bail!("bad --algo '{a}'"),
+    };
+    let mut rng = Rng::new(seed);
+    let mut vals = vec![0.0f32; n];
+    rng.fill_normal(&mut vals, 1.0);
+    let solver = Solver::new(algo.clone()).with_lambda(args.f64_or("lambda", 0.75)?);
+    let t0 = Instant::now();
+    let code = solver.quantize(&vals, groups);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{} n={} groups={} -> levels={} sse={:.4} bits/code={} time={:.3}s ({:.1}M elem/s)",
+        algo.name(),
+        n,
+        groups,
+        code.num_levels(),
+        code.sse(&vals),
+        code.code_bits(),
+        dt,
+        n as f64 / dt / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let arts = Artifacts::load()?;
+    let model = args.str_or("model", "small");
+    let spec = arts.manifest.model(model)?;
+    let method = Method::parse(args.str_or("method", "wgm"))?;
+    let cfg = parse_cfg(args)?;
+    let weights = arts.weights(spec)?;
+    let calib;
+    let calib_ref = if method.needs_calibration() {
+        calib = arts.calib(spec)?;
+        Some(&calib)
+    } else {
+        None
+    };
+    let threads = args.usize_or("threads", 1)?;
+    let qm = quantize_model(spec, &weights, calib_ref, method, &cfg, threads)?;
+    println!(
+        "{} {} quantized in {:.2}s: total SSE {:.4}, {:.2} bits/weight",
+        model,
+        method.name(),
+        qm.wall_seconds,
+        qm.total_sse(),
+        qm.mean_effective_bits()
+    );
+    for l in &qm.layers {
+        println!("  {:<16} {}x{}  sse {:.5}  {:.3}s", l.name, l.rows, l.cols, l.sse, l.seconds);
+    }
+    let out = args
+        .get("out")
+        .map(String::from)
+        .unwrap_or_else(|| format!("{model}_{}.msbt", method.name()));
+    msbt::write_file(&out, &qm.weights)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let arts = Artifacts::load()?;
+    let model = args.str_or("model", "small");
+    let spec = arts.manifest.model(model)?;
+    let method = Method::parse(args.str_or("method", "wgm"))?;
+    let cfg = parse_cfg(args)?;
+    let weights = arts.weights(spec)?;
+    let mut runner = ModelRunner::new(&arts.manifest, spec, &weights)?;
+    let report = eval_quantized(
+        &arts,
+        spec,
+        &mut runner,
+        &weights,
+        method,
+        &cfg,
+        args.usize_or("threads", 1)?,
+    )?;
+    println!("{}", report.row());
+    for (name, v) in &report.ppl {
+        println!("  ppl {name}: {v:.3}");
+    }
+    for (name, v) in &report.qa {
+        println!("  qa  {name}: {v:.3}");
+    }
+    Ok(())
+}
+
+fn cmd_kernel() -> Result<()> {
+    use msb_quant::quant::{msb::MsbQuantizer, Quantizer};
+    let arts = Artifacts::load()?;
+    let k = arts
+        .manifest
+        .msb_kernel_model
+        .as_ref()
+        .context("no msb_kernel_model in manifest (re-run make artifacts)")?;
+    let spec = arts.manifest.model(&k.name)?;
+    let weights = arts.weights(spec)?;
+    let rt = msb_quant::runtime::Runtime::cpu()?;
+    println!("compiling {} (Pallas interpret-mode HLO)...", k.hlo);
+    let exe = rt.load_hlo(arts.manifest.path(&k.hlo))?;
+
+    // ABI: tokens, non-quant params (spec order), then (codes, scales) pairs
+    let block = arts.manifest.msb_block;
+    let cfg = QuantConfig::block_wise(4, block).no_bf16();
+    let q = MsbQuantizer::wgm();
+    let mut bufs = Vec::new();
+    let toks: Vec<i32> = (0..k.batch * spec.seq).map(|i| (i % 90) as i32 + 1).collect();
+    bufs.push(rt.upload_i32(&toks, &[k.batch, spec.seq])?);
+    for p in &spec.params {
+        if !p.quant {
+            bufs.push(rt.upload_f32(weights.get(&p.name).unwrap().as_f32()?, &p.shape)?);
+        }
+    }
+    let t0 = Instant::now();
+    for p in spec.params.iter().filter(|p| p.quant) {
+        let w = weights.get(&p.name).unwrap().to_matrix()?;
+        let qt = q.quantize(&w, &cfg);
+        let payload = qt.msb.as_ref().unwrap();
+        let codes = payload.codes.as_ref().context("codes overflow i8")?;
+        bufs.push(rt.upload_i8(codes, &p.shape)?);
+        bufs.push(rt.upload_f32(
+            &payload.scales,
+            &[p.shape[0], p.shape[1] / block, k.levels],
+        )?);
+    }
+    println!("quantized + uploaded in {:.2}s; executing...", t0.elapsed().as_secs_f64());
+    let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    let t1 = Instant::now();
+    let logits = exe.run_buffers(&args)?;
+    println!(
+        "native MSB forward OK: {} logits in {:.2}s (batch {} x seq {} x vocab {})",
+        logits.len(),
+        t1.elapsed().as_secs_f64(),
+        k.batch,
+        spec.seq,
+        arts.manifest.vocab
+    );
+    anyhow::ensure!(logits.iter().all(|v| v.is_finite()), "non-finite logits");
+    Ok(())
+}

@@ -1,0 +1,221 @@
+//! The MSB codebook: group scales α_z + per-element sign/level codes.
+//! `ŵ = sign(w) · α_{level(w)}` — a symmetric 2·L-level codebook with a
+//! binary sign structure (paper §4.1). Level 0 is reserved for exact zeros
+//! (kept as bf16 zeros, zero-loss special group).
+
+use super::grouping::Grouping;
+use super::objective::{Prefix, SortedMags};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct MsbCode {
+    /// Number of original elements.
+    pub n: usize,
+    /// Ascending positive scales, one per group.
+    pub levels: Vec<f32>,
+    /// Per element: 0 = exact zero, else `sign · level_index_plus_one`
+    /// (i16 so per-tensor settings with hundreds of groups fit).
+    pub codes: Vec<i16>,
+}
+
+impl MsbCode {
+    /// Assemble from the original values, their sorted view and a grouping
+    /// of the sorted magnitudes.
+    pub fn build(values: &[f32], sm: &SortedMags, grouping: &Grouping) -> Self {
+        let prefix = Prefix::new(&sm.mags);
+        Self::build_with_prefix(values, sm, grouping, &prefix)
+    }
+
+    /// Like [`MsbCode::build`], reusing an existing prefix-sum table
+    /// (§Perf: avoids the second O(n) pass and assigns codes by interval
+    /// iteration instead of per-element binary search).
+    pub fn build_with_prefix(
+        values: &[f32],
+        sm: &SortedMags,
+        grouping: &Grouping,
+        prefix: &Prefix,
+    ) -> Self {
+        assert_eq!(sm.mags.len() + sm.zeros.len(), values.len());
+        assert!(grouping.num_groups() <= i16::MAX as usize);
+        let levels: Vec<f32> = grouping.scales(prefix).iter().map(|&s| s as f32).collect();
+        let mut codes = vec![0i16; values.len()];
+        for (k, (s, e)) in grouping.intervals().enumerate() {
+            let lvl = k as i16 + 1;
+            for &orig in &sm.order[s..e] {
+                let orig = orig as usize;
+                codes[orig] = if values[orig] < 0.0 { -lvl } else { lvl };
+            }
+        }
+        MsbCode { n: values.len(), levels, codes }
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Effective bit-width of the sign+level code: 1 sign bit + ⌈log2 L⌉.
+    pub fn code_bits(&self) -> u32 {
+        1 + (self.num_levels().max(1) as f64).log2().ceil() as u32
+    }
+
+    /// Decode all elements back to f32.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n];
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// Decode into a caller-provided buffer (hot path for block-wise
+    /// whole-matrix reconstruction).
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n);
+        for (o, &c) in out.iter_mut().zip(&self.codes) {
+            *o = if c == 0 {
+                0.0
+            } else {
+                let level = (c.unsigned_abs() as usize) - 1;
+                let mag = self.levels[level];
+                if c < 0 {
+                    -mag
+                } else {
+                    mag
+                }
+            };
+        }
+    }
+
+    /// Total squared reconstruction error against the original values.
+    pub fn sse(&self, values: &[f32]) -> f64 {
+        assert_eq!(values.len(), self.n);
+        let mut acc = 0.0f64;
+        for (&v, &c) in values.iter().zip(&self.codes) {
+            let w = if c == 0 {
+                0.0f32
+            } else {
+                let mag = self.levels[(c.unsigned_abs() as usize) - 1];
+                if c < 0 {
+                    -mag
+                } else {
+                    mag
+                }
+            };
+            let d = (v - w) as f64;
+            acc += d * d;
+        }
+        acc
+    }
+
+    /// Export as int8 codes for the L1 Pallas kernel (requires ≤ 127
+    /// levels; block-wise 4-bit uses 8).
+    pub fn codes_i8(&self) -> Option<Vec<i8>> {
+        if self.num_levels() > 127 {
+            return None;
+        }
+        Some(self.codes.iter().map(|&c| c as i8).collect())
+    }
+
+    /// Levels padded/truncated to exactly `l` entries (kernel ABI wants a
+    /// fixed 2^{b-1} table; unused entries repeat the top scale).
+    pub fn levels_padded(&self, l: usize) -> Vec<f32> {
+        let mut v = self.levels.clone();
+        let last = v.last().copied().unwrap_or(0.0);
+        v.resize(l, last);
+        v.truncate(l);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msb::{Algo, Solver};
+
+    #[test]
+    fn roundtrip_structure() {
+        let vals = [-4.0f32, -1.0, 0.0, 1.2, 3.9, 4.1];
+        let code = Solver::new(Algo::Gg).quantize(&vals, 2);
+        assert_eq!(code.n, 6);
+        assert!(code.num_levels() <= 2);
+        let deq = code.dequantize();
+        // zero preserved, signs preserved, magnitudes are level values
+        assert_eq!(deq[2], 0.0);
+        for (v, d) in vals.iter().zip(&deq) {
+            if *v != 0.0 {
+                assert_eq!(v.signum(), d.signum());
+                assert!(code.levels.contains(&d.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn sse_matches_dequant_sse() {
+        let mut rng = crate::stats::Rng::new(3);
+        let vals: Vec<f32> = (0..500).map(|_| rng.normal() as f32).collect();
+        let code = Solver::new(Algo::Wgm { window: 4 }).quantize(&vals, 8);
+        let deq = code.dequantize();
+        let direct = crate::stats::sse(&vals, &deq);
+        crate::testing::assert_close(code.sse(&vals), direct, 1e-9, 1e-12);
+    }
+
+    #[test]
+    fn single_level_is_xnor() {
+        // one group == XNOR: scale = mean |w|
+        let vals = [1.0f32, -2.0, 3.0, -4.0];
+        let code = Solver::new(Algo::Gg).quantize(&vals, 1);
+        assert_eq!(code.num_levels(), 1);
+        crate::testing::assert_close(code.levels[0] as f64, 2.5, 1e-6, 0.0);
+    }
+
+    #[test]
+    fn code_bits() {
+        let vals: Vec<f32> = (1..=64).map(|i| i as f32).collect();
+        for (g, bits) in [(1usize, 1u32), (2, 2), (8, 4), (32, 6)] {
+            let code = Solver::new(Algo::Gg).quantize(&vals, g);
+            if code.num_levels() == g {
+                assert_eq!(code.code_bits(), bits, "g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_export_bounds() {
+        let vals: Vec<f32> = (1..=300).map(|i| i as f32).collect();
+        let small = Solver::new(Algo::Gg).quantize(&vals, 8);
+        assert!(small.codes_i8().is_some());
+        let big = Solver::new(Algo::Wgm { window: 1 }).quantize(&vals, 300);
+        if big.num_levels() > 127 {
+            assert!(big.codes_i8().is_none());
+        }
+    }
+
+    #[test]
+    fn levels_padded() {
+        let vals = [1.0f32, 2.0];
+        let code = Solver::new(Algo::Gg).quantize(&vals, 2);
+        let padded = code.levels_padded(8);
+        assert_eq!(padded.len(), 8);
+        assert_eq!(padded[7], *code.levels.last().unwrap());
+    }
+
+    #[test]
+    fn all_zero_input() {
+        let vals = [0.0f32; 16];
+        let sm = SortedMags::from_values(&vals);
+        assert!(sm.is_empty());
+        // a degenerate grouping is not buildable from an empty sort — the
+        // quantizer layer handles this by emitting a pure-zero code
+        assert_eq!(sm.zeros.len(), 16);
+    }
+
+    #[test]
+    fn monotone_improvement_with_levels() {
+        let mut rng = crate::stats::Rng::new(7);
+        let vals: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        let mut last = f64::INFINITY;
+        for g in [1usize, 2, 4, 8, 16, 32] {
+            let code = Solver::new(Algo::Gg).quantize(&vals, g);
+            let sse = code.sse(&vals);
+            assert!(sse <= last + 1e-9, "g={g}: {sse} > {last}");
+            last = sse;
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Algorithm 1 — Dynamic Grouping: exact DP oracle over contiguous
+//! partitions of the sorted magnitudes (paper §3.3.1).
+//!
+//! `dp[k][j]` = min cost of splitting the first `j` sorted elements into
+//! exactly `k` groups; recurrence `dp[k][j] = min_i dp[k-1][i] + f([i:j])`
+//! with `f` the O(1) prefix-sum interval cost. The answer minimizes over
+//! `k ≤ max_groups` (λ's 1/|A_i| penalty is what makes fewer groups win
+//! when variance permits). O(max_groups · n²) time, O(max_groups · n)
+//! memory — an oracle for small instances (Table 4), not a production path.
+
+use super::grouping::Grouping;
+use super::objective::{CostParams, Prefix};
+
+pub fn solve(prefix: &Prefix, max_groups: usize, params: &CostParams) -> Grouping {
+    let n = prefix.len();
+    assert!(n > 0, "empty instance");
+    let g_max = max_groups.min(n).max(1);
+
+    // dp rows: previous and current k; split[k][j] = argmin i
+    let mut prev = vec![f64::INFINITY; n + 1];
+    let mut curr = vec![f64::INFINITY; n + 1];
+    let mut split = vec![vec![0u32; n + 1]; g_max + 1];
+
+    // k = 1: one group [0, j)
+    for j in 1..=n {
+        prev[j] = prefix.cost(0, j, params);
+    }
+
+    let mut best_cost = prev[n];
+    let mut best_k = 1usize;
+
+    for k in 2..=g_max {
+        curr[0] = f64::INFINITY;
+        for j in 1..=n {
+            // j elements into k groups needs j >= k
+            if j < k {
+                curr[j] = f64::INFINITY;
+                continue;
+            }
+            let mut best = f64::INFINITY;
+            let mut arg = k - 1;
+            // last group is [i, j); i ranges over [k-1, j)
+            for i in (k - 1)..j {
+                let c = prev[i] + prefix.cost(i, j, params);
+                if c < best {
+                    best = c;
+                    arg = i;
+                }
+            }
+            curr[j] = best;
+            split[k][j] = arg as u32;
+        }
+        if curr[n] < best_cost {
+            best_cost = curr[n];
+            best_k = k;
+        }
+        std::mem::swap(&mut prev, &mut curr);
+    }
+
+    // backtrack from (best_k, n)
+    let mut bounds = vec![0usize; best_k];
+    let mut j = n;
+    for k in (1..=best_k).rev() {
+        bounds[k - 1] = j;
+        j = if k >= 2 { split[k][j] as usize } else { 0 };
+    }
+    Grouping::new(bounds)
+}
+
+/// Exact DP with the group count *fixed* to exactly `groups` (when
+/// feasible). Used by Table 4 to compare against WGM at identical bits.
+pub fn solve_exact_groups(prefix: &Prefix, groups: usize, params: &CostParams) -> Grouping {
+    let n = prefix.len();
+    let g = groups.min(n).max(1);
+    let mut prev = vec![f64::INFINITY; n + 1];
+    let mut curr = vec![f64::INFINITY; n + 1];
+    let mut split = vec![vec![0u32; n + 1]; g + 1];
+    for j in 1..=n {
+        prev[j] = prefix.cost(0, j, params);
+    }
+    for k in 2..=g {
+        for j in 0..=n {
+            curr[j] = f64::INFINITY;
+        }
+        for j in k..=n {
+            let mut best = f64::INFINITY;
+            let mut arg = k - 1;
+            for i in (k - 1)..j {
+                let c = prev[i] + prefix.cost(i, j, params);
+                if c < best {
+                    best = c;
+                    arg = i;
+                }
+            }
+            curr[j] = best;
+            split[k][j] = arg as u32;
+        }
+        std::mem::swap(&mut prev, &mut curr);
+    }
+    let mut bounds = vec![0usize; g];
+    let mut j = n;
+    for k in (1..=g).rev() {
+        bounds[k - 1] = j;
+        j = if k >= 2 { split[k][j] as usize } else { 0 };
+    }
+    Grouping::new(bounds)
+}
+
+/// Brute-force optimum by enumerating *all* contiguous partitions with
+/// ≤ max_groups groups. Exponential; test-only ground truth.
+#[doc(hidden)]
+pub fn brute_force(prefix: &Prefix, max_groups: usize, params: &CostParams) -> (f64, Grouping) {
+    let n = prefix.len();
+    let mut best = (f64::INFINITY, Grouping::whole(n));
+    // enumerate cut masks over n-1 positions
+    assert!(n <= 16, "brute force limited to tiny instances");
+    for mask in 0u32..(1 << (n - 1)) {
+        if (mask.count_ones() as usize) + 1 > max_groups {
+            continue;
+        }
+        let mut bounds = Vec::new();
+        for pos in 1..n {
+            if mask & (1 << (pos - 1)) != 0 {
+                bounds.push(pos);
+            }
+        }
+        bounds.push(n);
+        let g = Grouping::new(bounds);
+        let c = g.cost(prefix, params);
+        if c < best.0 {
+            best = (c, g);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msb::objective::SortedMags;
+    use crate::testing::{assert_close, hostile_magnitudes};
+
+    fn prefix_of(values: &[f32]) -> (SortedMags, Prefix) {
+        let sm = SortedMags::from_values(values);
+        let p = Prefix::new(&sm.mags);
+        (sm, p)
+    }
+
+    #[test]
+    fn two_clusters_found() {
+        let vals = [0.1f32, 0.11, 0.12, 5.0, 5.1, 5.2];
+        let (_, p) = prefix_of(&vals);
+        let params = CostParams::unnormalized(1e-4);
+        let g = solve(&p, 4, &params);
+        // λ tiny but group penalty still discourages singletons; the two
+        // natural clusters should be split apart
+        assert!(g.num_groups() >= 2);
+        assert!(g.bounds.contains(&3), "{:?}", g.bounds);
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        crate::testing::check(
+            "dg == brute force",
+            25,
+            |rng| {
+                let n = 2 + rng.below(9);
+                let vals = hostile_magnitudes(rng, n);
+                let lambda = rng.range_f64(0.0, 0.5);
+                (vals, lambda)
+            },
+            |(vals, lambda)| {
+                let sm = SortedMags::from_values(vals);
+                if sm.mags.is_empty() {
+                    return true;
+                }
+                let p = Prefix::new(&sm.mags);
+                let params = CostParams::unnormalized(*lambda);
+                let g = solve(&p, 4, &params);
+                let (bc, _) = brute_force(&p, 4, &params);
+                (g.cost(&p, &params) - bc).abs() <= 1e-9 * (1.0 + bc.abs())
+            },
+        );
+    }
+
+    #[test]
+    fn large_lambda_forces_single_group() {
+        let vals: Vec<f32> = (1..=50).map(|i| i as f32).collect();
+        let (_, p) = prefix_of(&vals);
+        let params = CostParams::unnormalized(1e9);
+        let g = solve(&p, 8, &params);
+        assert_eq!(g.num_groups(), 1);
+    }
+
+    #[test]
+    fn zero_lambda_uses_all_groups_when_it_helps() {
+        let vals = [1.0f32, 2.0, 4.0, 8.0];
+        let (_, p) = prefix_of(&vals);
+        let params = CostParams::unnormalized(0.0);
+        let g = solve(&p, 4, &params);
+        assert_eq!(g.num_groups(), 4); // singletons have zero variance
+        assert_close(g.cost(&p, &params), 0.0, 0.0, 1e-12);
+    }
+
+    #[test]
+    fn exact_groups_fixed_count() {
+        let vals: Vec<f32> = (1..=20).map(|i| i as f32 * 0.3).collect();
+        let (_, p) = prefix_of(&vals);
+        let params = CostParams::unnormalized(0.0);
+        for g_target in [1usize, 2, 3, 5, 20] {
+            let g = solve_exact_groups(&p, g_target, &params);
+            assert_eq!(g.num_groups(), g_target);
+        }
+    }
+
+    #[test]
+    fn exact_groups_monotone_sse() {
+        // more groups can never increase the optimal SSE
+        let mut rng = crate::stats::Rng::new(17);
+        let vals: Vec<f32> = (0..60).map(|_| rng.normal().abs() as f32 + 1e-5).collect();
+        let (_, p) = prefix_of(&vals);
+        let params = CostParams::unnormalized(0.0);
+        let mut last = f64::INFINITY;
+        for k in 1..=8 {
+            let g = solve_exact_groups(&p, k, &params);
+            let sse = g.sse(&p);
+            assert!(sse <= last + 1e-9, "k={k}: {sse} > {last}");
+            last = sse;
+        }
+    }
+
+    #[test]
+    fn single_element() {
+        let (_, p) = prefix_of(&[3.0]);
+        let g = solve(&p, 4, &CostParams::unnormalized(0.1));
+        assert_eq!(g.bounds, vec![1]);
+    }
+}

@@ -1,0 +1,312 @@
+//! Algorithm 2 — Greedy Grouping (paper §3.3.2), plus the shared
+//! adjacent-merge machinery reused by WGM (Algorithm 3) and WGM-LO
+//! (Algorithm 4).
+//!
+//! Sorted non-zero magnitudes start as singleton groups; a min-heap holds
+//! the cost *delta* of merging each adjacent pair; we repeatedly apply the
+//! cheapest merge until `target` groups remain. The paper's "ignore array"
+//! for invalidated merges is realized as lazy invalidation with per-group
+//! generation counters: stale heap entries are skipped on pop (ablated in
+//! benches/perf_hotpath.rs).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::grouping::Grouping;
+use super::objective::{CostParams, Prefix};
+
+/// f64 ordered via total_cmp so it can live in a BinaryHeap.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Cost(f64);
+
+impl Eq for Cost {}
+
+impl PartialOrd for Cost {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Cost {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Entry {
+    cost: Cost,
+    left: u32,
+    lgen: u32,
+    rgen: u32,
+}
+
+const NONE: u32 = u32::MAX;
+
+/// Reusable buffers for [`greedy_merge_ws`] — the block-wise hot path runs
+/// one merge per 64-element block, so per-call allocation dominates without
+/// this (§Perf).
+#[derive(Default)]
+pub struct MergeWorkspace {
+    start: Vec<u32>,
+    end: Vec<u32>,
+    prev: Vec<u32>,
+    next: Vec<u32>,
+    gen: Vec<u32>,
+    heap: BinaryHeap<Reverse<Entry>>,
+}
+
+/// Merge adjacent groups of `initial` (a valid [`Grouping`] over `prefix`)
+/// until at most `target` remain, greedily by smallest cost increase.
+pub fn greedy_merge(
+    prefix: &Prefix,
+    initial: Grouping,
+    target: usize,
+    params: &CostParams,
+) -> Grouping {
+    let mut ws = MergeWorkspace::default();
+    let mut bounds = Vec::new();
+    greedy_merge_ws(&mut ws, prefix, initial.intervals(), target, params, &mut bounds);
+    if bounds.is_empty() {
+        return initial;
+    }
+    Grouping::new(bounds)
+}
+
+/// Workspace variant: `initial` is an interval iterator; the resulting
+/// bounds land in `out_bounds` (cleared first). If the initial partition
+/// already satisfies `target`, `out_bounds` receives it unchanged.
+pub fn greedy_merge_ws(
+    ws: &mut MergeWorkspace,
+    prefix: &Prefix,
+    initial: impl Iterator<Item = (usize, usize)>,
+    target: usize,
+    params: &CostParams,
+    out_bounds: &mut Vec<usize>,
+) {
+    let target = target.max(1);
+    let start = &mut ws.start;
+    let end = &mut ws.end;
+    start.clear();
+    end.clear();
+    for (s, e) in initial {
+        start.push(s as u32);
+        end.push(e as u32);
+    }
+    let g0 = start.len();
+    out_bounds.clear();
+    if g0 <= target {
+        out_bounds.extend(end.iter().map(|&e| e as usize));
+        return;
+    }
+
+    let prev = &mut ws.prev;
+    let next = &mut ws.next;
+    let gen = &mut ws.gen;
+    prev.clear();
+    next.clear();
+    gen.clear();
+    prev.extend((0..g0 as u32).map(|i| i.wrapping_sub(1)));
+    next.extend(1..=g0 as u32);
+    prev[0] = NONE;
+    next[g0 - 1] = NONE;
+    gen.resize(g0, 0);
+
+    let delta = |start: &[u32], end: &[u32], a: usize, b: usize| -> f64 {
+        let merged = prefix.cost(start[a] as usize, end[b] as usize, params);
+        merged
+            - prefix.cost(start[a] as usize, end[a] as usize, params)
+            - prefix.cost(start[b] as usize, end[b] as usize, params)
+    };
+
+    let heap = &mut ws.heap;
+    heap.clear();
+    for a in 0..g0 - 1 {
+        heap.push(Reverse(Entry {
+            cost: Cost(delta(start, end, a, a + 1)),
+            left: a as u32,
+            lgen: 0,
+            rgen: 0,
+        }));
+    }
+
+    let mut alive = g0;
+    while alive > target {
+        let Some(Reverse(e)) = heap.pop() else { break };
+        let a = e.left as usize;
+        // lazy invalidation: stale generation => the paper's "ignore array"
+        if gen[a] != e.lgen {
+            continue;
+        }
+        let b = next[a];
+        if b == NONE {
+            continue;
+        }
+        let b = b as usize;
+        if gen[b] != e.rgen {
+            continue;
+        }
+
+        // merge b into a
+        end[a] = end[b];
+        gen[a] = gen[a].wrapping_add(1);
+        gen[b] = gen[b].wrapping_add(1); // kills entries referencing b
+        let nb = next[b];
+        next[a] = nb;
+        if nb != NONE {
+            prev[nb as usize] = a as u32;
+        }
+        alive -= 1;
+
+        // refresh the two affected adjacencies
+        let pa = prev[a];
+        if pa != NONE {
+            let pa = pa as usize;
+            heap.push(Reverse(Entry {
+                cost: Cost(delta(start, end, pa, a)),
+                left: pa as u32,
+                lgen: gen[pa],
+                rgen: gen[a],
+            }));
+        }
+        if nb != NONE {
+            let nb = nb as usize;
+            heap.push(Reverse(Entry {
+                cost: Cost(delta(start, end, a, nb)),
+                left: a as u32,
+                lgen: gen[a],
+                rgen: gen[nb],
+            }));
+        }
+    }
+
+    // walk the live list to emit bounds
+    out_bounds.reserve(alive);
+    let mut cur = 0usize; // slot 0 is always the head (never merged away)
+    loop {
+        out_bounds.push(end[cur] as usize);
+        match next[cur] {
+            NONE => break,
+            n => cur = n as usize,
+        }
+    }
+}
+
+/// Algorithm 2: singleton initialization.
+pub fn solve(prefix: &Prefix, max_groups: usize, params: &CostParams) -> Grouping {
+    let n = prefix.len();
+    assert!(n > 0, "empty instance");
+    let singles = Grouping::new((1..=n).collect());
+    greedy_merge(prefix, singles, max_groups, params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msb::dg;
+    use crate::msb::objective::SortedMags;
+    use crate::testing::hostile_magnitudes;
+
+    fn solve_values(values: &[f32], g: usize, lambda: f64) -> (Prefix, Grouping) {
+        let sm = SortedMags::from_values(values);
+        let p = Prefix::new(&sm.mags);
+        let params = CostParams::unnormalized(lambda);
+        let grouping = solve(&p, g, &params);
+        (p, grouping)
+    }
+
+    #[test]
+    fn reaches_target_group_count() {
+        let vals: Vec<f32> = (1..=100).map(|i| i as f32 * 0.1).collect();
+        let (_, g) = solve_values(&vals, 8, 0.0);
+        assert_eq!(g.num_groups(), 8);
+        assert_eq!(g.n(), 100);
+    }
+
+    #[test]
+    fn separates_obvious_clusters() {
+        let mut vals = vec![0.1f32; 50];
+        vals.extend(vec![9.0f32; 50]);
+        let (_, g) = solve_values(&vals, 2, 0.0);
+        assert_eq!(g.bounds, vec![50, 100]);
+    }
+
+    #[test]
+    fn target_one_merges_all() {
+        let vals: Vec<f32> = (1..=37).map(|i| i as f32).collect();
+        let (_, g) = solve_values(&vals, 1, 0.0);
+        assert_eq!(g.bounds, vec![37]);
+    }
+
+    #[test]
+    fn target_larger_than_n_keeps_singletons() {
+        let vals = [1.0f32, 2.0, 3.0];
+        let (_, g) = solve_values(&vals, 10, 0.0);
+        assert_eq!(g.num_groups(), 3);
+    }
+
+    #[test]
+    fn partition_is_valid_on_hostile_inputs() {
+        crate::testing::check(
+            "gg produces valid partitions",
+            30,
+            |rng| {
+                let n = 5 + rng.below(300);
+                (hostile_magnitudes(rng, n), 1 + rng.below(16))
+            },
+            |(vals, g_target)| {
+                let sm = SortedMags::from_values(vals);
+                if sm.mags.is_empty() {
+                    return true;
+                }
+                let p = Prefix::new(&sm.mags);
+                let g = solve(&p, *g_target, &CostParams::unnormalized(0.01));
+                g.validate();
+                g.n() == sm.mags.len() && g.num_groups() <= *g_target.max(&1)
+            },
+        );
+    }
+
+    #[test]
+    fn near_oracle_on_small_instances() {
+        // GG is a heuristic; on small instances it should be within a small
+        // factor of the DG optimum at matched group counts.
+        crate::testing::check(
+            "gg within 1.35x of dg",
+            20,
+            |rng| {
+                let n = 8 + rng.below(40);
+                let vals: Vec<f32> =
+                    (0..n).map(|_| rng.normal().abs() as f32 + 1e-5).collect();
+                vals
+            },
+            |vals| {
+                let sm = SortedMags::from_values(vals);
+                let p = Prefix::new(&sm.mags);
+                let params = CostParams::unnormalized(0.0);
+                let gg = solve(&p, 4, &params);
+                let opt = dg::solve_exact_groups(&p, 4, &params);
+                let (a, b) = (gg.sse(&p), opt.sse(&p));
+                b == 0.0 || a <= b * 1.35 + 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn merge_monotone_cost_with_zero_lambda() {
+        // with λ=0 every merge only adds variance => SSE grows as target
+        // shrinks, never the group count
+        let mut rng = crate::stats::Rng::new(5);
+        let vals: Vec<f32> = (0..200).map(|_| rng.normal().abs() as f32).collect();
+        let sm = SortedMags::from_values(&vals);
+        let p = Prefix::new(&sm.mags);
+        let params = CostParams::unnormalized(0.0);
+        let mut last = 0.0;
+        for target in (1..=64).rev() {
+            let g = solve(&p, target, &params);
+            let sse = g.sse(&p);
+            assert!(sse + 1e-9 >= last, "target {target}");
+            last = sse;
+        }
+    }
+}

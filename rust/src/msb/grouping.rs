@@ -1,0 +1,138 @@
+//! The [`Grouping`] type: a partition of the sorted magnitude sequence into
+//! contiguous intervals, plus cost evaluation and invariants.
+
+use super::objective::{CostParams, Prefix};
+
+/// A partition of `n` sorted elements into `bounds.len()` contiguous
+/// groups; `bounds[k]` is the *exclusive* end of group `k` (so
+/// `bounds.last() == n` and bounds are strictly increasing).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Grouping {
+    pub bounds: Vec<usize>,
+}
+
+impl Grouping {
+    pub fn new(bounds: Vec<usize>) -> Self {
+        let g = Grouping { bounds };
+        g.validate();
+        g
+    }
+
+    /// Single group covering everything.
+    pub fn whole(n: usize) -> Self {
+        Grouping::new(vec![n])
+    }
+
+    pub fn validate(&self) {
+        assert!(!self.bounds.is_empty(), "empty grouping");
+        let mut prev = 0;
+        for &b in &self.bounds {
+            assert!(b > prev, "non-increasing bound {b} after {prev}");
+            prev = b;
+        }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.bounds.len()
+    }
+
+    pub fn n(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    /// (start, end) of group `k`.
+    pub fn interval(&self, k: usize) -> (usize, usize) {
+        let start = if k == 0 { 0 } else { self.bounds[k - 1] };
+        (start, self.bounds[k])
+    }
+
+    pub fn intervals(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        (0..self.num_groups()).map(|k| self.interval(k))
+    }
+
+    /// Group index of sorted position `pos` (binary search).
+    pub fn group_of(&self, pos: usize) -> usize {
+        debug_assert!(pos < self.n());
+        self.bounds.partition_point(|&b| b <= pos)
+    }
+
+    /// Total objective value under `params` — the paper's `cost(G)`.
+    pub fn cost(&self, prefix: &Prefix, params: &CostParams) -> f64 {
+        self.intervals().map(|(i, j)| prefix.cost(i, j, params)).sum()
+    }
+
+    /// Pure reconstruction SSE (λ-independent): Σ |A_i|·Var.
+    pub fn sse(&self, prefix: &Prefix) -> f64 {
+        self.intervals().map(|(i, j)| prefix.sse(i, j)).sum()
+    }
+
+    /// Per-group optimal scales (mean magnitude), in sorted-group order —
+    /// ascending by construction.
+    pub fn scales(&self, prefix: &Prefix) -> Vec<f64> {
+        self.intervals().map(|(i, j)| prefix.mean(i, j)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msb::objective::SortedMags;
+
+    #[test]
+    fn intervals_and_group_of() {
+        let g = Grouping::new(vec![2, 5, 9]);
+        assert_eq!(g.num_groups(), 3);
+        assert_eq!(g.n(), 9);
+        assert_eq!(g.interval(0), (0, 2));
+        assert_eq!(g.interval(2), (5, 9));
+        assert_eq!(g.group_of(0), 0);
+        assert_eq!(g.group_of(1), 0);
+        assert_eq!(g.group_of(2), 1);
+        assert_eq!(g.group_of(8), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_increasing() {
+        Grouping::new(vec![3, 3, 5]);
+    }
+
+    #[test]
+    fn cost_decomposes() {
+        let mags = [0.1f32, 0.2, 1.0, 1.1, 5.0];
+        let p = Prefix::new(&mags);
+        let params = CostParams::unnormalized(0.5);
+        let g = Grouping::new(vec![2, 4, 5]);
+        let manual = p.cost(0, 2, &params) + p.cost(2, 4, &params) + p.cost(4, 5, &params);
+        assert_eq!(g.cost(&p, &params), manual);
+    }
+
+    #[test]
+    fn scales_ascending() {
+        let sm = SortedMags::from_values(&[-0.1, 0.2, -1.0, 1.1, 5.0]);
+        let p = Prefix::new(&sm.mags);
+        let g = Grouping::new(vec![2, 4, 5]);
+        let s = g.scales(&p);
+        assert!(s.windows(2).all(|w| w[0] <= w[1]), "{s:?}");
+    }
+
+    #[test]
+    fn group_of_consistent_with_intervals() {
+        crate::testing::check(
+            "group_of vs intervals",
+            30,
+            |rng| {
+                let n = 1 + rng.below(200);
+                let mut cuts: Vec<usize> = (1..n).filter(|_| rng.uniform() < 0.2).collect();
+                cuts.push(n);
+                cuts.dedup();
+                Grouping::new(cuts)
+            },
+            |g| {
+                g.intervals().enumerate().all(|(k, (i, j))| {
+                    (i..j).all(|pos| g.group_of(pos) == k)
+                })
+            },
+        );
+    }
+}

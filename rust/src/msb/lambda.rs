@@ -1,0 +1,107 @@
+//! λ boundary theory (paper Appendix C): fast estimates of the λ range that
+//! spans "finest admissible partition" (λ_min) to "single group" (λ_max),
+//! and the interpretable reparameterization λ = Λ(λ̃), λ̃ ∈ [0, 1].
+//!
+//! λ only *selects the group count* for Algorithm 1; GG/WGM take the group
+//! count externally, which is why Tables 5/10 and Fig 6 find it inert — a
+//! finding our benches reproduce.
+
+/// Fast λ_min estimate: (|a₁| − |a₂|)² / 3n over the two smallest sorted
+/// magnitudes (eq. 7).
+pub fn lambda_min(sorted_mags: &[f32]) -> f64 {
+    let n = sorted_mags.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let d = (sorted_mags[0] as f64 - sorted_mags[1] as f64).abs();
+    d * d / (3.0 * n as f64)
+}
+
+/// Fast λ_max estimate: n(μ₁ − μ₂)²/12 with the halves split at k = n/2
+/// (Appendix C closing bound).
+pub fn lambda_max(sorted_mags: &[f32]) -> f64 {
+    let n = sorted_mags.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let k = n / 2;
+    let mean = |s: &[f32]| s.iter().map(|&x| x as f64).sum::<f64>() / s.len() as f64;
+    let mu1 = mean(&sorted_mags[..k]);
+    let mu2 = mean(&sorted_mags[k..]);
+    let d = mu1 - mu2;
+    n as f64 * d * d / 12.0
+}
+
+/// Λ(λ̃) = λ_min + λ̃ (λ_max − λ_min); the paper's default is λ̃ = 0.75.
+pub fn lambda_of(tilde: f64, sorted_mags: &[f32]) -> f64 {
+    let lo = lambda_min(sorted_mags);
+    let hi = lambda_max(sorted_mags);
+    lo + tilde.clamp(0.0, 1.0) * (hi - lo).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msb::objective::{CostParams, SortedMags};
+    use crate::msb::{dg, Prefix};
+
+    fn sorted(vals: &[f32]) -> Vec<f32> {
+        SortedMags::from_values(vals).mags
+    }
+
+    #[test]
+    fn bounds_ordered() {
+        let mut rng = crate::stats::Rng::new(1);
+        let vals: Vec<f32> = (0..500).map(|_| rng.normal() as f32).collect();
+        let mags = sorted(&vals);
+        let (lo, hi) = (lambda_min(&mags), lambda_max(&mags));
+        assert!(lo >= 0.0);
+        assert!(hi > lo, "{lo} vs {hi}");
+    }
+
+    #[test]
+    fn tilde_map_endpoints() {
+        let mags = sorted(&[0.1, 0.2, 1.0, 5.0, 9.0, 9.5]);
+        crate::testing::assert_close(lambda_of(0.0, &mags), lambda_min(&mags), 1e-12, 0.0);
+        crate::testing::assert_close(lambda_of(1.0, &mags), lambda_max(&mags), 1e-12, 0.0);
+        // clamping
+        assert_eq!(lambda_of(-3.0, &mags), lambda_of(0.0, &mags));
+        assert_eq!(lambda_of(7.0, &mags), lambda_of(1.0, &mags));
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(lambda_min(&[1.0]), 0.0);
+        assert_eq!(lambda_max(&[]), 0.0);
+        let constant = vec![2.0f32; 50];
+        assert_eq!(lambda_max(&constant), 0.0);
+    }
+
+    #[test]
+    fn above_lambda_max_dg_picks_one_group() {
+        // the theory's purpose: λ >> λ_max must collapse DG to one group.
+        // Appendix C derives the bound for the *normalized* objective (§3.4).
+        let mut rng = crate::stats::Rng::new(5);
+        let vals: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let mags = sorted(&vals);
+        let p = Prefix::new(&mags);
+        let params = CostParams {
+            lambda: lambda_max(&mags) * 50.0,
+            normalized: true,
+            total: mags.len(),
+        };
+        let g = dg::solve(&p, 8, &params);
+        assert_eq!(g.num_groups(), 1);
+    }
+
+    #[test]
+    fn below_lambda_min_dg_prefers_fine_partitions() {
+        let mut rng = crate::stats::Rng::new(6);
+        let vals: Vec<f32> = (0..40).map(|_| rng.normal() as f32).collect();
+        let mags = sorted(&vals);
+        let p = Prefix::new(&mags);
+        let tiny = lambda_min(&mags) * 1e-3;
+        let g = dg::solve(&p, 8, &CostParams::unnormalized(tiny));
+        assert_eq!(g.num_groups(), 8, "with negligible λ, use all capacity");
+    }
+}

@@ -1,0 +1,162 @@
+//! The paper's contribution: the MSB (Multi-Scale Binary) objective and its
+//! four dynamic-grouping solvers.
+//!
+//! Pipeline (§3): take the non-zero *magnitudes* of a weight tensor, sort
+//! them ascending (optimal variance-minimizing partitions are contiguous in
+//! sorted order), then partition the sorted sequence into at most
+//! `max_groups` intervals minimizing
+//!
+//! ```text
+//! cost(G) = Σ_i |A_i|·Var(|A_i|) + λ/|A_i|          (eq. 2, unnormalized)
+//! cost(G) = Σ_i |A_i|/|A|·Var(|A_i|) + λ/|A_i|      (§3.4, normalized)
+//! ```
+//!
+//! Each group's optimal scale is its mean magnitude (XNOR closed form per
+//! group); a weight decodes as `ŵ = sign(w)·α_{group(w)}` — a symmetric
+//! `2·g`-level codebook with binary sign structure. Exact zeros go to a
+//! zero-loss special group (§3.2).
+//!
+//! Solvers:
+//! * [`dg`] — Algorithm 1, exact dynamic programming (oracle).
+//! * [`gg`] — Algorithm 2, greedy merging from singletons.
+//! * [`wgm`] — Algorithm 3, windowed greedy merging.
+//! * [`wgm_lo`] — Algorithm 4, equal-range binning + stochastic local search.
+
+pub mod codebook;
+pub mod dg;
+pub mod gg;
+pub mod grouping;
+pub mod lambda;
+pub mod objective;
+pub mod wgm;
+pub mod wgm_lo;
+
+pub use codebook::MsbCode;
+pub use grouping::Grouping;
+pub use objective::{CostParams, Prefix, SortedMags};
+
+/// Which solver to run, with its hyper-parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Algo {
+    /// Algorithm 1: exact DP oracle. O(g·n²) — small instances only.
+    Dg,
+    /// Algorithm 2: greedy merging from singleton groups.
+    Gg,
+    /// Algorithm 3: greedy merging from `window`-sized initial groups.
+    Wgm { window: usize },
+    /// Algorithm 4: equal-range binning into `bins` initial groups, greedy
+    /// merge, then stochastic local boundary optimization.
+    WgmLo { bins: usize, range: usize, max_iters: usize, patience: usize },
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Dg => "dg",
+            Algo::Gg => "gg",
+            Algo::Wgm { .. } => "wgm",
+            Algo::WgmLo { .. } => "wgm-lo",
+        }
+    }
+}
+
+/// A configured solver: algorithm + objective parameters.
+#[derive(Clone, Debug)]
+pub struct Solver {
+    pub algo: Algo,
+    /// λ regularization weight (paper default: λ̃ = 0.75 through the Λ map,
+    /// but Table 5 shows insensitivity; we expose the raw value).
+    pub lambda: f64,
+    /// Use the §3.4 group-mass-normalized variance term.
+    pub normalized: bool,
+}
+
+impl Solver {
+    pub fn new(algo: Algo) -> Self {
+        Solver { algo, lambda: 0.0, normalized: false }
+    }
+
+    pub fn with_lambda(mut self, lambda: f64) -> Self {
+        self.lambda = lambda;
+        self
+    }
+
+    pub fn normalized(mut self) -> Self {
+        self.normalized = true;
+        self
+    }
+
+    /// Partition the (sorted) magnitudes into at most `max_groups` groups.
+    pub fn solve_sorted(&self, sm: &SortedMags, max_groups: usize) -> Grouping {
+        let prefix = Prefix::new(&sm.mags);
+        self.solve_with_prefix(sm, &prefix, max_groups)
+    }
+
+    /// [`Solver::solve_sorted`] with a caller-provided prefix table (§Perf).
+    ///
+    /// λ handling follows Appendix C to the letter: "λ is originally
+    /// introduced to determine the optimal number of groups in Algorithm 1,
+    /// whereas in other algorithms the number of groups is treated as a
+    /// user-defined hyperparameter, rendering it *inapplicable*" — so the
+    /// greedy solvers (GG/WGM/WGM-LO) optimize pure within-group variance
+    /// and only DG sees the penalty. (Folding λ into the greedy merge
+    /// deltas measurably corrupts merge order on small blocks: it rewards
+    /// merging small groups regardless of variance.)
+    pub fn solve_with_prefix(
+        &self,
+        sm: &SortedMags,
+        prefix: &Prefix,
+        max_groups: usize,
+    ) -> Grouping {
+        let lambda = if matches!(self.algo, Algo::Dg) { self.lambda } else { 0.0 };
+        let params = CostParams {
+            lambda,
+            normalized: self.normalized,
+            total: sm.mags.len(),
+        };
+        match &self.algo {
+            Algo::Dg => dg::solve(prefix, max_groups, &params),
+            Algo::Gg => gg::solve(prefix, max_groups, &params),
+            Algo::Wgm { window } => wgm::solve(prefix, max_groups, *window, &params),
+            Algo::WgmLo { bins, range, max_iters, patience } => wgm_lo::solve(
+                &sm.mags, prefix, max_groups, *bins, *range, *max_iters, *patience, &params,
+            ),
+        }
+    }
+
+    /// Full quantization of a value slice: sort, group, build the codebook.
+    pub fn quantize(&self, values: &[f32], max_groups: usize) -> MsbCode {
+        let sm = SortedMags::from_values(values);
+        let prefix = Prefix::new(&sm.mags);
+        let grouping = self.solve_with_prefix(&sm, &prefix, max_groups);
+        MsbCode::build_with_prefix(values, &sm, &grouping, &prefix)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_names() {
+        assert_eq!(Algo::Dg.name(), "dg");
+        assert_eq!(Algo::Wgm { window: 4 }.name(), "wgm");
+    }
+
+    #[test]
+    fn solver_end_to_end_small() {
+        let vals = [-3.0f32, -1.0, 0.0, 1.1, 2.9, 3.1];
+        for algo in [Algo::Dg, Algo::Gg, Algo::Wgm { window: 1 }] {
+            let code = Solver::new(algo).quantize(&vals, 2);
+            let deq = code.dequantize();
+            assert_eq!(deq.len(), vals.len());
+            assert_eq!(deq[2], 0.0, "exact zero preserved");
+            // signs preserved
+            for (v, d) in vals.iter().zip(&deq) {
+                if *v != 0.0 {
+                    assert_eq!(v.signum(), d.signum());
+                }
+            }
+        }
+    }
+}

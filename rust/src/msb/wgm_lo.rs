@@ -1,0 +1,217 @@
+//! Algorithm 4 — Local-Optimizing Windowed Greedy Merging (paper §3.3.4):
+//! equal-range binning over [w_min, w_max] gives a distribution-shaped
+//! initialization with few groups (numerically similar values land in the
+//! same bin); greedy merging then runs on a much smaller instance, and a
+//! stochastic local search over adjacent group boundaries repairs the
+//! boundary artifacts the unbalanced bins introduce.
+
+use super::gg::greedy_merge;
+use super::grouping::Grouping;
+use super::objective::{CostParams, Prefix};
+use crate::stats::Rng;
+
+/// Equal-range binning of the sorted magnitudes into at most `bins`
+/// intervals: bin width Δ = (max − min)/bins, element with magnitude m maps
+/// to bin ⌊(m − min)/Δ⌋. Empty bins vanish (bounds are deduped).
+pub fn equal_range_bounds(sorted_mags: &[f32], bins: usize) -> Grouping {
+    let n = sorted_mags.len();
+    assert!(n > 0 && bins > 0);
+    let lo = sorted_mags[0] as f64;
+    let hi = sorted_mags[n - 1] as f64;
+    if hi <= lo {
+        return Grouping::whole(n);
+    }
+    let width = (hi - lo) / bins as f64;
+    let mut bounds = Vec::new();
+    let mut cur_bin = 0usize;
+    for (i, &m) in sorted_mags.iter().enumerate() {
+        let b = (((m as f64 - lo) / width) as usize).min(bins - 1);
+        if b != cur_bin {
+            bounds.push(i);
+            cur_bin = b;
+        }
+    }
+    bounds.push(n);
+    Grouping::new(bounds)
+}
+
+/// Stochastic local boundary optimization: propose moving one internal
+/// boundary uniformly within ±`range`; accept iff the two adjacent groups'
+/// total cost decreases. Terminates after `max_iters` sweeps or `patience`
+/// consecutive sweeps without improvement / with improvement below `eps`.
+pub fn local_optimize(
+    grouping: &mut Grouping,
+    prefix: &Prefix,
+    params: &CostParams,
+    range: usize,
+    max_iters: usize,
+    patience: usize,
+    rng: &mut Rng,
+) -> usize {
+    let eps = 1e-12;
+    let mut stale = 0usize;
+    let mut accepted = 0usize;
+    for _ in 0..max_iters {
+        let mut improved = 0.0f64;
+        let g = grouping.num_groups();
+        if g < 2 {
+            break;
+        }
+        for k in 0..g - 1 {
+            // boundary between group k and k+1 is bounds[k]
+            let left_start = if k == 0 { 0 } else { grouping.bounds[k - 1] };
+            let bound = grouping.bounds[k];
+            let right_end = grouping.bounds[k + 1];
+            // propose a shifted boundary, keeping both groups non-empty
+            let lo = left_start + 1;
+            let hi = right_end; // exclusive
+            if hi - lo < 2 {
+                continue;
+            }
+            let span = range.max(1);
+            let offset = (rng.below(2 * span + 1)) as i64 - span as i64;
+            let proposal = (bound as i64 + offset).clamp(lo as i64, hi as i64 - 1) as usize;
+            if proposal == bound {
+                continue;
+            }
+            let before = prefix.cost(left_start, bound, params)
+                + prefix.cost(bound, right_end, params);
+            let after = prefix.cost(left_start, proposal, params)
+                + prefix.cost(proposal, right_end, params);
+            if after + eps < before {
+                grouping.bounds[k] = proposal;
+                improved += before - after;
+                accepted += 1;
+            }
+        }
+        if improved <= eps {
+            stale += 1;
+            if stale >= patience {
+                break;
+            }
+        } else {
+            stale = 0;
+        }
+    }
+    accepted
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn solve(
+    sorted_mags: &[f32],
+    prefix: &Prefix,
+    max_groups: usize,
+    bins: usize,
+    range: usize,
+    max_iters: usize,
+    patience: usize,
+    params: &CostParams,
+) -> Grouping {
+    assert!(!sorted_mags.is_empty(), "empty instance");
+    let initial = equal_range_bounds(sorted_mags, bins.max(1));
+    let mut g = greedy_merge(prefix, initial, max_groups, params);
+    // deterministic seed derived from the instance (solver stays a pure
+    // function of its inputs)
+    let mut rng = Rng::new(0xA11CE ^ (sorted_mags.len() as u64) << 8);
+    local_optimize(&mut g, prefix, params, range, max_iters, patience, &mut rng);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msb::objective::SortedMags;
+    use crate::msb::wgm;
+
+    #[test]
+    fn equal_range_respects_bins() {
+        let mags: Vec<f32> = (0..100).map(|i| i as f32 / 100.0).collect();
+        let g = equal_range_bounds(&mags, 10);
+        assert!(g.num_groups() <= 10);
+        assert_eq!(g.n(), 100);
+        // uniform data => roughly balanced bins
+        for (i, j) in g.intervals() {
+            assert!(j - i >= 5, "{:?}", g.bounds);
+        }
+    }
+
+    #[test]
+    fn equal_range_constant_input() {
+        let mags = vec![2.5f32; 64];
+        let g = equal_range_bounds(&mags, 8);
+        assert_eq!(g.num_groups(), 1);
+    }
+
+    #[test]
+    fn equal_range_skewed_input_unbalanced() {
+        // heavy skew: most mass in the lowest bin (the paper's motivation
+        // for the post-merge local search)
+        let mut mags: Vec<f32> = (0..990).map(|i| i as f32 * 1e-4).collect();
+        mags.extend((0..10).map(|i| 10.0 + i as f32));
+        let g = equal_range_bounds(&mags, 16);
+        let sizes: Vec<usize> = g.intervals().map(|(i, j)| j - i).collect();
+        assert!(sizes[0] > 900, "{sizes:?}");
+    }
+
+    #[test]
+    fn local_opt_only_improves() {
+        let mut rng = crate::stats::Rng::new(3);
+        let vals: Vec<f32> = (0..500).map(|_| rng.normal() as f32).collect();
+        let sm = SortedMags::from_values(&vals);
+        let p = Prefix::new(&sm.mags);
+        let params = CostParams::unnormalized(0.1);
+        // deliberately bad grouping: uniform windows
+        let mut g = wgm::window_bounds(sm.mags.len(), 61);
+        let before = g.cost(&p, &params);
+        local_optimize(&mut g, &p, &params, 8, 50, 5, &mut rng);
+        let after = g.cost(&p, &params);
+        assert!(after <= before);
+        g.validate();
+    }
+
+    #[test]
+    fn solve_beats_or_matches_plain_merge_from_bins() {
+        crate::testing::check(
+            "wgm-lo local search helps",
+            10,
+            |rng| {
+                let n = 256 + rng.below(512);
+                let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                vals
+            },
+            |vals| {
+                let sm = SortedMags::from_values(vals);
+                let p = Prefix::new(&sm.mags);
+                let params = CostParams::unnormalized(0.0);
+                let bins = equal_range_bounds(&sm.mags, 64);
+                let plain = greedy_merge(&p, bins, 8, &params).sse(&p);
+                let lo = solve(&sm.mags, &p, 8, 64, 16, 30, 4, &params).sse(&p);
+                lo <= plain + 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn solve_valid_partition() {
+        let mut rng = crate::stats::Rng::new(23);
+        let vals: Vec<f32> = (0..2000).map(|_| rng.normal() as f32).collect();
+        let sm = SortedMags::from_values(&vals);
+        let p = Prefix::new(&sm.mags);
+        let g = solve(&sm.mags, &p, 32, 256, 16, 12, 3, &CostParams::unnormalized(0.75));
+        g.validate();
+        assert!(g.num_groups() <= 32);
+        assert_eq!(g.n(), sm.mags.len());
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = crate::stats::Rng::new(29);
+        let vals: Vec<f32> = (0..800).map(|_| rng.normal() as f32).collect();
+        let sm = SortedMags::from_values(&vals);
+        let p = Prefix::new(&sm.mags);
+        let params = CostParams::unnormalized(0.2);
+        let a = solve(&sm.mags, &p, 16, 128, 8, 12, 3, &params);
+        let b = solve(&sm.mags, &p, 16, 128, 8, 12, 3, &params);
+        assert_eq!(a, b);
+    }
+}

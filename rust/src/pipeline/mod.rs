@@ -1,0 +1,361 @@
+//! The quantization pipeline coordinator: walks a model manifest, fans the
+//! per-layer solver work out over the worker substrate, and assembles a
+//! fully-quantized weight set plus per-layer metrics. This is the L3
+//! "offline PTQ" path (the paper's CPU-based quantization step); the online
+//! path is `runtime`/`server`.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::io::manifest::ModelSpec;
+use crate::io::msbt::{Tensor, TensorMap};
+use crate::quant::dq::{double_quantize, DqConfig};
+use crate::quant::{
+    gptq::GptqQuantizer, hqq::HqqQuantizer, msb::MsbQuantizer, nf4::Nf4Quantizer,
+    rtn::RtnQuantizer, xnor::XnorQuantizer, QuantConfig, Quantizer,
+};
+use crate::tensor::Matrix;
+
+/// Every method that can appear in a Table-1-style grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Full precision (identity) — the FP rows.
+    Fp,
+    Rtn,
+    /// BnB-style NF4 (4-bit block-wise only).
+    Bnb,
+    Hqq,
+    /// Calibration-based; consumes the build-time Gram matrices.
+    Gptq,
+    /// MSB / Algorithm 3 (the paper's production solver).
+    Wgm,
+    /// MSB / Algorithm 4 (per-tensor refinement).
+    WgmLo,
+    /// MSB / Algorithm 2.
+    Gg,
+    /// MSB / WGM + double quantization of scales (Appendix G).
+    WgmDq,
+    Xnor,
+    BlockedXnor,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fp => "fp",
+            Method::Rtn => "rtn",
+            Method::Bnb => "bnb",
+            Method::Hqq => "hqq",
+            Method::Gptq => "gptq",
+            Method::Wgm => "wgm",
+            Method::WgmLo => "wgm-lo",
+            Method::Gg => "gg",
+            Method::WgmDq => "wgm-dq",
+            Method::Xnor => "xnor",
+            Method::BlockedXnor => "blocked-xnor",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "fp" => Method::Fp,
+            "rtn" => Method::Rtn,
+            "bnb" | "nf4" => Method::Bnb,
+            "hqq" => Method::Hqq,
+            "gptq" => Method::Gptq,
+            "wgm" | "msb" => Method::Wgm,
+            "wgm-lo" | "wgmlo" => Method::WgmLo,
+            "gg" => Method::Gg,
+            "wgm-dq" => Method::WgmDq,
+            "xnor" => Method::Xnor,
+            "blocked-xnor" => Method::BlockedXnor,
+            other => anyhow::bail!("unknown method '{other}'"),
+        })
+    }
+
+    /// The paper's Table 1 grid for a granularity. "/" cells (BnB and GPTQ
+    /// per-tensor, WGM-LO block-wise) are omitted exactly as in the paper.
+    pub fn table1_grid(per_tensor: bool) -> Vec<Method> {
+        if per_tensor {
+            vec![Method::Rtn, Method::Hqq, Method::Wgm, Method::WgmLo]
+        } else {
+            vec![Method::Gptq, Method::Rtn, Method::Bnb, Method::Hqq, Method::Wgm]
+        }
+    }
+
+    pub fn needs_calibration(&self) -> bool {
+        matches!(self, Method::Gptq)
+    }
+}
+
+/// Per-layer quantization record.
+#[derive(Clone, Debug)]
+pub struct LayerStat {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub sse: f64,
+    pub effective_bits: f64,
+    pub seconds: f64,
+}
+
+/// A fully-quantized model: dequantized weights keyed by ABI name (ready
+/// for [`crate::runtime::ModelRunner::update_weights`]) plus metrics.
+#[derive(Clone, Debug)]
+pub struct QuantizedModel {
+    pub method: Method,
+    pub weights: TensorMap,
+    pub layers: Vec<LayerStat>,
+    pub wall_seconds: f64,
+}
+
+impl QuantizedModel {
+    pub fn total_sse(&self) -> f64 {
+        self.layers.iter().map(|l| l.sse).sum()
+    }
+
+    pub fn mean_effective_bits(&self) -> f64 {
+        let (num, den) = self.layers.iter().fold((0.0, 0usize), |(a, b), l| {
+            (a + l.effective_bits * (l.rows * l.cols) as f64, b + l.rows * l.cols)
+        });
+        num / den.max(1) as f64
+    }
+}
+
+/// Build the quantizer for (method, layer). GPTQ binds the layer Hessian.
+fn build_quantizer(
+    method: Method,
+    layer: &str,
+    in_dim: usize,
+    calib: Option<&TensorMap>,
+) -> Result<Box<dyn Quantizer>> {
+    Ok(match method {
+        Method::Fp => unreachable!("fp short-circuits before here"),
+        Method::Rtn => Box::new(RtnQuantizer::symmetric()),
+        Method::Bnb => Box::new(Nf4Quantizer::nf4()),
+        Method::Hqq => Box::new(HqqQuantizer::default()),
+        Method::Gptq => {
+            let calib = calib.context("gptq requires calibration tensors")?;
+            let h = calib
+                .get(layer)
+                .with_context(|| format!("calib missing Hessian for {layer}"))?;
+            anyhow::ensure!(h.dims == vec![in_dim, in_dim], "{layer}: bad Hessian dims");
+            Box::new(GptqQuantizer::new().with_hessian(h.as_f32()?, in_dim))
+        }
+        Method::Wgm | Method::WgmDq => Box::new(MsbQuantizer::wgm()),
+        Method::WgmLo => Box::new(MsbQuantizer::wgm_lo()),
+        Method::Gg => Box::new(MsbQuantizer::gg()),
+        Method::Xnor => Box::new(XnorQuantizer::whole()),
+        Method::BlockedXnor => Box::new(XnorQuantizer::blocked()),
+    })
+}
+
+/// Quantize every quantizable matrix of `spec` with `method` under `cfg`,
+/// fanning layers out over `threads` workers. Non-quantizable parameters
+/// (norms, embeddings) pass through untouched — the paper's weight-only
+/// protocol.
+pub fn quantize_model(
+    spec: &ModelSpec,
+    weights: &TensorMap,
+    calib: Option<&TensorMap>,
+    method: Method,
+    cfg: &QuantConfig,
+    threads: usize,
+) -> Result<QuantizedModel> {
+    let t0 = Instant::now();
+    if method == Method::Fp {
+        return Ok(QuantizedModel {
+            method,
+            weights: weights.clone(),
+            layers: Vec::new(),
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        });
+    }
+
+    // collect the work list
+    let mut jobs: Vec<(String, Matrix)> = Vec::new();
+    for p in spec.quantizable() {
+        let t = weights
+            .get(&p.name)
+            .with_context(|| format!("weights missing {}", p.name))?;
+        jobs.push((p.name.clone(), t.to_matrix()?));
+    }
+
+    // fan out: one solver instance per layer (GPTQ binds its Hessian inside)
+    let results: Vec<Result<(String, LayerStat, Vec<f32>)>> =
+        crate::pool::scoped_map(jobs, threads, |(name, w)| {
+            let lt0 = Instant::now();
+            let q = build_quantizer(method, &name, w.cols, calib)?;
+            let mut qt = q.quantize(&w, cfg);
+            if method == Method::WgmDq {
+                qt = double_quantize(&qt, cfg, &DqConfig::default());
+            }
+            let stat = LayerStat {
+                name: name.clone(),
+                rows: w.rows,
+                cols: w.cols,
+                sse: qt.mse(&w),
+                effective_bits: qt.effective_bits,
+                seconds: lt0.elapsed().as_secs_f64(),
+            };
+            Ok((name, stat, qt.dequant.data))
+        });
+
+    let mut out = weights.clone();
+    let mut layers = Vec::new();
+    for r in results {
+        let (name, stat, data) = r?;
+        let dims = out.get(&name).unwrap().dims.clone();
+        out.insert(name, Tensor::f32(dims, data));
+        layers.push(stat);
+    }
+    layers.sort_by(|a, b| a.name.cmp(&b.name));
+
+    Ok(QuantizedModel { method, weights: out, layers, wall_seconds: t0.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::manifest::{ModelSpec, ParamSpec};
+    use crate::stats::Rng;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            d: 32,
+            layers: 1,
+            heads: 2,
+            ff: 64,
+            seq: 16,
+            params: vec![
+                ParamSpec { name: "tok_emb".into(), shape: vec![10, 32], quant: false },
+                ParamSpec { name: "layer0.wq".into(), shape: vec![32, 64], quant: true },
+                ParamSpec { name: "layer0.wv".into(), shape: vec![32, 64], quant: true },
+            ],
+            weights_file: String::new(),
+            calib_file: String::new(),
+            fwd_hlo: String::new(),
+        }
+    }
+
+    fn tiny_weights(seed: u64) -> TensorMap {
+        let mut rng = Rng::new(seed);
+        let mut m = TensorMap::new();
+        for (name, r, c) in [("tok_emb", 10, 32), ("layer0.wq", 32, 64), ("layer0.wv", 32, 64)] {
+            let w = Matrix::randn(r, c, &mut rng);
+            m.insert(name.into(), Tensor::f32(vec![r, c], w.data));
+        }
+        m
+    }
+
+    #[test]
+    fn fp_is_identity() {
+        let qm = quantize_model(
+            &tiny_spec(),
+            &tiny_weights(1),
+            None,
+            Method::Fp,
+            &QuantConfig::block_wise(4, 64),
+            2,
+        )
+        .unwrap();
+        assert_eq!(qm.weights, tiny_weights(1));
+    }
+
+    #[test]
+    fn quantizes_only_quantizable() {
+        let w = tiny_weights(2);
+        let qm = quantize_model(
+            &tiny_spec(),
+            &w,
+            None,
+            Method::Wgm,
+            &QuantConfig::block_wise(4, 64),
+            2,
+        )
+        .unwrap();
+        assert_eq!(qm.weights.get("tok_emb"), w.get("tok_emb"), "embeddings untouched");
+        assert_ne!(qm.weights.get("layer0.wq"), w.get("layer0.wq"));
+        assert_eq!(qm.layers.len(), 2);
+        assert!(qm.total_sse() > 0.0);
+    }
+
+    #[test]
+    fn method_grid_matches_paper_slashes() {
+        let bw = Method::table1_grid(false);
+        assert!(bw.contains(&Method::Gptq) && bw.contains(&Method::Bnb));
+        assert!(!bw.contains(&Method::WgmLo));
+        let pt = Method::table1_grid(true);
+        assert!(pt.contains(&Method::WgmLo));
+        assert!(!pt.contains(&Method::Gptq) && !pt.contains(&Method::Bnb));
+    }
+
+    #[test]
+    fn gptq_without_calib_errors() {
+        let r = quantize_model(
+            &tiny_spec(),
+            &tiny_weights(3),
+            None,
+            Method::Gptq,
+            &QuantConfig::block_wise(4, 64),
+            1,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn gptq_with_calib_works() {
+        let mut calib = TensorMap::new();
+        for name in ["layer0.wq", "layer0.wv"] {
+            // identity Hessians
+            let mut h = vec![0.0f32; 64 * 64];
+            for i in 0..64 {
+                h[i * 64 + i] = 1.0;
+            }
+            calib.insert(name.into(), Tensor::f32(vec![64, 64], h));
+        }
+        let qm = quantize_model(
+            &tiny_spec(),
+            &tiny_weights(4),
+            Some(&calib),
+            Method::Gptq,
+            &QuantConfig::block_wise(4, 64),
+            2,
+        )
+        .unwrap();
+        assert_eq!(qm.layers.len(), 2);
+    }
+
+    #[test]
+    fn wgm_dq_has_lower_bits_higher_err() {
+        let w = tiny_weights(5);
+        let cfg = QuantConfig::block_wise(4, 64);
+        let a = quantize_model(&tiny_spec(), &w, None, Method::Wgm, &cfg, 1).unwrap();
+        let b = quantize_model(&tiny_spec(), &w, None, Method::WgmDq, &cfg, 1).unwrap();
+        assert!(b.mean_effective_bits() < a.mean_effective_bits());
+        assert!(b.total_sse() >= a.total_sse() * 0.999);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_result() {
+        let w = tiny_weights(6);
+        let cfg = QuantConfig::block_wise(4, 64);
+        let a = quantize_model(&tiny_spec(), &w, None, Method::Wgm, &cfg, 1).unwrap();
+        let b = quantize_model(&tiny_spec(), &w, None, Method::Wgm, &cfg, 4).unwrap();
+        assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [
+            Method::Fp, Method::Rtn, Method::Bnb, Method::Hqq, Method::Gptq,
+            Method::Wgm, Method::WgmLo, Method::Gg, Method::WgmDq, Method::Xnor,
+            Method::BlockedXnor,
+        ] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+}

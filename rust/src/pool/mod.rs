@@ -1,0 +1,194 @@
+//! Worker-pool substrate (no rayon offline): a fixed set of threads pulling
+//! boxed jobs from a bounded channel — the bound is the pipeline's
+//! backpressure — plus a scoped map helper for data-parallel solver work.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool with a bounded queue. `submit` blocks when the
+/// queue is full (backpressure), so producers can't outrun the workers.
+pub struct ThreadPool {
+    tx: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    submitted: Arc<AtomicUsize>,
+    completed: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize, queue_cap: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = sync_channel::<Job>(queue_cap.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let submitted = Arc::new(AtomicUsize::new(0));
+        let completed = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                let completed = Arc::clone(&completed);
+                std::thread::Builder::new()
+                    .name(format!("msb-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool lock poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                completed.fetch_add(1, Ordering::Release);
+                            }
+                            Err(_) => break, // sender dropped: shutdown
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, submitted, completed }
+    }
+
+    /// Default pool: one worker per available core.
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(n, n * 4)
+    }
+
+    /// Enqueue a job; blocks when the queue is at capacity.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.submitted.fetch_add(1, Ordering::Release);
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("workers gone");
+    }
+
+    pub fn stats(&self) -> (usize, usize) {
+        (
+            self.submitted.load(Ordering::Acquire),
+            self.completed.load(Ordering::Acquire),
+        )
+    }
+
+    /// Drop the sender and join all workers (drains the queue first).
+    pub fn shutdown(mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Data-parallel map over items using scoped threads: results keep input
+/// order; panics propagate. For CPU-bound solver fan-out (quantizing many
+/// layer matrices).
+pub fn scoped_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Send + Sync,
+{
+    let threads = threads.max(1);
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 || n == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let queue = Mutex::new(work);
+    let slots_mtx = Mutex::new(&mut slots);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|| loop {
+                let item = queue.lock().expect("queue").pop();
+                match item {
+                    Some((i, t)) => {
+                        let r = f(t);
+                        slots_mtx.lock().expect("slots")[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|o| o.expect("scoped_map slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4, 8);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_stats() {
+        let pool = ThreadPool::new(2, 4);
+        for _ in 0..10 {
+            pool.submit(|| {});
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn backpressure_blocks_but_completes() {
+        // tiny queue, slow jobs: submit must block rather than drop
+        let pool = ThreadPool::new(1, 1);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..20 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::Relaxed), 20);
+    }
+
+    #[test]
+    fn scoped_map_order_preserved() {
+        let items: Vec<u64> = (0..257).collect();
+        let out = scoped_map(items.clone(), 4, |x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_single_thread_path() {
+        let out = scoped_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn scoped_map_empty() {
+        let out: Vec<u32> = scoped_map(Vec::<u32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+}

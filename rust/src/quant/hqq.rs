@@ -1,0 +1,165 @@
+//! HQQ — Half-Quadratic Quantization (Badri & Shaji 2023): calibration-free
+//! weight-only quantization that optimizes the zero-point of an affine grid
+//! under a robust ℓ_p norm via half-quadratic splitting.
+//!
+//! Model: W ≈ s·(Q − z), Q ∈ [0, 2^b−1]. Alternating updates:
+//!   E   ← shrink_lp(W − s·(Q − z))          (proximal / soft-threshold)
+//!   z   ← mean(Q − (W − E)/s)               (closed form)
+//!   Q   ← clamp(round(W/s + z))
+//! with β annealed by κ each step. Mirrors the official solver's structure,
+//! executed on CPU.
+
+use crate::tensor::Matrix;
+
+use super::{finish_dequant, QuantConfig, QuantizedTensor, Quantizer};
+
+#[derive(Clone, Debug)]
+pub struct HqqQuantizer {
+    pub p: f64,
+    pub beta: f64,
+    pub kappa: f64,
+    pub iters: usize,
+}
+
+impl Default for HqqQuantizer {
+    fn default() -> Self {
+        // the official defaults: lp=0.7, beta=1e1, kappa=1.01, iters=20
+        HqqQuantizer { p: 0.7, beta: 10.0, kappa: 1.01, iters: 20 }
+    }
+}
+
+/// Generalized soft-threshold for the ℓ_p proximal operator (p < 1):
+/// shrink(x) = sign(x)·max(0, |x| − β^{p−2}·|x|^{p−1}) (HQQ appendix form).
+#[inline]
+fn shrink_lp(x: f32, beta: f64, p: f64) -> f32 {
+    let ax = x.abs() as f64;
+    if ax < 1e-12 {
+        return 0.0;
+    }
+    let shrunk = (ax - ax.powf(p - 1.0) * beta.powf(p - 2.0)).max(0.0);
+    (x.signum() as f64 * shrunk) as f32
+}
+
+impl HqqQuantizer {
+    fn quantize_block(&self, w: &[f32], out: &mut [f32], bits: u32) {
+        let qmax = ((1i64 << bits) - 1) as f32;
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in w {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if hi <= lo {
+            out.fill(lo.max(0.0).min(hi));
+            // constant block: exact representation
+            out.fill(lo);
+            return;
+        }
+        let s = (hi - lo) / qmax;
+        let mut z = -lo / s;
+        let mut beta = self.beta;
+        let mut q: Vec<f32> = w.iter().map(|&v| (v / s + z).round().clamp(0.0, qmax)).collect();
+        for _ in 0..self.iters {
+            // E ← shrink(W − s(Q − z))
+            // z ← mean(Q − (W − E)/s)
+            let mut zsum = 0.0f64;
+            for (&wi, &qi) in w.iter().zip(&q) {
+                let e = shrink_lp(wi - s * (qi - z), beta, self.p);
+                zsum += (qi - (wi - e) / s) as f64;
+            }
+            z = (zsum / w.len() as f64) as f32;
+            for (qi, &wi) in q.iter_mut().zip(w) {
+                *qi = (wi / s + z).round().clamp(0.0, qmax);
+            }
+            beta *= self.kappa;
+        }
+        for ((o, &qi), _) in out.iter_mut().zip(&q).zip(w) {
+            *o = s * (qi - z);
+        }
+    }
+}
+
+impl Quantizer for HqqQuantizer {
+    fn name(&self) -> &'static str {
+        "hqq"
+    }
+
+    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
+        let block = cfg.block_elems(w.rows, w.cols);
+        let mut dequant = Matrix::zeros(w.rows, w.cols);
+        for (bi, blk) in w.data.chunks(block).enumerate() {
+            let out = &mut dequant.data[bi * block..bi * block + blk.len()];
+            self.quantize_block(blk, out, cfg.bits);
+        }
+        QuantizedTensor {
+            method: self.name().to_string(),
+            rows: w.rows,
+            cols: w.cols,
+            dequant: finish_dequant(dequant, cfg),
+            // affine grid: scale + zero-point per block (bf16 each)
+            effective_bits: super::packing::uniform_effective_bits(cfg.bits, block, true),
+            msb: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::RtnQuantizer;
+    use crate::stats::Rng;
+
+    #[test]
+    fn improves_over_plain_asym_rtn_on_outliers() {
+        // HQQ's robust objective should cope better with heavy tails
+        let mut rng = Rng::new(1);
+        let mut w = Matrix::zeros(16, 256);
+        rng.fill_weightlike(&mut w.data, 0.05, 0.01);
+        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let hqq = HqqQuantizer::default().quantize(&w, &cfg);
+        let rtn = RtnQuantizer::asymmetric().quantize(&w, &cfg);
+        // robust lp fitting should not be (much) worse; typically better
+        assert!(hqq.mse(&w) <= rtn.mse(&w) * 1.05, "{} vs {}", hqq.mse(&w), rtn.mse(&w));
+    }
+
+    #[test]
+    fn shrink_lp_properties() {
+        // odd, contractive, zero fixed point
+        assert_eq!(shrink_lp(0.0, 10.0, 0.7), 0.0);
+        for x in [0.1f32, 1.0, 5.0, -3.0] {
+            let s = shrink_lp(x, 10.0, 0.7);
+            assert!(s.abs() <= x.abs());
+            assert_eq!(shrink_lp(-x, 10.0, 0.7), -s);
+        }
+    }
+
+    #[test]
+    fn constant_block_exact() {
+        let w = Matrix::from_vec(1, 64, vec![3.25; 64]);
+        let q = HqqQuantizer::default().quantize(&w, &QuantConfig::block_wise(4, 64).no_bf16());
+        assert!(q.mse(&w) < 1e-9);
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(8, 256, &mut rng);
+        let mut last = f64::INFINITY;
+        for bits in [2u32, 3, 4, 6] {
+            let q = HqqQuantizer::default()
+                .quantize(&w, &QuantConfig::block_wise(bits, 64).no_bf16());
+            let e = q.mse(&w);
+            assert!(e < last, "bits {bits}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(4, 128, &mut rng);
+        let cfg = QuantConfig::block_wise(4, 64);
+        let a = HqqQuantizer::default().quantize(&w, &cfg);
+        let b = HqqQuantizer::default().quantize(&w, &cfg);
+        assert_eq!(a.dequant.data, b.dequant.data);
+    }
+}

@@ -1,0 +1,190 @@
+//! Sensitivity-driven mixed-precision MSB — the BiLLM-inspired extension
+//! the paper's §2.2 motivates: "under tight precision budgets, performance
+//! depends ... on how representational capacity is allocated across groups
+//! of heterogeneous sensitivity".
+//!
+//! Blocks are ranked by a sensitivity score (activation-weighted energy if
+//! a Gram diagonal is available, else plain magnitude-variance); the top
+//! `hot_frac` get one extra bit and an equal mass of the least sensitive
+//! blocks gives one up, keeping the average bit budget at the base width.
+
+use crate::tensor::Matrix;
+
+use super::msb::MsbQuantizer;
+use super::{finish_dequant, Granularity, QuantConfig, QuantizedTensor, Quantizer};
+
+#[derive(Clone, Debug)]
+pub struct MixedMsbQuantizer {
+    pub hot_frac: f64,
+    /// Optional diag(H) (len = cols) for activation-aware sensitivity.
+    pub diag_h: Option<Vec<f32>>,
+}
+
+impl MixedMsbQuantizer {
+    pub fn new(hot_frac: f64) -> Self {
+        MixedMsbQuantizer { hot_frac: hot_frac.clamp(0.0, 0.5), diag_h: None }
+    }
+
+    pub fn with_diag_h(mut self, diag_h: Vec<f32>) -> Self {
+        self.diag_h = Some(diag_h);
+        self
+    }
+
+    /// Sensitivity of one block: Σ w² (· diag_h if available).
+    fn sensitivity(&self, blk: &[f32], col0: usize, cols: usize) -> f64 {
+        match &self.diag_h {
+            Some(d) => blk
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (v as f64) * (v as f64) * d[(col0 + i) % cols] as f64)
+                .sum(),
+            None => blk.iter().map(|&v| (v as f64) * (v as f64)).sum(),
+        }
+    }
+}
+
+impl Quantizer for MixedMsbQuantizer {
+    fn name(&self) -> &'static str {
+        "msb-mixed"
+    }
+
+    fn needs_calibration(&self) -> bool {
+        false // diag_h is optional
+    }
+
+    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
+        let t = match cfg.granularity {
+            Granularity::BlockWise { t } => t,
+            Granularity::PerTensor => {
+                // mixed precision needs blocks; whole-tensor falls back
+                return MsbQuantizer::wgm().quantize(w, cfg);
+            }
+        };
+        assert!(w.cols % t == 0);
+        let n_blocks = w.len() / t;
+        let n_hot = ((n_blocks as f64) * self.hot_frac) as usize;
+
+        // rank blocks by sensitivity
+        let mut order: Vec<usize> = (0..n_blocks).collect();
+        let scores: Vec<f64> = w
+            .row_blocks(t)
+            .enumerate()
+            .map(|(bi, blk)| self.sensitivity(blk, (bi * t) % w.cols, w.cols))
+            .collect();
+        order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+        // balance the *total* storage budget: promoting a block costs
+        // 1 + L·16/t extra bits/weight (codes + doubled scale table) while
+        // demoting refunds 1 + (L/2)·16/t — demote proportionally more.
+        let l = cfg.levels() as f64;
+        let cost_up = 1.0 + l * 16.0 / t as f64;
+        let cost_down = 1.0 + (l / 2.0) * 16.0 / t as f64;
+        let n_cold = (((n_hot as f64) * cost_up / cost_down).round() as usize)
+            .min(n_blocks.saturating_sub(n_hot));
+        let mut bits_of = vec![cfg.bits; n_blocks];
+        for &bi in order.iter().take(n_hot) {
+            bits_of[bi] = cfg.bits + 1;
+        }
+        for &bi in order.iter().rev().take(n_cold) {
+            bits_of[bi] = cfg.bits.saturating_sub(1).max(1);
+        }
+
+        // quantize each block at its assigned width
+        let inner = MsbQuantizer::wgm();
+        let mut dequant = Matrix::zeros(w.rows, w.cols);
+        let mut bit_mass = 0.0f64;
+        for (bi, blk) in w.row_blocks(t).enumerate() {
+            let bits = bits_of[bi];
+            let bcfg = QuantConfig::block_wise(bits, t)
+                .with_window(cfg.window)
+                .with_lambda(cfg.lambda)
+                .no_bf16();
+            let bm = Matrix::from_vec(1, t, blk.to_vec());
+            let q = inner.quantize(&bm, &bcfg);
+            dequant.data[bi * t..(bi + 1) * t].copy_from_slice(&q.dequant.data);
+            bit_mass += q.effective_bits * t as f64;
+        }
+        QuantizedTensor {
+            method: self.name().to_string(),
+            rows: w.rows,
+            cols: w.cols,
+            dequant: finish_dequant(dequant, cfg),
+            effective_bits: bit_mass / w.len() as f64,
+            msb: None, // variable-width payload: native path not modeled
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Rng;
+
+    /// Matrix with heterogeneous block sensitivity: some blocks carry 10x
+    /// the energy.
+    fn hetero(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::randn(rows, cols, &mut rng);
+        for (bi, chunk) in w.data.chunks_mut(64).enumerate() {
+            if bi % 7 == 0 {
+                for v in chunk.iter_mut() {
+                    *v *= 10.0;
+                }
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn budget_is_preserved() {
+        let w = hetero(16, 256, 1);
+        let cfg = QuantConfig::block_wise(4, 64);
+        let q = MixedMsbQuantizer::new(0.2).quantize(&w, &cfg);
+        let uniform = MsbQuantizer::wgm().quantize(&w, &cfg);
+        crate::testing::assert_close(q.effective_bits, uniform.effective_bits, 0.02, 0.0);
+    }
+
+    #[test]
+    fn beats_uniform_on_weighted_error() {
+        // mixed precision reallocates bits toward high-energy blocks, which
+        // dominate the weighted (and here even the plain) SSE
+        let w = hetero(32, 512, 2);
+        let cfg = QuantConfig::block_wise(3, 64).no_bf16();
+        let mixed = MixedMsbQuantizer::new(0.15).quantize(&w, &cfg);
+        let uniform = MsbQuantizer::wgm().quantize(&w, &cfg);
+        assert!(
+            mixed.mse(&w) < uniform.mse(&w),
+            "mixed {} !< uniform {}",
+            mixed.mse(&w),
+            uniform.mse(&w)
+        );
+    }
+
+    #[test]
+    fn zero_hot_frac_equals_uniform() {
+        let w = hetero(8, 128, 3);
+        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let mixed = MixedMsbQuantizer::new(0.0).quantize(&w, &cfg);
+        let uniform = MsbQuantizer::wgm().quantize(&w, &cfg);
+        assert_eq!(mixed.dequant.data, uniform.dequant.data);
+    }
+
+    #[test]
+    fn per_tensor_falls_back() {
+        let w = hetero(8, 128, 4);
+        let q = MixedMsbQuantizer::new(0.2).quantize(&w, &QuantConfig::per_tensor(6));
+        assert!(q.dequant.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn diag_h_changes_allocation() {
+        let w = hetero(8, 128, 5);
+        let cfg = QuantConfig::block_wise(3, 64).no_bf16();
+        let a = MixedMsbQuantizer::new(0.2).quantize(&w, &cfg);
+        let mut d = vec![1.0f32; 128];
+        for x in d.iter_mut().skip(64) {
+            *x = 100.0;
+        }
+        let b = MixedMsbQuantizer::new(0.2).with_diag_h(d).quantize(&w, &cfg);
+        assert_ne!(a.dequant.data, b.dequant.data);
+    }
+}

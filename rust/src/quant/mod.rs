@@ -1,0 +1,206 @@
+//! Quantizer framework + the paper's full comparison zoo.
+//!
+//! Everything implements [`Quantizer`]: MSB (the paper's method, all four
+//! solvers), RTN, BnB-style NF4/FP4, HQQ, GPTQ (calibrated), XNOR /
+//! BLOCKED-XNOR, and the all-zero dummy from Fig 2/3. Output is a
+//! [`QuantizedTensor`]: the *simulated-dequantized* weights (decoded
+//! through bf16, paper §4.1) plus storage accounting and, for MSB, the
+//! (codes, scales) pairs the L1 Pallas kernel consumes.
+
+pub mod dq;
+pub mod gptq;
+pub mod hqq;
+pub mod mixed;
+pub mod msb;
+pub mod nf4;
+pub mod packing;
+pub mod rtn;
+pub mod transform;
+pub mod xnor;
+
+use crate::tensor::Matrix;
+
+/// Quantization granularity (paper §4: per-tensor vs 64-element row blocks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    PerTensor,
+    /// `t` consecutive elements per row form an independent instance.
+    BlockWise { t: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct QuantConfig {
+    /// Target bit-width b; MSB uses 2^{b-1} positive scales (+ sign bit).
+    pub bits: u32,
+    pub granularity: Granularity,
+    /// Solver window size (WGM); paper defaults: 64 per-tensor, 1 block-wise.
+    pub window: usize,
+    /// λ̃ ∈ [0, 1]: the interpretable reparameterization of the λ
+    /// regularizer (Appendix C). Each solve maps it through
+    /// Λ(λ̃) = λ_min + λ̃(λ_max − λ_min) *for its own instance* — passing a
+    /// raw λ here would dwarf the within-block variances of real weight
+    /// scales and corrupt the merge order. Paper default: 0.75 (inert for
+    /// externally-fixed group counts, Table 5).
+    pub lambda: f64,
+    /// Round decoded values through bf16 (paper's storage protocol).
+    pub bf16: bool,
+}
+
+impl QuantConfig {
+    pub fn per_tensor(bits: u32) -> Self {
+        QuantConfig {
+            bits,
+            granularity: Granularity::PerTensor,
+            window: 64,
+            lambda: 0.75,
+            bf16: true,
+        }
+    }
+
+    pub fn block_wise(bits: u32, t: usize) -> Self {
+        QuantConfig {
+            bits,
+            granularity: Granularity::BlockWise { t },
+            window: 1,
+            lambda: 0.75,
+            bf16: true,
+        }
+    }
+
+    pub fn with_window(mut self, w: usize) -> Self {
+        self.window = w;
+        self
+    }
+
+    pub fn with_lambda(mut self, l: f64) -> Self {
+        self.lambda = l;
+        self
+    }
+
+    pub fn no_bf16(mut self) -> Self {
+        self.bf16 = false;
+        self
+    }
+
+    /// Number of positive scales: 2^{b-1} (the sign bit is the other half
+    /// of the budget).
+    pub fn levels(&self) -> usize {
+        1usize << (self.bits.saturating_sub(1))
+    }
+
+    /// Solver/scale block size in elements for a `rows x cols` matrix:
+    /// block-wise = `t` consecutive elements within a row; per-tensor = the
+    /// whole matrix shares one instance (a single scale set).
+    pub fn block_elems(&self, rows: usize, cols: usize) -> usize {
+        match self.granularity {
+            Granularity::PerTensor => rows * cols,
+            Granularity::BlockWise { t } => t,
+        }
+    }
+
+    /// Deprecated spelling kept for the MSB scale-table layout, where the
+    /// per-tensor payload is organized per `cols` stripe.
+    pub fn block_of(&self, cols: usize) -> usize {
+        match self.granularity {
+            Granularity::PerTensor => cols,
+            Granularity::BlockWise { t } => t,
+        }
+    }
+}
+
+/// MSB (codes, scales) in the L1 kernel's layout, attached when the method
+/// supports native execution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MsbPayload {
+    /// int8 sign·(level+1) codes, row-major [rows, cols]. None when the
+    /// level count exceeds i8 (large per-tensor settings).
+    pub codes: Option<Vec<i8>>,
+    /// f32 scales [rows * cols/block, levels] flattened.
+    pub scales: Vec<f32>,
+    pub levels: usize,
+    pub block: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub method: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// Simulated-dequantized weights (already bf16-rounded if configured).
+    pub dequant: Matrix,
+    /// Effective storage cost in bits/weight including scale metadata.
+    pub effective_bits: f64,
+    /// Kernel payload (MSB only).
+    pub msb: Option<MsbPayload>,
+}
+
+impl QuantizedTensor {
+    /// Total squared reconstruction error — the "MSE" the paper reports in
+    /// Tables 2/4/6 (Frobenius², not element-mean).
+    pub fn mse(&self, original: &Matrix) -> f64 {
+        self.dequant.sse(original)
+    }
+
+    /// Element-mean squared error.
+    pub fn mean_se(&self, original: &Matrix) -> f64 {
+        self.dequant.sse(original) / original.len() as f64
+    }
+}
+
+/// A weight-only PTQ method.
+pub trait Quantizer: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor;
+
+    /// Whether the method needs calibration data (GPTQ). Calibrated methods
+    /// get their Hessian through [`gptq::GptqQuantizer::with_hessian`].
+    fn needs_calibration(&self) -> bool {
+        false
+    }
+}
+
+/// Apply the configured bf16 decode round-trip.
+pub(crate) fn finish_dequant(mut m: Matrix, cfg: &QuantConfig) -> Matrix {
+    if cfg.bf16 {
+        for v in &mut m.data {
+            *v = crate::tensor::bf16::round(*v);
+        }
+    }
+    m
+}
+
+/// The calibration-free method zoo (GPTQ is constructed separately with its
+/// Hessian). Order matches the paper's tables.
+pub fn calibration_free_zoo() -> Vec<Box<dyn Quantizer>> {
+    vec![
+        Box::new(rtn::RtnQuantizer::symmetric()),
+        Box::new(nf4::Nf4Quantizer::nf4()),
+        Box::new(hqq::HqqQuantizer::default()),
+        Box::new(msb::MsbQuantizer::wgm()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_levels() {
+        assert_eq!(QuantConfig::block_wise(4, 64).levels(), 8);
+        assert_eq!(QuantConfig::per_tensor(6).levels(), 32);
+        assert_eq!(QuantConfig::per_tensor(1).levels(), 1);
+    }
+
+    #[test]
+    fn block_of() {
+        assert_eq!(QuantConfig::per_tensor(4).block_of(512), 512);
+        assert_eq!(QuantConfig::block_wise(4, 64).block_of(512), 64);
+    }
+
+    #[test]
+    fn zoo_has_paper_methods() {
+        let names: Vec<_> = calibration_free_zoo().iter().map(|q| q.name()).collect();
+        assert_eq!(names, vec!["rtn", "bnb-nf4", "hqq", "msb-wgm"]);
+    }
+}

@@ -1,0 +1,413 @@
+//! The paper's quantizer: MSB via dynamic grouping, wired to the [`crate::msb`]
+//! solvers for both granularities.
+//!
+//! * per-tensor (6-bit): one solve over all non-zero magnitudes,
+//!   2^{b-1} groups, default window 64;
+//! * block-wise (4-bit): an independent solve per `t`-element row block
+//!   (default t=64, window 1), 8 scales per block.
+//!
+//! Storage accounting (paper §4.1): codes are `b` bits, scales bf16 →
+//! block-wise effective bits = b + L·16/t (6.00 bits/weight at b=4, L=8,
+//! t=64); per-tensor metadata is negligible.
+
+use crate::msb::{Algo, MsbCode, Solver};
+use crate::tensor::Matrix;
+
+use super::{
+    finish_dequant, Granularity, MsbPayload, QuantConfig, QuantizedTensor, Quantizer,
+};
+
+/// Which solver backs the quantizer (WGM window comes from the config).
+#[derive(Clone, Debug, PartialEq)]
+pub enum MsbAlgo {
+    Dg,
+    Gg,
+    Wgm,
+    WgmLo { bins: usize, range: usize, max_iters: usize, patience: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct MsbQuantizer {
+    pub algo: MsbAlgo,
+    /// §3.4 group-mass normalization of the variance term.
+    pub normalized: bool,
+}
+
+impl MsbQuantizer {
+    /// Algorithm 3 — the paper's production solver.
+    pub fn wgm() -> Self {
+        MsbQuantizer { algo: MsbAlgo::Wgm, normalized: false }
+    }
+
+    /// Algorithm 2.
+    pub fn gg() -> Self {
+        MsbQuantizer { algo: MsbAlgo::Gg, normalized: false }
+    }
+
+    /// Algorithm 1 (oracle; small instances only).
+    pub fn dg() -> Self {
+        MsbQuantizer { algo: MsbAlgo::Dg, normalized: false }
+    }
+
+    /// Algorithm 4 with the paper's defaults (T=12, k=256 bins).
+    pub fn wgm_lo() -> Self {
+        MsbQuantizer {
+            algo: MsbAlgo::WgmLo { bins: 256, range: 32, max_iters: 12, patience: 3 },
+            normalized: false,
+        }
+    }
+
+    fn solver(&self, cfg: &QuantConfig) -> Solver {
+        let algo = match &self.algo {
+            MsbAlgo::Dg => Algo::Dg,
+            MsbAlgo::Gg => Algo::Gg,
+            MsbAlgo::Wgm => Algo::Wgm { window: cfg.window.max(1) },
+            MsbAlgo::WgmLo { bins, range, max_iters, patience } => Algo::WgmLo {
+                bins: *bins,
+                range: *range,
+                max_iters: *max_iters,
+                patience: *patience,
+            },
+        };
+        // cfg.lambda is λ̃ — the per-instance Λ map happens at solve time
+        let mut s = Solver::new(algo);
+        if self.normalized {
+            s = s.normalized();
+        }
+        s
+    }
+
+    /// Quantize a single flat block, returning its code (handles all-zero
+    /// blocks by emitting a zero codebook). `tilde` is mapped through the
+    /// Appendix-C Λ for this instance's magnitude range.
+    fn quantize_block(&self, solver: &Solver, data: &[f32], levels: usize, tilde: f64) -> MsbCode {
+        let sm = crate::msb::SortedMags::from_values(data);
+        if sm.is_empty() {
+            return MsbCode { n: data.len(), levels: vec![0.0], codes: vec![0; data.len()] };
+        }
+        let lam = crate::msb::lambda::lambda_of(tilde, &sm.mags);
+        let grouping = solver.clone().with_lambda(lam).solve_sorted(&sm, levels);
+        MsbCode::build(data, &sm, &grouping)
+    }
+
+    /// Allocation-free block-wise WGM path (§Perf): reuses the sort,
+    /// prefix-sum and merge workspaces across every block of the matrix and
+    /// writes scales/codes/dequant directly into the output buffers.
+    /// Semantically identical to the generic path (asserted by tests).
+    #[allow(clippy::too_many_arguments)]
+    fn quantize_blocks_fast(
+        &self,
+        w: &Matrix,
+        t: usize,
+        window: usize,
+        levels: usize,
+        lambda: f64,
+        dequant: &mut [f32],
+        scales: &mut Vec<f32>,
+        codes: &mut Vec<i8>,
+    ) {
+        use crate::msb::gg::{greedy_merge_ws, MergeWorkspace};
+        use crate::msb::objective::{CostParams, Prefix, SortedMags};
+
+        let mut sm = SortedMags::default();
+        let mut prefix = Prefix::default();
+        let mut ws = MergeWorkspace::default();
+        let mut bounds: Vec<usize> = Vec::new();
+        let win = window.max(1);
+
+        for (bi, blk) in w.row_blocks(t).enumerate() {
+            let base = bi * t;
+            sm.rebuild(blk);
+            let n = sm.len();
+            if n == 0 {
+                dequant[base..base + t].fill(0.0);
+                scales.extend(std::iter::repeat(0.0).take(levels));
+                codes.extend(std::iter::repeat(0).take(t));
+                continue;
+            }
+            prefix.rebuild(&sm.mags);
+            // Appendix C: λ is inapplicable to fixed-group-count greedy
+            // solvers — merge on pure variance (mirrors Solver::solve_with_prefix)
+            let _ = lambda;
+            let params = CostParams { lambda: 0.0, normalized: self.normalized, total: n };
+            // window-k initial partition, streamed without allocation
+            let n_init = n.div_ceil(win);
+            greedy_merge_ws(
+                &mut ws,
+                &prefix,
+                (0..n_init).map(|i| (i * win, ((i + 1) * win).min(n))),
+                levels,
+                &params,
+                &mut bounds,
+            );
+            let g = bounds.len();
+            debug_assert!(g <= levels && g <= 127);
+
+            // per-group scales (ascending by construction), padded to L
+            let scale_base = scales.len();
+            let mut s = 0usize;
+            for &e in &bounds {
+                scales.push(prefix.mean(s, e) as f32);
+                s = e;
+            }
+            let last = scales[scale_base + g - 1];
+            scales.extend(std::iter::repeat(last).take(levels - g));
+
+            // codes + dequant straight from the grouping
+            let code_base = codes.len();
+            codes.extend(std::iter::repeat(0).take(t));
+            dequant[base..base + t].fill(0.0);
+            let mut s = 0usize;
+            for (k, &e) in bounds.iter().enumerate() {
+                let mag = scales[scale_base + k];
+                for pos in s..e {
+                    let orig = sm.order[pos] as usize;
+                    let neg = blk[orig] < 0.0;
+                    codes[code_base + orig] = if neg { -(k as i8 + 1) } else { k as i8 + 1 };
+                    dequant[base + orig] = if neg { -mag } else { mag };
+                }
+                s = e;
+            }
+        }
+    }
+}
+
+impl Quantizer for MsbQuantizer {
+    fn name(&self) -> &'static str {
+        match self.algo {
+            MsbAlgo::Dg => "msb-dg",
+            MsbAlgo::Gg => "msb-gg",
+            MsbAlgo::Wgm => "msb-wgm",
+            MsbAlgo::WgmLo { .. } => "msb-wgm-lo",
+        }
+    }
+
+    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
+        let solver = self.solver(cfg);
+        let levels = cfg.levels();
+        let block = cfg.block_of(w.cols);
+        let mut dequant = Matrix::zeros(w.rows, w.cols);
+        let n_blocks = w.len() / block;
+        let mut scales: Vec<f32> = Vec::with_capacity(n_blocks * levels);
+        let mut codes: Option<Vec<i8>> = if levels <= 127 {
+            Some(Vec::with_capacity(w.len()))
+        } else {
+            None
+        };
+
+        match cfg.granularity {
+            Granularity::PerTensor => {
+                let code = self.quantize_block(&solver, &w.data, levels, cfg.lambda);
+                code.dequantize_into(&mut dequant.data);
+                scales.extend(code.levels_padded(levels));
+                match (&mut codes, code.codes_i8()) {
+                    (Some(out), Some(cs)) => out.extend(cs),
+                    _ => codes = None,
+                }
+            }
+            Granularity::BlockWise { t } => {
+                assert!(
+                    t > 0 && w.cols % t == 0,
+                    "block {t} must divide cols {}",
+                    w.cols
+                );
+                // the production WGM/GG block path is allocation-free (§Perf);
+                // DG / WGM-LO blocks go through the generic solver
+                let fast_window = match &self.algo {
+                    MsbAlgo::Wgm => Some(cfg.window.max(1)),
+                    MsbAlgo::Gg => Some(1),
+                    _ => None,
+                };
+                match (fast_window, &mut codes) {
+                    (Some(win), Some(code_out)) if levels <= 127 => {
+                        self.quantize_blocks_fast(
+                            w,
+                            t,
+                            win,
+                            levels,
+                            cfg.lambda,
+                            &mut dequant.data,
+                            &mut scales,
+                            code_out,
+                        );
+                    }
+                    _ => {
+                        for (bi, blk) in w.row_blocks(t).enumerate() {
+                            let code = self.quantize_block(&solver, blk, levels, cfg.lambda);
+                            code.dequantize_into(&mut dequant.data[bi * t..(bi + 1) * t]);
+                            scales.extend(code.levels_padded(levels));
+                            match (&mut codes, code.codes_i8()) {
+                                (Some(out), Some(cs)) => out.extend(cs),
+                                _ => codes = None,
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let effective_bits = super::packing::msb_effective_bits(
+            cfg.bits,
+            levels,
+            block,
+            w.len(),
+            matches!(cfg.granularity, Granularity::PerTensor),
+        );
+        QuantizedTensor {
+            method: self.name().to_string(),
+            rows: w.rows,
+            cols: w.cols,
+            dequant: finish_dequant(dequant, cfg),
+            effective_bits,
+            msb: Some(MsbPayload { codes, scales, levels, block }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Rng;
+
+    fn weight(rows: usize, cols: usize, seed: u64) -> Matrix {
+        Matrix::randn(rows, cols, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn block_wise_shapes() {
+        let w = weight(8, 128, 1);
+        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let q = MsbQuantizer::wgm().quantize(&w, &cfg);
+        assert_eq!(q.dequant.rows, 8);
+        let p = q.msb.unwrap();
+        assert_eq!(p.levels, 8);
+        assert_eq!(p.scales.len(), (8 * 128 / 64) * 8);
+        assert_eq!(p.codes.unwrap().len(), 8 * 128);
+    }
+
+    #[test]
+    fn per_tensor_uses_single_instance() {
+        let w = weight(16, 64, 2);
+        let cfg = QuantConfig::per_tensor(6).no_bf16();
+        let q = MsbQuantizer::wgm().quantize(&w, &cfg);
+        let p = q.msb.unwrap();
+        assert_eq!(p.scales.len(), 32);
+        assert_eq!(p.block, 64 * 16 / 16); // = cols? no: block_of = cols = 64
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let w = weight(16, 256, 3);
+        let mut last = f64::INFINITY;
+        for bits in [2u32, 3, 4, 6] {
+            let cfg = QuantConfig::block_wise(bits, 64).no_bf16();
+            let q = MsbQuantizer::wgm().quantize(&w, &cfg);
+            let e = q.mse(&w);
+            assert!(e < last, "bits {bits}: {e} !< {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn wgm_beats_coarse_window_blockwise() {
+        let w = weight(32, 512, 4);
+        let fine = MsbQuantizer::wgm()
+            .quantize(&w, &QuantConfig::block_wise(4, 64).with_window(1).no_bf16());
+        let coarse = MsbQuantizer::wgm()
+            .quantize(&w, &QuantConfig::block_wise(4, 64).with_window(32).no_bf16());
+        assert!(fine.mse(&w) <= coarse.mse(&w) + 1e-9);
+    }
+
+    #[test]
+    fn effective_bits_paper_values() {
+        let w = weight(8, 128, 5);
+        // 4-bit block-wise t=64: 4 + 8*16/64 = 6.00 bits/weight (paper §4.1)
+        let q = MsbQuantizer::wgm().quantize(&w, &QuantConfig::block_wise(4, 64));
+        crate::testing::assert_close(q.effective_bits, 6.0, 1e-12, 0.0);
+        // per-tensor metadata negligible
+        let q6 = MsbQuantizer::wgm().quantize(&w, &QuantConfig::per_tensor(6));
+        assert!(q6.effective_bits < 6.6);
+    }
+
+    #[test]
+    fn zeros_stay_zero() {
+        let mut w = weight(4, 64, 6);
+        w.data[5] = 0.0;
+        w.data[100] = 0.0;
+        let q = MsbQuantizer::wgm().quantize(&w, &QuantConfig::block_wise(4, 64));
+        assert_eq!(q.dequant.data[5], 0.0);
+        assert_eq!(q.dequant.data[100], 0.0);
+    }
+
+    #[test]
+    fn all_zero_matrix_ok() {
+        let w = Matrix::zeros(4, 64);
+        let q = MsbQuantizer::wgm().quantize(&w, &QuantConfig::block_wise(4, 64));
+        assert_eq!(q.mse(&w), 0.0);
+    }
+
+    #[test]
+    fn solvers_agree_on_structure() {
+        let w = weight(4, 64, 7);
+        let cfg = QuantConfig::block_wise(3, 64).no_bf16();
+        for q in [MsbQuantizer::gg(), MsbQuantizer::wgm(), MsbQuantizer::wgm_lo()] {
+            let out = q.quantize(&w, &cfg);
+            // signs must always be preserved
+            for (a, b) in w.data.iter().zip(&out.dequant.data) {
+                if *a != 0.0 && *b != 0.0 {
+                    assert_eq!(a.signum(), b.signum());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_block_path_matches_generic() {
+        // §Perf fast path must be semantically identical to the generic
+        // per-block solver for every window / bits combination
+        let w = weight(16, 256, 99);
+        for (bits, win) in [(4u32, 1usize), (4, 8), (3, 2), (2, 1)] {
+            let cfg = QuantConfig::block_wise(bits, 64).with_window(win).no_bf16();
+            let q = MsbQuantizer::wgm();
+            let fast = q.quantize(&w, &cfg);
+            // generic path: replicate per block via the (private) slow path
+            let solver = q.solver(&cfg);
+            let levels = cfg.levels();
+            let mut dequant = Matrix::zeros(w.rows, w.cols);
+            let mut scales = Vec::new();
+            let mut codes = Vec::new();
+            for (bi, blk) in w.row_blocks(64).enumerate() {
+                let code = q.quantize_block(&solver, blk, levels, cfg.lambda);
+                code.dequantize_into(&mut dequant.data[bi * 64..(bi + 1) * 64]);
+                scales.extend(code.levels_padded(levels));
+                codes.extend(code.codes_i8().unwrap());
+            }
+            assert_eq!(fast.dequant.data, dequant.data, "bits {bits} win {win}");
+            let p = fast.msb.unwrap();
+            assert_eq!(p.scales, scales);
+            assert_eq!(p.codes.unwrap(), codes);
+        }
+    }
+
+    #[test]
+    fn fast_block_path_zero_blocks() {
+        let mut w = Matrix::zeros(2, 128);
+        w.data[70] = 1.5; // second block of row 0 has one value
+        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let q = MsbQuantizer::wgm().quantize(&w, &cfg);
+        assert_eq!(q.mse(&w), 0.0); // exact: single value gets its own scale
+        let p = q.msb.unwrap();
+        assert_eq!(&p.scales[..8], &[0.0; 8]); // all-zero block
+        assert_eq!(p.codes.as_ref().unwrap()[70], 1);
+    }
+
+    #[test]
+    fn dg_oracle_beats_wgm_blockwise() {
+        let w = weight(2, 128, 8);
+        let cfg = QuantConfig::block_wise(3, 64).no_bf16().with_lambda(0.0);
+        let dg = MsbQuantizer::dg().quantize(&w, &cfg);
+        let wgm = MsbQuantizer::wgm()
+            .quantize(&w, &QuantConfig::block_wise(3, 64).with_window(8).no_bf16().with_lambda(0.0));
+        assert!(dg.mse(&w) <= wgm.mse(&w) + 1e-9);
+    }
+}

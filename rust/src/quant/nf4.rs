@@ -1,0 +1,183 @@
+//! BnB-style 4-bit codebook quantization: NF4 (normal-float, the QLoRA
+//! codebook) and FP4 (e2m1), absmax-normalized per block of 64 — the
+//! "BnB" baseline of Table 1. Pure-Rust reimplementation of the numerics;
+//! the CUDA kernels are irrelevant to the simulated-dequant protocol.
+
+use crate::tensor::Matrix;
+
+use super::{finish_dequant, QuantConfig, QuantizedTensor, Quantizer};
+
+/// The 16 NF4 levels (bitsandbytes / QLoRA, Dettmers et al. 2023):
+/// quantiles of N(0,1) normalized to [-1, 1].
+pub const NF4_LEVELS: [f32; 16] = [
+    -1.0,
+    -0.6961928009986877,
+    -0.5250730514526367,
+    -0.39491748809814453,
+    -0.28444138169288635,
+    -0.18477343022823334,
+    -0.09105003625154495,
+    0.0,
+    0.07958029955625534,
+    0.16093020141124725,
+    0.24611230194568634,
+    0.33791524171829224,
+    0.44070982933044434,
+    0.5626170039176941,
+    0.7229568362236023,
+    1.0,
+];
+
+/// FP4 (e2m1) value set, normalized to absmax 1.
+pub const FP4_LEVELS: [f32; 16] = [
+    -1.0, -0.6666667, -0.5, -0.33333334, -0.25, -0.16666667, -0.083333336, -0.0,
+    0.0, 0.083333336, 0.16666667, 0.25, 0.33333334, 0.5, 0.6666667, 1.0,
+];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codebook {
+    Nf4,
+    Fp4,
+}
+
+#[derive(Clone, Debug)]
+pub struct Nf4Quantizer {
+    pub codebook: Codebook,
+}
+
+impl Nf4Quantizer {
+    pub fn nf4() -> Self {
+        Nf4Quantizer { codebook: Codebook::Nf4 }
+    }
+
+    pub fn fp4() -> Self {
+        Nf4Quantizer { codebook: Codebook::Fp4 }
+    }
+
+    fn levels(&self) -> &'static [f32; 16] {
+        match self.codebook {
+            Codebook::Nf4 => &NF4_LEVELS,
+            Codebook::Fp4 => &FP4_LEVELS,
+        }
+    }
+}
+
+/// Nearest codebook entry (linear scan over 16 — branch-predictable and
+/// faster than binary search at this size).
+#[inline]
+fn nearest(levels: &[f32; 16], x: f32) -> f32 {
+    let mut best = levels[0];
+    let mut bd = (x - levels[0]).abs();
+    for &l in &levels[1..] {
+        let d = (x - l).abs();
+        if d < bd {
+            bd = d;
+            best = l;
+        }
+    }
+    best
+}
+
+impl Quantizer for Nf4Quantizer {
+    fn name(&self) -> &'static str {
+        match self.codebook {
+            Codebook::Nf4 => "bnb-nf4",
+            Codebook::Fp4 => "bnb-fp4",
+        }
+    }
+
+    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
+        assert_eq!(cfg.bits, 4, "{} is a fixed 4-bit codebook", self.name());
+        let block = cfg.block_elems(w.rows, w.cols);
+        let levels = self.levels();
+        let mut dequant = Matrix::zeros(w.rows, w.cols);
+        for (bi, blk) in w.data.chunks(block).enumerate() {
+            let absmax = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let out = &mut dequant.data[bi * block..bi * block + blk.len()];
+            if absmax == 0.0 {
+                out.fill(0.0);
+                continue;
+            }
+            for (o, &v) in out.iter_mut().zip(blk) {
+                *o = nearest(levels, v / absmax) * absmax;
+            }
+        }
+        QuantizedTensor {
+            method: self.name().to_string(),
+            rows: w.rows,
+            cols: w.cols,
+            dequant: finish_dequant(dequant, cfg),
+            effective_bits: super::packing::nf4_effective_bits(block),
+            msb: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::RtnQuantizer;
+    use crate::stats::Rng;
+
+    #[test]
+    fn codebooks_sorted_and_symmetric_ends() {
+        for levels in [&NF4_LEVELS, &FP4_LEVELS] {
+            assert!(levels.windows(2).all(|w| w[0] <= w[1]));
+            assert_eq!(levels[0], -1.0);
+            assert_eq!(levels[15], 1.0);
+        }
+        assert!(NF4_LEVELS.contains(&0.0));
+    }
+
+    #[test]
+    fn absmax_element_survives() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(4, 64, &mut rng);
+        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let q = Nf4Quantizer::nf4().quantize(&w, &cfg);
+        for (blk, dq) in w.row_blocks(64).zip(q.dequant.row_blocks(64)) {
+            let (mi, _) = blk
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.abs().total_cmp(&b.1.abs()))
+                .unwrap();
+            assert!((dq[mi] - blk[mi]).abs() < 1e-6, "absmax maps to ±1");
+        }
+    }
+
+    #[test]
+    fn nf4_beats_rtn_on_gaussian() {
+        // the entire point of NF4: better grid for normal data
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(32, 256, &mut rng);
+        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let nf4 = Nf4Quantizer::nf4().quantize(&w, &cfg);
+        let rtn = RtnQuantizer::symmetric().quantize(&w, &cfg);
+        assert!(nf4.mse(&w) < rtn.mse(&w));
+    }
+
+    #[test]
+    fn fp4_differs_from_nf4() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(8, 64, &mut rng);
+        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let a = Nf4Quantizer::nf4().quantize(&w, &cfg);
+        let b = Nf4Quantizer::fp4().quantize(&w, &cfg);
+        assert_ne!(a.dequant.data, b.dequant.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "fixed 4-bit")]
+    fn rejects_other_bit_widths() {
+        let w = Matrix::zeros(2, 64);
+        Nf4Quantizer::nf4().quantize(&w, &QuantConfig::block_wise(3, 64));
+    }
+
+    #[test]
+    fn effective_bits() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(2, 64, &mut rng);
+        let q = Nf4Quantizer::nf4().quantize(&w, &QuantConfig::block_wise(4, 64));
+        crate::testing::assert_close(q.effective_bits, 4.5, 1e-12, 0.0);
+    }
+}

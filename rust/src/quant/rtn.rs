@@ -1,0 +1,174 @@
+//! RTN (round-to-nearest) — the paper's simple uniform baseline: absmax
+//! scaling per tensor/block, optional asymmetric zero-point variant.
+
+use crate::tensor::Matrix;
+
+use super::{finish_dequant, QuantConfig, QuantizedTensor, Quantizer};
+
+#[derive(Clone, Debug)]
+pub struct RtnQuantizer {
+    pub asymmetric: bool,
+}
+
+impl RtnQuantizer {
+    /// Symmetric absmax grid (the paper's RTN has "no zero point shift").
+    pub fn symmetric() -> Self {
+        RtnQuantizer { asymmetric: false }
+    }
+
+    /// Affine min/max grid with zero point.
+    pub fn asymmetric() -> Self {
+        RtnQuantizer { asymmetric: true }
+    }
+
+    fn quantize_block_sym(block: &[f32], out: &mut [f32], bits: u32) {
+        let qmax = ((1i64 << (bits - 1)) - 1) as f32; // e.g. 7 at 4-bit
+        let absmax = block.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if absmax == 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        let scale = absmax / qmax;
+        for (o, &v) in out.iter_mut().zip(block) {
+            let q = (v / scale).round().clamp(-qmax, qmax);
+            *o = q * scale;
+        }
+    }
+
+    fn quantize_block_asym(block: &[f32], out: &mut [f32], bits: u32) {
+        let qmax = ((1i64 << bits) - 1) as f32; // e.g. 15 at 4-bit
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in block {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if hi <= lo {
+            out.fill(lo);
+            return;
+        }
+        let scale = (hi - lo) / qmax;
+        for (o, &v) in out.iter_mut().zip(block) {
+            let q = ((v - lo) / scale).round().clamp(0.0, qmax);
+            *o = q * scale + lo;
+        }
+    }
+}
+
+impl Quantizer for RtnQuantizer {
+    fn name(&self) -> &'static str {
+        if self.asymmetric {
+            "rtn-asym"
+        } else {
+            "rtn"
+        }
+    }
+
+    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
+        let block = cfg.block_elems(w.rows, w.cols);
+        assert!(block == w.len() || w.cols % block == 0, "block {block} !| cols {}", w.cols);
+        let mut dequant = Matrix::zeros(w.rows, w.cols);
+        for (bi, blk) in w.data.chunks(block).enumerate() {
+            let out = &mut dequant.data[bi * block..bi * block + blk.len()];
+            if self.asymmetric {
+                Self::quantize_block_asym(blk, out, cfg.bits);
+            } else {
+                Self::quantize_block_sym(blk, out, cfg.bits);
+            }
+        }
+        QuantizedTensor {
+            method: self.name().to_string(),
+            rows: w.rows,
+            cols: w.cols,
+            dequant: finish_dequant(dequant, cfg),
+            effective_bits: super::packing::uniform_effective_bits(
+                cfg.bits, block, self.asymmetric,
+            ),
+            msb: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Rng;
+
+    #[test]
+    fn exact_on_grid_points() {
+        // values already on the symmetric 3-bit grid survive exactly
+        let w = Matrix::from_vec(1, 4, vec![-3.0, -1.0, 0.0, 3.0]);
+        let cfg = QuantConfig::per_tensor(3).no_bf16();
+        let q = RtnQuantizer::symmetric().quantize(&w, &cfg);
+        assert_eq!(q.dequant.data, vec![-3.0, -1.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(16, 64, &mut rng);
+        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let q = RtnQuantizer::symmetric().quantize(&w, &cfg);
+        for (blk, dq) in w.row_blocks(64).zip(q.dequant.row_blocks(64)) {
+            let absmax = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let step = absmax / 7.0;
+            for (a, b) in blk.iter().zip(dq) {
+                assert!((a - b).abs() <= step / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(8, 256, &mut rng);
+        let mut last = f64::INFINITY;
+        for bits in [2u32, 3, 4, 6, 8] {
+            let q = RtnQuantizer::symmetric()
+                .quantize(&w, &QuantConfig::block_wise(bits, 64).no_bf16());
+            let e = q.mse(&w);
+            assert!(e < last);
+            last = e;
+        }
+    }
+
+    #[test]
+    fn blockwise_beats_per_tensor() {
+        // a matrix with per-block scale variation
+        let mut rng = Rng::new(3);
+        let mut w = Matrix::randn(4, 256, &mut rng);
+        for (i, v) in w.data.iter_mut().enumerate() {
+            *v *= 1.0 + (i / 64) as f32; // growing magnitude per block
+        }
+        let pt = RtnQuantizer::symmetric().quantize(&w, &QuantConfig::per_tensor(4).no_bf16());
+        let bw = RtnQuantizer::symmetric()
+            .quantize(&w, &QuantConfig::block_wise(4, 64).no_bf16());
+        assert!(bw.mse(&w) < pt.mse(&w));
+    }
+
+    #[test]
+    fn asymmetric_handles_shifted_data() {
+        let mut rng = Rng::new(4);
+        let mut w = Matrix::randn(4, 64, &mut rng);
+        for v in &mut w.data {
+            *v += 10.0; // all-positive shifted distribution
+        }
+        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let sym = RtnQuantizer::symmetric().quantize(&w, &cfg);
+        let asym = RtnQuantizer::asymmetric().quantize(&w, &cfg);
+        assert!(asym.mse(&w) < sym.mse(&w));
+    }
+
+    #[test]
+    fn zero_block() {
+        let w = Matrix::zeros(2, 64);
+        let q = RtnQuantizer::symmetric().quantize(&w, &QuantConfig::block_wise(4, 64));
+        assert_eq!(q.mse(&w), 0.0);
+    }
+
+    #[test]
+    fn constant_block_asym_exact() {
+        let w = Matrix::from_vec(1, 64, vec![2.5; 64]);
+        let q = RtnQuantizer::asymmetric().quantize(&w, &QuantConfig::block_wise(4, 64).no_bf16());
+        assert_eq!(q.mse(&w), 0.0);
+    }
+}

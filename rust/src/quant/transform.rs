@@ -1,0 +1,229 @@
+//! Optional equivalent-transformation layer on top of any quantizer — the
+//! paper's future work (iii): "integrating optional calibration and
+//! transformation modules on top of MSB PTQ ... without changing the core
+//! formulation".
+//!
+//! AWQ-style per-input-channel rescaling: choose positive scales `s_j`,
+//! quantize `W' = W·diag(s)`, and decode `Ŵ = quant(W')·diag(s)⁻¹`. The
+//! transform is function-preserving by construction (it cancels exactly in
+//! the decode), but it redistributes quantization error toward channels
+//! the scale marks as unimportant. Two scale policies:
+//!
+//! * [`ScalePolicy::ActivationAware`] — `s_j ∝ E[x_j²]^α` from the GPTQ
+//!   calibration Gram diagonal (AWQ's salient-channel statistic);
+//! * [`ScalePolicy::WeightAware`] — `s_j ∝ mean|W_{:,j}|^{-α}`,
+//!   calibration-free (equalizes column magnitudes).
+
+use crate::tensor::Matrix;
+
+use super::{QuantConfig, QuantizedTensor, Quantizer};
+
+#[derive(Clone, Debug)]
+pub enum ScalePolicy {
+    /// Gram-diagonal driven: needs `diag(H)` (len = cols) from calibration.
+    ActivationAware { diag_h: Vec<f32>, alpha: f64 },
+    /// Column-magnitude equalization, calibration-free.
+    WeightAware { alpha: f64 },
+}
+
+pub struct ScaledQuantizer<Q: Quantizer> {
+    pub inner: Q,
+    pub policy: ScalePolicy,
+}
+
+impl<Q: Quantizer> ScaledQuantizer<Q> {
+    pub fn new(inner: Q, policy: ScalePolicy) -> Self {
+        ScaledQuantizer { inner, policy }
+    }
+
+    /// Per-column scales, normalized to geometric mean 1 so the transformed
+    /// matrix stays in the same overall magnitude regime.
+    pub fn column_scales(&self, w: &Matrix) -> Vec<f32> {
+        let cols = w.cols;
+        let mut s = vec![1.0f64; cols];
+        match &self.policy {
+            ScalePolicy::ActivationAware { diag_h, alpha } => {
+                assert_eq!(diag_h.len(), cols, "diag(H) len != cols");
+                for (j, sj) in s.iter_mut().enumerate() {
+                    *sj = (diag_h[j].max(1e-12) as f64).powf(*alpha / 2.0);
+                }
+            }
+            ScalePolicy::WeightAware { alpha } => {
+                for j in 0..cols {
+                    let mean_abs: f64 = (0..w.rows)
+                        .map(|r| w.at(r, j).abs() as f64)
+                        .sum::<f64>()
+                        / w.rows as f64;
+                    s[j] = mean_abs.max(1e-12).powf(-alpha);
+                }
+            }
+        }
+        // normalize: geometric mean 1
+        let log_mean: f64 = s.iter().map(|&x| x.ln()).sum::<f64>() / cols as f64;
+        let norm = log_mean.exp();
+        s.iter().map(|&x| (x / norm) as f32).collect()
+    }
+}
+
+impl<Q: Quantizer> Quantizer for ScaledQuantizer<Q> {
+    fn name(&self) -> &'static str {
+        // static name constraint: report the family; the inner method is in
+        // the QuantizedTensor.method string
+        "scaled"
+    }
+
+    fn needs_calibration(&self) -> bool {
+        matches!(self.policy, ScalePolicy::ActivationAware { .. })
+            || self.inner.needs_calibration()
+    }
+
+    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
+        let s = self.column_scales(w);
+        let mut scaled = w.clone();
+        for r in 0..w.rows {
+            let row = &mut scaled.data[r * w.cols..(r + 1) * w.cols];
+            for (v, &sj) in row.iter_mut().zip(&s) {
+                *v *= sj;
+            }
+        }
+        let mut qt = self.inner.quantize(&scaled, cfg);
+        // undo the transform in the decoded weights (exact cancellation)
+        for r in 0..w.rows {
+            let row = &mut qt.dequant.data[r * w.cols..(r + 1) * w.cols];
+            for (v, &sj) in row.iter_mut().zip(&s) {
+                *v /= sj;
+            }
+        }
+        qt.method = format!("{}+{}", qt.method, match self.policy {
+            ScalePolicy::ActivationAware { .. } => "awq",
+            ScalePolicy::WeightAware { .. } => "eq",
+        });
+        // per-column bf16 scale shared by all rows
+        qt.effective_bits += 16.0 / w.rows as f64;
+        // the MSB payload refers to the *transformed* weights; native
+        // execution would need the s vector folded into the activations,
+        // which the simulated path does not model — drop it.
+        qt.msb = None;
+        qt
+    }
+}
+
+/// Weighted reconstruction error tr(Δ diag(h) Δᵀ) — the proxy the transform
+/// is supposed to improve (errors weighted by activation energy).
+pub fn weighted_sse(w: &Matrix, q: &Matrix, diag_h: &[f32]) -> f64 {
+    assert_eq!(w.cols, diag_h.len());
+    let mut acc = 0.0f64;
+    for r in 0..w.rows {
+        for c in 0..w.cols {
+            let d = (w.at(r, c) - q.at(r, c)) as f64;
+            acc += d * d * diag_h[c] as f64;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::msb::MsbQuantizer;
+    use crate::quant::rtn::RtnQuantizer;
+    use crate::stats::Rng;
+
+    fn skewed_diag(cols: usize, seed: u64) -> Vec<f32> {
+        // a few hot channels, like real activation statistics
+        let mut rng = Rng::new(seed);
+        (0..cols)
+            .map(|_| {
+                let base = rng.uniform() as f32 + 0.1;
+                if rng.uniform() < 0.05 {
+                    base * 100.0
+                } else {
+                    base
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scales_normalized_to_geomean_one() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(32, 64, &mut rng);
+        let q = ScaledQuantizer::new(
+            RtnQuantizer::symmetric(),
+            ScalePolicy::WeightAware { alpha: 0.5 },
+        );
+        let s = q.column_scales(&w);
+        let log_mean: f64 = s.iter().map(|&x| (x as f64).ln()).sum::<f64>() / 64.0;
+        crate::testing::assert_close(log_mean.exp(), 1.0, 1e-4, 0.0);
+        assert!(s.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn awq_improves_weighted_error() {
+        // the transform's raison d'être: lower activation-weighted error
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(64, 128, &mut rng);
+        let diag = skewed_diag(128, 3);
+        let cfg = QuantConfig::block_wise(3, 64).no_bf16();
+        let plain = RtnQuantizer::symmetric().quantize(&w, &cfg);
+        let scaled = ScaledQuantizer::new(
+            RtnQuantizer::symmetric(),
+            ScalePolicy::ActivationAware { diag_h: diag.clone(), alpha: 0.5 },
+        )
+        .quantize(&w, &cfg);
+        let (a, b) = (
+            weighted_sse(&w, &plain.dequant, &diag),
+            weighted_sse(&w, &scaled.dequant, &diag),
+        );
+        assert!(b < a, "awq-weighted {b} !< plain {a}");
+    }
+
+    #[test]
+    fn transform_composes_with_msb() {
+        // future work (iii): the transform slots on top of MSB unchanged
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(32, 128, &mut rng);
+        let diag = skewed_diag(128, 5);
+        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let q = ScaledQuantizer::new(
+            MsbQuantizer::wgm(),
+            ScalePolicy::ActivationAware { diag_h: diag.clone(), alpha: 0.5 },
+        )
+        .quantize(&w, &cfg);
+        assert_eq!(q.method, "msb-wgm+awq");
+        assert!(q.dequant.data.iter().all(|v| v.is_finite()));
+        // function preservation: unweighted error stays in the same regime
+        let plain = MsbQuantizer::wgm().quantize(&w, &cfg);
+        assert!(q.mse(&w) < plain.mse(&w) * 3.0);
+    }
+
+    #[test]
+    fn weight_aware_is_calibration_free() {
+        let q = ScaledQuantizer::new(
+            MsbQuantizer::wgm(),
+            ScalePolicy::WeightAware { alpha: 0.3 },
+        );
+        assert!(!q.needs_calibration());
+        let q2 = ScaledQuantizer::new(
+            RtnQuantizer::symmetric(),
+            ScalePolicy::ActivationAware { diag_h: vec![1.0; 4], alpha: 0.5 },
+        );
+        assert!(q2.needs_calibration());
+    }
+
+    #[test]
+    fn identity_scales_change_nothing() {
+        let mut rng = Rng::new(6);
+        let w = Matrix::randn(16, 64, &mut rng);
+        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let scaled = ScaledQuantizer::new(
+            RtnQuantizer::symmetric(),
+            ScalePolicy::ActivationAware { diag_h: vec![2.0; 64], alpha: 0.5 },
+        )
+        .quantize(&w, &cfg);
+        let plain = RtnQuantizer::symmetric().quantize(&w, &cfg);
+        for (a, b) in scaled.dequant.data.iter().zip(&plain.dequant.data) {
+            crate::testing::assert_close(*a as f64, *b as f64, 1e-5, 1e-7);
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! XNOR-Net binarization (Rastegari et al. 2016) and its blocked variant —
+//! the 1-bit ancestors MSB generalizes, plus the all-zero dummy baseline
+//! from the Fig 2/3 ablations.
+//!
+//! Closed form (eq. 1): B* = sign(W), α* = ‖W‖₁/|W|.
+
+use crate::tensor::Matrix;
+
+use super::{finish_dequant, Granularity, QuantConfig, QuantizedTensor, Quantizer};
+
+#[derive(Clone, Debug)]
+pub struct XnorQuantizer {
+    /// Per-block α instead of a single whole-tensor α (BLOCKED-XNOR).
+    pub blocked: bool,
+}
+
+impl XnorQuantizer {
+    pub fn whole() -> Self {
+        XnorQuantizer { blocked: false }
+    }
+
+    pub fn blocked() -> Self {
+        XnorQuantizer { blocked: true }
+    }
+
+    fn binarize(block: &[f32], out: &mut [f32]) {
+        let n = block.len() as f64;
+        let alpha = (block.iter().map(|&v| v.abs() as f64).sum::<f64>() / n) as f32;
+        for (o, &v) in out.iter_mut().zip(block) {
+            *o = if v == 0.0 {
+                0.0 // zero-loss special group, consistent with MSB
+            } else {
+                alpha * v.signum()
+            };
+        }
+    }
+}
+
+impl Quantizer for XnorQuantizer {
+    fn name(&self) -> &'static str {
+        if self.blocked {
+            "blocked-xnor"
+        } else {
+            "xnor"
+        }
+    }
+
+    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
+        let block = if self.blocked {
+            match cfg.granularity {
+                Granularity::BlockWise { t } => t,
+                Granularity::PerTensor => w.cols,
+            }
+        } else {
+            w.len()
+        };
+        let mut dequant = Matrix::zeros(w.rows, w.cols);
+        for (bi, blk) in w.data.chunks(block).enumerate() {
+            Self::binarize(blk, &mut dequant.data[bi * block..bi * block + blk.len()]);
+        }
+        QuantizedTensor {
+            method: self.name().to_string(),
+            rows: w.rows,
+            cols: w.cols,
+            dequant: finish_dequant(dequant, cfg),
+            effective_bits: 1.0 + 16.0 / block as f64,
+            msb: None,
+        }
+    }
+}
+
+/// All-zero "quantizer" — the dummy floor in Fig 2/3.
+#[derive(Clone, Debug)]
+pub struct ZeroQuantizer;
+
+impl Quantizer for ZeroQuantizer {
+    fn name(&self) -> &'static str {
+        "zero"
+    }
+
+    fn quantize(&self, w: &Matrix, _cfg: &QuantConfig) -> QuantizedTensor {
+        QuantizedTensor {
+            method: "zero".into(),
+            rows: w.rows,
+            cols: w.cols,
+            dequant: Matrix::zeros(w.rows, w.cols),
+            effective_bits: 0.0,
+            msb: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msb::{Algo, Solver};
+    use crate::stats::Rng;
+
+    #[test]
+    fn closed_form_alpha() {
+        let w = Matrix::from_vec(1, 4, vec![1.0, -2.0, 3.0, -4.0]);
+        let q = XnorQuantizer::whole().quantize(&w, &QuantConfig::per_tensor(1).no_bf16());
+        assert_eq!(q.dequant.data, vec![2.5, -2.5, 2.5, -2.5]);
+    }
+
+    #[test]
+    fn xnor_error_equals_identity() {
+        // ‖A − αB‖² = ‖A‖² − ‖A‖₁²/|A| (paper §3.2) — for zero-free input
+        let mut rng = Rng::new(1);
+        let mut w = Matrix::randn(8, 32, &mut rng);
+        for v in &mut w.data {
+            if *v == 0.0 {
+                *v = 0.1;
+            }
+        }
+        let q = XnorQuantizer::whole().quantize(&w, &QuantConfig::per_tensor(1).no_bf16());
+        let n = w.len() as f64;
+        let l1: f64 = w.data.iter().map(|&v| v.abs() as f64).sum();
+        let l2: f64 = w.data.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        crate::testing::assert_close(q.mse(&w), l2 - l1 * l1 / n, 1e-6, 1e-9);
+    }
+
+    #[test]
+    fn blocked_no_worse_than_whole() {
+        let mut rng = Rng::new(2);
+        let mut w = Matrix::randn(8, 256, &mut rng);
+        for (i, v) in w.data.iter_mut().enumerate() {
+            *v *= 1.0 + (i / 256) as f32;
+        }
+        let cfg = QuantConfig::block_wise(1, 64).no_bf16();
+        let whole = XnorQuantizer::whole().quantize(&w, &cfg);
+        let blocked = XnorQuantizer::blocked().quantize(&w, &cfg);
+        assert!(blocked.mse(&w) <= whole.mse(&w));
+    }
+
+    #[test]
+    fn msb_single_group_equals_xnor() {
+        // MSB with one group degenerates to XNOR — the conceptual link the
+        // paper builds on
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(4, 32, &mut rng);
+        let xnor = XnorQuantizer::whole().quantize(&w, &QuantConfig::per_tensor(1).no_bf16());
+        let code = Solver::new(Algo::Gg).quantize(&w.data, 1);
+        let msb = code.dequantize();
+        for (a, b) in xnor.dequant.data.iter().zip(&msb) {
+            crate::testing::assert_close(*a as f64, *b as f64, 1e-5, 1e-7);
+        }
+    }
+
+    #[test]
+    fn zero_dummy_is_worst() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(8, 64, &mut rng);
+        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let zero = ZeroQuantizer.quantize(&w, &cfg);
+        let xnor = XnorQuantizer::whole().quantize(&w, &cfg);
+        assert!(zero.mse(&w) > xnor.mse(&w));
+        crate::testing::assert_close(zero.mse(&w), w.fro_norm().powi(2), 1e-9, 1e-9);
+    }
+}

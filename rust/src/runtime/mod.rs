@@ -1,0 +1,211 @@
+//! PJRT runtime: loads the AOT-lowered HLO text produced by
+//! `python/compile/aot.py`, compiles it once per model variant on the CPU
+//! PJRT client, and executes it from the rust request path.
+//!
+//! Interchange is HLO *text* — jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Weights are uploaded once as persistent [`xla::PjRtBuffer`]s and reused
+//! across every call (`execute_b`); only the token batch is re-uploaded per
+//! request. That keeps the request path free of O(model) host↔device
+//! traffic — see EXPERIMENTS.md §Perf for the before/after.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::io::manifest::{Manifest, ModelSpec};
+use crate::io::msbt::TensorMap;
+
+/// Thin owner of the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text file into a reusable executable.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| {
+            format!("PJRT compile of {}", path.display())
+        })?;
+        Ok(Executable { exe })
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_i8(&self, data: &[i8], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+/// A compiled model executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute over persistent device buffers; returns the first element of
+    /// the output 1-tuple as f32s (the lowering wraps results in a tuple —
+    /// `return_tuple=True`).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
+        let out = self.exe.execute_b(args).context("execute_b")?;
+        let lit = out[0][0].to_literal_sync()?;
+        let inner = lit.to_tuple1()?;
+        Ok(inner.to_vec::<f32>()?)
+    }
+}
+
+/// The L3-facing model handle: one compiled executable + the weight
+/// buffers in ABI order. Feeding different (e.g. quantized-dequantized)
+/// weights to the *same* executable is exactly the paper's
+/// simulated-quantization protocol.
+pub struct ModelRunner {
+    rt: Runtime,
+    exe: Executable,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    /// ABI order of weight names (for targeted updates).
+    names: Vec<String>,
+    shapes: Vec<Vec<usize>>,
+}
+
+impl ModelRunner {
+    /// Compile `spec`'s forward HLO and upload `weights` (ABI order from the
+    /// manifest).
+    pub fn new(manifest: &Manifest, spec: &ModelSpec, weights: &TensorMap) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let exe = rt.load_hlo(manifest.path(&spec.fwd_hlo))?;
+        let mut weight_bufs = Vec::with_capacity(spec.params.len());
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        for p in &spec.params {
+            let t = weights
+                .get(&p.name)
+                .with_context(|| format!("weights file missing '{}'", p.name))?;
+            anyhow::ensure!(t.dims == p.shape, "{}: shape {:?} != manifest {:?}",
+                p.name, t.dims, p.shape);
+            weight_bufs.push(rt.upload_f32(t.as_f32()?, &p.shape)?);
+            names.push(p.name.clone());
+            shapes.push(p.shape.clone());
+        }
+        Ok(ModelRunner {
+            rt,
+            exe,
+            weight_bufs,
+            batch: manifest.eval_batch,
+            seq: spec.seq,
+            vocab: manifest.vocab,
+            names,
+            shapes,
+        })
+    }
+
+    /// Replace a subset of weights (by name) — used to swap in each
+    /// quantized variant without recompiling or re-uploading the rest.
+    pub fn update_weights(&mut self, updates: &TensorMap) -> Result<usize> {
+        let mut n = 0;
+        for (i, name) in self.names.iter().enumerate() {
+            if let Some(t) = updates.get(name) {
+                anyhow::ensure!(t.dims == self.shapes[i], "{name}: bad update shape");
+                self.weight_bufs[i] = self.rt.upload_f32(t.as_f32()?, &self.shapes[i])?;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Forward pass: `tokens` is a row-major [batch, seq] i32 buffer;
+    /// returns logits [batch, seq, vocab].
+    pub fn logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            tokens.len() == self.batch * self.seq,
+            "tokens len {} != {}x{}",
+            tokens.len(),
+            self.batch,
+            self.seq
+        );
+        let tok_buf = self.rt.upload_i32(tokens, &[self.batch, self.seq])?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_bufs.len());
+        args.push(&tok_buf);
+        args.extend(self.weight_bufs.iter());
+        self.exe.run_buffers(&args)
+    }
+}
+
+/// Anything that maps a [batch, seq] token tensor to [batch, seq, vocab]
+/// logits. `ModelRunner` is the real one; tests use closures/mocks.
+pub trait LogitsFn {
+    fn batch(&self) -> usize;
+    fn seq(&self) -> usize;
+    fn vocab(&self) -> usize;
+    fn logits(&self, tokens: &[i32]) -> Result<Vec<f32>>;
+}
+
+impl LogitsFn for ModelRunner {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        ModelRunner::logits(self, tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/integration.rs;
+    // here we only check graceful failure paths.
+
+    #[test]
+    fn missing_hlo_file_errors() {
+        let rt = match Runtime::cpu() {
+            Ok(rt) => rt,
+            Err(_) => return, // no PJRT in this environment: skip
+        };
+        assert!(rt.load_hlo("/nonexistent/file.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn upload_shape_mismatch_errors() {
+        let rt = match Runtime::cpu() {
+            Ok(rt) => rt,
+            Err(_) => return,
+        };
+        assert!(rt.upload_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(rt.upload_f32(&[1.0, 2.0], &[2]).is_ok());
+    }
+}

@@ -1,0 +1,230 @@
+//! Batched evaluation service: a long-lived server thread owns the PJRT
+//! executable (device buffers are not Sync) and drains a request channel,
+//! coalescing up to `batch` sequences per forward pass — the classic
+//! dynamic-batching loop, exercised by `examples/serve_eval.rs`.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::LogitsFn;
+
+/// One scoring request: a (≤ seq)-token sequence; the response is the
+/// per-position next-token logprob of the sequence under the model.
+pub struct Request {
+    pub tokens: Vec<i32>,
+    pub resp: Sender<Response>,
+}
+
+/// Channel protocol: scoring work or an explicit stop (so `shutdown` does
+/// not depend on every client handle being dropped first).
+enum Msg {
+    Score(Request),
+    Stop,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// logprob of tokens[p] given tokens[..p], for p in 1..len.
+    pub logprobs: Vec<f64>,
+    /// Which batch this request rode in (telemetry).
+    pub batch_id: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub max_batch_fill: usize,
+}
+
+/// Client handle: cloneable, thread-safe.
+#[derive(Clone)]
+pub struct EvalClient {
+    tx: Sender<Msg>,
+}
+
+impl EvalClient {
+    /// Blocking scoring call.
+    pub fn score(&self, tokens: Vec<i32>) -> Result<Response> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Score(Request { tokens, resp: tx }))
+            .map_err(|_| anyhow::anyhow!("server gone"))?;
+        Ok(rx.recv()?)
+    }
+}
+
+pub struct EvalServer {
+    handle: Option<JoinHandle<ServerStats>>,
+    tx: Option<Sender<Msg>>,
+}
+
+impl EvalServer {
+    /// Spawn the server thread around a model. `linger` is how long the
+    /// batcher waits to fill a batch before dispatching a partial one.
+    pub fn spawn<M>(model: M, linger: Duration) -> (EvalServer, EvalClient)
+    where
+        M: LogitsFn + Send + 'static,
+    {
+        Self::spawn_with(move || model, linger)
+    }
+
+    /// Spawn with a factory that *builds the model inside the server
+    /// thread* — required for PJRT-backed models ([`crate::runtime::ModelRunner`]
+    /// holds non-`Send` device handles; only the factory crosses threads).
+    pub fn spawn_with<M, F>(factory: F, linger: Duration) -> (EvalServer, EvalClient)
+    where
+        M: LogitsFn + 'static,
+        F: FnOnce() -> M + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let client = EvalClient { tx: tx.clone() };
+        let handle = std::thread::Builder::new()
+            .name("msb-eval-server".into())
+            .spawn(move || serve(factory(), rx, linger))
+            .expect("spawn server");
+        (EvalServer { handle: Some(handle), tx: Some(tx) }, client)
+    }
+
+    /// Stop the server and collect telemetry. Safe to call with client
+    /// handles still alive: an explicit stop message ends the loop.
+    pub fn shutdown(mut self) -> ServerStats {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Msg::Stop);
+        }
+        self.handle.take().map(|h| h.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+impl Drop for EvalServer {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Msg::Stop);
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve<M: LogitsFn>(model: M, rx: Receiver<Msg>, linger: Duration) -> ServerStats {
+    let (b, t, v) = (model.batch(), model.seq(), model.vocab());
+    let mut stats = ServerStats::default();
+    let mut batch_id = 0u64;
+    loop {
+        // block for the first request
+        let first = match rx.recv() {
+            Ok(Msg::Score(r)) => r,
+            Ok(Msg::Stop) | Err(_) => return stats,
+        };
+        let mut pending = vec![first];
+        // linger to coalesce more
+        let mut stop_after = false;
+        let deadline = Instant::now() + linger;
+        while pending.len() < b {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Score(r)) => pending.push(r),
+                Ok(Msg::Stop) => {
+                    stop_after = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // assemble the batch
+        let mut tokens = vec![0i32; b * t];
+        for (row, req) in pending.iter().enumerate() {
+            let n = req.tokens.len().min(t);
+            tokens[row * t..row * t + n].copy_from_slice(&req.tokens[..n]);
+        }
+        let logits = match model.logits(&tokens) {
+            Ok(l) => l,
+            Err(_) => continue, // drop the batch; clients see closed channel
+        };
+        let lp = crate::eval::LogProbs::new(&logits, v);
+        batch_id += 1;
+        stats.batches += 1;
+        stats.requests += pending.len() as u64;
+        stats.max_batch_fill = stats.max_batch_fill.max(pending.len());
+        for (row, req) in pending.into_iter().enumerate() {
+            let n = req.tokens.len().min(t);
+            let mut logprobs = Vec::with_capacity(n.saturating_sub(1));
+            for p in 1..n {
+                logprobs.push(lp.logp(row * t + p - 1, req.tokens[p] as usize));
+            }
+            let _ = req.resp.send(Response { logprobs, batch_id });
+        }
+        if stop_after {
+            return stats;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::mock::SuccessorModel;
+
+    fn model() -> SuccessorModel {
+        SuccessorModel { batch: 4, seq: 8, vocab: 16, boost: 6.0 }
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let (server, client) = EvalServer::spawn(model(), Duration::from_millis(1));
+        let r = client.score(vec![1, 2, 3, 4]).unwrap();
+        assert_eq!(r.logprobs.len(), 3);
+        // successor tokens are high-probability
+        assert!(r.logprobs.iter().all(|&lp| lp > -0.5), "{:?}", r.logprobs);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn batching_coalesces_concurrent_requests() {
+        let (server, client) = EvalServer::spawn(model(), Duration::from_millis(50));
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let c = client.clone();
+            handles.push(std::thread::spawn(move || {
+                c.score(vec![i, i + 1, i + 2]).unwrap()
+            }));
+        }
+        let responses: Vec<Response> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 4);
+        assert!(stats.batches < 4, "requests must coalesce: {stats:?}");
+        // at least two shared a batch id
+        let ids: Vec<u64> = responses.iter().map(|r| r.batch_id).collect();
+        let mut sorted = ids.clone();
+        sorted.dedup();
+        assert!(stats.max_batch_fill >= 2);
+    }
+
+    #[test]
+    fn overlong_sequences_truncate() {
+        let (server, client) = EvalServer::spawn(model(), Duration::from_millis(1));
+        let r = client.score((0..50).collect()).unwrap();
+        assert_eq!(r.logprobs.len(), 7); // seq=8 -> 7 predictions
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_idempotent_via_drop() {
+        let (server, client) = EvalServer::spawn(model(), Duration::from_millis(1));
+        drop(client);
+        drop(server); // must not hang
+    }
+}

@@ -1,0 +1,227 @@
+//! Statistics substrate: a seeded RNG (no `rand` crate offline), standard
+//! distributions, and summary statistics used by benches / property tests.
+
+/// xorshift64* — fast, seedable, good-enough equidistribution for synthetic
+/// workloads and property tests. Deterministic across platforms.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    /// cached second Box-Muller variate
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // avoid the all-zeros fixed point
+        let state = if seed == 0 { 0x9E3779B97F4A7C15 } else { seed };
+        Rng { state, spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.uniform() * n as f64) as usize % n
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.uniform() * (hi - lo)
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Fill a slice with N(0, sigma^2) samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], sigma: f32) {
+        for v in out {
+            *v = (self.normal() as f32) * sigma;
+        }
+    }
+
+    /// Heavy-tailed "LLM-weight-like" samples: Gaussian bulk + sparse
+    /// outliers, mimicking the kurtotic layers quantizers struggle with.
+    pub fn fill_weightlike(&mut self, out: &mut [f32], sigma: f32, outlier_rate: f64) {
+        for v in out.iter_mut() {
+            let base = self.normal() as f32 * sigma;
+            *v = if self.uniform() < outlier_rate {
+                base * 8.0
+            } else {
+                base
+            };
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Summary statistics of a slice.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub var: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f32]) -> Summary {
+    if xs.is_empty() {
+        return Summary { n: 0, mean: 0.0, var: 0.0, min: 0.0, max: 0.0 };
+    }
+    let n = xs.len() as f64;
+    let mut s1 = 0.0f64;
+    let mut s2 = 0.0f64;
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    for &x in xs {
+        let x = x as f64;
+        s1 += x;
+        s2 += x * x;
+        min = min.min(x);
+        max = max.max(x);
+    }
+    let mean = s1 / n;
+    Summary { n: xs.len(), mean, var: (s2 / n - mean * mean).max(0.0), min, max }
+}
+
+/// Mean squared error between two equal-length slices (f64 accumulation).
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc / a.len() as f64
+}
+
+/// Sum of squared errors (the paper's Frobenius MSE in Tables 2/4/6 is the
+/// *total* squared reconstruction error of the matrix).
+pub fn sse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_zero_seed_ok() {
+        let mut r = Rng::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(2);
+        for n in [1usize, 2, 7, 100] {
+            for _ in 0..1000 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f32> = (0..200_000).map(|_| r.normal() as f32).collect();
+        let s = summarize(&xs);
+        assert!(s.mean.abs() < 0.02, "mean {}", s.mean);
+        assert!((s.var - 1.0).abs() < 0.03, "var {}", s.var);
+    }
+
+    #[test]
+    fn weightlike_has_outliers() {
+        let mut r = Rng::new(4);
+        let mut xs = vec![0.0f32; 100_000];
+        r.fill_weightlike(&mut xs, 0.02, 0.001);
+        let s = summarize(&xs);
+        // kurtosis proxy: max far beyond 4 sigma of the bulk
+        assert!(s.max > 0.02 * 6.0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn summary_and_mse() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 2.0, 5.0];
+        assert!((mse(&a, &b) - 4.0 / 3.0).abs() < 1e-9);
+        assert_eq!(sse(&a, &b), 4.0);
+        let s = summarize(&a);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+}

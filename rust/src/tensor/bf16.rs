@@ -1,0 +1,77 @@
+//! bfloat16 round-trip helpers (no `half` crate offline). bf16 is the top 16
+//! bits of an IEEE-754 f32 with round-to-nearest-even on the cut.
+
+/// Encode an f32 to its bf16 bit pattern (round-to-nearest-even).
+#[inline]
+pub fn encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // quiet NaN, preserve sign
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // round-to-nearest-even on bit 16
+    let round_bit = 0x0000_8000u32;
+    let lsb = (bits >> 16) & 1;
+    ((bits.wrapping_add(round_bit - 1 + lsb)) >> 16) as u16
+}
+
+/// Decode a bf16 bit pattern back to f32 (exact).
+#[inline]
+pub fn decode(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// f32 -> bf16 -> f32 (the paper's "decoded and stored in bfloat16").
+#[inline]
+pub fn round(x: f32) -> f32 {
+    decode(encode(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_preserved() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 256.0] {
+            assert_eq!(round(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        let mut rng = crate::stats::Rng::new(11);
+        for _ in 0..10_000 {
+            let x = (rng.normal() as f32) * 10.0;
+            let r = round(x);
+            assert!((x - r).abs() <= x.abs() / 128.0 + f32::MIN_POSITIVE);
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between bf16(1.0) and the next up;
+        // nearest-even resolves down to 1.0 (even mantissa).
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(round(halfway), 1.0);
+        // just above halfway rounds up
+        let above = f32::from_bits(0x3F80_8001);
+        assert!(round(above) > 1.0);
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(round(f32::NAN).is_nan());
+        assert_eq!(round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = crate::stats::Rng::new(12);
+        for _ in 0..1000 {
+            let x = rng.normal() as f32;
+            assert_eq!(round(round(x)), round(x));
+        }
+    }
+}

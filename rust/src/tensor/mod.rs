@@ -1,0 +1,152 @@
+//! Tensor substrate: a minimal row-major f32 matrix plus the bf16 round-trip
+//! the paper's simulated-quantization protocol requires ("all quantized
+//! values are decoded and stored in bfloat16", §4.1).
+
+pub mod bf16;
+
+use crate::stats::Rng;
+
+/// Row-major 2-D f32 tensor. Deliberately simple: quantizers operate on
+/// flat slices; shape only matters for block granularity and the runtime.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// N(0,1) matrix — the Appendix D synthetic instances.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, 1.0);
+        m
+    }
+
+    /// Heavy-tailed weight-like matrix (Gaussian bulk + sparse outliers).
+    pub fn weightlike(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_weightlike(&mut m.data, 0.05, 0.002);
+        m
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Iterate over row-aligned blocks of `t` consecutive elements — the
+    /// paper's block-wise granularity ("t-element groups per row"). `t`
+    /// must divide `cols`.
+    pub fn row_blocks(&self, t: usize) -> impl Iterator<Item = &[f32]> {
+        assert!(t > 0 && self.cols % t == 0, "block {} !| cols {}", t, self.cols);
+        self.data.chunks_exact(t)
+    }
+
+    /// Total squared reconstruction error vs another matrix.
+    pub fn sse(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        crate::stats::sse(&self.data, &other.data)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Round every element through bfloat16 (paper's decode-to-bf16 step).
+    pub fn to_bf16_roundtrip(&self) -> Matrix {
+        let mut out = self.clone();
+        for v in &mut out.data {
+            *v = bf16::round(*v);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 0), 1.0);
+        assert_eq!(m.at(1, 2), 6.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Matrix::from_vec(2, 2, vec![1.0; 5]);
+    }
+
+    #[test]
+    fn row_blocks_cover_everything() {
+        let m = Matrix::from_vec(2, 4, (0..8).map(|i| i as f32).collect());
+        let blocks: Vec<&[f32]> = m.row_blocks(2).collect();
+        assert_eq!(blocks.len(), 4);
+        assert_eq!(blocks[0], &[0., 1.]);
+        assert_eq!(blocks[3], &[6., 7.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_blocks_requires_divisibility() {
+        let m = Matrix::zeros(2, 5);
+        let _ = m.row_blocks(2).count();
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Rng::new(9);
+        let m = Matrix::randn(100, 100, &mut rng);
+        let s = crate::stats::summarize(&m.data);
+        assert!(s.mean.abs() < 0.05);
+        assert!((s.var - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn sse_zero_for_identical() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(10, 10, &mut rng);
+        assert_eq!(m.sse(&m), 0.0);
+    }
+
+    #[test]
+    fn bf16_roundtrip_close() {
+        let mut rng = Rng::new(2);
+        let m = Matrix::randn(32, 32, &mut rng);
+        let r = m.to_bf16_roundtrip();
+        // bf16 has ~3 decimal digits; relative error < 1%
+        for (a, b) in m.data.iter().zip(&r.data) {
+            assert!((a - b).abs() <= a.abs() * 0.01 + 1e-6);
+        }
+    }
+}

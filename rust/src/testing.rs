@@ -1,0 +1,89 @@
+//! Seeded property-testing helper (the offline crate set has no proptest).
+//! `check` runs a predicate over generated cases and, on failure, reports
+//! the seed so the case can be replayed deterministically.
+
+use crate::stats::Rng;
+
+/// Run `f` over `cases` generated inputs. `gen` maps a fresh seeded RNG to
+/// an input; failures panic with the replay seed.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut f: impl FnMut(&T) -> bool,
+) {
+    let base = match std::env::var("MSB_PROP_SEED") {
+        Ok(s) => s.parse().unwrap_or(0xC0FFEE),
+        Err(_) => 0xC0FFEE,
+    };
+    for i in 0..cases {
+        let seed = base ^ ((i as u64) << 32) ^ 0x9E37;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !f(&input) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed:#x}).\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Assert two f64s agree to a relative-or-absolute tolerance.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, rel: f64, abs: f64) {
+    let diff = (a - b).abs();
+    let tol = abs + rel * a.abs().max(b.abs());
+    assert!(diff <= tol, "{a} vs {b} (diff {diff} > tol {tol})");
+}
+
+/// Random magnitude vector with duplicates/zeros sprinkled in — the hostile
+/// input shape for grouping solvers.
+pub fn hostile_magnitudes(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        let roll = rng.uniform();
+        if roll < 0.05 {
+            v.push(0.0);
+        } else if roll < 0.15 && !v.is_empty() {
+            let idx = rng.below(v.len());
+            v.push(v[idx]); // exact duplicate
+        } else {
+            v.push((rng.normal() as f32).abs() + 1e-6);
+        }
+    }
+    for x in v.iter_mut() {
+        if rng.uniform() < 0.5 {
+            *x = -*x; // signs must not affect grouping of |w|
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivially() {
+        check("tautology", 10, |r| r.below(100), |_| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure() {
+        check("fails", 5, |r| r.below(100), |&x| x > 1_000);
+    }
+
+    #[test]
+    fn hostile_has_zeros_and_dups() {
+        let mut rng = Rng::new(1);
+        let v = hostile_magnitudes(&mut rng, 1000);
+        assert!(v.iter().any(|&x| x == 0.0));
+        assert_eq!(v.len(), 1000);
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert_close(1.0, 1.0 + 1e-9, 1e-6, 0.0);
+    }
+}

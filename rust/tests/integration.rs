@@ -1,0 +1,278 @@
+//! Integration tests across modules. Tests that need `artifacts/` skip
+//! gracefully when it hasn't been built (CI without `make artifacts`).
+
+use msb_quant::harness::Artifacts;
+use msb_quant::io::msbt;
+use msb_quant::msb::{Algo, Solver};
+use msb_quant::pipeline::{quantize_model, Method};
+use msb_quant::quant::{msb::MsbQuantizer, QuantConfig, Quantizer};
+use msb_quant::runtime::{LogitsFn, ModelRunner};
+use msb_quant::stats::Rng;
+use msb_quant::tensor::Matrix;
+
+fn artifacts() -> Option<Artifacts> {
+    if !msb_quant::artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Artifacts::load().expect("artifacts load"))
+}
+
+// ---------------------------------------------------------------------------
+// solver ↔ quantizer ↔ packing consistency (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn solver_codebook_kernel_layout_roundtrip() {
+    // The rust (codes, scales) layout must decode identically through the
+    // same math the Pallas kernel implements (gather + sign).
+    let mut rng = Rng::new(5);
+    let w = Matrix::randn(16, 128, &mut rng);
+    let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+    let q = MsbQuantizer::wgm().quantize(&w, &cfg);
+    let p = q.msb.as_ref().unwrap();
+    let codes = p.codes.as_ref().unwrap();
+    // kernel-style decode: w[i] = sign(c) * scales[blk(i)*L + |c|-1]
+    for (i, &c) in codes.iter().enumerate() {
+        let expect = if c == 0 {
+            0.0
+        } else {
+            let blk = i / p.block;
+            let mag = p.scales[blk * p.levels + (c.unsigned_abs() as usize - 1)];
+            if c < 0 {
+                -mag
+            } else {
+                mag
+            }
+        };
+        let got = q.dequant.data[i];
+        assert!(
+            (got - expect).abs() <= expect.abs() * 0.01 + 1e-6,
+            "elem {i}: kernel decode {expect} vs dequant {got}"
+        );
+    }
+}
+
+#[test]
+fn all_methods_produce_finite_bounded_output() {
+    let mut rng = Rng::new(6);
+    let w = Matrix::weightlike(32, 256, &mut rng);
+    let cfg = QuantConfig::block_wise(4, 64);
+    for method in [
+        Method::Rtn,
+        Method::Bnb,
+        Method::Hqq,
+        Method::Wgm,
+        Method::Gg,
+        Method::Xnor,
+        Method::BlockedXnor,
+    ] {
+        // drive through the pipeline layer with a synthetic 1-layer spec
+        use msb_quant::io::manifest::{ModelSpec, ParamSpec};
+        use msb_quant::io::msbt::{Tensor, TensorMap};
+        let spec = ModelSpec {
+            name: "x".into(),
+            d: 32,
+            layers: 1,
+            heads: 2,
+            ff: 64,
+            seq: 16,
+            params: vec![ParamSpec { name: "w".into(), shape: vec![32, 256], quant: true }],
+            weights_file: String::new(),
+            calib_file: String::new(),
+            fwd_hlo: String::new(),
+        };
+        let mut weights = TensorMap::new();
+        weights.insert("w".into(), Tensor::f32(vec![32, 256], w.data.clone()));
+        let qm = quantize_model(&spec, &weights, None, method, &cfg, 2).unwrap();
+        let out = qm.weights.get("w").unwrap().as_f32().unwrap();
+        assert!(out.iter().all(|v| v.is_finite()), "{method:?}");
+        let absmax_in = w.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let absmax_out = out.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!(absmax_out <= absmax_in * 2.0, "{method:?} blew up magnitudes");
+    }
+}
+
+#[test]
+fn solver_hierarchy_on_shared_instance() {
+    // The paper's expectation is DG ≤ GG ≤ WGM "typically, with small
+    // absolute differences" (Appendix D.2). Only DG-optimality is a hard
+    // guarantee; greedy variants may swap places on individual instances,
+    // so we assert the oracle bound plus a tight gap for every heuristic.
+    let mut rng = Rng::new(7);
+    let mut vals = vec![0.0f32; 1024];
+    rng.fill_normal(&mut vals, 1.0);
+    let sse = |algo: Algo| Solver::new(algo).quantize(&vals, 8).sse(&vals);
+    let dg = sse(Algo::Dg);
+    for (name, algo, max_gap) in [
+        ("gg", Algo::Gg, 1.5),
+        ("wgm16", Algo::Wgm { window: 16 }, 1.5),
+        // window 128 on n=1024 leaves just 8 windows => the initialization
+        // *is* the answer; the paper's Fig 9 shows exactly this degradation
+        ("wgm128", Algo::Wgm { window: 128 }, 4.0),
+    ] {
+        let h = sse(algo);
+        assert!(dg <= h + 1e-9, "oracle beaten by {name}: dg {dg} vs {h}");
+        assert!(h <= dg * max_gap + 1e-9, "{name} gap too large: {h} vs oracle {dg}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// artifact-backed runtime tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn runtime_fp_forward_matches_expected_shapes() {
+    let Some(arts) = artifacts() else { return };
+    let spec = arts.manifest.model("tiny").unwrap();
+    let weights = arts.weights(spec).unwrap();
+    let runner = ModelRunner::new(&arts.manifest, spec, &weights).unwrap();
+    let (b, t, v) = (runner.batch(), runner.seq(), runner.vocab());
+    let tokens: Vec<i32> = (0..b * t).map(|i| (i % 90) as i32 + 1).collect();
+    let logits = runner.logits(&tokens).unwrap();
+    assert_eq!(logits.len(), b * t * v);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    // determinism
+    let logits2 = runner.logits(&tokens).unwrap();
+    assert_eq!(logits, logits2);
+}
+
+#[test]
+fn runtime_weight_swap_changes_logits() {
+    let Some(arts) = artifacts() else { return };
+    let spec = arts.manifest.model("tiny").unwrap();
+    let weights = arts.weights(spec).unwrap();
+    let mut runner = ModelRunner::new(&arts.manifest, spec, &weights).unwrap();
+    let tokens: Vec<i32> =
+        (0..runner.batch() * runner.seq()).map(|i| (i % 90) as i32 + 1).collect();
+    let before = runner.logits(&tokens).unwrap();
+    let qm = quantize_model(
+        spec,
+        &weights,
+        None,
+        Method::Wgm,
+        &QuantConfig::block_wise(2, 64), // 2-bit: large, visible distortion
+        1,
+    )
+    .unwrap();
+    // QuantizedModel.weights carries the full parameter set (pass-through
+    // included), so every ABI slot gets refreshed
+    let n = runner.update_weights(&qm.weights).unwrap();
+    assert_eq!(n, spec.params.len());
+    let after = runner.logits(&tokens).unwrap();
+    assert_ne!(before, after);
+    // and swapping the originals back restores the FP logits
+    runner.update_weights(&weights).unwrap();
+    let restored = runner.logits(&tokens).unwrap();
+    assert_eq!(before, restored);
+}
+
+#[test]
+fn quantized_ppl_ordering_fp_best() {
+    let Some(arts) = artifacts() else { return };
+    let spec = arts.manifest.model("tiny").unwrap();
+    let weights = arts.weights(spec).unwrap();
+    let mut runner = ModelRunner::new(&arts.manifest, spec, &weights).unwrap();
+    let stream = arts.eval_stream("eval_wk").unwrap();
+    let short = &stream[..(96 * 16).min(stream.len())];
+
+    let fp = msb_quant::eval::perplexity(&runner, short).unwrap();
+    let qm2 = quantize_model(spec, &weights, None, Method::Wgm,
+        &QuantConfig::block_wise(2, 64), 1).unwrap();
+    runner.update_weights(&qm2.weights).unwrap();
+    let q2 = msb_quant::eval::perplexity(&runner, short).unwrap();
+    let qm4 = quantize_model(spec, &weights, None, Method::Wgm,
+        &QuantConfig::block_wise(4, 64), 1).unwrap();
+    runner.update_weights(&qm4.weights).unwrap();
+    let q4 = msb_quant::eval::perplexity(&runner, short).unwrap();
+
+    assert!(fp < q4, "fp {fp} < wgm4 {q4}");
+    assert!(q4 < q2, "wgm4 {q4} < wgm2 {q2} (more bits must help)");
+}
+
+#[test]
+fn native_msb_kernel_executable_runs_and_tracks_simulated_path() {
+    let Some(arts) = artifacts() else { return };
+    let Some(k) = arts.manifest.msb_kernel_model.clone() else { return };
+    let spec = arts.manifest.model(&k.name).unwrap();
+    let weights = arts.weights(spec).unwrap();
+    let rt = msb_quant::runtime::Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(arts.manifest.path(&k.hlo)).unwrap();
+
+    let block = arts.manifest.msb_block;
+    let cfg = QuantConfig::block_wise(4, block).no_bf16();
+    let q = MsbQuantizer::wgm();
+    let toks: Vec<i32> = (0..k.batch * spec.seq).map(|i| (i % 90) as i32 + 1).collect();
+    let mut bufs = vec![rt.upload_i32(&toks, &[k.batch, spec.seq]).unwrap()];
+    for p in &spec.params {
+        if !p.quant {
+            bufs.push(
+                rt.upload_f32(weights.get(&p.name).unwrap().as_f32().unwrap(), &p.shape)
+                    .unwrap(),
+            );
+        }
+    }
+    let mut qweights = weights.clone();
+    for p in spec.params.iter().filter(|p| p.quant) {
+        let w = weights.get(&p.name).unwrap().to_matrix().unwrap();
+        let qt = q.quantize(&w, &cfg);
+        let payload = qt.msb.as_ref().unwrap();
+        bufs.push(rt.upload_i8(payload.codes.as_ref().unwrap(), &p.shape).unwrap());
+        bufs.push(
+            rt.upload_f32(&payload.scales, &[p.shape[0], p.shape[1] / block, k.levels])
+                .unwrap(),
+        );
+        qweights.insert(
+            p.name.clone(),
+            msbt::Tensor::f32(p.shape.clone(), qt.dequant.data),
+        );
+    }
+    let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    let native = exe.run_buffers(&args).unwrap();
+    assert!(native.iter().all(|v| v.is_finite()));
+
+    // compare against the simulated path (dequantized weights through the
+    // dense executable) on the same tokens: identical math => tight match
+    let mut runner = ModelRunner::new(&arts.manifest, spec, &weights).unwrap();
+    runner.update_weights(&qweights).unwrap();
+    // runner batch is manifest.eval_batch (8) but kernel exe uses k.batch (4):
+    // replicate tokens to fill
+    let (b, t, v) = (runner.batch(), runner.seq(), runner.vocab());
+    let mut full = vec![0i32; b * t];
+    for r in 0..b {
+        let src = r % k.batch;
+        full[r * t..(r + 1) * t].copy_from_slice(&toks[src * t..(src + 1) * t]);
+    }
+    let simulated = runner.logits(&full).unwrap();
+    let mut max_err = 0.0f32;
+    for r in 0..k.batch {
+        for i in 0..t * v {
+            let a = native[r * t * v + i];
+            let bsim = simulated[r * t * v + i];
+            max_err = max_err.max((a - bsim).abs());
+        }
+    }
+    assert!(max_err < 0.15, "native vs simulated logit gap {max_err}");
+}
+
+#[test]
+fn harness_report_row_formats() {
+    let Some(arts) = artifacts() else { return };
+    let spec = arts.manifest.model("tiny").unwrap();
+    let weights = arts.weights(spec).unwrap();
+    let mut runner = ModelRunner::new(&arts.manifest, spec, &weights).unwrap();
+    let report = msb_quant::harness::eval_quantized(
+        &arts,
+        spec,
+        &mut runner,
+        &weights,
+        Method::Rtn,
+        &QuantConfig::block_wise(4, 64),
+        1,
+    )
+    .unwrap();
+    assert_eq!(report.ppl.len(), 3);
+    assert_eq!(report.qa.len(), 7);
+    assert!(report.avg_ppl() > 1.0);
+    assert!(report.row().contains("rtn"));
+}

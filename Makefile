@@ -1,0 +1,48 @@
+# msb_quant — build entry points.
+#
+# Tier-1 verify: `make build test` (== cargo build --release && cargo test -q)
+
+CARGO ?= cargo
+
+.PHONY: build test bench-smoke lint fmt artifacts clean
+
+## Release build of the library, `msb` CLI, all benches and all examples.
+build:
+	$(CARGO) build --release --workspace --all-targets
+
+## Full test suite (unit + integration + doctests). Hermetic: tests that
+## need artifacts/ skip when it is absent.
+test:
+	$(CARGO) test -q
+
+## Fast pass over representative paper-table benches (small instances).
+bench-smoke:
+	MSB_BENCH_FAST=1 $(CARGO) bench --bench table2_mse_proxy
+	MSB_BENCH_FAST=1 $(CARGO) bench --bench table3_quant_time
+	MSB_BENCH_FAST=1 $(CARGO) bench --bench fig2_3_loss_vs_size
+
+## Style gate: rustfmt + clippy with warnings denied.
+lint:
+	$(CARGO) fmt --all -- --check
+	$(CARGO) clippy --workspace --all-targets -- -D warnings
+
+## Apply formatting in place.
+fmt:
+	$(CARGO) fmt --all
+
+## Build-time artifacts (trained models, HLO text, token corpora) come from
+## the JAX layer. Not buildable in an offline Rust-only environment.
+artifacts:
+	@echo "make artifacts requires JAX (python/compile/*): it trains the"
+	@echo "stand-in transformers, lowers them to HLO text and writes"
+	@echo "artifacts/{manifest.json,*.msbt,*.hlo.txt}."
+	@echo
+	@echo "  pip install jax  # CPU is enough"
+	@echo "  cd python && python -m compile.aot --out ../artifacts"
+	@echo
+	@echo "Everything in rust/ builds, tests and benches without artifacts;"
+	@echo "artifact-dependent paths skip or fall back to synthetic data."
+	@exit 1
+
+clean:
+	$(CARGO) clean

@@ -61,6 +61,11 @@ fn main() -> Result<()> {
     // fire concurrent clients scoring held-out windows
     let stream = arts.eval_stream("eval_wk")?.to_vec();
     let seq = spec.seq;
+    anyhow::ensure!(
+        stream.len() > seq,
+        "eval_wk stream ({} tokens) must be longer than seq ({seq})",
+        stream.len()
+    );
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for c in 0..n_clients {
@@ -72,7 +77,7 @@ fn main() -> Result<()> {
             let mut lat = Vec::new();
             let mut count = 0usize;
             for r in 0..per_client {
-                let start = ((c * 7919 + r * 104729) % (stream.len() - seq)) as usize;
+                let start = (c * 7919 + r * 104729) % (stream.len() - seq);
                 let toks = stream[start..start + seq].to_vec();
                 let t = Instant::now();
                 let resp = client.score(toks).expect("score");

@@ -48,7 +48,7 @@ fn main() {
         )
     );
 
-    let mut report = |name: &str, qt: msb_quant::quant::QuantizedTensor, dt: f64| {
+    let report = |name: &str, qt: msb_quant::quant::QuantizedTensor, dt: f64| {
         println!(
             "{}",
             benchlib::row(&[

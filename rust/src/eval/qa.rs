@@ -33,22 +33,24 @@ impl QaScore {
     }
 }
 
+/// Look up one flattened probe array (`{suite}.{suffix}`) as i32s.
+fn probe_field<'m>(tensors: &'m TensorMap, name: &str, suffix: &str) -> Result<&'m [i32]> {
+    tensors
+        .get(&format!("{name}.{suffix}"))
+        .with_context(|| format!("probes missing {name}.{suffix}"))?
+        .as_i32()
+}
+
 /// Decode the flattened probe arrays written by python/compile/aot.py.
 pub fn load_probe_suites(tensors: &TensorMap, names: &[String]) -> Result<Vec<ProbeSuite>> {
     let mut suites = Vec::new();
     for name in names {
-        let get = |suffix: &str| -> Result<&[i32]> {
-            tensors
-                .get(&format!("{name}.{suffix}"))
-                .with_context(|| format!("probes missing {name}.{suffix}"))?
-                .as_i32()
-        };
-        let p_tok = get("prompt_tok")?;
-        let p_off = get("prompt_off")?;
-        let c_tok = get("cand_tok")?;
-        let c_off = get("cand_off")?;
-        let c_cnt = get("cand_count")?;
-        let answer = get("answer")?;
+        let p_tok = probe_field(tensors, name, "prompt_tok")?;
+        let p_off = probe_field(tensors, name, "prompt_off")?;
+        let c_tok = probe_field(tensors, name, "cand_tok")?;
+        let c_off = probe_field(tensors, name, "cand_off")?;
+        let c_cnt = probe_field(tensors, name, "cand_count")?;
+        let answer = probe_field(tensors, name, "answer")?;
         let n = c_cnt.len();
         anyhow::ensure!(p_off.len() == n + 1 && answer.len() == n, "{name}: ragged");
         let mut probes = Vec::with_capacity(n);

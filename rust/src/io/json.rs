@@ -87,7 +87,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn ws(&mut self) {
         while self.pos < self.b.len() && self.b[self.pos].is_ascii_whitespace() {
             self.pos += 1;

@@ -79,9 +79,7 @@ pub fn solve_exact_groups(prefix: &Prefix, groups: usize, params: &CostParams) -
         prev[j] = prefix.cost(0, j, params);
     }
     for k in 2..=g {
-        for j in 0..=n {
-            curr[j] = f64::INFINITY;
-        }
+        curr.fill(f64::INFINITY);
         for j in k..=n {
             let mut best = f64::INFINITY;
             let mut arg = k - 1;

@@ -112,7 +112,7 @@ pub fn solve(
     let mut g = greedy_merge(prefix, initial, max_groups, params);
     // deterministic seed derived from the instance (solver stays a pure
     // function of its inputs)
-    let mut rng = Rng::new(0xA11CE ^ (sorted_mags.len() as u64) << 8);
+    let mut rng = Rng::new(0xA11CE ^ ((sorted_mags.len() as u64) << 8));
     local_optimize(&mut g, prefix, params, range, max_iters, patience, &mut rng);
     g
 }

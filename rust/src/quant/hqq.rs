@@ -49,7 +49,6 @@ impl HqqQuantizer {
             hi = hi.max(v);
         }
         if hi <= lo {
-            out.fill(lo.max(0.0).min(hi));
             // constant block: exact representation
             out.fill(lo);
             return;

@@ -121,8 +121,8 @@ impl MsbQuantizer {
             let n = sm.len();
             if n == 0 {
                 dequant[base..base + t].fill(0.0);
-                scales.extend(std::iter::repeat(0.0).take(levels));
-                codes.extend(std::iter::repeat(0).take(t));
+                scales.resize(scales.len() + levels, 0.0);
+                codes.resize(codes.len() + t, 0);
                 continue;
             }
             prefix.rebuild(&sm.mags);
@@ -151,11 +151,11 @@ impl MsbQuantizer {
                 s = e;
             }
             let last = scales[scale_base + g - 1];
-            scales.extend(std::iter::repeat(last).take(levels - g));
+            scales.resize(scale_base + levels, last);
 
             // codes + dequant straight from the grouping
             let code_base = codes.len();
-            codes.extend(std::iter::repeat(0).take(t));
+            codes.resize(code_base + t, 0);
             dequant[base..base + t].fill(0.0);
             let mut s = 0usize;
             for (k, &e) in bounds.iter().enumerate() {
@@ -169,6 +169,19 @@ impl MsbQuantizer {
                 s = e;
             }
         }
+    }
+}
+
+/// Accumulate a block's i8 codes; any non-exportable block (> 127 levels)
+/// disables the payload for the whole tensor.
+fn append_codes(codes: &mut Option<Vec<i8>>, block_codes: Option<Vec<i8>>) {
+    match block_codes {
+        Some(cs) => {
+            if let Some(out) = codes.as_mut() {
+                out.extend(cs);
+            }
+        }
+        None => *codes = None,
     }
 }
 
@@ -200,10 +213,7 @@ impl Quantizer for MsbQuantizer {
                 let code = self.quantize_block(&solver, &w.data, levels, cfg.lambda);
                 code.dequantize_into(&mut dequant.data);
                 scales.extend(code.levels_padded(levels));
-                match (&mut codes, code.codes_i8()) {
-                    (Some(out), Some(cs)) => out.extend(cs),
-                    _ => codes = None,
-                }
+                append_codes(&mut codes, code.codes_i8());
             }
             Granularity::BlockWise { t } => {
                 assert!(
@@ -218,8 +228,9 @@ impl Quantizer for MsbQuantizer {
                     MsbAlgo::Gg => Some(1),
                     _ => None,
                 };
-                match (fast_window, &mut codes) {
-                    (Some(win), Some(code_out)) if levels <= 127 => {
+                let mut fast_done = false;
+                if levels <= 127 {
+                    if let (Some(win), Some(code_out)) = (fast_window, codes.as_mut()) {
                         self.quantize_blocks_fast(
                             w,
                             t,
@@ -230,17 +241,15 @@ impl Quantizer for MsbQuantizer {
                             &mut scales,
                             code_out,
                         );
+                        fast_done = true;
                     }
-                    _ => {
-                        for (bi, blk) in w.row_blocks(t).enumerate() {
-                            let code = self.quantize_block(&solver, blk, levels, cfg.lambda);
-                            code.dequantize_into(&mut dequant.data[bi * t..(bi + 1) * t]);
-                            scales.extend(code.levels_padded(levels));
-                            match (&mut codes, code.codes_i8()) {
-                                (Some(out), Some(cs)) => out.extend(cs),
-                                _ => codes = None,
-                            }
-                        }
+                }
+                if !fast_done {
+                    for (bi, blk) in w.row_blocks(t).enumerate() {
+                        let code = self.quantize_block(&solver, blk, levels, cfg.lambda);
+                        code.dequantize_into(&mut dequant.data[bi * t..(bi + 1) * t]);
+                        scales.extend(code.levels_padded(levels));
+                        append_codes(&mut codes, code.codes_i8());
                     }
                 }
             }
@@ -406,8 +415,10 @@ mod tests {
         let w = weight(2, 128, 8);
         let cfg = QuantConfig::block_wise(3, 64).no_bf16().with_lambda(0.0);
         let dg = MsbQuantizer::dg().quantize(&w, &cfg);
-        let wgm = MsbQuantizer::wgm()
-            .quantize(&w, &QuantConfig::block_wise(3, 64).with_window(8).no_bf16().with_lambda(0.0));
+        let wgm = MsbQuantizer::wgm().quantize(
+            &w,
+            &QuantConfig::block_wise(3, 64).with_window(8).no_bf16().with_lambda(0.0),
+        );
         assert!(dg.mse(&w) <= wgm.mse(&w) + 1e-9);
     }
 }

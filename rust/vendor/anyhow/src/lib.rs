@@ -1,0 +1,233 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The container this repo builds in has no crates.io access, so the crate
+//! set must be fully offline. This shim implements exactly the surface the
+//! workspace uses — [`Error`], [`Result`], the [`Context`] trait and the
+//! `anyhow!` / `bail!` / `ensure!` macros — with string-based context
+//! frames instead of `anyhow`'s type-erased backtrace machinery. Swapping
+//! back to the real crate is a one-line `Cargo.toml` change; no call site
+//! depends on anything beyond the real crate's semantics.
+
+use std::fmt;
+
+/// A string-chained error: `frames[0]` is the outermost context, the last
+/// frame is the root cause.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { frames: vec![message.to_string()] }
+    }
+
+    fn push_context(mut self, context: impl fmt::Display) -> Self {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message (what `{}` prints).
+    pub fn root_message(&self) -> &str {
+        &self.frames[0]
+    }
+
+    /// Iterate over the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, `anyhow`-style
+            f.write_str(&self.frames.join(": "))
+        } else {
+            f.write_str(&self.frames[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.frames[0])?;
+        if self.frames.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real `anyhow::Error`, this type deliberately does NOT implement
+// `std::error::Error`: the blanket conversion below would otherwise overlap
+// with the reflexive `impl From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Self {
+        let mut frames = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(cause) = source {
+            frames.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { frames }
+    }
+}
+
+/// Drop-in alias for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`Result`) or turn `None` into an error
+/// (`Option`) — the `anyhow::Context` extension trait.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into().push_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().push_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn from_std_error_via_question_mark() {
+        let err = io_fail().unwrap_err();
+        assert!(!err.root_message().is_empty());
+    }
+
+    #[test]
+    fn context_layers_accumulate() {
+        let err = io_fail().context("loading config").unwrap_err();
+        assert_eq!(err.root_message(), "loading config");
+        assert!(err.chain().count() >= 2);
+        let full = format!("{err:#}");
+        assert!(full.starts_with("loading config: "), "{full}");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32, Error> = Ok(7);
+        let v = ok.with_context(|| -> String { panic!("must not run") }).unwrap();
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let err = none.context("missing value").unwrap_err();
+        assert_eq!(err.to_string(), "missing value");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn inner(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable {}", 1);
+            }
+            Ok(1)
+        }
+        assert_eq!(inner(true).unwrap(), 1);
+        assert_eq!(inner(false).unwrap_err().to_string(), "flag was false");
+        let e = anyhow!("code {}", 42);
+        assert_eq!(e.to_string(), "code 42");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let err = io_fail().context("outer").unwrap_err();
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+}

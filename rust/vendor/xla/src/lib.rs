@@ -1,0 +1,165 @@
+//! Offline stub of the `xla` / PJRT bindings used by `msb_quant::runtime`.
+//!
+//! The real evaluation path compiles AOT-lowered HLO through a PJRT CPU
+//! client (`xla_extension`). That native library is not present in the
+//! offline build environment, so this crate provides the exact API surface
+//! the runtime layer consumes with a constructor that fails cleanly:
+//! [`PjRtClient::cpu`] returns [`Error::Unavailable`], and every caller in
+//! the workspace already treats a failed client as "no PJRT here — skip".
+//!
+//! Replacing this stub with real bindings (e.g. a `xla-rs` build against
+//! `xla_extension`) requires no changes in `msb_quant` — only the `xla`
+//! dependency line in `rust/Cargo.toml`.
+
+use std::fmt;
+
+/// Stub error type mirroring `xla::Error`.
+#[derive(Clone, Debug)]
+pub enum Error {
+    /// The PJRT runtime is not available in this build.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT is unavailable in this build (stub `xla` crate; \
+                 link a real xla_extension to enable the runtime)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Element types uploadable to device buffers.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i8 {}
+impl NativeType for i16 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+impl NativeType for u16 {}
+impl NativeType for u32 {}
+impl NativeType for u64 {}
+
+/// A PJRT device handle (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtDevice {}
+
+/// A PJRT client handle (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    /// Always fails in the stub: there is no PJRT plugin to load.
+    pub fn cpu() -> Result<Self> {
+        unavailable("creating PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling computation")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("uploading host buffer")
+    }
+}
+
+/// Parsed HLO module (never constructed by the stub).
+#[derive(Debug)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    /// Always fails in the stub; the text parser lives in xla_extension.
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable("parsing HLO text")
+    }
+}
+
+/// An XLA computation wrapping a parsed HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation {}
+    }
+}
+
+/// A compiled executable (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing")
+    }
+}
+
+/// A device buffer (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("downloading literal")
+    }
+}
+
+/// A host literal (never constructed by the stub).
+#[derive(Debug)]
+pub struct Literal {}
+
+impl Literal {
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable("unpacking tuple")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("reading literal")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_cleanly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("PJRT is unavailable"), "{msg}");
+    }
+
+    #[test]
+    fn hlo_parsing_fails_cleanly() {
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn error_is_std_error() {
+        fn takes_std_error<E: std::error::Error + Send + Sync + 'static>(_e: E) {}
+        takes_std_error(Error::Unavailable("x"));
+    }
+}

@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench-smoke lint fmt artifacts clean
+.PHONY: build test bench-smoke bench-perf lint fmt artifacts clean
 
 ## Release build of the library, `msb` CLI, all benches and all examples.
 build:
@@ -20,6 +20,12 @@ bench-smoke:
 	MSB_BENCH_FAST=1 $(CARGO) bench --bench table2_mse_proxy
 	MSB_BENCH_FAST=1 $(CARGO) bench --bench table3_quant_time
 	MSB_BENCH_FAST=1 $(CARGO) bench --bench fig2_3_loss_vs_size
+
+## Engine/solver hot-path throughput; writes BENCH_perf.json (method →
+## blocks/sec) to the bench working directory (rust/), overridable via
+## MSB_BENCH_JSON. Set MSB_BENCH_FAST=1 for a smoke-sized run.
+bench-perf:
+	$(CARGO) bench --bench perf_hotpath
 
 ## Style gate: rustfmt + clippy with warnings denied.
 lint:

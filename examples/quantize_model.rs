@@ -14,7 +14,7 @@
 use anyhow::Result;
 use msb_quant::cli::Args;
 use msb_quant::harness::{eval_quantized, Artifacts};
-use msb_quant::pipeline::Method;
+use msb_quant::quant::registry::Method;
 use msb_quant::quant::QuantConfig;
 use msb_quant::runtime::ModelRunner;
 

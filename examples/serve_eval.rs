@@ -11,7 +11,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 use msb_quant::cli::Args;
 use msb_quant::harness::Artifacts;
-use msb_quant::pipeline::{quantize_model, Method};
+use msb_quant::pipeline::quantize_model;
+use msb_quant::quant::registry::Method;
 use msb_quant::quant::QuantConfig;
 use msb_quant::runtime::ModelRunner;
 use msb_quant::server::EvalServer;

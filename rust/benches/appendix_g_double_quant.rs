@@ -4,7 +4,7 @@
 
 use msb_quant::benchlib;
 use msb_quant::harness::{eval_quantized, Artifacts};
-use msb_quant::pipeline::Method;
+use msb_quant::quant::registry::Method;
 use msb_quant::quant::QuantConfig;
 use msb_quant::runtime::ModelRunner;
 

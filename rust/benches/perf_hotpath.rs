@@ -1,13 +1,19 @@
-//! §Perf — solver hot-path throughput + the lazy-invalidation ablation
-//! (DESIGN.md "Design choices" #2). Reports elements/second for the
-//! production paths and compares the generation-counter heap against a
-//! naive rebuild-the-heap merger.
+//! §Perf — solver hot-path throughput, the block-engine method grid, and
+//! the lazy-invalidation ablation (DESIGN.md "Design choices" #2). Reports
+//! elements/second for the production paths, blocks/second per engine
+//! method (serial and pooled), and compares the generation-counter heap
+//! against a naive rebuild-the-heap merger.
+//!
+//! Machine-readable output: `BENCH_perf.json` (method → blocks/sec via
+//! `benchlib::write_bench_json`), uploaded as a CI artifact so the repo's
+//! perf trajectory accumulates.
 
 use std::collections::BTreeMap;
 
 use msb_quant::benchlib::{self, time_median};
 use msb_quant::msb::{Algo, CostParams, Grouping, Prefix, Solver, SortedMags};
-use msb_quant::quant::{msb::MsbQuantizer, QuantConfig, Quantizer};
+use msb_quant::pool::ThreadPool;
+use msb_quant::quant::{calibration_free_zoo, msb::MsbQuantizer, QuantConfig, Quantizer};
 use msb_quant::stats::Rng;
 use msb_quant::tensor::Matrix;
 
@@ -36,6 +42,7 @@ fn naive_merge(prefix: &Prefix, target: usize, params: &CostParams) -> Grouping 
 
 fn main() {
     let fast = benchlib::fast_mode();
+    // method → blocks/sec, persisted to BENCH_perf.json at the end
     let mut results: BTreeMap<String, f64> = BTreeMap::new();
 
     // --- production per-tensor path -------------------------------------
@@ -57,19 +64,37 @@ fn main() {
         let t = time_median(if fast { 1 } else { 3 }, || solver.quantize(&vals, groups));
         let meps = n as f64 / t / 1e6;
         println!("  {name:<36} {t:>8.3} s   {meps:>8.2} Melem/s");
-        results.insert(name.into(), meps);
     }
 
-    // --- production block-wise path --------------------------------------
+    // --- engine block throughput: the method grid ------------------------
     let dim = if fast { 256 } else { 2048 };
     let w = Matrix::weightlike(dim, dim, &mut rng);
     let cfg = QuantConfig::block_wise(4, 64).with_window(1).no_bf16();
-    let t = time_median(if fast { 1 } else { 3 }, || MsbQuantizer::wgm().quantize(&w, &cfg));
+    let n_blocks = (w.len() / 64) as f64;
+    let reps = if fast { 1 } else { 3 };
+    benchlib::header(&format!("engine block throughput ({dim}x{dim}, t=64, serial)"));
+    for q in calibration_free_zoo() {
+        let t = time_median(reps, || q.quantize(&w, &cfg));
+        let bps = n_blocks / t;
+        println!("  {:<36} {t:>8.3} s   {bps:>12.0} blocks/s", q.name());
+        results.insert(q.name().to_string(), bps);
+    }
+
+    // --- intra-layer parallelism: tiles on the shared pool ---------------
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut pool = ThreadPool::new(threads, threads * 4);
+    benchlib::header(&format!("engine block throughput (pooled, {threads} workers)"));
+    let wgm = MsbQuantizer::wgm();
+    let t_pooled = time_median(reps, || wgm.quantize_with_pool(&w, &cfg, &pool));
+    pool.shutdown();
+    let bps_pooled = n_blocks / t_pooled;
+    // serial msb-wgm blocks/sec was measured in the zoo loop above
+    let speedup = bps_pooled / results["msb-wgm"];
     println!(
-        "  {:<36} {t:>8.3} s   {:>8.2} Melem/s",
-        format!("block-wise wgm t=64 ({dim}x{dim})"),
-        w.len() as f64 / t / 1e6
+        "  {:<36} {t_pooled:>8.3} s   {bps_pooled:>12.0} blocks/s ({speedup:.2}x vs serial)",
+        "msb-wgm pooled"
     );
+    results.insert("msb-wgm-pooled".to_string(), bps_pooled);
 
     // --- lazy invalidation ablation --------------------------------------
     let n2 = if fast { 2_000 } else { 20_000 };
@@ -96,4 +121,10 @@ fn main() {
         g_naive.sse(&prefix)
     );
     assert!(t_heap < t_naive, "lazy heap must beat O(g^2) rescan");
+
+    // --- machine-readable output -----------------------------------------
+    match benchlib::write_bench_json("perf", &results) {
+        Ok(path) => println!("\nwrote {} ({} methods)", path.display(), results.len()),
+        Err(e) => eprintln!("\nBENCH_perf.json not written: {e}"),
+    }
 }

@@ -5,7 +5,8 @@
 
 use msb_quant::benchlib;
 use msb_quant::harness::Artifacts;
-use msb_quant::pipeline::{quantize_model, Method};
+use msb_quant::pipeline::quantize_model;
+use msb_quant::quant::registry::Method;
 use msb_quant::quant::QuantConfig;
 
 fn main() {

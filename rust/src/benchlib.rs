@@ -1,9 +1,12 @@
 //! Support for the `harness = false` bench binaries (criterion is not in
-//! the offline crate set): timing, table printing, and the shared proxy
-//! instances. Hidden from the public API surface.
+//! the offline crate set): timing, table printing, machine-readable result
+//! emission, and the shared proxy instances. Hidden from the public API
+//! surface.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::io::json::Value;
 use crate::stats::Rng;
 use crate::tensor::Matrix;
 
@@ -63,6 +66,43 @@ pub fn proxy_matrix(rows: usize, cols: usize) -> Matrix {
     Matrix::weightlike(rows, cols, &mut rng)
 }
 
+/// Where a bench's machine-readable output lands: `MSB_BENCH_JSON`
+/// overrides, else `BENCH_<name>.json` in the working directory.
+pub fn bench_json_path(name: &str) -> std::path::PathBuf {
+    std::env::var_os("MSB_BENCH_JSON")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from(format!("BENCH_{name}.json")))
+}
+
+/// Env-independent core of [`write_bench_json`]: serialize
+/// `{schema, fast, results: {key: num}}` to an explicit path.
+pub fn write_bench_json_to(
+    path: &std::path::Path,
+    name: &str,
+    results: &BTreeMap<String, f64>,
+) -> std::io::Result<()> {
+    let mut obj = BTreeMap::new();
+    obj.insert("schema".to_string(), Value::Str(format!("msb-bench/{name}/v1")));
+    obj.insert("fast".to_string(), Value::Bool(fast_mode()));
+    obj.insert(
+        "results".to_string(),
+        Value::Obj(results.iter().map(|(k, &v)| (k.clone(), Value::Num(v))).collect()),
+    );
+    std::fs::write(path, crate::io::json::to_string(&Value::Obj(obj)))
+}
+
+/// Persist a bench's results as JSON so the repo's perf trajectory
+/// accumulates across commits instead of evaporating in CI logs. Returns
+/// the written path (see [`bench_json_path`]).
+pub fn write_bench_json(
+    name: &str,
+    results: &BTreeMap<String, f64>,
+) -> std::io::Result<std::path::PathBuf> {
+    let path = bench_json_path(name);
+    write_bench_json_to(&path, name, results)?;
+    Ok(path)
+}
+
 /// Simple fixed-width row printer for paper-shaped tables.
 pub fn row(cells: &[String]) -> String {
     cells
@@ -96,5 +136,24 @@ mod tests {
     fn time_median_positive() {
         let t = time_median(3, || (0..1000).sum::<usize>());
         assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        // write_bench_json_to takes the path directly: no process-global
+        // env mutation from inside the parallel test harness
+        let dir = std::env::temp_dir().join(format!("msb_bench_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        let mut results = BTreeMap::new();
+        results.insert("msb-wgm".to_string(), 1234.5);
+        results.insert("rtn".to_string(), 99999.0);
+        write_bench_json_to(&path, "perf", &results).unwrap();
+        let v = crate::io::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.req_str("schema").unwrap(), "msb-bench/perf/v1");
+        let r = v.req("results").unwrap();
+        assert_eq!(r.get("msb-wgm").and_then(Value::as_f64), Some(1234.5));
+        assert_eq!(r.get("rtn").and_then(Value::as_f64), Some(99999.0));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -15,7 +15,8 @@ use msb_quant::cli::Args;
 use msb_quant::harness::{eval_quantized, Artifacts};
 use msb_quant::io::msbt;
 use msb_quant::msb::{Algo, Solver};
-use msb_quant::pipeline::{quantize_model, Method};
+use msb_quant::pipeline::quantize_model;
+use msb_quant::quant::registry::Method;
 use msb_quant::quant::QuantConfig;
 use msb_quant::runtime::ModelRunner;
 use msb_quant::stats::Rng;

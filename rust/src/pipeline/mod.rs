@@ -1,8 +1,14 @@
-//! The quantization pipeline coordinator: walks a model manifest, fans the
-//! per-layer solver work out over the worker substrate, and assembles a
-//! fully-quantized weight set plus per-layer metrics. This is the L3
-//! "offline PTQ" path (the paper's CPU-based quantization step); the online
-//! path is `runtime`/`server`.
+//! The quantization pipeline coordinator: walks a model manifest and
+//! assembles a fully-quantized weight set plus per-layer metrics. This is
+//! the L3 "offline PTQ" path (the paper's CPU-based quantization step); the
+//! online path is `runtime`/`server`.
+//!
+//! Parallelism: block-partitioned methods fan the *blocks within each
+//! layer* out over a shared [`ThreadPool`] (`quant::engine`), so a single
+//! large FFN matrix no longer serializes a solve — the dominant wall-time
+//! term for Table-3-style runs. Whole-matrix methods (GPTQ's
+//! column-sequential error propagation) keep the per-layer fan-out instead.
+//! Method dispatch lives in [`crate::quant::registry`].
 
 use std::time::Instant;
 
@@ -10,84 +16,12 @@ use anyhow::{Context, Result};
 
 use crate::io::manifest::ModelSpec;
 use crate::io::msbt::{Tensor, TensorMap};
+use crate::pool::ThreadPool;
 use crate::quant::dq::{double_quantize, DqConfig};
-use crate::quant::{
-    gptq::GptqQuantizer, hqq::HqqQuantizer, msb::MsbQuantizer, nf4::Nf4Quantizer,
-    rtn::RtnQuantizer, xnor::XnorQuantizer, QuantConfig, Quantizer,
-};
+use crate::quant::{registry, Granularity, QuantConfig, Quantizer};
 use crate::tensor::Matrix;
 
-/// Every method that can appear in a Table-1-style grid.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Method {
-    /// Full precision (identity) — the FP rows.
-    Fp,
-    Rtn,
-    /// BnB-style NF4 (4-bit block-wise only).
-    Bnb,
-    Hqq,
-    /// Calibration-based; consumes the build-time Gram matrices.
-    Gptq,
-    /// MSB / Algorithm 3 (the paper's production solver).
-    Wgm,
-    /// MSB / Algorithm 4 (per-tensor refinement).
-    WgmLo,
-    /// MSB / Algorithm 2.
-    Gg,
-    /// MSB / WGM + double quantization of scales (Appendix G).
-    WgmDq,
-    Xnor,
-    BlockedXnor,
-}
-
-impl Method {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Method::Fp => "fp",
-            Method::Rtn => "rtn",
-            Method::Bnb => "bnb",
-            Method::Hqq => "hqq",
-            Method::Gptq => "gptq",
-            Method::Wgm => "wgm",
-            Method::WgmLo => "wgm-lo",
-            Method::Gg => "gg",
-            Method::WgmDq => "wgm-dq",
-            Method::Xnor => "xnor",
-            Method::BlockedXnor => "blocked-xnor",
-        }
-    }
-
-    pub fn parse(s: &str) -> Result<Method> {
-        Ok(match s {
-            "fp" => Method::Fp,
-            "rtn" => Method::Rtn,
-            "bnb" | "nf4" => Method::Bnb,
-            "hqq" => Method::Hqq,
-            "gptq" => Method::Gptq,
-            "wgm" | "msb" => Method::Wgm,
-            "wgm-lo" | "wgmlo" => Method::WgmLo,
-            "gg" => Method::Gg,
-            "wgm-dq" => Method::WgmDq,
-            "xnor" => Method::Xnor,
-            "blocked-xnor" => Method::BlockedXnor,
-            other => anyhow::bail!("unknown method '{other}'"),
-        })
-    }
-
-    /// The paper's Table 1 grid for a granularity. "/" cells (BnB and GPTQ
-    /// per-tensor, WGM-LO block-wise) are omitted exactly as in the paper.
-    pub fn table1_grid(per_tensor: bool) -> Vec<Method> {
-        if per_tensor {
-            vec![Method::Rtn, Method::Hqq, Method::Wgm, Method::WgmLo]
-        } else {
-            vec![Method::Gptq, Method::Rtn, Method::Bnb, Method::Hqq, Method::Wgm]
-        }
-    }
-
-    pub fn needs_calibration(&self) -> bool {
-        matches!(self, Method::Gptq)
-    }
-}
+pub use crate::quant::registry::Method;
 
 /// Per-layer quantization record.
 #[derive(Clone, Debug)]
@@ -108,6 +42,10 @@ pub struct QuantizedModel {
     pub weights: TensorMap,
     pub layers: Vec<LayerStat>,
     pub wall_seconds: f64,
+    /// `(submitted, completed)` block-tile jobs on the intra-layer pool;
+    /// `None` when the run used the per-layer path (FP, GPTQ, per-tensor
+    /// configs, whole-tensor XNOR, threads=1).
+    pub pool_stats: Option<(usize, usize)>,
 }
 
 impl QuantizedModel {
@@ -123,38 +61,64 @@ impl QuantizedModel {
     }
 }
 
-/// Build the quantizer for (method, layer). GPTQ binds the layer Hessian.
-fn build_quantizer(
-    method: Method,
+/// Pull the layer Hessian out of the calibration tensors (GPTQ only).
+fn layer_hessian<'a>(
+    calib: Option<&'a TensorMap>,
     layer: &str,
     in_dim: usize,
-    calib: Option<&TensorMap>,
-) -> Result<Box<dyn Quantizer>> {
-    Ok(match method {
-        Method::Fp => unreachable!("fp short-circuits before here"),
-        Method::Rtn => Box::new(RtnQuantizer::symmetric()),
-        Method::Bnb => Box::new(Nf4Quantizer::nf4()),
-        Method::Hqq => Box::new(HqqQuantizer::default()),
-        Method::Gptq => {
-            let calib = calib.context("gptq requires calibration tensors")?;
-            let h = calib
-                .get(layer)
-                .with_context(|| format!("calib missing Hessian for {layer}"))?;
-            anyhow::ensure!(h.dims == vec![in_dim, in_dim], "{layer}: bad Hessian dims");
-            Box::new(GptqQuantizer::new().with_hessian(h.as_f32()?, in_dim))
-        }
-        Method::Wgm | Method::WgmDq => Box::new(MsbQuantizer::wgm()),
-        Method::WgmLo => Box::new(MsbQuantizer::wgm_lo()),
-        Method::Gg => Box::new(MsbQuantizer::gg()),
-        Method::Xnor => Box::new(XnorQuantizer::whole()),
-        Method::BlockedXnor => Box::new(XnorQuantizer::blocked()),
-    })
+) -> Result<(&'a [f32], usize)> {
+    let calib = calib.context("gptq requires calibration tensors")?;
+    let h = calib
+        .get(layer)
+        .with_context(|| format!("calib missing Hessian for {layer}"))?;
+    anyhow::ensure!(h.dims == vec![in_dim, in_dim], "{layer}: bad Hessian dims");
+    Ok((h.as_f32()?, in_dim))
 }
 
-/// Quantize every quantizable matrix of `spec` with `method` under `cfg`,
-/// fanning layers out over `threads` workers. Non-quantizable parameters
-/// (norms, embeddings) pass through untouched — the paper's weight-only
-/// protocol.
+type LayerResult = (String, LayerStat, Vec<f32>);
+
+/// Quantize one layer (already-built quantizer borrowed or fresh) and
+/// record its stats. `pool` enables block-level parallelism.
+fn quantize_layer(
+    method: Method,
+    name: String,
+    w: &Matrix,
+    cfg: &QuantConfig,
+    calib: Option<&TensorMap>,
+    pool: Option<&ThreadPool>,
+) -> Result<LayerResult> {
+    let lt0 = Instant::now();
+    let hessian;
+    let h_ref = if method.needs_calibration() {
+        hessian = layer_hessian(calib, &name, w.cols)?;
+        Some(hessian)
+    } else {
+        None
+    };
+    let q = registry::build_quantizer(method, h_ref)?;
+    let mut qt = match pool {
+        Some(pool) => q.quantize_with_pool(w, cfg, pool),
+        None => q.quantize(w, cfg),
+    };
+    if method == Method::WgmDq {
+        qt = double_quantize(&qt, cfg, &DqConfig::default());
+    }
+    let stat = LayerStat {
+        name: name.clone(),
+        rows: w.rows,
+        cols: w.cols,
+        sse: qt.mse(w),
+        effective_bits: qt.effective_bits,
+        seconds: lt0.elapsed().as_secs_f64(),
+    };
+    Ok((name, stat, qt.dequant.data))
+}
+
+/// Quantize every quantizable matrix of `spec` with `method` under `cfg`
+/// using `threads` workers. Block-wise configs parallelize *within* each
+/// layer (tiles of blocks on a shared pool); GPTQ and per-tensor configs
+/// fan out across layers instead. Non-quantizable parameters (norms,
+/// embeddings) pass through untouched — the paper's weight-only protocol.
 pub fn quantize_model(
     spec: &ModelSpec,
     weights: &TensorMap,
@@ -164,12 +128,14 @@ pub fn quantize_model(
     threads: usize,
 ) -> Result<QuantizedModel> {
     let t0 = Instant::now();
+    let threads = threads.max(1);
     if method == Method::Fp {
         return Ok(QuantizedModel {
             method,
             weights: weights.clone(),
             layers: Vec::new(),
             wall_seconds: t0.elapsed().as_secs_f64(),
+            pool_stats: None,
         });
     }
 
@@ -182,37 +148,50 @@ pub fn quantize_model(
         jobs.push((p.name.clone(), t.to_matrix()?));
     }
 
-    // fan out: one solver instance per layer (GPTQ binds its Hessian inside)
-    let results: Vec<Result<(String, LayerStat, Vec<f32>)>> =
-        crate::pool::scoped_map(jobs, threads, |(name, w)| {
-            let lt0 = Instant::now();
-            let q = build_quantizer(method, &name, w.cols, calib)?;
-            let mut qt = q.quantize(&w, cfg);
-            if method == Method::WgmDq {
-                qt = double_quantize(&qt, cfg, &DqConfig::default());
-            }
-            let stat = LayerStat {
-                name: name.clone(),
-                rows: w.rows,
-                cols: w.cols,
-                sse: qt.mse(&w),
-                effective_bits: qt.effective_bits,
-                seconds: lt0.elapsed().as_secs_f64(),
-            };
-            Ok((name, stat, qt.dequant.data))
+    // Per-layer fan-out when block tiling cannot help: GPTQ is whole-matrix
+    // (column-sequential), per-tensor configs and whole-tensor XNOR are a
+    // single block instance per layer, and one worker gains nothing from
+    // tiling.
+    let per_layer = method.needs_calibration()
+        || threads == 1
+        || matches!(cfg.granularity, Granularity::PerTensor)
+        || method == Method::Xnor;
+
+    let mut pool_stats = None;
+    let results: Vec<LayerResult> = if per_layer {
+        let raw: Vec<Result<LayerResult>> = crate::pool::scoped_map(jobs, threads, |(name, w)| {
+            quantize_layer(method, name, &w, cfg, calib, None)
         });
+        raw.into_iter().collect::<Result<Vec<_>>>()?
+    } else {
+        // intra-layer block parallelism on a shared pool: layers stream
+        // through sequentially, each saturating every worker
+        let mut pool = ThreadPool::new(threads, threads * 4);
+        let mut out = Vec::with_capacity(jobs.len());
+        for (name, w) in jobs {
+            out.push(quantize_layer(method, name, &w, cfg, calib, Some(&pool))?);
+        }
+        pool.shutdown();
+        pool_stats = Some(pool.stats());
+        out
+    };
 
     let mut out = weights.clone();
     let mut layers = Vec::new();
-    for r in results {
-        let (name, stat, data) = r?;
+    for (name, stat, data) in results {
         let dims = out.get(&name).unwrap().dims.clone();
         out.insert(name, Tensor::f32(dims, data));
         layers.push(stat);
     }
     layers.sort_by(|a, b| a.name.cmp(&b.name));
 
-    Ok(QuantizedModel { method, weights: out, layers, wall_seconds: t0.elapsed().as_secs_f64() })
+    Ok(QuantizedModel {
+        method,
+        weights: out,
+        layers,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        pool_stats,
+    })
 }
 
 #[cfg(test)]
@@ -262,6 +241,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(qm.weights, tiny_weights(1));
+        assert!(qm.pool_stats.is_none());
     }
 
     #[test]
@@ -326,6 +306,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(qm.layers.len(), 2);
+        assert!(qm.pool_stats.is_none(), "gptq keeps the per-layer path");
     }
 
     #[test]
@@ -347,15 +328,59 @@ mod tests {
         assert_eq!(a.weights, b.weights);
     }
 
+    /// Engine determinism across the whole method grid: the tiled pool path
+    /// must be bit-identical to `threads=1` for every ported method under
+    /// both granularities (the paper's Table-1 settings).
     #[test]
-    fn method_parse_roundtrip() {
-        for m in [
-            Method::Fp, Method::Rtn, Method::Bnb, Method::Hqq, Method::Gptq,
-            Method::Wgm, Method::WgmLo, Method::Gg, Method::WgmDq, Method::Xnor,
-            Method::BlockedXnor,
-        ] {
-            assert_eq!(Method::parse(m.name()).unwrap(), m);
+    fn method_grid_thread_determinism() {
+        let w = tiny_weights(7);
+        let spec = tiny_spec();
+        let bw = QuantConfig::block_wise(4, 64);
+        let pt = QuantConfig::per_tensor(4).with_window(16);
+        let grid: Vec<(Method, &QuantConfig)> = vec![
+            (Method::Rtn, &bw),
+            (Method::Bnb, &bw),
+            (Method::Hqq, &bw),
+            (Method::Wgm, &bw),
+            (Method::Gg, &bw),
+            (Method::WgmDq, &bw),
+            (Method::Xnor, &bw),
+            (Method::BlockedXnor, &bw),
+            (Method::Rtn, &pt),
+            (Method::Hqq, &pt),
+            (Method::Wgm, &pt),
+            (Method::WgmLo, &pt),
+            (Method::Xnor, &pt),
+            (Method::BlockedXnor, &pt),
+        ];
+        for (method, cfg) in grid {
+            let a = quantize_model(&spec, &w, None, method, cfg, 1).unwrap();
+            let b = quantize_model(&spec, &w, None, method, cfg, 4).unwrap();
+            assert_eq!(
+                a.weights,
+                b.weights,
+                "{} {:?} diverged across thread counts",
+                method.name(),
+                cfg.granularity
+            );
         }
-        assert!(Method::parse("nope").is_err());
     }
+
+    /// The point of the engine: a single-layer workload exercises more than
+    /// one worker because the *blocks* fan out, not just the layers.
+    #[test]
+    fn single_layer_uses_block_parallelism() {
+        let mut spec = tiny_spec();
+        spec.params.retain(|p| !p.quant || p.name == "layer0.wq");
+        let w = tiny_weights(8);
+        let cfg = QuantConfig::block_wise(4, 64);
+        let qm = quantize_model(&spec, &w, None, Method::Wgm, &cfg, 4).unwrap();
+        assert_eq!(qm.layers.len(), 1);
+        let (submitted, completed) = qm.pool_stats.expect("pool path must engage");
+        assert!(submitted > 1, "expected block-tile fan-out, got {submitted} job(s)");
+        assert_eq!(submitted, completed, "all tile jobs must drain");
+    }
+
+    // Method::parse round-tripping is covered in quant::registry::tests,
+    // where the dispatch table now lives.
 }

@@ -14,6 +14,7 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 pub struct ThreadPool {
     tx: Option<SyncSender<Job>>,
     workers: Vec<JoinHandle<()>>,
+    size: usize,
     submitted: Arc<AtomicUsize>,
     completed: Arc<AtomicUsize>,
 }
@@ -47,7 +48,7 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, submitted, completed }
+        ThreadPool { tx: Some(tx), workers, size: threads, submitted, completed }
     }
 
     /// Default pool: one worker per available core.
@@ -66,6 +67,13 @@ impl ThreadPool {
             .expect("workers gone");
     }
 
+    /// Worker count the pool was built with (stable across shutdown).
+    pub fn threads(&self) -> usize {
+        self.size
+    }
+
+    /// `(submitted, completed)` job counts. After [`ThreadPool::shutdown`]
+    /// the two are equal: the join synchronizes every completion.
     pub fn stats(&self) -> (usize, usize) {
         (
             self.submitted.load(Ordering::Acquire),
@@ -74,7 +82,8 @@ impl ThreadPool {
     }
 
     /// Drop the sender and join all workers (drains the queue first).
-    pub fn shutdown(mut self) {
+    /// Idempotent; the pool remains readable (`stats`) afterwards.
+    pub fn shutdown(&mut self) {
         self.tx.take();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -84,10 +93,7 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.tx.take();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -136,7 +142,7 @@ mod tests {
 
     #[test]
     fn pool_runs_all_jobs() {
-        let pool = ThreadPool::new(4, 8);
+        let mut pool = ThreadPool::new(4, 8);
         let counter = Arc::new(AtomicU64::new(0));
         for _ in 0..100 {
             let c = Arc::clone(&counter);
@@ -150,17 +156,24 @@ mod tests {
 
     #[test]
     fn pool_stats() {
-        let pool = ThreadPool::new(2, 4);
+        let mut pool = ThreadPool::new(2, 4);
+        assert_eq!(pool.threads(), 2);
         for _ in 0..10 {
             pool.submit(|| {});
         }
         pool.shutdown();
+        // the join synchronizes: every submitted job is also completed
+        assert_eq!(pool.stats(), (10, 10));
+        // shutdown is idempotent and stats stay readable
+        pool.shutdown();
+        assert_eq!(pool.stats(), (10, 10));
+        assert_eq!(pool.threads(), 2);
     }
 
     #[test]
     fn backpressure_blocks_but_completes() {
         // tiny queue, slow jobs: submit must block rather than drop
-        let pool = ThreadPool::new(1, 1);
+        let mut pool = ThreadPool::new(1, 1);
         let counter = Arc::new(AtomicU64::new(0));
         for _ in 0..20 {
             let c = Arc::clone(&counter);

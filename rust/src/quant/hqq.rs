@@ -9,9 +9,8 @@
 //! with β annealed by κ each step. Mirrors the official solver's structure,
 //! executed on CPU.
 
-use crate::tensor::Matrix;
-
-use super::{finish_dequant, QuantConfig, QuantizedTensor, Quantizer};
+use super::engine::{impl_quantizer_via_engine, BlockMeta, BlockPlan, BlockQuantizer};
+use super::QuantConfig;
 
 #[derive(Clone, Debug)]
 pub struct HqqQuantizer {
@@ -41,7 +40,8 @@ fn shrink_lp(x: f32, beta: f64, p: f64) -> f32 {
 }
 
 impl HqqQuantizer {
-    fn quantize_block(&self, w: &[f32], out: &mut [f32], bits: u32) {
+    /// One half-quadratic solve over a single block.
+    fn solve_block(&self, w: &[f32], out: &mut [f32], bits: u32) {
         let qmax = ((1i64 << bits) - 1) as f32;
         let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
         for &v in w {
@@ -77,35 +77,31 @@ impl HqqQuantizer {
     }
 }
 
-impl Quantizer for HqqQuantizer {
+impl BlockQuantizer for HqqQuantizer {
     fn name(&self) -> &'static str {
         "hqq"
     }
 
-    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
-        let block = cfg.block_elems(w.rows, w.cols);
-        let mut dequant = Matrix::zeros(w.rows, w.cols);
-        for (bi, blk) in w.data.chunks(block).enumerate() {
-            let out = &mut dequant.data[bi * block..bi * block + blk.len()];
-            self.quantize_block(blk, out, cfg.bits);
-        }
-        QuantizedTensor {
-            method: self.name().to_string(),
-            rows: w.rows,
-            cols: w.cols,
-            dequant: finish_dequant(dequant, cfg),
-            // affine grid: scale + zero-point per block (bf16 each)
-            effective_bits: super::packing::uniform_effective_bits(cfg.bits, block, true),
-            msb: None,
-        }
+    fn quantize_block(&self, data: &[f32], out: &mut [f32], cfg: &QuantConfig) -> BlockMeta {
+        self.solve_block(data, out, cfg.bits);
+        BlockMeta::default()
+    }
+
+    /// Affine grid: scale + zero-point per block (bf16 each).
+    fn effective_bits(&self, cfg: &QuantConfig, plan: &BlockPlan) -> f64 {
+        super::packing::uniform_effective_bits(cfg.bits, plan.block, true)
     }
 }
+
+impl_quantizer_via_engine!(HqqQuantizer);
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::quant::rtn::RtnQuantizer;
+    use crate::quant::Quantizer;
     use crate::stats::Rng;
+    use crate::tensor::Matrix;
 
     #[test]
     fn improves_over_plain_asym_rtn_on_outliers() {

@@ -8,8 +8,10 @@
 //! `hot_frac` get one extra bit and an equal mass of the least sensitive
 //! blocks gives one up, keeping the average bit budget at the base width.
 
+use crate::pool::ThreadPool;
 use crate::tensor::Matrix;
 
+use super::engine::{pool_ordered_map, tile_size};
 use super::msb::MsbQuantizer;
 use super::{finish_dequant, Granularity, QuantConfig, QuantizedTensor, Quantizer};
 
@@ -18,6 +20,29 @@ pub struct MixedMsbQuantizer {
     pub hot_frac: f64,
     /// Optional diag(H) (len = cols) for activation-aware sensitivity.
     pub diag_h: Option<Vec<f32>>,
+}
+
+/// Quantize one run of consecutive `t`-element blocks at their assigned
+/// widths, returning the dequantized values and per-block effective bits.
+/// Free function so pool jobs can own everything they capture.
+fn solve_run(
+    inner: &MsbQuantizer,
+    data: &[f32],
+    bits: &[u32],
+    t: usize,
+    window: usize,
+    lambda: f64,
+) -> (Vec<f32>, Vec<f64>) {
+    let mut out = Vec::with_capacity(data.len());
+    let mut effs = Vec::with_capacity(bits.len());
+    for (i, &b) in bits.iter().enumerate() {
+        let bcfg = QuantConfig::block_wise(b, t).with_window(window).with_lambda(lambda).no_bf16();
+        let bm = Matrix::from_vec(1, t, data[i * t..(i + 1) * t].to_vec());
+        let q = inner.quantize(&bm, &bcfg);
+        out.extend(q.dequant.data);
+        effs.push(q.effective_bits);
+    }
+    (out, effs)
 }
 
 impl MixedMsbQuantizer {
@@ -41,30 +66,13 @@ impl MixedMsbQuantizer {
             None => blk.iter().map(|&v| (v as f64) * (v as f64)).sum(),
         }
     }
-}
 
-impl Quantizer for MixedMsbQuantizer {
-    fn name(&self) -> &'static str {
-        "msb-mixed"
-    }
-
-    fn needs_calibration(&self) -> bool {
-        false // diag_h is optional
-    }
-
-    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
-        let t = match cfg.granularity {
-            Granularity::BlockWise { t } => t,
-            Granularity::PerTensor => {
-                // mixed precision needs blocks; whole-tensor falls back
-                return MsbQuantizer::wgm().quantize(w, cfg);
-            }
-        };
-        assert!(w.cols % t == 0);
+    /// Rank blocks by sensitivity and assign a bit-width per block,
+    /// balancing the total storage budget around the base width.
+    fn assign_bits(&self, w: &Matrix, cfg: &QuantConfig, t: usize) -> Vec<u32> {
         let n_blocks = w.len() / t;
         let n_hot = ((n_blocks as f64) * self.hot_frac) as usize;
 
-        // rank blocks by sensitivity
         let mut order: Vec<usize> = (0..n_blocks).collect();
         let scores: Vec<f64> = w
             .row_blocks(t)
@@ -87,30 +95,93 @@ impl Quantizer for MixedMsbQuantizer {
         for &bi in order.iter().rev().take(n_cold) {
             bits_of[bi] = cfg.bits.saturating_sub(1).max(1);
         }
+        bits_of
+    }
 
-        // quantize each block at its assigned width
+    /// Quantize every block at its assigned width, optionally fanning the
+    /// per-block solves out over `pool` (input-ordered, bit-identical to
+    /// the serial loop).
+    fn run(&self, w: &Matrix, cfg: &QuantConfig, pool: Option<&ThreadPool>) -> QuantizedTensor {
+        let t = match cfg.granularity {
+            Granularity::BlockWise { t } => t,
+            Granularity::PerTensor => {
+                // mixed precision needs blocks; whole-tensor falls back
+                let inner = MsbQuantizer::wgm();
+                return match pool {
+                    Some(p) => inner.quantize_with_pool(w, cfg, p),
+                    None => inner.quantize(w, cfg),
+                };
+            }
+        };
+        assert!(w.cols % t == 0);
+        let bits_of = self.assign_bits(w, cfg, t);
+
         let inner = MsbQuantizer::wgm();
+        let (window, lambda) = (cfg.window, cfg.lambda);
+        let n_blocks = bits_of.len();
+        let tiles: Vec<(Vec<f32>, Vec<f64>)> = match pool {
+            Some(pool) if pool.threads() > 1 && n_blocks > 1 => {
+                // tiles of consecutive blocks (the engine's sizing) so
+                // per-job overhead stays amortized
+                let tile = tile_size(n_blocks, pool.threads());
+                let jobs: Vec<_> = (0..n_blocks)
+                    .step_by(tile)
+                    .map(|b0| {
+                        let b1 = (b0 + tile).min(n_blocks);
+                        let data = w.data[b0 * t..b1 * t].to_vec();
+                        let bits: Vec<u32> = bits_of[b0..b1].to_vec();
+                        let inner = inner.clone();
+                        move || solve_run(&inner, &data, &bits, t, window, lambda)
+                    })
+                    .collect();
+                pool_ordered_map(pool, jobs)
+            }
+            _ => vec![solve_run(&inner, &w.data, &bits_of, t, window, lambda)],
+        };
+
         let mut dequant = Matrix::zeros(w.rows, w.cols);
         let mut bit_mass = 0.0f64;
-        for (bi, blk) in w.row_blocks(t).enumerate() {
-            let bits = bits_of[bi];
-            let bcfg = QuantConfig::block_wise(bits, t)
-                .with_window(cfg.window)
-                .with_lambda(cfg.lambda)
-                .no_bf16();
-            let bm = Matrix::from_vec(1, t, blk.to_vec());
-            let q = inner.quantize(&bm, &bcfg);
-            dequant.data[bi * t..(bi + 1) * t].copy_from_slice(&q.dequant.data);
-            bit_mass += q.effective_bits * t as f64;
+        let mut off = 0usize;
+        for (data, effs) in tiles {
+            dequant.data[off..off + data.len()].copy_from_slice(&data);
+            off += data.len();
+            for eff in effs {
+                bit_mass += eff * t as f64;
+            }
         }
         QuantizedTensor {
-            method: self.name().to_string(),
+            method: Quantizer::name(self).to_string(),
             rows: w.rows,
             cols: w.cols,
             dequant: finish_dequant(dequant, cfg),
             effective_bits: bit_mass / w.len() as f64,
             msb: None, // variable-width payload: native path not modeled
         }
+    }
+}
+
+impl Quantizer for MixedMsbQuantizer {
+    fn name(&self) -> &'static str {
+        "msb-mixed"
+    }
+
+    fn needs_calibration(&self) -> bool {
+        false // diag_h is optional
+    }
+
+    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
+        self.run(w, cfg, None)
+    }
+
+    /// Mixed precision wraps the engine: the per-block solves (each its own
+    /// width) fan out over the shared pool.
+    fn quantize_with_pool(
+        &self,
+        w: &Matrix,
+        cfg: &QuantConfig,
+        pool: &ThreadPool,
+    ) -> QuantizedTensor {
+        self.run(w, cfg, Some(pool))
     }
 }
 

@@ -6,18 +6,27 @@
 //! [`QuantizedTensor`]: the *simulated-dequantized* weights (decoded
 //! through bf16, paper §4.1) plus storage accounting and, for MSB, the
 //! (codes, scales) pairs the L1 Pallas kernel consumes.
+//!
+//! The calibration-free methods are expressed per block against
+//! [`engine::BlockQuantizer`]; the [`engine`] owns slicing, intra-layer
+//! parallelism and reassembly, and [`registry`] owns method dispatch.
 
 pub mod dq;
+pub mod engine;
 pub mod gptq;
 pub mod hqq;
 pub mod mixed;
 pub mod msb;
 pub mod nf4;
 pub mod packing;
+pub mod registry;
 pub mod rtn;
 pub mod transform;
 pub mod xnor;
 
+pub use registry::calibration_free_zoo;
+
+use crate::pool::ThreadPool;
 use crate::tensor::Matrix;
 
 /// Quantization granularity (paper §4: per-tensor vs 64-element row blocks).
@@ -90,19 +99,12 @@ impl QuantConfig {
 
     /// Solver/scale block size in elements for a `rows x cols` matrix:
     /// block-wise = `t` consecutive elements within a row; per-tensor = the
-    /// whole matrix shares one instance (a single scale set).
+    /// whole matrix shares one instance (a single scale set). The full
+    /// layout (instance count, MSB scale-table stripe) lives in
+    /// [`engine::BlockPlan`].
     pub fn block_elems(&self, rows: usize, cols: usize) -> usize {
         match self.granularity {
             Granularity::PerTensor => rows * cols,
-            Granularity::BlockWise { t } => t,
-        }
-    }
-
-    /// Deprecated spelling kept for the MSB scale-table layout, where the
-    /// per-tensor payload is organized per `cols` stripe.
-    pub fn block_of(&self, cols: usize) -> usize {
-        match self.granularity {
-            Granularity::PerTensor => cols,
             Granularity::BlockWise { t } => t,
         }
     }
@@ -153,6 +155,19 @@ pub trait Quantizer: Send + Sync {
 
     fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor;
 
+    /// Block-parallel quantization: engine-backed methods fan their block
+    /// instances out over `pool` (bit-identical to [`Quantizer::quantize`]);
+    /// whole-matrix methods (GPTQ) fall back to the serial path.
+    fn quantize_with_pool(
+        &self,
+        w: &Matrix,
+        cfg: &QuantConfig,
+        pool: &ThreadPool,
+    ) -> QuantizedTensor {
+        let _ = pool;
+        self.quantize(w, cfg)
+    }
+
     /// Whether the method needs calibration data (GPTQ). Calibrated methods
     /// get their Hessian through [`gptq::GptqQuantizer::with_hessian`].
     fn needs_calibration(&self) -> bool {
@@ -170,17 +185,6 @@ pub(crate) fn finish_dequant(mut m: Matrix, cfg: &QuantConfig) -> Matrix {
     m
 }
 
-/// The calibration-free method zoo (GPTQ is constructed separately with its
-/// Hessian). Order matches the paper's tables.
-pub fn calibration_free_zoo() -> Vec<Box<dyn Quantizer>> {
-    vec![
-        Box::new(rtn::RtnQuantizer::symmetric()),
-        Box::new(nf4::Nf4Quantizer::nf4()),
-        Box::new(hqq::HqqQuantizer::default()),
-        Box::new(msb::MsbQuantizer::wgm()),
-    ]
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,14 +197,8 @@ mod tests {
     }
 
     #[test]
-    fn block_of() {
-        assert_eq!(QuantConfig::per_tensor(4).block_of(512), 512);
-        assert_eq!(QuantConfig::block_wise(4, 64).block_of(512), 64);
-    }
-
-    #[test]
-    fn zoo_has_paper_methods() {
-        let names: Vec<_> = calibration_free_zoo().iter().map(|q| q.name()).collect();
-        assert_eq!(names, vec!["rtn", "bnb-nf4", "hqq", "msb-wgm"]);
+    fn block_elems() {
+        assert_eq!(QuantConfig::per_tensor(4).block_elems(4, 512), 2048);
+        assert_eq!(QuantConfig::block_wise(4, 64).block_elems(4, 512), 64);
     }
 }

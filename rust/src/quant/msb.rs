@@ -11,11 +11,9 @@
 //! t=64); per-tensor metadata is negligible.
 
 use crate::msb::{Algo, MsbCode, Solver};
-use crate::tensor::Matrix;
 
-use super::{
-    finish_dequant, Granularity, MsbPayload, QuantConfig, QuantizedTensor, Quantizer,
-};
+use super::engine::{impl_quantizer_via_engine, BlockMeta, BlockPlan, BlockQuantizer, TileMeta};
+use super::{Granularity, QuantConfig};
 
 /// Which solver backs the quantizer (WGM window comes from the config).
 #[derive(Clone, Debug, PartialEq)]
@@ -80,7 +78,7 @@ impl MsbQuantizer {
     /// Quantize a single flat block, returning its code (handles all-zero
     /// blocks by emitting a zero codebook). `tilde` is mapped through the
     /// Appendix-C Λ for this instance's magnitude range.
-    fn quantize_block(&self, solver: &Solver, data: &[f32], levels: usize, tilde: f64) -> MsbCode {
+    fn block_code(&self, solver: &Solver, data: &[f32], levels: usize, tilde: f64) -> MsbCode {
         let sm = crate::msb::SortedMags::from_values(data);
         if sm.is_empty() {
             return MsbCode { n: data.len(), levels: vec![0.0], codes: vec![0; data.len()] };
@@ -90,21 +88,28 @@ impl MsbQuantizer {
         MsbCode::build(data, &sm, &grouping)
     }
 
+    /// The production WGM/GG block window, when the allocation-free tile
+    /// path applies; DG / WGM-LO go through the generic solver.
+    fn fast_window(&self, cfg: &QuantConfig) -> Option<usize> {
+        match &self.algo {
+            MsbAlgo::Wgm => Some(cfg.window.max(1)),
+            MsbAlgo::Gg => Some(1),
+            _ => None,
+        }
+    }
+
     /// Allocation-free block-wise WGM path (§Perf): reuses the sort,
-    /// prefix-sum and merge workspaces across every block of the matrix and
+    /// prefix-sum and merge workspaces across every block of the tile and
     /// writes scales/codes/dequant directly into the output buffers.
     /// Semantically identical to the generic path (asserted by tests).
-    #[allow(clippy::too_many_arguments)]
-    fn quantize_blocks_fast(
+    fn quantize_tile_fast(
         &self,
-        w: &Matrix,
+        data: &[f32],
         t: usize,
         window: usize,
         levels: usize,
-        lambda: f64,
-        dequant: &mut [f32],
-        scales: &mut Vec<f32>,
-        codes: &mut Vec<i8>,
+        out: &mut [f32],
+        meta: &mut TileMeta,
     ) {
         use crate::msb::gg::{greedy_merge_ws, MergeWorkspace};
         use crate::msb::objective::{CostParams, Prefix, SortedMags};
@@ -114,13 +119,15 @@ impl MsbQuantizer {
         let mut ws = MergeWorkspace::default();
         let mut bounds: Vec<usize> = Vec::new();
         let win = window.max(1);
+        let scales = &mut meta.scales;
+        let codes = meta.codes.as_mut().expect("fast tile path requires i8 codes");
 
-        for (bi, blk) in w.row_blocks(t).enumerate() {
+        for (bi, blk) in data.chunks_exact(t).enumerate() {
             let base = bi * t;
             sm.rebuild(blk);
             let n = sm.len();
             if n == 0 {
-                dequant[base..base + t].fill(0.0);
+                out[base..base + t].fill(0.0);
                 scales.resize(scales.len() + levels, 0.0);
                 codes.resize(codes.len() + t, 0);
                 continue;
@@ -128,7 +135,6 @@ impl MsbQuantizer {
             prefix.rebuild(&sm.mags);
             // Appendix C: λ is inapplicable to fixed-group-count greedy
             // solvers — merge on pure variance (mirrors Solver::solve_with_prefix)
-            let _ = lambda;
             let params = CostParams { lambda: 0.0, normalized: self.normalized, total: n };
             // window-k initial partition, streamed without allocation
             let n_init = n.div_ceil(win);
@@ -156,7 +162,7 @@ impl MsbQuantizer {
             // codes + dequant straight from the grouping
             let code_base = codes.len();
             codes.resize(code_base + t, 0);
-            dequant[base..base + t].fill(0.0);
+            out[base..base + t].fill(0.0);
             let mut s = 0usize;
             for (k, &e) in bounds.iter().enumerate() {
                 let mag = scales[scale_base + k];
@@ -164,7 +170,7 @@ impl MsbQuantizer {
                     let orig = sm.order[pos] as usize;
                     let neg = blk[orig] < 0.0;
                     codes[code_base + orig] = if neg { -(k as i8 + 1) } else { k as i8 + 1 };
-                    dequant[base + orig] = if neg { -mag } else { mag };
+                    out[base + orig] = if neg { -mag } else { mag };
                 }
                 s = e;
             }
@@ -172,20 +178,7 @@ impl MsbQuantizer {
     }
 }
 
-/// Accumulate a block's i8 codes; any non-exportable block (> 127 levels)
-/// disables the payload for the whole tensor.
-fn append_codes(codes: &mut Option<Vec<i8>>, block_codes: Option<Vec<i8>>) {
-    match block_codes {
-        Some(cs) => {
-            if let Some(out) = codes.as_mut() {
-                out.extend(cs);
-            }
-        }
-        None => *codes = None,
-    }
-}
-
-impl Quantizer for MsbQuantizer {
+impl BlockQuantizer for MsbQuantizer {
     fn name(&self) -> &'static str {
         match self.algo {
             MsbAlgo::Dg => "msb-dg",
@@ -195,88 +188,69 @@ impl Quantizer for MsbQuantizer {
         }
     }
 
-    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
+    /// Generic single-block path (per-tensor instances, DG / WGM-LO blocks,
+    /// and >i8 level counts).
+    fn quantize_block(&self, data: &[f32], out: &mut [f32], cfg: &QuantConfig) -> BlockMeta {
         let solver = self.solver(cfg);
         let levels = cfg.levels();
-        let block = cfg.block_of(w.cols);
-        let mut dequant = Matrix::zeros(w.rows, w.cols);
-        let n_blocks = w.len() / block;
-        let mut scales: Vec<f32> = Vec::with_capacity(n_blocks * levels);
-        let mut codes: Option<Vec<i8>> = if levels <= 127 {
-            Some(Vec::with_capacity(w.len()))
-        } else {
-            None
-        };
+        let code = self.block_code(&solver, data, levels, cfg.lambda);
+        code.dequantize_into(out);
+        BlockMeta { scales: code.levels_padded(levels), codes: code.codes_i8() }
+    }
 
-        match cfg.granularity {
-            Granularity::PerTensor => {
-                let code = self.quantize_block(&solver, &w.data, levels, cfg.lambda);
-                code.dequantize_into(&mut dequant.data);
-                scales.extend(code.levels_padded(levels));
-                append_codes(&mut codes, code.codes_i8());
-            }
-            Granularity::BlockWise { t } => {
-                assert!(
-                    t > 0 && w.cols % t == 0,
-                    "block {t} must divide cols {}",
-                    w.cols
-                );
-                // the production WGM/GG block path is allocation-free (§Perf);
-                // DG / WGM-LO blocks go through the generic solver
-                let fast_window = match &self.algo {
-                    MsbAlgo::Wgm => Some(cfg.window.max(1)),
-                    MsbAlgo::Gg => Some(1),
-                    _ => None,
-                };
-                let mut fast_done = false;
-                if levels <= 127 {
-                    if let (Some(win), Some(code_out)) = (fast_window, codes.as_mut()) {
-                        self.quantize_blocks_fast(
-                            w,
-                            t,
-                            win,
-                            levels,
-                            cfg.lambda,
-                            &mut dequant.data,
-                            &mut scales,
-                            code_out,
-                        );
-                        fast_done = true;
-                    }
+    /// Block-wise WGM/GG tiles take the allocation-free workspace path;
+    /// everything else falls back to the per-block generic solver.
+    fn quantize_tile(
+        &self,
+        data: &[f32],
+        block: usize,
+        out: &mut [f32],
+        cfg: &QuantConfig,
+    ) -> TileMeta {
+        let levels = cfg.levels();
+        let blockwise = matches!(cfg.granularity, Granularity::BlockWise { .. });
+        let mut meta = TileMeta::new();
+        if let Some(win) = self.fast_window(cfg) {
+            if blockwise && levels <= 127 {
+                meta.scales.reserve(data.len() / block * levels);
+                if let Some(codes) = meta.codes.as_mut() {
+                    codes.reserve(data.len());
                 }
-                if !fast_done {
-                    for (bi, blk) in w.row_blocks(t).enumerate() {
-                        let code = self.quantize_block(&solver, blk, levels, cfg.lambda);
-                        code.dequantize_into(&mut dequant.data[bi * t..(bi + 1) * t]);
-                        scales.extend(code.levels_padded(levels));
-                        append_codes(&mut codes, code.codes_i8());
-                    }
-                }
+                self.quantize_tile_fast(data, block, win, levels, out, &mut meta);
+                return meta;
             }
         }
+        for (blk, o) in data.chunks(block).zip(out.chunks_mut(block)) {
+            meta.push(self.quantize_block(blk, o, cfg));
+        }
+        meta
+    }
 
-        let effective_bits = super::packing::msb_effective_bits(
+    /// Paper §4.1: b-bit codes + L bf16 scales per block (block-wise), or
+    /// one L-entry table amortized over the tensor (per-tensor).
+    fn effective_bits(&self, cfg: &QuantConfig, plan: &BlockPlan) -> f64 {
+        super::packing::msb_effective_bits(
             cfg.bits,
-            levels,
-            block,
-            w.len(),
-            matches!(cfg.granularity, Granularity::PerTensor),
-        );
-        QuantizedTensor {
-            method: self.name().to_string(),
-            rows: w.rows,
-            cols: w.cols,
-            dequant: finish_dequant(dequant, cfg),
-            effective_bits,
-            msb: Some(MsbPayload { codes, scales, levels, block }),
-        }
+            cfg.levels(),
+            plan.payload_block(),
+            plan.rows * plan.cols,
+            plan.per_tensor,
+        )
+    }
+
+    fn emits_msb_payload(&self) -> bool {
+        true
     }
 }
+
+impl_quantizer_via_engine!(MsbQuantizer);
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::Quantizer;
     use crate::stats::Rng;
+    use crate::tensor::Matrix;
 
     fn weight(rows: usize, cols: usize, seed: u64) -> Matrix {
         Matrix::randn(rows, cols, &mut Rng::new(seed))
@@ -301,7 +275,7 @@ mod tests {
         let q = MsbQuantizer::wgm().quantize(&w, &cfg);
         let p = q.msb.unwrap();
         assert_eq!(p.scales.len(), 32);
-        assert_eq!(p.block, 64 * 16 / 16); // = cols? no: block_of = cols = 64
+        assert_eq!(p.block, 64); // per-tensor payload stripe = cols
     }
 
     #[test]
@@ -371,25 +345,23 @@ mod tests {
     }
 
     #[test]
-    fn fast_block_path_matches_generic() {
+    fn fast_tile_path_matches_generic() {
         // §Perf fast path must be semantically identical to the generic
         // per-block solver for every window / bits combination
         let w = weight(16, 256, 99);
         for (bits, win) in [(4u32, 1usize), (4, 8), (3, 2), (2, 1)] {
             let cfg = QuantConfig::block_wise(bits, 64).with_window(win).no_bf16();
             let q = MsbQuantizer::wgm();
-            let fast = q.quantize(&w, &cfg);
-            // generic path: replicate per block via the (private) slow path
-            let solver = q.solver(&cfg);
-            let levels = cfg.levels();
+            let fast = q.quantize(&w, &cfg); // engine serial → fast tile
+            // generic path: replicate per block via the single-block API
             let mut dequant = Matrix::zeros(w.rows, w.cols);
             let mut scales = Vec::new();
             let mut codes = Vec::new();
             for (bi, blk) in w.row_blocks(64).enumerate() {
-                let code = q.quantize_block(&solver, blk, levels, cfg.lambda);
-                code.dequantize_into(&mut dequant.data[bi * 64..(bi + 1) * 64]);
-                scales.extend(code.levels_padded(levels));
-                codes.extend(code.codes_i8().unwrap());
+                let out = &mut dequant.data[bi * 64..(bi + 1) * 64];
+                let meta = q.quantize_block(blk, out, &cfg);
+                scales.extend(meta.scales);
+                codes.extend(meta.codes.unwrap());
             }
             assert_eq!(fast.dequant.data, dequant.data, "bits {bits} win {win}");
             let p = fast.msb.unwrap();

@@ -3,9 +3,8 @@
 //! "BnB" baseline of Table 1. Pure-Rust reimplementation of the numerics;
 //! the CUDA kernels are irrelevant to the simulated-dequant protocol.
 
-use crate::tensor::Matrix;
-
-use super::{finish_dequant, QuantConfig, QuantizedTensor, Quantizer};
+use super::engine::{impl_quantizer_via_engine, BlockMeta, BlockPlan, BlockQuantizer};
+use super::QuantConfig;
 
 /// The 16 NF4 levels (bitsandbytes / QLoRA, Dettmers et al. 2023):
 /// quantiles of N(0,1) normalized to [-1, 1].
@@ -78,7 +77,7 @@ fn nearest(levels: &[f32; 16], x: f32) -> f32 {
     best
 }
 
-impl Quantizer for Nf4Quantizer {
+impl BlockQuantizer for Nf4Quantizer {
     fn name(&self) -> &'static str {
         match self.codebook {
             Codebook::Nf4 => "bnb-nf4",
@@ -86,38 +85,36 @@ impl Quantizer for Nf4Quantizer {
         }
     }
 
-    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
-        assert_eq!(cfg.bits, 4, "{} is a fixed 4-bit codebook", self.name());
-        let block = cfg.block_elems(w.rows, w.cols);
+    fn quantize_block(&self, data: &[f32], out: &mut [f32], cfg: &QuantConfig) -> BlockMeta {
+        assert_eq!(cfg.bits, 4, "{} is a fixed 4-bit codebook", BlockQuantizer::name(self));
         let levels = self.levels();
-        let mut dequant = Matrix::zeros(w.rows, w.cols);
-        for (bi, blk) in w.data.chunks(block).enumerate() {
-            let absmax = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            let out = &mut dequant.data[bi * block..bi * block + blk.len()];
-            if absmax == 0.0 {
-                out.fill(0.0);
-                continue;
-            }
-            for (o, &v) in out.iter_mut().zip(blk) {
-                *o = nearest(levels, v / absmax) * absmax;
-            }
+        let absmax = data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if absmax == 0.0 {
+            out.fill(0.0);
+            return BlockMeta::default();
         }
-        QuantizedTensor {
-            method: self.name().to_string(),
-            rows: w.rows,
-            cols: w.cols,
-            dequant: finish_dequant(dequant, cfg),
-            effective_bits: super::packing::nf4_effective_bits(block),
-            msb: None,
+        for (o, &v) in out.iter_mut().zip(data) {
+            *o = nearest(levels, v / absmax) * absmax;
         }
+        BlockMeta::default()
+    }
+
+    /// 4-bit codes + one f32 absmax per block (bnb keeps absmax in fp32
+    /// unless double-quantized).
+    fn effective_bits(&self, _cfg: &QuantConfig, plan: &BlockPlan) -> f64 {
+        super::packing::nf4_effective_bits(plan.block)
     }
 }
+
+impl_quantizer_via_engine!(Nf4Quantizer);
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::quant::rtn::RtnQuantizer;
+    use crate::quant::Quantizer;
     use crate::stats::Rng;
+    use crate::tensor::Matrix;
 
     #[test]
     fn codebooks_sorted_and_symmetric_ends() {

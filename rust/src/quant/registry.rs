@@ -1,0 +1,175 @@
+//! Method registry: the single dispatch point from a method identifier to
+//! a constructed [`Quantizer`]. Previously this logic lived twice — in
+//! `pipeline::Method::build_quantizer` and in `quant::calibration_free_zoo`
+//! — and every caller (pipeline, CLI, benches, examples) picked one at
+//! random. Now the pipeline, `main.rs`, the bench binaries and the examples
+//! all consume this table.
+
+use anyhow::{Context, Result};
+
+use super::{
+    gptq::GptqQuantizer, hqq::HqqQuantizer, msb::MsbQuantizer, nf4::Nf4Quantizer,
+    rtn::RtnQuantizer, xnor::XnorQuantizer, Quantizer,
+};
+
+/// Every method that can appear in a Table-1-style grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Full precision (identity) — the FP rows.
+    Fp,
+    Rtn,
+    /// BnB-style NF4 (4-bit block-wise only).
+    Bnb,
+    Hqq,
+    /// Calibration-based; consumes the build-time Gram matrices.
+    Gptq,
+    /// MSB / Algorithm 3 (the paper's production solver).
+    Wgm,
+    /// MSB / Algorithm 4 (per-tensor refinement).
+    WgmLo,
+    /// MSB / Algorithm 2.
+    Gg,
+    /// MSB / WGM + double quantization of scales (Appendix G).
+    WgmDq,
+    Xnor,
+    BlockedXnor,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fp => "fp",
+            Method::Rtn => "rtn",
+            Method::Bnb => "bnb",
+            Method::Hqq => "hqq",
+            Method::Gptq => "gptq",
+            Method::Wgm => "wgm",
+            Method::WgmLo => "wgm-lo",
+            Method::Gg => "gg",
+            Method::WgmDq => "wgm-dq",
+            Method::Xnor => "xnor",
+            Method::BlockedXnor => "blocked-xnor",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "fp" => Method::Fp,
+            "rtn" => Method::Rtn,
+            "bnb" | "nf4" => Method::Bnb,
+            "hqq" => Method::Hqq,
+            "gptq" => Method::Gptq,
+            "wgm" | "msb" => Method::Wgm,
+            "wgm-lo" | "wgmlo" => Method::WgmLo,
+            "gg" => Method::Gg,
+            "wgm-dq" => Method::WgmDq,
+            "xnor" => Method::Xnor,
+            "blocked-xnor" => Method::BlockedXnor,
+            other => anyhow::bail!("unknown method '{other}'"),
+        })
+    }
+
+    /// The paper's Table 1 grid for a granularity. "/" cells (BnB and GPTQ
+    /// per-tensor, WGM-LO block-wise) are omitted exactly as in the paper.
+    pub fn table1_grid(per_tensor: bool) -> Vec<Method> {
+        if per_tensor {
+            vec![Method::Rtn, Method::Hqq, Method::Wgm, Method::WgmLo]
+        } else {
+            vec![Method::Gptq, Method::Rtn, Method::Bnb, Method::Hqq, Method::Wgm]
+        }
+    }
+
+    pub fn needs_calibration(&self) -> bool {
+        matches!(self, Method::Gptq)
+    }
+}
+
+/// Build the quantizer for `method`. `gptq` requires the layer Hessian as
+/// `(row-major in_dim × in_dim data, in_dim)`; every other method ignores
+/// it. `fp` is the identity and has no quantizer.
+pub fn build_quantizer(
+    method: Method,
+    hessian: Option<(&[f32], usize)>,
+) -> Result<Box<dyn Quantizer>> {
+    Ok(match method {
+        Method::Fp => anyhow::bail!("fp is the identity; nothing to build"),
+        Method::Rtn => Box::new(RtnQuantizer::symmetric()),
+        Method::Bnb => Box::new(Nf4Quantizer::nf4()),
+        Method::Hqq => Box::new(HqqQuantizer::default()),
+        Method::Gptq => {
+            let (h, in_dim) = hessian.context("gptq requires a calibration Hessian")?;
+            Box::new(GptqQuantizer::new().with_hessian(h, in_dim))
+        }
+        Method::Wgm | Method::WgmDq => Box::new(MsbQuantizer::wgm()),
+        Method::WgmLo => Box::new(MsbQuantizer::wgm_lo()),
+        Method::Gg => Box::new(MsbQuantizer::gg()),
+        Method::Xnor => Box::new(XnorQuantizer::whole()),
+        Method::BlockedXnor => Box::new(XnorQuantizer::blocked()),
+    })
+}
+
+/// The calibration-free method zoo (GPTQ is constructed separately with its
+/// Hessian). Order matches the paper's tables.
+pub fn calibration_free_zoo() -> Vec<Box<dyn Quantizer>> {
+    [Method::Rtn, Method::Bnb, Method::Hqq, Method::Wgm]
+        .into_iter()
+        .map(|m| build_quantizer(m, None).expect("calibration-free build"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_paper_methods() {
+        let names: Vec<_> = calibration_free_zoo().iter().map(|q| q.name()).collect();
+        assert_eq!(names, vec!["rtn", "bnb-nf4", "hqq", "msb-wgm"]);
+    }
+
+    #[test]
+    fn build_dispatches_every_method() {
+        let h = vec![1.0f32, 0.0, 0.0, 1.0];
+        for (m, want) in [
+            (Method::Rtn, "rtn"),
+            (Method::Bnb, "bnb-nf4"),
+            (Method::Hqq, "hqq"),
+            (Method::Wgm, "msb-wgm"),
+            (Method::WgmDq, "msb-wgm"),
+            (Method::WgmLo, "msb-wgm-lo"),
+            (Method::Gg, "msb-gg"),
+            (Method::Xnor, "xnor"),
+            (Method::BlockedXnor, "blocked-xnor"),
+        ] {
+            assert_eq!(build_quantizer(m, Some((&h, 2))).unwrap().name(), want);
+        }
+    }
+
+    #[test]
+    fn gptq_requires_hessian_fp_unbuildable() {
+        assert!(build_quantizer(Method::Gptq, None).is_err());
+        assert!(build_quantizer(Method::Fp, None).is_err());
+        let h = vec![1.0f32; 4];
+        assert_eq!(build_quantizer(Method::Gptq, Some((&h, 2))).unwrap().name(), "gptq");
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [
+            Method::Fp,
+            Method::Rtn,
+            Method::Bnb,
+            Method::Hqq,
+            Method::Gptq,
+            Method::Wgm,
+            Method::WgmLo,
+            Method::Gg,
+            Method::WgmDq,
+            Method::Xnor,
+            Method::BlockedXnor,
+        ] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+}

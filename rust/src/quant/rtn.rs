@@ -1,9 +1,10 @@
 //! RTN (round-to-nearest) — the paper's simple uniform baseline: absmax
 //! scaling per tensor/block, optional asymmetric zero-point variant.
+//! Expressed per block against the [`engine`](super::engine); slicing,
+//! threading and bf16 finishing live there.
 
-use crate::tensor::Matrix;
-
-use super::{finish_dequant, QuantConfig, QuantizedTensor, Quantizer};
+use super::engine::{impl_quantizer_via_engine, BlockMeta, BlockPlan, BlockQuantizer};
+use super::QuantConfig;
 
 #[derive(Clone, Debug)]
 pub struct RtnQuantizer {
@@ -54,7 +55,7 @@ impl RtnQuantizer {
     }
 }
 
-impl Quantizer for RtnQuantizer {
+impl BlockQuantizer for RtnQuantizer {
     fn name(&self) -> &'static str {
         if self.asymmetric {
             "rtn-asym"
@@ -63,35 +64,29 @@ impl Quantizer for RtnQuantizer {
         }
     }
 
-    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
-        let block = cfg.block_elems(w.rows, w.cols);
-        assert!(block == w.len() || w.cols % block == 0, "block {block} !| cols {}", w.cols);
-        let mut dequant = Matrix::zeros(w.rows, w.cols);
-        for (bi, blk) in w.data.chunks(block).enumerate() {
-            let out = &mut dequant.data[bi * block..bi * block + blk.len()];
-            if self.asymmetric {
-                Self::quantize_block_asym(blk, out, cfg.bits);
-            } else {
-                Self::quantize_block_sym(blk, out, cfg.bits);
-            }
+    fn quantize_block(&self, data: &[f32], out: &mut [f32], cfg: &QuantConfig) -> BlockMeta {
+        if self.asymmetric {
+            Self::quantize_block_asym(data, out, cfg.bits);
+        } else {
+            Self::quantize_block_sym(data, out, cfg.bits);
         }
-        QuantizedTensor {
-            method: self.name().to_string(),
-            rows: w.rows,
-            cols: w.cols,
-            dequant: finish_dequant(dequant, cfg),
-            effective_bits: super::packing::uniform_effective_bits(
-                cfg.bits, block, self.asymmetric,
-            ),
-            msb: None,
-        }
+        BlockMeta::default()
+    }
+
+    /// b-bit codes + one bf16 scale (+ one bf16 zero point) per block.
+    fn effective_bits(&self, cfg: &QuantConfig, plan: &BlockPlan) -> f64 {
+        super::packing::uniform_effective_bits(cfg.bits, plan.block, self.asymmetric)
     }
 }
+
+impl_quantizer_via_engine!(RtnQuantizer);
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::Quantizer;
     use crate::stats::Rng;
+    use crate::tensor::Matrix;
 
     #[test]
     fn exact_on_grid_points() {

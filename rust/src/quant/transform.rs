@@ -65,19 +65,15 @@ impl<Q: Quantizer> ScaledQuantizer<Q> {
     }
 }
 
-impl<Q: Quantizer> Quantizer for ScaledQuantizer<Q> {
-    fn name(&self) -> &'static str {
-        // static name constraint: report the family; the inner method is in
-        // the QuantizedTensor.method string
-        "scaled"
-    }
-
-    fn needs_calibration(&self) -> bool {
-        matches!(self.policy, ScalePolicy::ActivationAware { .. })
-            || self.inner.needs_calibration()
-    }
-
-    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
+impl<Q: Quantizer> ScaledQuantizer<Q> {
+    /// Shared transform harness: scale columns, quantize via `run`, undo
+    /// the transform in the decoded weights (exact cancellation), fix up
+    /// method label / storage accounting.
+    fn quantize_via(
+        &self,
+        w: &Matrix,
+        run: impl FnOnce(&Matrix) -> QuantizedTensor,
+    ) -> QuantizedTensor {
         let s = self.column_scales(w);
         let mut scaled = w.clone();
         for r in 0..w.rows {
@@ -86,7 +82,7 @@ impl<Q: Quantizer> Quantizer for ScaledQuantizer<Q> {
                 *v *= sj;
             }
         }
-        let mut qt = self.inner.quantize(&scaled, cfg);
+        let mut qt = run(&scaled);
         // undo the transform in the decoded weights (exact cancellation)
         for r in 0..w.rows {
             let row = &mut qt.dequant.data[r * w.cols..(r + 1) * w.cols];
@@ -105,6 +101,34 @@ impl<Q: Quantizer> Quantizer for ScaledQuantizer<Q> {
         // which the simulated path does not model — drop it.
         qt.msb = None;
         qt
+    }
+}
+
+impl<Q: Quantizer> Quantizer for ScaledQuantizer<Q> {
+    fn name(&self) -> &'static str {
+        // static name constraint: report the family; the inner method is in
+        // the QuantizedTensor.method string
+        "scaled"
+    }
+
+    fn needs_calibration(&self) -> bool {
+        matches!(self.policy, ScalePolicy::ActivationAware { .. })
+            || self.inner.needs_calibration()
+    }
+
+    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
+        self.quantize_via(w, |scaled| self.inner.quantize(scaled, cfg))
+    }
+
+    /// The transform wraps the engine: block-parallel inner quantization of
+    /// the scaled matrix, same pre/post transform.
+    fn quantize_with_pool(
+        &self,
+        w: &Matrix,
+        cfg: &QuantConfig,
+        pool: &crate::pool::ThreadPool,
+    ) -> QuantizedTensor {
+        self.quantize_via(w, |scaled| self.inner.quantize_with_pool(scaled, cfg, pool))
     }
 }
 

@@ -4,9 +4,8 @@
 //!
 //! Closed form (eq. 1): B* = sign(W), α* = ‖W‖₁/|W|.
 
-use crate::tensor::Matrix;
-
-use super::{finish_dequant, Granularity, QuantConfig, QuantizedTensor, Quantizer};
+use super::engine::{impl_quantizer_via_engine, BlockMeta, BlockPlan, BlockQuantizer};
+use super::{Granularity, QuantConfig};
 
 #[derive(Clone, Debug)]
 pub struct XnorQuantizer {
@@ -36,7 +35,7 @@ impl XnorQuantizer {
     }
 }
 
-impl Quantizer for XnorQuantizer {
+impl BlockQuantizer for XnorQuantizer {
     fn name(&self) -> &'static str {
         if self.blocked {
             "blocked-xnor"
@@ -45,56 +44,62 @@ impl Quantizer for XnorQuantizer {
         }
     }
 
-    fn quantize(&self, w: &Matrix, cfg: &QuantConfig) -> QuantizedTensor {
-        let block = if self.blocked {
+    /// Whole-tensor XNOR is one instance regardless of granularity; the
+    /// blocked variant follows the config (per-tensor degrades to one
+    /// α per row) with legacy flat chunking, so the Fig 2–5 sweeps can run
+    /// matrices smaller than the block size.
+    fn plan(&self, rows: usize, cols: usize, cfg: &QuantConfig) -> BlockPlan {
+        if self.blocked {
             match cfg.granularity {
-                Granularity::BlockWise { t } => t,
-                Granularity::PerTensor => w.cols,
+                Granularity::BlockWise { t } => BlockPlan::flat(rows, cols, t),
+                Granularity::PerTensor => BlockPlan::flat(rows, cols, cols),
             }
         } else {
-            w.len()
-        };
-        let mut dequant = Matrix::zeros(w.rows, w.cols);
-        for (bi, blk) in w.data.chunks(block).enumerate() {
-            Self::binarize(blk, &mut dequant.data[bi * block..bi * block + blk.len()]);
-        }
-        QuantizedTensor {
-            method: self.name().to_string(),
-            rows: w.rows,
-            cols: w.cols,
-            dequant: finish_dequant(dequant, cfg),
-            effective_bits: 1.0 + 16.0 / block as f64,
-            msb: None,
+            BlockPlan::per_tensor(rows, cols)
         }
     }
+
+    fn quantize_block(&self, data: &[f32], out: &mut [f32], _cfg: &QuantConfig) -> BlockMeta {
+        Self::binarize(data, out);
+        BlockMeta::default()
+    }
+
+    /// Sign bit + one bf16 α per block.
+    fn effective_bits(&self, _cfg: &QuantConfig, plan: &BlockPlan) -> f64 {
+        1.0 + 16.0 / plan.block as f64
+    }
 }
+
+impl_quantizer_via_engine!(XnorQuantizer);
 
 /// All-zero "quantizer" — the dummy floor in Fig 2/3.
 #[derive(Clone, Debug)]
 pub struct ZeroQuantizer;
 
-impl Quantizer for ZeroQuantizer {
+impl BlockQuantizer for ZeroQuantizer {
     fn name(&self) -> &'static str {
         "zero"
     }
 
-    fn quantize(&self, w: &Matrix, _cfg: &QuantConfig) -> QuantizedTensor {
-        QuantizedTensor {
-            method: "zero".into(),
-            rows: w.rows,
-            cols: w.cols,
-            dequant: Matrix::zeros(w.rows, w.cols),
-            effective_bits: 0.0,
-            msb: None,
-        }
+    fn quantize_block(&self, _data: &[f32], out: &mut [f32], _cfg: &QuantConfig) -> BlockMeta {
+        out.fill(0.0);
+        BlockMeta::default()
+    }
+
+    fn effective_bits(&self, _cfg: &QuantConfig, _plan: &BlockPlan) -> f64 {
+        0.0
     }
 }
+
+impl_quantizer_via_engine!(ZeroQuantizer);
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::msb::{Algo, Solver};
+    use crate::quant::Quantizer;
     use crate::stats::Rng;
+    use crate::tensor::Matrix;
 
     #[test]
     fn closed_form_alpha() {

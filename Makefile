@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench-smoke bench-perf lint fmt artifacts clean
+.PHONY: build test bench-smoke bench-perf bench-pack lint fmt artifacts clean
 
 ## Release build of the library, `msb` CLI, all benches and all examples.
 build:
@@ -26,6 +26,12 @@ bench-smoke:
 ## MSB_BENCH_JSON. Set MSB_BENCH_FAST=1 for a smoke-sized run.
 bench-perf:
 	$(CARGO) bench --bench perf_hotpath
+
+## Packed-payload pipeline: pack/decode blocks/sec + packed-bytes ratio,
+## self-asserting decode bit-identity; writes BENCH_pack.json (same
+## conventions as bench-perf).
+bench-pack:
+	$(CARGO) bench --bench perf_pack
 
 ## Style gate: rustfmt + clippy with warnings denied.
 lint:

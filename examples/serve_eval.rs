@@ -5,13 +5,19 @@
 //!
 //!   cargo run --release --example serve_eval -- [--model small]
 //!       [--requests 64] [--clients 8] [--method wgm]
+//!       [--packed payload.msbt] [--decode-threads N]
+//!
+//! With `--packed`, the server boots straight from a packed `.msbt` v2
+//! payload (`msb pack`): codes + scale tables are decoded on the pool and
+//! no offline PTQ runs — the deployable-artifact serving path.
 
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use msb_quant::cli::Args;
 use msb_quant::harness::Artifacts;
-use msb_quant::pipeline::quantize_model;
+use msb_quant::io::msbt;
+use msb_quant::pipeline::{decode_packed_model, quantize_model};
 use msb_quant::quant::registry::Method;
 use msb_quant::quant::QuantConfig;
 use msb_quant::runtime::ModelRunner;
@@ -25,30 +31,46 @@ fn main() -> Result<()> {
     let n_clients = args.usize_or("clients", 8)?;
     let method = Method::parse(args.str_or("method", "wgm"))?;
 
-    // offline PTQ step (L3 coordinator), then serve the quantized model
     let weights = arts.weights(&spec)?;
-    let cfg = QuantConfig::block_wise(4, 64);
-    let calib;
-    let calib_ref = if method.needs_calibration() {
-        calib = arts.calib(&spec)?;
-        Some(&calib)
+    let qweights = if let Some(payload) = args.get("packed") {
+        // boot from a deployable packed artifact: decode codes + scales
+        // back to f32 on the pool, no PTQ step on the serving host
+        let threads = args.usize_or("decode-threads", 4)?;
+        let t0 = Instant::now();
+        let map = msbt::read_file(payload)?;
+        let decoded = decode_packed_model(&map, threads)?;
+        println!(
+            "serving {} from packed artifact {payload} (decoded {} tensors in {:.2}s)",
+            spec.name,
+            decoded.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        decoded
     } else {
-        None
+        // offline PTQ step (L3 coordinator), then serve the quantized model
+        let cfg = QuantConfig::block_wise(4, 64);
+        let calib;
+        let calib_ref = if method.needs_calibration() {
+            calib = arts.calib(&spec)?;
+            Some(&calib)
+        } else {
+            None
+        };
+        let qm = quantize_model(&spec, weights.clone(), calib_ref, method, &cfg, 1)?;
+        println!(
+            "serving {} quantized with {} ({:.2} bits/weight, PTQ took {:.2}s)",
+            spec.name,
+            method.name(),
+            if qm.layers.is_empty() { 16.0 } else { qm.mean_effective_bits() },
+            qm.wall_seconds
+        );
+        qm.weights
     };
-    let qm = quantize_model(&spec, &weights, calib_ref, method, &cfg, 1)?;
-    println!(
-        "serving {} quantized with {} ({:.2} bits/weight, PTQ took {:.2}s)",
-        spec.name,
-        method.name(),
-        if qm.layers.is_empty() { 16.0 } else { qm.mean_effective_bits() },
-        qm.wall_seconds
-    );
 
     // PJRT handles are not Send: the server thread builds the runner itself
     let manifest = arts.manifest.clone();
     let spec_for_server = spec.clone();
-    let qweights = qm.weights.clone();
-    let base_weights = weights.clone();
+    let base_weights = weights; // moved: the base set is only needed once
     let (server, client) = EvalServer::spawn_with(
         move || {
             let mut runner = ModelRunner::new(&manifest, &spec_for_server, &base_weights)

@@ -1,18 +1,24 @@
 """`.msbt` — the tensor container shared between python (writer) and rust
-(reader, rust/src/io/msbt.rs). Custom format because the offline crate set
-has no npz/serde; the layout is trivially parseable:
+(reader/writer, rust/src/io/msbt.rs). Custom format because the offline
+crate set has no npz/serde; the layout is trivially parseable:
 
     magic   b"MSBT"
-    version u32 LE (=1)
+    version u32 LE (writer emits 2; reader accepts 1 and 2)
     count   u32 LE
     count * {
         name_len u16 LE, name utf-8,
-        dtype    u8   (0=f32, 1=i32, 2=bf16 (u16 payload), 3=i8),
+        dtype    u8   (0=f32, 1=i32, 2=bf16 (u16 payload), 3=i8,
+                       4=u4 packed nibbles — v2 only),
         ndim     u8,
         dims     ndim * u32 LE,
         nbytes   u64 LE,
         data     raw LE bytes
     }
+
+Format v2 generalizes v1's ``nbytes == n * itemsize`` invariant to a
+per-dtype byte count: the ``u4`` dtype stores two 4-bit codes per byte
+(low nibble first), so ``nbytes == ceil(n / 2)`` with ``n`` the logical
+element count (product of dims). U4 tensors surface as :class:`U4`.
 """
 
 from __future__ import annotations
@@ -21,6 +27,8 @@ import struct
 
 import numpy as np
 
+VERSION = 2
+
 _DTYPES = {
     np.dtype(np.float32): 0,
     np.dtype(np.int32): 1,
@@ -28,36 +36,90 @@ _DTYPES = {
     np.dtype(np.int8): 3,
 }
 _NP_OF = {v: k for k, v in _DTYPES.items()}
+_U4 = 4
 
 
-def write_msbt(path: str, tensors: dict[str, np.ndarray]) -> None:
+class U4:
+    """Nibble-packed 4-bit codes: logical ``shape`` with two codes per
+    byte (low nibble first) in ``packed`` (uint8, ``ceil(n/2)`` bytes)."""
+
+    def __init__(self, shape, packed):
+        self.shape = tuple(int(d) for d in shape)
+        self.packed = np.ascontiguousarray(packed, dtype=np.uint8)
+        n = int(np.prod(self.shape, dtype=np.int64)) if self.shape else 1
+        if self.packed.size != (n + 1) // 2:
+            raise ValueError(f"u4 {self.shape}: expected {(n + 1) // 2} bytes, "
+                             f"got {self.packed.size}")
+
+    @property
+    def n(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) if self.shape else 1
+
+    def unpack(self) -> np.ndarray:
+        """Logical uint8 code array (values 0..15) of ``shape``."""
+        return unpack_u4(self.packed, self.n).reshape(self.shape)
+
+    def __eq__(self, other):
+        return (isinstance(other, U4) and self.shape == other.shape
+                and np.array_equal(self.packed, other.packed))
+
+
+def pack_u4(codes: np.ndarray) -> np.ndarray:
+    """Pack an array of 4-bit values (0..15) two-per-byte, low nibble
+    first — byte-compatible with rust ``quant::packing::pack_nibbles``."""
+    flat = np.ascontiguousarray(codes, dtype=np.uint8).reshape(-1)
+    if np.any(flat > 15):
+        raise ValueError("u4 codes must be < 16")
+    if flat.size % 2:
+        flat = np.concatenate([flat, np.zeros(1, np.uint8)])
+    return (flat[0::2] | (flat[1::2] << 4)).astype(np.uint8)
+
+
+def unpack_u4(packed: np.ndarray, n: int) -> np.ndarray:
+    """Inverse of :func:`pack_u4`; ``n`` is the original code count."""
+    packed = np.ascontiguousarray(packed, dtype=np.uint8)
+    out = np.empty(packed.size * 2, np.uint8)
+    out[0::2] = packed & 0xF
+    out[1::2] = packed >> 4
+    return out[:n]
+
+
+def write_msbt(path: str, tensors: dict) -> None:
     with open(path, "wb") as f:
         f.write(b"MSBT")
-        f.write(struct.pack("<II", 1, len(tensors)))
+        f.write(struct.pack("<II", VERSION, len(tensors)))
         for name, arr in tensors.items():
-            arr = np.ascontiguousarray(arr)
-            if arr.dtype == np.int64:
-                arr = arr.astype(np.int32)
-            if arr.dtype == np.float64:
-                arr = arr.astype(np.float32)
-            code = _DTYPES[arr.dtype]
             nb = name.encode()
+            if len(nb) > 0xFFFF:
+                raise ValueError(f"tensor name too long: {len(nb)} bytes")
             f.write(struct.pack("<H", len(nb)))
             f.write(nb)
-            f.write(struct.pack("<BB", code, arr.ndim))
-            for d in arr.shape:
-                f.write(struct.pack("<I", d))
-            raw = arr.tobytes()
+            if isinstance(arr, U4):
+                f.write(struct.pack("<BB", _U4, len(arr.shape)))
+                for d in arr.shape:
+                    f.write(struct.pack("<I", d))
+                raw = arr.packed.tobytes()
+            else:
+                arr = np.ascontiguousarray(arr)
+                if arr.dtype == np.int64:
+                    arr = arr.astype(np.int32)
+                if arr.dtype == np.float64:
+                    arr = arr.astype(np.float32)
+                code = _DTYPES[arr.dtype]
+                f.write(struct.pack("<BB", code, arr.ndim))
+                for d in arr.shape:
+                    f.write(struct.pack("<I", d))
+                raw = arr.tobytes()
             f.write(struct.pack("<Q", len(raw)))
             f.write(raw)
 
 
-def read_msbt(path: str) -> dict[str, np.ndarray]:
-    out: dict[str, np.ndarray] = {}
+def read_msbt(path: str) -> dict:
+    out: dict = {}
     with open(path, "rb") as f:
         assert f.read(4) == b"MSBT"
         version, count = struct.unpack("<II", f.read(8))
-        assert version == 1
+        assert version in (1, 2), f"unsupported msbt version {version}"
         for _ in range(count):
             (nlen,) = struct.unpack("<H", f.read(2))
             name = f.read(nlen).decode()
@@ -65,5 +127,10 @@ def read_msbt(path: str) -> dict[str, np.ndarray]:
             dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
             (nbytes,) = struct.unpack("<Q", f.read(8))
             raw = f.read(nbytes)
-            out[name] = np.frombuffer(raw, dtype=_NP_OF[code]).reshape(dims).copy()
+            if code == _U4:
+                assert version >= 2, "u4 dtype requires msbt v2"
+                out[name] = U4(dims, np.frombuffer(raw, np.uint8))
+            else:
+                out[name] = (np.frombuffer(raw, dtype=_NP_OF[code])
+                             .reshape(dims).copy())
     return out

@@ -1,5 +1,6 @@
 """`.msbt` container: python round-trip + byte-layout golden checks (the rust
-reader parses the same bytes; the golden test pins the layout)."""
+reader parses the same bytes; the golden tests pin the v2 layout and the v1
+back-compat path)."""
 
 import struct
 
@@ -7,7 +8,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from compile.msbt import read_msbt, write_msbt
+from compile.msbt import U4, pack_u4, read_msbt, unpack_u4, write_msbt
 
 
 def test_roundtrip_basic(tmp_path):
@@ -41,14 +42,37 @@ def test_roundtrip_hypothesis(tmp_path_factory, shape, dtype, seed):
     np.testing.assert_array_equal(back, arr)
 
 
+def test_u4_pack_unpack():
+    codes = np.asarray([1, 15, 0, 7, 9], np.uint8)
+    packed = pack_u4(codes)
+    np.testing.assert_array_equal(packed, [0xF1, 0x70, 0x09])
+    np.testing.assert_array_equal(unpack_u4(packed, 5), codes)
+    with pytest.raises(ValueError):
+        pack_u4(np.asarray([16], np.uint8))
+
+
+def test_u4_roundtrip(tmp_path):
+    rng = np.random.default_rng(3)
+    codes = rng.integers(0, 16, size=(6, 10), dtype=np.uint8)
+    t = U4(codes.shape, pack_u4(codes))
+    p = tmp_path / "u.msbt"
+    write_msbt(str(p), {"layer.codes": t, "plain": np.ones(3, np.float32)})
+    back = read_msbt(str(p))
+    got = back["layer.codes"]
+    assert isinstance(got, U4)
+    assert got == t
+    np.testing.assert_array_equal(got.unpack(), codes)
+    np.testing.assert_array_equal(back["plain"], np.ones(3, np.float32))
+
+
 def test_byte_layout_golden(tmp_path):
-    """Pin the exact on-disk layout the rust reader assumes."""
+    """Pin the exact v2 on-disk layout the rust reader assumes."""
     p = tmp_path / "g.msbt"
     write_msbt(str(p), {"ab": np.asarray([1.0], np.float32)})
     raw = p.read_bytes()
     assert raw[:4] == b"MSBT"
     version, count = struct.unpack_from("<II", raw, 4)
-    assert (version, count) == (1, 1)
+    assert (version, count) == (2, 1)
     nlen = struct.unpack_from("<H", raw, 12)[0]
     assert nlen == 2 and raw[14:16] == b"ab"
     dtype, ndim = struct.unpack_from("<BB", raw, 16)
@@ -58,6 +82,42 @@ def test_byte_layout_golden(tmp_path):
     nbytes = struct.unpack_from("<Q", raw, 22)[0]
     assert nbytes == 4
     assert struct.unpack_from("<f", raw, 30)[0] == 1.0
+
+
+def test_u4_byte_layout_golden(tmp_path):
+    """Pin the u4 record: logical dims, nbytes == ceil(n/2)."""
+    p = tmp_path / "u4.msbt"
+    write_msbt(str(p), {"c": U4((5,), np.asarray([0xF1, 0x70, 0x09], np.uint8))})
+    raw = p.read_bytes()
+    assert struct.unpack_from("<I", raw, 4)[0] == 2
+    dtype, ndim = struct.unpack_from("<BB", raw, 15)
+    assert (dtype, ndim) == (4, 1)
+    assert struct.unpack_from("<I", raw, 17)[0] == 5  # logical count
+    assert struct.unpack_from("<Q", raw, 21)[0] == 3  # packed bytes
+    assert raw[29:32] == bytes([0xF1, 0x70, 0x09])
+
+
+def test_reads_v1_files(tmp_path):
+    """Hand-built v1 bytes (the pre-u4 format) must keep reading."""
+    raw = b"MSBT" + struct.pack("<II", 1, 1)
+    raw += struct.pack("<H", 2) + b"ab"
+    raw += struct.pack("<BB", 0, 1) + struct.pack("<I", 2)
+    raw += struct.pack("<Q", 8) + struct.pack("<ff", 1.5, -2.0)
+    p = tmp_path / "v1.msbt"
+    p.write_bytes(raw)
+    back = read_msbt(str(p))
+    np.testing.assert_array_equal(back["ab"], np.asarray([1.5, -2.0], np.float32))
+
+
+def test_v1_rejects_u4(tmp_path):
+    raw = b"MSBT" + struct.pack("<II", 1, 1)
+    raw += struct.pack("<H", 1) + b"c"
+    raw += struct.pack("<BB", 4, 1) + struct.pack("<I", 2)
+    raw += struct.pack("<Q", 1) + bytes([0x21])
+    p = tmp_path / "bad.msbt"
+    p.write_bytes(raw)
+    with pytest.raises(AssertionError):
+        read_msbt(str(p))
 
 
 def test_int64_float64_are_downcast(tmp_path):

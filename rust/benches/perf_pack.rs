@@ -1,0 +1,91 @@
+//! §Perf — the packed-payload pipeline: pack emission overhead on the
+//! quantize path, packed-bytes ratio vs f32, and decode throughput
+//! (serial vs pooled) for the engine method grid at the paper's 4-bit
+//! t=64 setting. Self-asserting: every decode is checked bit-identical
+//! to the simulated dequant before its timing is reported.
+//!
+//! Machine-readable output: `BENCH_pack.json` (`<method>-pack-bps`,
+//! `<method>-decode-bps`, `<method>-packed-ratio`, plus
+//! `msb-wgm-decode-pooled-bps`) via `benchlib::write_bench_json`,
+//! uploaded as a CI artifact alongside `BENCH_perf.json`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use msb_quant::benchlib::{self, time_median};
+use msb_quant::pool::ThreadPool;
+use msb_quant::quant::engine::{decode_packed, BlockQuantizer};
+use msb_quant::quant::hqq::HqqQuantizer;
+use msb_quant::quant::msb::MsbQuantizer;
+use msb_quant::quant::nf4::Nf4Quantizer;
+use msb_quant::quant::rtn::RtnQuantizer;
+use msb_quant::quant::xnor::XnorQuantizer;
+use msb_quant::quant::{QuantConfig, Quantizer};
+
+fn main() {
+    let fast = benchlib::fast_mode();
+    let mut results: BTreeMap<String, f64> = BTreeMap::new();
+
+    let dim = if fast { 256 } else { 2048 };
+    let reps = if fast { 1 } else { 3 };
+    let w = benchlib::proxy_matrix(dim, dim);
+    let cfg = QuantConfig::block_wise(4, 64).with_window(1).with_packed();
+    let n_blocks = (w.len() / 64) as f64;
+    let f32_bytes = (w.len() * 4) as f64;
+
+    let methods: Vec<Arc<dyn BlockQuantizer>> = vec![
+        Arc::new(RtnQuantizer::symmetric()),
+        Arc::new(Nf4Quantizer::nf4()),
+        Arc::new(HqqQuantizer::default()),
+        Arc::new(XnorQuantizer::blocked()),
+        Arc::new(MsbQuantizer::wgm()),
+    ];
+
+    benchlib::header(&format!("pack + decode throughput ({dim}x{dim}, t=64, serial)"));
+    for q in &methods {
+        let name = q.name().to_string();
+        // quantize with payload emission (the pack path)
+        let t_pack = time_median(reps, || {
+            msb_quant::quant::engine::quantize_serial(&**q, &w, &cfg)
+        });
+        let qt = msb_quant::quant::engine::quantize_serial(&**q, &w, &cfg);
+        let pt = qt.packed.clone().expect("packed payload");
+        let ratio = pt.payload_bytes() as f64 / f32_bytes;
+
+        // decode must reproduce the simulated dequant bit-for-bit
+        let dec = decode_packed(Arc::clone(q), &pt, None);
+        assert_eq!(dec.data, qt.dequant.data, "{name}: decode != simulated dequant");
+        let t_dec = time_median(reps, || decode_packed(Arc::clone(q), &pt, None));
+
+        let (pack_bps, dec_bps) = (n_blocks / t_pack, n_blocks / t_dec);
+        println!(
+            "  {name:<16} pack {t_pack:>8.3} s ({pack_bps:>12.0} blk/s)   \
+             decode {t_dec:>8.4} s ({dec_bps:>12.0} blk/s)   {:.4}x of f32",
+            ratio
+        );
+        results.insert(format!("{name}-pack-bps"), pack_bps);
+        results.insert(format!("{name}-decode-bps"), dec_bps);
+        results.insert(format!("{name}-packed-ratio"), ratio);
+    }
+
+    // --- pooled decode: the serving boot path ----------------------------
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut pool = ThreadPool::new(threads, threads * 4);
+    let wgm: Arc<dyn BlockQuantizer> = Arc::new(MsbQuantizer::wgm());
+    let qt = MsbQuantizer::wgm().quantize(&w, &cfg);
+    let pt = qt.packed.expect("packed payload");
+    let dec = decode_packed(Arc::clone(&wgm), &pt, Some(&pool));
+    assert_eq!(dec.data, qt.dequant.data, "pooled decode != simulated dequant");
+    let t_pooled = time_median(reps, || decode_packed(Arc::clone(&wgm), &pt, Some(&pool)));
+    pool.shutdown();
+    let bps = n_blocks / t_pooled;
+    let speedup = bps / results["msb-wgm-decode-bps"];
+    benchlib::header(&format!("pooled decode ({threads} workers)"));
+    println!("  msb-wgm          {t_pooled:>8.4} s ({bps:>12.0} blk/s, {speedup:.2}x vs serial)");
+    results.insert("msb-wgm-decode-pooled-bps".to_string(), bps);
+
+    match benchlib::write_bench_json("pack", &results) {
+        Ok(path) => println!("\nwrote {} ({} keys)", path.display(), results.len()),
+        Err(e) => eprintln!("\nBENCH_pack.json not written: {e}"),
+    }
+}

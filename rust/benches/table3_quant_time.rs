@@ -38,7 +38,7 @@ fn main() {
         let mut cells = vec![spec.name.clone(), spec.total_params().to_string()];
         for method in methods {
             let calib_ref = method.needs_calibration().then_some(&calib);
-            let qm = quantize_model(spec, &weights, calib_ref, method, &cfg, 1)
+            let qm = quantize_model(spec, weights.clone(), calib_ref, method, &cfg, 1)
                 .expect("quantize");
             cells.push(benchlib::fmt_f(qm.wall_seconds, 2));
         }

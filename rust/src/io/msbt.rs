@@ -4,13 +4,23 @@
 //! magic b"MSBT" | version u32 | count u32 | count * record
 //! record: name_len u16, name, dtype u8, ndim u8, dims u32*, nbytes u64, data
 //! ```
-//! All integers little-endian. dtype: 0=f32, 1=i32, 2=bf16(u16), 3=i8.
+//! All integers little-endian. dtype: 0=f32, 1=i32, 2=bf16(u16), 3=i8,
+//! 4=u4 (v2+: two 4-bit codes per byte, low nibble first).
+//!
+//! Format v2 generalizes v1's `nbytes == n·sizeof(dtype)` invariant to a
+//! per-dtype byte count so packed sub-byte dtypes fit: for `U4`,
+//! `nbytes == ceil(n/2)` where `n` is the *logical* element count
+//! (`dims` product). The writer emits v2; the reader accepts v1 files
+//! unchanged (v1 never contains dtype 4).
 
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
+
+/// Current container version written by [`write_file`].
+pub const FORMAT_VERSION: u32 = 2;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum TensorData {
@@ -18,15 +28,20 @@ pub enum TensorData {
     I32(Vec<i32>),
     Bf16(Vec<u16>),
     I8(Vec<i8>),
+    /// Nibble-packed 4-bit codes: `n` logical elements in `ceil(n/2)`
+    /// bytes, low nibble first.
+    U4 { n: usize, packed: Vec<u8> },
 }
 
 impl TensorData {
+    /// Logical element count (≠ byte count for packed dtypes).
     pub fn len(&self) -> usize {
         match self {
             TensorData::F32(v) => v.len(),
             TensorData::I32(v) => v.len(),
             TensorData::Bf16(v) => v.len(),
             TensorData::I8(v) => v.len(),
+            TensorData::U4 { n, .. } => *n,
         }
     }
 
@@ -40,7 +55,20 @@ impl TensorData {
             TensorData::I32(_) => 1,
             TensorData::Bf16(_) => 2,
             TensorData::I8(_) => 3,
+            TensorData::U4 { .. } => 4,
         }
+    }
+}
+
+/// Serialized byte count for `n` elements of dtype `code` (the v2
+/// generalization of the v1 `n * sizeof` rule).
+fn dtype_nbytes(code: u8, n: usize) -> Option<usize> {
+    match code {
+        0 | 1 => Some(n * 4),
+        2 => Some(n * 2),
+        3 => Some(n),
+        4 => Some(n.div_ceil(2)),
+        _ => None,
     }
 }
 
@@ -61,9 +89,22 @@ impl Tensor {
         Tensor { dims, data: TensorData::I32(data) }
     }
 
+    pub fn bf16(dims: Vec<usize>, data: Vec<u16>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data: TensorData::Bf16(data) }
+    }
+
     pub fn i8(dims: Vec<usize>, data: Vec<i8>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), data.len());
         Tensor { dims, data: TensorData::I8(data) }
+    }
+
+    /// Nibble-packed 4-bit codes; `dims` is the logical element shape and
+    /// `packed` holds `ceil(n/2)` bytes.
+    pub fn u4(dims: Vec<usize>, packed: Vec<u8>) -> Self {
+        let n = dims.iter().product::<usize>();
+        assert_eq!(n.div_ceil(2), packed.len(), "u4 byte count");
+        Tensor { dims, data: TensorData::U4 { n, packed } }
     }
 
     pub fn as_f32(&self) -> Result<&[f32]> {
@@ -80,10 +121,25 @@ impl Tensor {
         }
     }
 
+    pub fn as_bf16(&self) -> Result<&[u16]> {
+        match &self.data {
+            TensorData::Bf16(v) => Ok(v),
+            other => bail!("expected bf16 tensor, got dtype {}", other.dtype_code()),
+        }
+    }
+
     pub fn as_i8(&self) -> Result<&[i8]> {
         match &self.data {
             TensorData::I8(v) => Ok(v),
             other => bail!("expected i8 tensor, got dtype {}", other.dtype_code()),
+        }
+    }
+
+    /// The packed nibble bytes of a `U4` tensor.
+    pub fn as_u4(&self) -> Result<&[u8]> {
+        match &self.data {
+            TensorData::U4 { packed, .. } => Ok(packed),
+            other => bail!("expected u4 tensor, got dtype {}", other.dtype_code()),
         }
     }
 
@@ -97,6 +153,19 @@ impl Tensor {
             self.dims[1],
             self.as_f32()?.to_vec(),
         ))
+    }
+
+    /// Like [`Tensor::to_matrix`] but consumes the tensor, moving the f32
+    /// buffer instead of copying it (the pipeline's zero-copy path).
+    pub fn into_matrix(self) -> Result<crate::tensor::Matrix> {
+        if self.dims.len() != 2 {
+            bail!("into_matrix on {}-d tensor", self.dims.len());
+        }
+        let (rows, cols) = (self.dims[0], self.dims[1]);
+        match self.data {
+            TensorData::F32(v) => Ok(crate::tensor::Matrix::from_vec(rows, cols, v)),
+            other => bail!("expected f32 tensor, got dtype {}", other.dtype_code()),
+        }
     }
 }
 
@@ -116,7 +185,7 @@ pub fn read_bytes(bytes: &[u8]) -> Result<TensorMap> {
         bail!("bad magic {:?}", &magic[..4.min(magic.len())]);
     }
     let version = r.u32()?;
-    if version != 1 {
+    if version == 0 || version > FORMAT_VERSION {
         bail!("unsupported msbt version {version}");
     }
     let count = r.u32()? as usize;
@@ -133,42 +202,31 @@ pub fn read_bytes(bytes: &[u8]) -> Result<TensorMap> {
         let nbytes = r.u64()? as usize;
         let raw = r.take(nbytes)?;
         let n: usize = dims.iter().product();
+        if dtype == 4 && version < 2 {
+            bail!("{name}: u4 dtype requires msbt v2, file is v{version}");
+        }
+        match dtype_nbytes(dtype, n) {
+            Some(expect) if expect == nbytes => {}
+            Some(expect) => bail!("{name}: dtype {dtype} expects {expect} bytes, got {nbytes}"),
+            None => bail!("{name}: unknown dtype {dtype}"),
+        }
         let data = match dtype {
-            0 => {
-                if nbytes != n * 4 {
-                    bail!("{name}: f32 byte count mismatch");
-                }
-                TensorData::F32(
-                    raw.chunks_exact(4)
-                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                        .collect(),
-                )
-            }
-            1 => {
-                if nbytes != n * 4 {
-                    bail!("{name}: i32 byte count mismatch");
-                }
-                TensorData::I32(
-                    raw.chunks_exact(4)
-                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                        .collect(),
-                )
-            }
-            2 => {
-                if nbytes != n * 2 {
-                    bail!("{name}: bf16 byte count mismatch");
-                }
-                TensorData::Bf16(
-                    raw.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect(),
-                )
-            }
-            3 => {
-                if nbytes != n {
-                    bail!("{name}: i8 byte count mismatch");
-                }
-                TensorData::I8(raw.iter().map(|&b| b as i8).collect())
-            }
-            d => bail!("{name}: unknown dtype {d}"),
+            0 => TensorData::F32(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            1 => TensorData::I32(
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            2 => TensorData::Bf16(
+                raw.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect(),
+            ),
+            3 => TensorData::I8(raw.iter().map(|&b| b as i8).collect()),
+            4 => TensorData::U4 { n, packed: raw.to_vec() },
+            _ => unreachable!("dtype validated above"),
         };
         out.insert(name, Tensor { dims, data });
     }
@@ -176,15 +234,27 @@ pub fn read_bytes(bytes: &[u8]) -> Result<TensorMap> {
 }
 
 pub fn write_file(path: impl AsRef<Path>, tensors: &TensorMap) -> Result<()> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.as_ref().display()))?,
+    );
+    ensure!(tensors.len() <= u32::MAX as usize, "too many tensors: {}", tensors.len());
     f.write_all(b"MSBT")?;
-    f.write_all(&1u32.to_le_bytes())?;
+    f.write_all(&FORMAT_VERSION.to_le_bytes())?;
     f.write_all(&(tensors.len() as u32).to_le_bytes())?;
     for (name, t) in tensors {
+        ensure!(
+            name.len() <= u16::MAX as usize,
+            "tensor name too long ({} bytes): {:.64}…",
+            name.len(),
+            name
+        );
+        ensure!(t.dims.len() <= u8::MAX as usize, "{name}: too many dims ({})", t.dims.len());
         f.write_all(&(name.len() as u16).to_le_bytes())?;
         f.write_all(name.as_bytes())?;
         f.write_all(&[t.data.dtype_code(), t.dims.len() as u8])?;
         for &d in &t.dims {
+            ensure!(d <= u32::MAX as usize, "{name}: dim {d} exceeds u32");
             f.write_all(&(d as u32).to_le_bytes())?;
         }
         match &t.data {
@@ -210,6 +280,10 @@ pub fn write_file(path: impl AsRef<Path>, tensors: &TensorMap) -> Result<()> {
                 f.write_all(&(v.len() as u64).to_le_bytes())?;
                 let bytes: Vec<u8> = v.iter().map(|&x| x as u8).collect();
                 f.write_all(&bytes)?;
+            }
+            TensorData::U4 { packed, .. } => {
+                f.write_all(&(packed.len() as u64).to_le_bytes())?;
+                f.write_all(packed)?;
             }
         }
     }
@@ -260,6 +334,11 @@ mod tests {
         m.insert("w".into(), Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
         m.insert("codes".into(), Tensor::i8(vec![4], vec![-3, 0, 1, 7]));
         m.insert("ids".into(), Tensor::i32(vec![2], vec![-1, 2_000_000]));
+        m.insert("scales".into(), Tensor::bf16(vec![3], vec![0x3F80, 0x4000, 0xBF80]));
+        m.insert(
+            "nibbles".into(),
+            Tensor::u4(vec![5], crate::quant::packing::pack_nibbles(&[1, 15, 0, 7, 9])),
+        );
         m
     }
 
@@ -286,7 +365,7 @@ mod tests {
         write_file(&p, &m).unwrap();
         let raw = std::fs::read(&p).unwrap();
         assert_eq!(&raw[..4], b"MSBT");
-        assert_eq!(u32::from_le_bytes(raw[4..8].try_into().unwrap()), 1);
+        assert_eq!(u32::from_le_bytes(raw[4..8].try_into().unwrap()), 2);
         assert_eq!(u32::from_le_bytes(raw[8..12].try_into().unwrap()), 1);
         assert_eq!(u16::from_le_bytes(raw[12..14].try_into().unwrap()), 2);
         assert_eq!(&raw[14..16], b"ab");
@@ -296,8 +375,72 @@ mod tests {
     }
 
     #[test]
-    fn rejects_bad_magic() {
+    fn u4_golden_layout() {
+        // pin the packed-dtype record: 5 logical elements in 3 bytes
+        let mut m = TensorMap::new();
+        m.insert("c".into(), Tensor::u4(vec![5], vec![0xF1, 0x70, 0x09]));
+        let dir = std::env::temp_dir().join(format!("msbt_u4_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("u4.msbt");
+        write_file(&p, &m).unwrap();
+        let raw = std::fs::read(&p).unwrap();
+        assert_eq!(u32::from_le_bytes(raw[4..8].try_into().unwrap()), 2); // v2
+        assert_eq!(raw[15], 4); // dtype u4
+        assert_eq!(raw[16], 1); // ndim
+        assert_eq!(u32::from_le_bytes(raw[17..21].try_into().unwrap()), 5); // logical n
+        assert_eq!(u64::from_le_bytes(raw[21..29].try_into().unwrap()), 3); // nbytes
+        assert_eq!(&raw[29..32], &[0xF1, 0x70, 0x09]);
+        let back = read_file(&p).unwrap();
+        assert_eq!(back.get("c").unwrap().data.len(), 5);
+        assert_eq!(back.get("c").unwrap().as_u4().unwrap(), &[0xF1, 0x70, 0x09]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// v1 files (no u4 dtype, `nbytes == n·sizeof`) must keep reading —
+    /// existing artifacts predate the v2 writer.
+    #[test]
+    fn reads_v1_files() {
+        let mut raw: Vec<u8> = Vec::new();
+        raw.extend_from_slice(b"MSBT");
+        raw.extend_from_slice(&1u32.to_le_bytes()); // version 1
+        raw.extend_from_slice(&1u32.to_le_bytes()); // count
+        raw.extend_from_slice(&2u16.to_le_bytes());
+        raw.extend_from_slice(b"ab");
+        raw.push(0); // f32
+        raw.push(1); // ndim
+        raw.extend_from_slice(&2u32.to_le_bytes());
+        raw.extend_from_slice(&8u64.to_le_bytes());
+        raw.extend_from_slice(&1.5f32.to_le_bytes());
+        raw.extend_from_slice(&(-2.0f32).to_le_bytes());
+        let m = read_bytes(&raw).unwrap();
+        assert_eq!(m.get("ab").unwrap().as_f32().unwrap(), &[1.5, -2.0]);
+    }
+
+    #[test]
+    fn v1_rejects_u4() {
+        let mut raw: Vec<u8> = Vec::new();
+        raw.extend_from_slice(b"MSBT");
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(&1u16.to_le_bytes());
+        raw.extend_from_slice(b"c");
+        raw.push(4); // u4 in a v1 file: invalid
+        raw.push(1);
+        raw.extend_from_slice(&2u32.to_le_bytes());
+        raw.extend_from_slice(&1u64.to_le_bytes());
+        raw.push(0x21);
+        let err = read_bytes(&raw).unwrap_err();
+        assert!(format!("{err:#}").contains("requires msbt v2"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_future_version() {
         assert!(read_bytes(b"NOPE\0\0\0\0").is_err());
+        let mut raw: Vec<u8> = Vec::new();
+        raw.extend_from_slice(b"MSBT");
+        raw.extend_from_slice(&99u32.to_le_bytes());
+        raw.extend_from_slice(&0u32.to_le_bytes());
+        assert!(read_bytes(&raw).is_err());
     }
 
     #[test]
@@ -315,12 +458,33 @@ mod tests {
     }
 
     #[test]
+    fn write_rejects_oversized_names() {
+        let mut m = TensorMap::new();
+        m.insert("x".repeat(70_000), Tensor::f32(vec![1], vec![0.0]));
+        let dir = std::env::temp_dir().join(format!("msbt_nm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = write_file(dir.join("n.msbt"), &m).unwrap_err();
+        assert!(format!("{err:#}").contains("name too long"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_unwritable_path_has_context() {
+        let m = TensorMap::new();
+        let err = write_file("/nonexistent_dir_msbt/x.msbt", &m).unwrap_err();
+        assert!(format!("{err:#}").contains("/nonexistent_dir_msbt/x.msbt"), "{err:#}");
+    }
+
+    #[test]
     fn to_matrix() {
         let t = Tensor::f32(vec![2, 2], vec![1., 2., 3., 4.]);
         let m = t.to_matrix().unwrap();
         assert_eq!(m.at(1, 0), 3.0);
         let t1 = Tensor::f32(vec![4], vec![0.0; 4]);
         assert!(t1.to_matrix().is_err());
+        let owned = Tensor::f32(vec![2, 2], vec![1., 2., 3., 4.]).into_matrix().unwrap();
+        assert_eq!(owned.at(0, 1), 2.0);
+        assert!(Tensor::i32(vec![1, 1], vec![3]).into_matrix().is_err());
     }
 
     #[test]
@@ -328,5 +492,7 @@ mod tests {
         let t = Tensor::i32(vec![1], vec![5]);
         assert!(t.as_f32().is_err());
         assert!(t.as_i32().is_ok());
+        assert!(t.as_u4().is_err());
+        assert!(t.as_bf16().is_err());
     }
 }

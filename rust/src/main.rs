@@ -5,6 +5,8 @@
 //! msb solve   --algo wgm --n 65536 --groups 32 --window 64
 //! msb quantize --model base --method wgm --bits 4 --granularity block
 //! msb eval    --model base --method wgm --bits 4 --granularity block
+//! msb pack    --model base --method wgm  write a packed .msbt v2 payload
+//! msb decode  --in base_wgm_packed.msbt  reconstruct f32 weights
 //! msb kernel  run the Pallas-MSB native executable (small model)
 //! ```
 
@@ -15,7 +17,7 @@ use msb_quant::cli::Args;
 use msb_quant::harness::{eval_quantized, Artifacts};
 use msb_quant::io::msbt;
 use msb_quant::msb::{Algo, Solver};
-use msb_quant::pipeline::quantize_model;
+use msb_quant::pipeline::{decode_packed_model, quantize_model};
 use msb_quant::quant::registry::Method;
 use msb_quant::quant::QuantConfig;
 use msb_quant::runtime::ModelRunner;
@@ -34,6 +36,8 @@ fn main() {
         "solve" => cmd_solve(&args),
         "quantize" => cmd_quantize(&args),
         "eval" => cmd_eval(&args),
+        "pack" => cmd_pack(&args),
+        "decode" => cmd_decode(&args),
         "kernel" => cmd_kernel(),
         "" | "help" | "--help" => {
             print!("{}", HELP);
@@ -59,6 +63,12 @@ commands:
              --bits B --granularity block|tensor --block T --window W
   eval       quantize + PPL/QA evaluation through the PJRT runtime
              (same flags as quantize; --method fp for the baseline row)
+  pack       quantize + write the deployable packed payload (.msbt v2:
+             u4/i8 codes + bf16 scale tables); same flags as quantize,
+             default --out <model>_<method>_packed.msbt
+  decode     reconstruct f32 weights from a packed payload
+             --in <packed.msbt> [--out decoded.msbt] [--threads N]
+             [--verify <f32.msbt>]  (bit-exact check against a reference)
   kernel     execute the native Pallas-MSB HLO for the small model
 ";
 
@@ -157,7 +167,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         None
     };
     let threads = args.usize_or("threads", 1)?;
-    let qm = quantize_model(spec, &weights, calib_ref, method, &cfg, threads)?;
+    let qm = quantize_model(spec, weights, calib_ref, method, &cfg, threads)?;
     println!(
         "{} {} quantized in {:.2}s: total SSE {:.4}, {:.2} bits/weight",
         model,
@@ -174,6 +184,83 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         .map(String::from)
         .unwrap_or_else(|| format!("{model}_{}.msbt", method.name()));
     msbt::write_file(&out, &qm.weights)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// Quantize and write the deployable packed payload (.msbt v2).
+fn cmd_pack(args: &Args) -> Result<()> {
+    let arts = Artifacts::load()?;
+    let model = args.str_or("model", "small");
+    let spec = arts.manifest.model(model)?;
+    let method = Method::parse(args.str_or("method", "wgm"))?;
+    let cfg = parse_cfg(args)?.with_packed();
+    let weights = arts.weights(spec)?;
+    let f32_elems: usize = weights.values().map(|t| t.data.len()).sum();
+    let calib;
+    let calib_ref = if method.needs_calibration() {
+        calib = arts.calib(spec)?;
+        Some(&calib)
+    } else {
+        None
+    };
+    let threads = args.usize_or("threads", 1)?;
+    let qm = quantize_model(spec, weights, calib_ref, method, &cfg, threads)?;
+    let payload = qm.export_packed()?;
+    let out = args
+        .get("out")
+        .map(String::from)
+        .unwrap_or_else(|| format!("{model}_{}_packed.msbt", method.name()));
+    msbt::write_file(&out, &payload)?;
+    let size = std::fs::metadata(&out)?.len();
+    println!(
+        "{} {} packed in {:.2}s: {} layers, {:.3} bits/weight (measured), \
+         {} bytes on disk ({:.3}x of f32)",
+        model,
+        method.name(),
+        qm.wall_seconds,
+        qm.packed.len(),
+        qm.packed_effective_bits(),
+        size,
+        size as f64 / (f32_elems * 4) as f64,
+    );
+    for (name, pt) in &qm.packed {
+        println!(
+            "  {:<16} {}x{}  {} code bits  {:.3} bits/weight  {} zero exceptions",
+            name,
+            pt.rows,
+            pt.cols,
+            pt.code_bits,
+            pt.effective_bits(),
+            pt.zeros.len()
+        );
+    }
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// Reconstruct f32 weights from a packed payload; artifacts not required.
+fn cmd_decode(args: &Args) -> Result<()> {
+    let input = args.get("in").context("--in <packed.msbt> required")?;
+    let threads = args.usize_or("threads", 1)?;
+    let map = msbt::read_file(input)?;
+    let t0 = Instant::now();
+    let decoded = decode_packed_model(&map, threads)?;
+    println!(
+        "decoded {} tensors from {input} in {:.2}s ({threads} thread(s))",
+        decoded.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    if let Some(reference) = args.get("verify") {
+        let expect = msbt::read_file(reference)?;
+        anyhow::ensure!(
+            decoded == expect,
+            "decode mismatch: {input} does not reproduce {reference}"
+        );
+        println!("verify OK: bit-identical to {reference}");
+    }
+    let out = args.str_or("out", "decoded.msbt");
+    msbt::write_file(out, &decoded)?;
     println!("wrote {out}");
     Ok(())
 }

@@ -10,18 +10,28 @@
 //! column-sequential error propagation) keep the per-layer fan-out instead.
 //! Method dispatch lives in [`crate::quant::registry`].
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::io::manifest::ModelSpec;
-use crate::io::msbt::{Tensor, TensorMap};
+use crate::io::msbt::{Tensor, TensorData, TensorMap};
 use crate::pool::ThreadPool;
 use crate::quant::dq::{double_quantize, DqConfig};
+use crate::quant::engine;
+use crate::quant::packing::{CodeScheme, PackedCodes, PackedScales, PackedTensor};
 use crate::quant::{registry, Granularity, QuantConfig, Quantizer};
 use crate::tensor::Matrix;
 
 pub use crate::quant::registry::Method;
+
+/// `<layer>.layout` record version for packed payload maps.
+const PACKED_LAYOUT_VERSION: i32 = 2;
+/// Global key carrying the packed method name (as i8 name bytes).
+const PACKED_METHOD_KEY: &str = "__packed__.method";
+/// Per-layer payload key suffixes, in record order.
+const PACKED_SUFFIXES: [&str; 4] = [".codes", ".scales", ".zeros", ".layout"];
 
 /// Per-layer quantization record.
 #[derive(Clone, Debug)]
@@ -35,7 +45,8 @@ pub struct LayerStat {
 }
 
 /// A fully-quantized model: dequantized weights keyed by ABI name (ready
-/// for [`crate::runtime::ModelRunner::update_weights`]) plus metrics.
+/// for [`crate::runtime::ModelRunner::update_weights`]) plus metrics and,
+/// when the config requested emission, the deployable packed payloads.
 #[derive(Clone, Debug)]
 pub struct QuantizedModel {
     pub method: Method,
@@ -46,6 +57,10 @@ pub struct QuantizedModel {
     /// `None` when the run used the per-layer path (FP, GPTQ, per-tensor
     /// configs, whole-tensor XNOR, threads=1).
     pub pool_stats: Option<(usize, usize)>,
+    /// Per-layer packed payloads (codes + scale tables); populated when
+    /// [`QuantConfig::emit_packed`] was set and the method supports
+    /// packing, empty otherwise.
+    pub packed: BTreeMap<String, PackedTensor>,
 }
 
 impl QuantizedModel {
@@ -59,6 +74,237 @@ impl QuantizedModel {
         });
         num / den.max(1) as f64
     }
+
+    /// Measured bits/weight over the packed payloads (actual bytes).
+    pub fn packed_effective_bits(&self) -> f64 {
+        let (bytes, elems) = self
+            .packed
+            .values()
+            .fold((0usize, 0usize), |(b, n), p| (b + p.payload_bytes(), n + p.n_elems()));
+        bytes as f64 * 8.0 / elems.max(1) as f64
+    }
+
+    /// Serialize the packed payloads into a `.msbt`-v2-ready [`TensorMap`]:
+    /// per layer `<name>.codes` (U4 or I8) + `<name>.scales` (bf16/f32) +
+    /// `<name>.layout` (+ `<name>.zeros` when exact-zero exceptions
+    /// exist), one global `__packed__.method` record, and the pass-through
+    /// (non-quantized) tensors copied as-is so a runner can boot from the
+    /// artifact alone. The dequantized f32 weight set is *not* cloned.
+    pub fn export_packed(&self) -> Result<TensorMap> {
+        ensure!(
+            !self.packed.is_empty(),
+            "no packed payloads: quantize with a cfg.with_packed() config \
+             and a packing-capable method"
+        );
+        let mut out = TensorMap::new();
+        let mut method = None;
+        for (name, pt) in &self.packed {
+            for suffix in PACKED_SUFFIXES {
+                let key = format!("{name}{suffix}");
+                ensure!(!self.weights.contains_key(&key), "payload key collides with '{key}'");
+            }
+            if let Some(m) = &method {
+                ensure!(m == &pt.method, "mixed packed methods: {m} vs {}", pt.method);
+            } else {
+                method = Some(pt.method.clone());
+            }
+            let dims = vec![pt.rows, pt.cols];
+            let codes = match &pt.codes {
+                PackedCodes::U4(p) => Tensor::u4(dims, p.clone()),
+                PackedCodes::I8(v) => Tensor::i8(dims, v.clone()),
+            };
+            out.insert(format!("{name}.codes"), codes);
+            let spb = pt.scales_per_block.max(1);
+            let scales = match &pt.scales {
+                PackedScales::Bf16(v) => Tensor::bf16(vec![v.len() / spb, spb], v.clone()),
+                PackedScales::F32(v) => Tensor::f32(vec![v.len() / spb, spb], v.clone()),
+            };
+            out.insert(format!("{name}.scales"), scales);
+            if !pt.zeros.is_empty() {
+                let z: Vec<i32> = pt.zeros.iter().map(|&i| i as i32).collect();
+                out.insert(format!("{name}.zeros"), Tensor::i32(vec![z.len()], z));
+            }
+            ensure!(pt.block <= i32::MAX as usize, "{name}: block exceeds i32");
+            let layout = vec![
+                PACKED_LAYOUT_VERSION,
+                pt.code_bits as i32,
+                pt.scheme.id(),
+                pt.block as i32,
+                pt.scales_per_block as i32,
+                pt.per_tensor as i32,
+                pt.bf16 as i32,
+                pt.zeros.len() as i32,
+            ];
+            out.insert(format!("{name}.layout"), Tensor::i32(vec![layout.len()], layout));
+        }
+        let method = method.expect("non-empty packed map");
+        out.insert(
+            PACKED_METHOD_KEY.to_string(),
+            Tensor::i8(vec![method.len()], method.bytes().map(|b| b as i8).collect()),
+        );
+        for (name, t) in &self.weights {
+            if !self.packed.contains_key(name) {
+                out.insert(name.clone(), t.clone());
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Whether a tensor map looks like an `export_packed` artifact.
+pub fn is_packed_map(map: &TensorMap) -> bool {
+    map.contains_key(PACKED_METHOD_KEY)
+}
+
+/// Reconstruct the full f32 weight set from a packed payload map (the
+/// output of [`QuantizedModel::export_packed`], typically read back from a
+/// `.msbt` v2 file). Each layer decodes through the emitting method's
+/// `decode_block` via the same `BlockPlan` geometry, fanned out over a
+/// shared [`ThreadPool`] when `threads > 1`; pass-through tensors are
+/// copied as-is. The result is bit-identical to the simulated-dequant
+/// weights the payload was exported from.
+pub fn decode_packed_model(map: &TensorMap, threads: usize) -> Result<TensorMap> {
+    let method_t = map
+        .get(PACKED_METHOD_KEY)
+        .context("not a packed artifact: __packed__.method missing")?;
+    let method_bytes: Vec<u8> = method_t.as_i8()?.iter().map(|&b| b as u8).collect();
+    let method = String::from_utf8(method_bytes).context("packed method name not utf-8")?;
+    let decoder = registry::block_decoder(&method)?;
+
+    let layers: Vec<String> = map
+        .keys()
+        .filter_map(|k| k.strip_suffix(".layout").map(String::from))
+        .collect();
+    ensure!(!layers.is_empty(), "packed artifact has no .layout records");
+    let mut payload_keys: Vec<String> = vec![PACKED_METHOD_KEY.to_string()];
+    for name in &layers {
+        for suffix in PACKED_SUFFIXES {
+            payload_keys.push(format!("{name}{suffix}"));
+        }
+    }
+
+    let mut pool = (threads > 1).then(|| ThreadPool::new(threads, threads * 4));
+    let mut out = TensorMap::new();
+    for name in &layers {
+        let pt = reconstruct_packed(map, name, &method, &*decoder)?;
+        let m = engine::decode_packed(decoder.clone(), &pt, pool.as_ref());
+        out.insert(name.clone(), Tensor::f32(vec![pt.rows, pt.cols], m.data));
+    }
+    if let Some(p) = pool.as_mut() {
+        p.shutdown();
+    }
+    for (k, t) in map {
+        if !payload_keys.iter().any(|p| p == k) && !out.contains_key(k) {
+            out.insert(k.clone(), t.clone());
+        }
+    }
+    Ok(out)
+}
+
+/// Rebuild one layer's [`PackedTensor`] from its payload records,
+/// validating the layout invariants so corrupt files error instead of
+/// panicking in the decode hot loop.
+fn reconstruct_packed(
+    map: &TensorMap,
+    name: &str,
+    method: &str,
+    decoder: &dyn crate::quant::engine::BlockQuantizer,
+) -> Result<PackedTensor> {
+    let layout_t = map.get(&format!("{name}.layout")).context("missing layout")?;
+    let l = layout_t.as_i32()?;
+    ensure!(l.len() >= 8, "{name}: truncated layout record");
+    ensure!(l[0] == PACKED_LAYOUT_VERSION, "{name}: unsupported layout version {}", l[0]);
+    let code_bits = l[1] as u32;
+    let scheme = CodeScheme::from_id(l[2])
+        .with_context(|| format!("{name}: unknown code scheme {}", l[2]))?;
+    let block = l[3] as usize;
+    let scales_per_block = l[4] as usize;
+    let (per_tensor, bf16) = (l[5] != 0, l[6] != 0);
+    ensure!(block > 0 && scales_per_block > 0, "{name}: degenerate layout");
+    ensure!((1..=8).contains(&code_bits), "{name}: bad code bits {code_bits}");
+    // The layout must be exactly what the method would emit at this code
+    // width — otherwise decode_block would misread (or over-index) the
+    // scale table. pack_spec only consults cfg.bits, so any granularity
+    // works to reconstruct the expectation.
+    let expect = decoder
+        .pack_spec(&QuantConfig::per_tensor(code_bits))
+        .with_context(|| format!("{name}: '{method}' cannot decode {code_bits}-bit codes"))?;
+    ensure!(
+        expect.scheme == scheme && expect.scales_per_block == scales_per_block,
+        "{name}: layout ({scheme:?}, {scales_per_block} scales/block) does not match \
+         method '{method}' ({:?}, {} scales/block)",
+        expect.scheme,
+        expect.scales_per_block
+    );
+
+    let codes_t = map.get(&format!("{name}.codes")).context("missing codes")?;
+    ensure!(codes_t.dims.len() == 2, "{name}: codes must be 2-d");
+    let (rows, cols) = (codes_t.dims[0], codes_t.dims[1]);
+    let n = rows * cols;
+    let codes = match &codes_t.data {
+        TensorData::U4 { packed, .. } => {
+            ensure!(code_bits <= 4, "{name}: u4 codes with {code_bits}-bit layout");
+            PackedCodes::U4(packed.clone())
+        }
+        TensorData::I8(v) => {
+            if scheme == CodeScheme::SignLevel {
+                let max = v.iter().map(|c| c.unsigned_abs() as usize).max().unwrap_or(0);
+                ensure!(max <= scales_per_block, "{name}: code level {max} out of range");
+            }
+            PackedCodes::I8(v.clone())
+        }
+        _ => anyhow::bail!("{name}: codes must be u4 or i8"),
+    };
+    if matches!(codes, PackedCodes::U4(_)) && scheme == CodeScheme::SignLevel {
+        // nibble symbols can address up to 2^{w-1} levels — the scale
+        // table must cover them or decode would index out of bounds
+        ensure!(
+            scales_per_block >= 1usize << (code_bits - 1),
+            "{name}: scale table too small for {code_bits}-bit sign-level codes"
+        );
+    }
+
+    let scales_t = map.get(&format!("{name}.scales")).context("missing scales")?;
+    let n_blocks = n.div_ceil(block);
+    let scales = match &scales_t.data {
+        TensorData::Bf16(v) => PackedScales::Bf16(v.clone()),
+        TensorData::F32(v) => PackedScales::F32(v.clone()),
+        _ => anyhow::bail!("{name}: scales must be bf16 or f32"),
+    };
+    let scale_len = scales_t.data.len();
+    ensure!(
+        scale_len == n_blocks * scales_per_block,
+        "{name}: scale table len {scale_len} != {n_blocks}x{scales_per_block}"
+    );
+
+    let zeros = match map.get(&format!("{name}.zeros")) {
+        Some(t) => {
+            let z = t.as_i32()?;
+            let mut out = Vec::with_capacity(z.len());
+            for &i in z {
+                ensure!(i >= 0 && (i as usize) < n, "{name}: zero index {i} out of range");
+                out.push(i as u32);
+            }
+            out
+        }
+        None => Vec::new(),
+    };
+    ensure!(zeros.len() == l[7] as usize, "{name}: zero count mismatch");
+
+    Ok(PackedTensor {
+        method: method.to_string(),
+        rows,
+        cols,
+        code_bits,
+        scheme,
+        block,
+        scales_per_block,
+        per_tensor,
+        bf16,
+        codes,
+        scales,
+        zeros,
+    })
 }
 
 /// Pull the layer Hessian out of the calibration tensors (GPTQ only).
@@ -75,7 +321,7 @@ fn layer_hessian<'a>(
     Ok((h.as_f32()?, in_dim))
 }
 
-type LayerResult = (String, LayerStat, Vec<f32>);
+type LayerResult = (String, LayerStat, Vec<f32>, Option<PackedTensor>);
 
 /// Quantize one layer (already-built quantizer borrowed or fresh) and
 /// record its stats. `pool` enables block-level parallelism.
@@ -101,6 +347,7 @@ fn quantize_layer(
         None => q.quantize(w, cfg),
     };
     if method == Method::WgmDq {
+        // the coarsened-scale rebuild invalidates the base payload
         qt = double_quantize(&qt, cfg, &DqConfig::default());
     }
     let stat = LayerStat {
@@ -111,7 +358,7 @@ fn quantize_layer(
         effective_bits: qt.effective_bits,
         seconds: lt0.elapsed().as_secs_f64(),
     };
-    Ok((name, stat, qt.dequant.data))
+    Ok((name, stat, qt.dequant.data, qt.packed))
 }
 
 /// Quantize every quantizable matrix of `spec` with `method` under `cfg`
@@ -119,9 +366,13 @@ fn quantize_layer(
 /// layer (tiles of blocks on a shared pool); GPTQ and per-tensor configs
 /// fan out across layers instead. Non-quantizable parameters (norms,
 /// embeddings) pass through untouched — the paper's weight-only protocol.
+///
+/// `weights` is taken by value: quantized tensors are *moved* into their
+/// layer solves and replaced in place, and pass-through tensors are never
+/// copied — the old deep-clone of the whole map is gone.
 pub fn quantize_model(
     spec: &ModelSpec,
-    weights: &TensorMap,
+    mut weights: TensorMap,
     calib: Option<&TensorMap>,
     method: Method,
     cfg: &QuantConfig,
@@ -132,20 +383,21 @@ pub fn quantize_model(
     if method == Method::Fp {
         return Ok(QuantizedModel {
             method,
-            weights: weights.clone(),
+            weights,
             layers: Vec::new(),
             wall_seconds: t0.elapsed().as_secs_f64(),
             pool_stats: None,
+            packed: BTreeMap::new(),
         });
     }
 
-    // collect the work list
+    // collect the work list, moving each quantizable tensor out of the map
     let mut jobs: Vec<(String, Matrix)> = Vec::new();
     for p in spec.quantizable() {
         let t = weights
-            .get(&p.name)
+            .remove(&p.name)
             .with_context(|| format!("weights missing {}", p.name))?;
-        jobs.push((p.name.clone(), t.to_matrix()?));
+        jobs.push((p.name.clone(), t.into_matrix()?));
     }
 
     // Per-layer fan-out when block tiling cannot help: GPTQ is whole-matrix
@@ -176,21 +428,24 @@ pub fn quantize_model(
         out
     };
 
-    let mut out = weights.clone();
+    let mut packed = BTreeMap::new();
     let mut layers = Vec::new();
-    for (name, stat, data) in results {
-        let dims = out.get(&name).unwrap().dims.clone();
-        out.insert(name, Tensor::f32(dims, data));
+    for (name, stat, data, packed_t) in results {
+        weights.insert(name.clone(), Tensor::f32(vec![stat.rows, stat.cols], data));
+        if let Some(p) = packed_t {
+            packed.insert(name, p);
+        }
         layers.push(stat);
     }
     layers.sort_by(|a, b| a.name.cmp(&b.name));
 
     Ok(QuantizedModel {
         method,
-        weights: out,
+        weights,
         layers,
         wall_seconds: t0.elapsed().as_secs_f64(),
         pool_stats,
+        packed,
     })
 }
 
@@ -233,7 +488,7 @@ mod tests {
     fn fp_is_identity() {
         let qm = quantize_model(
             &tiny_spec(),
-            &tiny_weights(1),
+            tiny_weights(1),
             None,
             Method::Fp,
             &QuantConfig::block_wise(4, 64),
@@ -242,6 +497,7 @@ mod tests {
         .unwrap();
         assert_eq!(qm.weights, tiny_weights(1));
         assert!(qm.pool_stats.is_none());
+        assert!(qm.packed.is_empty());
     }
 
     #[test]
@@ -249,7 +505,7 @@ mod tests {
         let w = tiny_weights(2);
         let qm = quantize_model(
             &tiny_spec(),
-            &w,
+            w.clone(),
             None,
             Method::Wgm,
             &QuantConfig::block_wise(4, 64),
@@ -260,6 +516,7 @@ mod tests {
         assert_ne!(qm.weights.get("layer0.wq"), w.get("layer0.wq"));
         assert_eq!(qm.layers.len(), 2);
         assert!(qm.total_sse() > 0.0);
+        assert!(qm.packed.is_empty(), "emission is opt-in");
     }
 
     #[test]
@@ -276,7 +533,7 @@ mod tests {
     fn gptq_without_calib_errors() {
         let r = quantize_model(
             &tiny_spec(),
-            &tiny_weights(3),
+            tiny_weights(3),
             None,
             Method::Gptq,
             &QuantConfig::block_wise(4, 64),
@@ -298,7 +555,7 @@ mod tests {
         }
         let qm = quantize_model(
             &tiny_spec(),
-            &tiny_weights(4),
+            tiny_weights(4),
             Some(&calib),
             Method::Gptq,
             &QuantConfig::block_wise(4, 64),
@@ -313,8 +570,8 @@ mod tests {
     fn wgm_dq_has_lower_bits_higher_err() {
         let w = tiny_weights(5);
         let cfg = QuantConfig::block_wise(4, 64);
-        let a = quantize_model(&tiny_spec(), &w, None, Method::Wgm, &cfg, 1).unwrap();
-        let b = quantize_model(&tiny_spec(), &w, None, Method::WgmDq, &cfg, 1).unwrap();
+        let a = quantize_model(&tiny_spec(), w.clone(), None, Method::Wgm, &cfg, 1).unwrap();
+        let b = quantize_model(&tiny_spec(), w, None, Method::WgmDq, &cfg, 1).unwrap();
         assert!(b.mean_effective_bits() < a.mean_effective_bits());
         assert!(b.total_sse() >= a.total_sse() * 0.999);
     }
@@ -323,8 +580,8 @@ mod tests {
     fn thread_count_does_not_change_result() {
         let w = tiny_weights(6);
         let cfg = QuantConfig::block_wise(4, 64);
-        let a = quantize_model(&tiny_spec(), &w, None, Method::Wgm, &cfg, 1).unwrap();
-        let b = quantize_model(&tiny_spec(), &w, None, Method::Wgm, &cfg, 4).unwrap();
+        let a = quantize_model(&tiny_spec(), w.clone(), None, Method::Wgm, &cfg, 1).unwrap();
+        let b = quantize_model(&tiny_spec(), w, None, Method::Wgm, &cfg, 4).unwrap();
         assert_eq!(a.weights, b.weights);
     }
 
@@ -354,8 +611,8 @@ mod tests {
             (Method::BlockedXnor, &pt),
         ];
         for (method, cfg) in grid {
-            let a = quantize_model(&spec, &w, None, method, cfg, 1).unwrap();
-            let b = quantize_model(&spec, &w, None, method, cfg, 4).unwrap();
+            let a = quantize_model(&spec, w.clone(), None, method, cfg, 1).unwrap();
+            let b = quantize_model(&spec, w.clone(), None, method, cfg, 4).unwrap();
             assert_eq!(
                 a.weights,
                 b.weights,
@@ -374,11 +631,92 @@ mod tests {
         spec.params.retain(|p| !p.quant || p.name == "layer0.wq");
         let w = tiny_weights(8);
         let cfg = QuantConfig::block_wise(4, 64);
-        let qm = quantize_model(&spec, &w, None, Method::Wgm, &cfg, 4).unwrap();
+        let qm = quantize_model(&spec, w, None, Method::Wgm, &cfg, 4).unwrap();
         assert_eq!(qm.layers.len(), 1);
         let (submitted, completed) = qm.pool_stats.expect("pool path must engage");
         assert!(submitted > 1, "expected block-tile fan-out, got {submitted} job(s)");
         assert_eq!(submitted, completed, "all tile jobs must drain");
+    }
+
+    /// Packed export → decode round-trips bit-identically through the
+    /// TensorMap payload layout, pass-through tensors included, and the
+    /// payload itself is thread-count deterministic.
+    #[test]
+    fn packed_export_decode_roundtrip() {
+        let spec = tiny_spec();
+        let mut w = tiny_weights(9);
+        // sprinkle exact zeros to exercise the exception records
+        if let TensorData::F32(v) = &mut w.get_mut("layer0.wq").unwrap().data {
+            v[3] = 0.0;
+            v[100] = 0.0;
+        }
+        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        for method in [Method::Wgm, Method::Rtn, Method::Bnb, Method::Hqq] {
+            let qm = quantize_model(&spec, w.clone(), None, method, &cfg, 2).unwrap();
+            assert_eq!(qm.packed.len(), 2, "{method:?}");
+            let map = qm.export_packed().unwrap();
+            assert!(is_packed_map(&map));
+            assert!(map.contains_key("layer0.wq.codes"));
+            assert!(map.contains_key("layer0.wq.layout"));
+            assert_eq!(map.get("tok_emb"), w.get("tok_emb"), "pass-through survives");
+            for threads in [1usize, 4] {
+                let decoded = decode_packed_model(&map, threads).unwrap();
+                assert_eq!(decoded, qm.weights, "{method:?} threads={threads}");
+            }
+            let qm4 = quantize_model(&spec, w.clone(), None, method, &cfg, 4).unwrap();
+            assert_eq!(qm.packed, qm4.packed, "{method:?} payload thread determinism");
+        }
+    }
+
+    #[test]
+    fn packed_accounting_at_paper_point() {
+        // MSB 4-bit t=64 over the tiny model: 6.00 bits/weight measured
+        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let qm = quantize_model(&tiny_spec(), tiny_weights(10), None, Method::Wgm, &cfg, 1)
+            .unwrap();
+        crate::testing::assert_close(qm.packed_effective_bits(), 6.0, 1e-12, 0.0);
+    }
+
+    #[test]
+    fn export_without_emission_errors() {
+        let cfg = QuantConfig::block_wise(4, 64);
+        let qm = quantize_model(&tiny_spec(), tiny_weights(11), None, Method::Wgm, &cfg, 1)
+            .unwrap();
+        assert!(qm.export_packed().is_err());
+    }
+
+    #[test]
+    fn wgm_dq_drops_packed_payload() {
+        // the double-quantized scale table invalidates the base payload
+        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let qm = quantize_model(&tiny_spec(), tiny_weights(12), None, Method::WgmDq, &cfg, 1)
+            .unwrap();
+        assert!(qm.packed.is_empty());
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_layout() {
+        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let qm = quantize_model(&tiny_spec(), tiny_weights(13), None, Method::Wgm, &cfg, 1)
+            .unwrap();
+        let map = qm.export_packed().unwrap();
+        // not a packed map at all
+        assert!(decode_packed_model(&TensorMap::new(), 1).is_err());
+        // out-of-range zero index
+        let mut bad = map.clone();
+        bad.insert("layer0.wq.zeros".into(), Tensor::i32(vec![1], vec![1 << 30]));
+        assert!(decode_packed_model(&bad, 1).is_err());
+        // truncated layout record
+        let mut bad = map.clone();
+        bad.insert("layer0.wq.layout".into(), Tensor::i32(vec![2], vec![2, 4]));
+        assert!(decode_packed_model(&bad, 1).is_err());
+        // unknown method
+        let mut bad = map;
+        bad.insert(
+            "__packed__.method".into(),
+            Tensor::i8(vec![4], b"nope".iter().map(|&b| b as i8).collect()),
+        );
+        assert!(decode_packed_model(&bad, 1).is_err());
     }
 
     // Method::parse round-tripping is covered in quant::registry::tests,

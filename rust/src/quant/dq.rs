@@ -94,6 +94,9 @@ pub fn double_quantize(
             levels,
             block,
         }),
+        // the recursively-quantized scale table needs its own container
+        // format (scale codes + meta-scales); not modeled as a payload yet
+        packed: None,
     }
 }
 

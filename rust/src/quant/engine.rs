@@ -33,6 +33,7 @@ use std::sync::Arc;
 use crate::pool::ThreadPool;
 use crate::tensor::Matrix;
 
+use super::packing::{PackSpec, PackedTensor};
 use super::{finish_dequant, Granularity, MsbPayload, QuantConfig, QuantizedTensor};
 
 /// How a `rows × cols` matrix splits into independent block instances.
@@ -198,6 +199,26 @@ pub trait BlockQuantizer: Send + Sync {
     fn emits_msb_payload(&self) -> bool {
         false
     }
+
+    /// Deployable packed layout under `cfg`, or `None` when the method has
+    /// no packed representation (the zero dummy, grids whose codes
+    /// overflow i8). Methods returning `Some` must implement
+    /// [`BlockQuantizer::decode_block`] and fill [`BlockMeta::codes`] /
+    /// [`BlockMeta::scales`] when [`QuantConfig::emit_packed`] is set.
+    fn pack_spec(&self, cfg: &QuantConfig) -> Option<PackSpec> {
+        let _ = cfg;
+        None
+    }
+
+    /// Inverse of the packed emission: reconstruct one block from its i8
+    /// codes and scale-table entries using exactly the arithmetic
+    /// `quantize_block` used, so decode(pack(W)) is bit-identical to the
+    /// simulated dequant. Exception-listed exact zeros and the bf16
+    /// finish are applied by the caller ([`decode_packed`]).
+    fn decode_block(&self, codes: &[i8], scales: &[f32], out: &mut [f32]) {
+        let _ = (codes, scales, out);
+        unimplemented!("{}: no packed decode path", self.name());
+    }
 }
 
 /// Serial engine driver: one tile covering every block. This is the
@@ -288,8 +309,9 @@ where
     slots.into_iter().map(|o| o.expect("engine job slot unfilled")).collect()
 }
 
-/// Centralized finishing: bf16 decode round-trip, storage accounting, and
-/// MSB payload assembly from the concatenated per-block metadata.
+/// Centralized finishing: bf16 decode round-trip, storage accounting, MSB
+/// payload assembly and (when requested) packed-payload assembly from the
+/// concatenated per-block metadata — all in deterministic plan order.
 fn assemble(
     q: &dyn BlockQuantizer,
     cfg: &QuantConfig,
@@ -297,6 +319,17 @@ fn assemble(
     dequant: Matrix,
     meta: TileMeta,
 ) -> QuantizedTensor {
+    let packed = match (cfg.emit_packed, q.pack_spec(cfg), &meta.codes) {
+        (true, Some(spec), Some(codes)) => Some(PackedTensor::from_codes(
+            q.name(),
+            plan,
+            &spec,
+            cfg.bf16,
+            codes,
+            &meta.scales,
+        )),
+        _ => None,
+    };
     let msb = if q.emits_msb_payload() {
         Some(MsbPayload {
             codes: meta.codes,
@@ -314,6 +347,93 @@ fn assemble(
         dequant: finish_dequant(dequant, cfg),
         effective_bits: q.effective_bits(cfg, plan),
         msb,
+        packed,
+    }
+}
+
+/// Reconstruct the dequantized weights from a packed payload — the
+/// serving-path inverse of the quantize drivers. Blocks are decoded via
+/// the same [`BlockPlan`] geometry, fanned over `pool` in tiles with
+/// input-ordered reassembly; serial and pooled decode are bit-identical,
+/// and both reproduce the simulated-dequant output the payload was
+/// emitted alongside exactly (`==` on every element; the one bit pattern
+/// that can legitimately differ is the sign of a rounded-to-zero value,
+/// which codes cannot carry and `-0.0 == 0.0` erases).
+pub fn decode_packed(
+    q: Arc<dyn BlockQuantizer>,
+    pt: &PackedTensor,
+    pool: Option<&ThreadPool>,
+) -> Matrix {
+    let n = pt.n_elems();
+    let mut out = Matrix::zeros(pt.rows, pt.cols);
+    if n == 0 {
+        return out;
+    }
+    let codes = pt.unpacked_codes();
+    let scales = pt.scales_f32();
+    let block = pt.block.max(1);
+    let spb = pt.scales_per_block;
+    let n_blocks = pt.n_blocks();
+    let threads = pool.map_or(1, |p| p.threads());
+    let tile = tile_size(n_blocks, threads);
+    let n_tiles = n_blocks.div_ceil(tile).max(1);
+    if threads <= 1 || n_tiles <= 1 {
+        decode_blocks(&*q, &codes, &scales, block, spb, 0..n_blocks, &mut out.data);
+    } else {
+        let pool = pool.expect("threads > 1 implies a pool");
+        let codes = Arc::new(codes);
+        let scales = Arc::new(scales);
+        let jobs: Vec<_> = (0..n_tiles)
+            .map(|ti| {
+                let q = Arc::clone(&q);
+                let codes = Arc::clone(&codes);
+                let scales = Arc::clone(&scales);
+                move || {
+                    let b0 = ti * tile;
+                    let b1 = ((ti + 1) * tile).min(n_blocks);
+                    let start = b0 * block;
+                    let end = (b1 * block).min(codes.len());
+                    let mut chunk = vec![0.0f32; end - start];
+                    decode_blocks(&*q, &codes, &scales, block, spb, b0..b1, &mut chunk);
+                    chunk
+                }
+            })
+            .collect();
+        let chunks = pool_ordered_map(pool, jobs);
+        let mut off = 0usize;
+        for c in chunks {
+            out.data[off..off + c.len()].copy_from_slice(&c);
+            off += c.len();
+        }
+    }
+    for &z in &pt.zeros {
+        out.data[z as usize] = 0.0;
+    }
+    if pt.bf16 {
+        for v in &mut out.data {
+            *v = crate::tensor::bf16::round(*v);
+        }
+    }
+    out
+}
+
+/// Decode a contiguous run of blocks; `out` covers exactly blocks `range`
+/// of the tensor (tail-block tolerant for flat plans).
+fn decode_blocks(
+    q: &dyn BlockQuantizer,
+    codes: &[i8],
+    scales: &[f32],
+    block: usize,
+    spb: usize,
+    range: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    let base = range.start * block;
+    for bi in range {
+        let s = bi * block;
+        let e = (s + block).min(codes.len());
+        let sc = &scales[bi * spb..(bi + 1) * spb];
+        q.decode_block(&codes[s..e], sc, &mut out[s - base..e - base]);
     }
 }
 
@@ -554,6 +674,137 @@ mod tests {
             .collect();
         let out = pool_ordered_map(&pool, jobs);
         assert_eq!(out, (0..37u64).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    fn packable_arcs() -> Vec<Arc<dyn BlockQuantizer>> {
+        vec![
+            Arc::new(RtnQuantizer::symmetric()),
+            Arc::new(RtnQuantizer::asymmetric()),
+            Arc::new(Nf4Quantizer::nf4()),
+            Arc::new(HqqQuantizer::default()),
+            Arc::new(XnorQuantizer::whole()),
+            Arc::new(XnorQuantizer::blocked()),
+            Arc::new(MsbQuantizer::wgm()),
+            Arc::new(MsbQuantizer::gg()),
+            Arc::new(MsbQuantizer::wgm_lo()),
+        ]
+    }
+
+    /// The tentpole's hard anchor: decode(pack(W)) must be bit-identical
+    /// to the simulated-dequant output for every engine-ported method,
+    /// under both granularities, serial and pooled (quantize AND decode),
+    /// including exact-zero elements (the exception list).
+    #[test]
+    fn packed_roundtrip_bit_identical_to_simulated() {
+        let mut w = weight(16, 256, 21);
+        for i in (0..w.len()).step_by(97) {
+            w.data[i] = 0.0; // exercise the exact-zero exception list
+        }
+        let pool = ThreadPool::new(4, 16);
+        for q in packable_arcs() {
+            let name = BlockQuantizer::name(&*q);
+            for cfg in configs_for(name) {
+                let cfg = cfg.with_packed();
+                let serial = quantize_serial(&*q, &w, &cfg);
+                let pt = serial.packed.clone().unwrap_or_else(|| panic!("{name}: no payload"));
+                let dec = decode_packed(Arc::clone(&q), &pt, None);
+                assert_eq!(dec.data, serial.dequant.data, "{name} serial decode");
+                let pooled = quantize_pooled(Arc::clone(&q), &w, &cfg, &pool);
+                assert_eq!(pooled.packed.as_ref(), Some(&pt), "{name} pooled payload");
+                let dec_p = decode_packed(Arc::clone(&q), &pt, Some(&pool));
+                assert_eq!(dec_p.data, serial.dequant.data, "{name} pooled decode");
+            }
+        }
+    }
+
+    /// Turning emission on must not perturb the simulated output: the
+    /// payload rides alongside the dequant path, not instead of it.
+    #[test]
+    fn pack_emission_does_not_change_dequant() {
+        let w = weight(8, 256, 22);
+        for q in packable_arcs() {
+            for cfg in configs_for(BlockQuantizer::name(&*q)) {
+                let plain = quantize_serial(&*q, &w, &cfg);
+                let emitting = quantize_serial(&*q, &w, &cfg.clone().with_packed());
+                assert!(plain.packed.is_none());
+                assert_eq!(
+                    plain.dequant.data,
+                    emitting.dequant.data,
+                    "{} emission changed dequant",
+                    BlockQuantizer::name(&*q)
+                );
+            }
+        }
+    }
+
+    /// Measured payload bytes must reproduce the theoretical accounting
+    /// for the paper's 4-bit grid (6.00 bits/weight for MSB at t=64).
+    #[test]
+    fn packed_accounting_agrees_with_theoretical_bits() {
+        let mut w = weight(8, 256, 23);
+        for v in &mut w.data {
+            if *v == 0.0 {
+                *v = 0.5; // exact zeros would add exception-list bytes
+            }
+        }
+        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        for q in packable_arcs() {
+            let name = BlockQuantizer::name(&*q);
+            if name.starts_with("xnor") || name.starts_with("blocked") {
+                continue; // 1-bit codes are stored at nibble granularity
+            }
+            let qt = quantize_serial(&*q, &w, &cfg);
+            let pt = qt.packed.unwrap_or_else(|| panic!("{name}: no payload"));
+            crate::testing::assert_close(pt.effective_bits(), qt.effective_bits, 1e-12, 0.0);
+        }
+        // XNOR's sub-nibble codes pay the nibble floor: 4 + 16/64 bits.
+        let qt = quantize_serial(&XnorQuantizer::blocked(), &w, &cfg);
+        let pt = qt.packed.unwrap();
+        crate::testing::assert_close(pt.effective_bits(), 4.25, 1e-12, 0.0);
+    }
+
+    /// Randomized property: for random shapes, zero densities and
+    /// methods, decode(pack(W)) == simulated dequant, and the payload is
+    /// invariant to the worker count.
+    #[test]
+    fn packed_roundtrip_property() {
+        let pool = ThreadPool::new(3, 12);
+        crate::testing::check(
+            "packed roundtrip",
+            12,
+            |rng| {
+                let rows = 1 + rng.below(8);
+                let cols = 64 * (1 + rng.below(4));
+                let mut w = Matrix::randn(rows, cols, rng);
+                for v in &mut w.data {
+                    if rng.uniform() < 0.03 {
+                        *v = 0.0;
+                    }
+                }
+                (w, rng.below(3))
+            },
+            |(w, pick)| {
+                let q: Arc<dyn BlockQuantizer> = match *pick {
+                    0 => Arc::new(MsbQuantizer::wgm()),
+                    1 => Arc::new(RtnQuantizer::symmetric()),
+                    _ => Arc::new(HqqQuantizer::default()),
+                };
+                let cfg = QuantConfig::block_wise(4, 64).with_packed();
+                let serial = quantize_serial(&*q, w, &cfg);
+                let pt = serial.packed.expect("payload");
+                let pooled = quantize_pooled(Arc::clone(&q), w, &cfg, &pool);
+                let dec = decode_packed(Arc::clone(&q), &pt, Some(&pool));
+                pooled.packed.as_ref() == Some(&pt) && dec.data == serial.dequant.data
+            },
+        );
+    }
+
+    #[test]
+    fn zero_dummy_has_no_pack_spec() {
+        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        assert!(ZeroQuantizer.pack_spec(&cfg).is_none());
+        let w = weight(4, 64, 24);
+        assert!(quantize_serial(&ZeroQuantizer, &w, &cfg).packed.is_none());
     }
 
     #[test]

@@ -133,6 +133,8 @@ impl Quantizer for GptqQuantizer {
             dequant: finish_dequant(Matrix::from_vec(rows, cols, dequant), cfg),
             effective_bits: super::packing::uniform_effective_bits(cfg.bits, group, false),
             msb: None,
+            // column-sequential error propagation has no block-local codes
+            packed: None,
         }
     }
 }

@@ -9,7 +9,10 @@
 //! with β annealed by κ each step. Mirrors the official solver's structure,
 //! executed on CPU.
 
+use crate::tensor::bf16;
+
 use super::engine::{impl_quantizer_via_engine, BlockMeta, BlockPlan, BlockQuantizer};
+use super::packing::{CodeScheme, PackSpec};
 use super::QuantConfig;
 
 #[derive(Clone, Debug)]
@@ -40,8 +43,19 @@ fn shrink_lp(x: f32, beta: f64, p: f64) -> f32 {
 }
 
 impl HqqQuantizer {
-    /// One half-quadratic solve over a single block.
-    fn solve_block(&self, w: &[f32], out: &mut [f32], bits: u32) {
+    /// One half-quadratic solve over a single block. Reconstruction uses
+    /// the storage-rounded `(s, z)` when `store_bf16` (the metadata a
+    /// deployed decoder reads back); returns `(s, z, codes)` with codes
+    /// collected only when `emit`.
+    fn solve_block(
+        &self,
+        w: &[f32],
+        out: &mut [f32],
+        bits: u32,
+        store_bf16: bool,
+        emit: bool,
+    ) -> (f32, f32, Vec<i8>) {
+        let round_meta = |x: f32| if store_bf16 { bf16::round(x) } else { x };
         let qmax = ((1i64 << bits) - 1) as f32;
         let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
         for &v in w {
@@ -49,9 +63,10 @@ impl HqqQuantizer {
             hi = hi.max(v);
         }
         if hi <= lo {
-            // constant block: exact representation
-            out.fill(lo);
-            return;
+            // constant block: exact representation as s·(1 − 0)
+            let s = round_meta(lo);
+            out.fill(s);
+            return (s, 0.0, vec![1i8; if emit { w.len() } else { 0 }]);
         }
         let s = (hi - lo) / qmax;
         let mut z = -lo / s;
@@ -71,9 +86,15 @@ impl HqqQuantizer {
             }
             beta *= self.kappa;
         }
-        for ((o, &qi), _) in out.iter_mut().zip(&q).zip(w) {
-            *o = s * (qi - z);
+        let (sr, zr) = (round_meta(s), round_meta(z));
+        let mut codes = Vec::with_capacity(if emit { w.len() } else { 0 });
+        for (o, &qi) in out.iter_mut().zip(&q) {
+            *o = sr * (qi - zr);
+            if emit {
+                codes.push(qi as i8);
+            }
         }
+        (sr, zr, codes)
     }
 }
 
@@ -83,13 +104,40 @@ impl BlockQuantizer for HqqQuantizer {
     }
 
     fn quantize_block(&self, data: &[f32], out: &mut [f32], cfg: &QuantConfig) -> BlockMeta {
-        self.solve_block(data, out, cfg.bits);
-        BlockMeta::default()
+        let emit = cfg.emit_packed && self.pack_spec(cfg).is_some();
+        let (s, z, codes) = self.solve_block(data, out, cfg.bits, cfg.bf16, emit);
+        let mut meta = BlockMeta::default();
+        if emit {
+            meta.scales.extend([s, z]);
+            meta.codes = Some(codes);
+        }
+        meta
     }
 
     /// Affine grid: scale + zero-point per block (bf16 each).
     fn effective_bits(&self, cfg: &QuantConfig, plan: &BlockPlan) -> f64 {
         super::packing::uniform_effective_bits(cfg.bits, plan.block, true)
+    }
+
+    /// Unsigned grid indices + (scale, zero-point); the `0..2^b-1` codes
+    /// must fit i8, so packing caps at 7 bits.
+    fn pack_spec(&self, cfg: &QuantConfig) -> Option<PackSpec> {
+        if cfg.bits >= 8 {
+            return None;
+        }
+        Some(PackSpec {
+            code_bits: cfg.bits,
+            scheme: CodeScheme::Unsigned,
+            scales_per_block: 2,
+            f32_scales: false,
+        })
+    }
+
+    fn decode_block(&self, codes: &[i8], scales: &[f32], out: &mut [f32]) {
+        let (s, z) = (scales[0], scales[1]);
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = s * (c as f32 - z);
+        }
     }
 }
 

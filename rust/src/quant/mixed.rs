@@ -156,6 +156,7 @@ impl MixedMsbQuantizer {
             dequant: finish_dequant(dequant, cfg),
             effective_bits: bit_mass / w.len() as f64,
             msb: None, // variable-width payload: native path not modeled
+            packed: None,
         }
     }
 }

@@ -53,6 +53,11 @@ pub struct QuantConfig {
     pub lambda: f64,
     /// Round decoded values through bf16 (paper's storage protocol).
     pub bf16: bool,
+    /// Emit the deployable packed payload (codes + scale tables,
+    /// [`packing::PackedTensor`]) alongside the simulated dequant. Off by
+    /// default: emission costs one code byte per element on the quantize
+    /// path. Never changes the dequant output.
+    pub emit_packed: bool,
 }
 
 impl QuantConfig {
@@ -63,6 +68,7 @@ impl QuantConfig {
             window: 64,
             lambda: 0.75,
             bf16: true,
+            emit_packed: false,
         }
     }
 
@@ -73,7 +79,14 @@ impl QuantConfig {
             window: 1,
             lambda: 0.75,
             bf16: true,
+            emit_packed: false,
         }
+    }
+
+    /// Request packed-payload emission (see [`QuantConfig::emit_packed`]).
+    pub fn with_packed(mut self) -> Self {
+        self.emit_packed = true;
+        self
     }
 
     pub fn with_window(mut self, w: usize) -> Self {
@@ -134,6 +147,10 @@ pub struct QuantizedTensor {
     pub effective_bits: f64,
     /// Kernel payload (MSB only).
     pub msb: Option<MsbPayload>,
+    /// Deployable packed payload (codes + scale tables), present when the
+    /// config requested emission ([`QuantConfig::emit_packed`]) and the
+    /// method supports packing.
+    pub packed: Option<packing::PackedTensor>,
 }
 
 impl QuantizedTensor {

@@ -13,6 +13,7 @@
 use crate::msb::{Algo, MsbCode, Solver};
 
 use super::engine::{impl_quantizer_via_engine, BlockMeta, BlockPlan, BlockQuantizer, TileMeta};
+use super::packing::{CodeScheme, PackSpec};
 use super::{Granularity, QuantConfig};
 
 /// Which solver backs the quantizer (WGM window comes from the config).
@@ -240,6 +241,40 @@ impl BlockQuantizer for MsbQuantizer {
 
     fn emits_msb_payload(&self) -> bool {
         true
+    }
+
+    /// Sign bit + ⌈log₂ L⌉ level bits (b bits total at L = 2^{b-1});
+    /// exact zeros ride the exception list. Level counts beyond i8 (large
+    /// per-tensor settings) have no exportable codes.
+    fn pack_spec(&self, cfg: &QuantConfig) -> Option<PackSpec> {
+        let levels = cfg.levels();
+        if levels > 127 {
+            return None;
+        }
+        let level_bits = levels.next_power_of_two().trailing_zeros();
+        Some(PackSpec {
+            code_bits: 1 + level_bits,
+            scheme: CodeScheme::SignLevel,
+            scales_per_block: levels,
+            f32_scales: false,
+        })
+    }
+
+    /// `ŵ = sign(c) · α_{|c|-1}` — the kernel decode, same math as
+    /// [`crate::msb::MsbCode::dequantize_into`].
+    fn decode_block(&self, codes: &[i8], scales: &[f32], out: &mut [f32]) {
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = if c == 0 {
+                0.0
+            } else {
+                let mag = scales[(c.unsigned_abs() as usize) - 1];
+                if c < 0 {
+                    -mag
+                } else {
+                    mag
+                }
+            };
+        }
     }
 }
 

@@ -4,6 +4,7 @@
 //! the CUDA kernels are irrelevant to the simulated-dequant protocol.
 
 use super::engine::{impl_quantizer_via_engine, BlockMeta, BlockPlan, BlockQuantizer};
+use super::packing::{CodeScheme, PackSpec};
 use super::QuantConfig;
 
 /// The 16 NF4 levels (bitsandbytes / QLoRA, Dettmers et al. 2023):
@@ -61,17 +62,17 @@ impl Nf4Quantizer {
     }
 }
 
-/// Nearest codebook entry (linear scan over 16 — branch-predictable and
+/// Nearest codebook index (linear scan over 16 — branch-predictable and
 /// faster than binary search at this size).
 #[inline]
-fn nearest(levels: &[f32; 16], x: f32) -> f32 {
-    let mut best = levels[0];
+fn nearest_idx(levels: &[f32; 16], x: f32) -> usize {
+    let mut best = 0usize;
     let mut bd = (x - levels[0]).abs();
-    for &l in &levels[1..] {
+    for (i, &l) in levels.iter().enumerate().skip(1) {
         let d = (x - l).abs();
         if d < bd {
             bd = d;
-            best = l;
+            best = i;
         }
     }
     best
@@ -87,22 +88,59 @@ impl BlockQuantizer for Nf4Quantizer {
 
     fn quantize_block(&self, data: &[f32], out: &mut [f32], cfg: &QuantConfig) -> BlockMeta {
         assert_eq!(cfg.bits, 4, "{} is a fixed 4-bit codebook", BlockQuantizer::name(self));
+        let emit = cfg.emit_packed;
+        let mut meta = BlockMeta::default();
         let levels = self.levels();
         let absmax = data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         if absmax == 0.0 {
             out.fill(0.0);
-            return BlockMeta::default();
+            if emit {
+                meta.scales.push(0.0);
+                meta.codes = Some(vec![0i8; data.len()]);
+            }
+            return meta;
         }
+        let mut codes = Vec::with_capacity(if emit { data.len() } else { 0 });
         for (o, &v) in out.iter_mut().zip(data) {
-            *o = nearest(levels, v / absmax) * absmax;
+            let idx = nearest_idx(levels, v / absmax);
+            *o = levels[idx] * absmax;
+            if emit {
+                codes.push(idx as i8);
+            }
         }
-        BlockMeta::default()
+        if emit {
+            meta.scales.push(absmax);
+            meta.codes = Some(codes);
+        }
+        meta
     }
 
     /// 4-bit codes + one f32 absmax per block (bnb keeps absmax in fp32
     /// unless double-quantized).
     fn effective_bits(&self, _cfg: &QuantConfig, plan: &BlockPlan) -> f64 {
         super::packing::nf4_effective_bits(plan.block)
+    }
+
+    /// 4-bit codebook indices + the fp32 absmax (the BnB layout).
+    fn pack_spec(&self, _cfg: &QuantConfig) -> Option<PackSpec> {
+        Some(PackSpec {
+            code_bits: 4,
+            scheme: CodeScheme::Unsigned,
+            scales_per_block: 1,
+            f32_scales: true,
+        })
+    }
+
+    fn decode_block(&self, codes: &[i8], scales: &[f32], out: &mut [f32]) {
+        let absmax = scales[0];
+        if absmax == 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        let levels = self.levels();
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = levels[(c as usize) & 15] * absmax;
+        }
     }
 }
 

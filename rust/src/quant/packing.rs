@@ -1,9 +1,26 @@
-//! Bit packing + storage accounting.
+//! Bit packing, storage accounting, and the deployable packed-payload type.
 //!
-//! The paper evaluates *simulated* quantization (decoded bf16), but reports
-//! effective bits/weight from the storage layout: b-bit codes + bf16 scales.
-//! This module provides both the accounting formulas and a real nibble
-//! packer proving the 4-bit layout round-trips.
+//! The paper evaluates *simulated* quantization (decoded bf16) but reports
+//! effective bits/weight from the storage layout: b-bit codes + bf16 scales
+//! (§4.1: 6.00 bits/weight at b=4, L=8, t=64). This module owns both sides
+//! of that story:
+//!
+//! * the accounting formulas the quantizers advertise
+//!   ([`msb_effective_bits`] & friends), and
+//! * [`PackedTensor`] — the real payload the engine emits: nibble-packed u4
+//!   codes for code widths ≤ 4 (byte codes otherwise), a bf16 (or, for the
+//!   BnB absmax, f32) scale table in deterministic [`BlockPlan`] order, and
+//!   an exact-zero exception list. Its [`PackedTensor::effective_bits`] is
+//!   *measured from the serialized bytes* and must agree with the
+//!   theoretical `*_effective_bits` for the paper's 4-bit grid.
+//!
+//! Decoding a packed tensor (`engine::decode_packed`) reproduces the
+//! simulated-dequant weights bit-identically: scale metadata is rounded
+//! through its storage dtype at quantize time, so the decode arithmetic is
+//! the quantize arithmetic.
+
+use super::engine::BlockPlan;
+use crate::tensor::bf16;
 
 /// Effective bits/weight for MSB: `b + L·16/t` block-wise (bf16 scales),
 /// or `b + L·16/total` per-tensor (metadata amortized over the tensor).
@@ -66,30 +83,262 @@ pub fn pack_nibbles(codes: &[u8]) -> Vec<u8> {
 
 /// Inverse of [`pack_nibbles`]; `n` is the original code count.
 pub fn unpack_nibbles(packed: &[u8], n: usize) -> Vec<u8> {
-    let mut out = Vec::with_capacity(n);
+    debug_assert_eq!(packed.len(), n.div_ceil(2), "packed len != ceil(n/2)");
+    let mut out = Vec::with_capacity(packed.len() * 2);
     for &b in packed {
         out.push(b & 0xF);
-        if out.len() < n {
-            out.push(b >> 4);
-        }
-        if out.len() >= n {
-            break;
-        }
+        out.push(b >> 4);
     }
     out.truncate(n);
     out
 }
 
-/// Map an MSB i8 code (sign·(level+1), |level|≤8) to an unsigned nibble:
-/// 0 = zero, 1..8 = +levels, 9..15 + 8? We use offset binary: nibble =
-/// code + 8 clamped to [0,15] with 8 meaning zero.
-pub fn msb_code_to_nibble(code: i8) -> u8 {
-    debug_assert!((-8..=7).contains(&(code.clamp(-8, 7))));
-    (code.clamp(-8, 7) + 8) as u8
+// ---------------------------------------------------------------------------
+// Code schemes: how per-element i8 codes map to packed unsigned symbols.
+// ---------------------------------------------------------------------------
+
+/// Mapping between a method's per-element i8 codes and the unsigned
+/// symbols stored in a packed payload of `width` bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodeScheme {
+    /// Codes are already unsigned grid indices `0..2^width` (RTN-asym /
+    /// HQQ affine grids, NF4 codebook indices): symbol = code.
+    Unsigned,
+    /// Symmetric signed grid with a representable zero (RTN):
+    /// symbol = `neg << (width-1) | |code|`.
+    SignMagnitude,
+    /// Sign + 1-based level index (MSB, XNOR): symbol =
+    /// `neg << (width-1) | (|code| - 1)`. Code 0 (an exact-zero element)
+    /// has no symbol of its own — sign-magnitude needs all `2^width`
+    /// patterns for ±L levels — and is carried on the
+    /// [`PackedTensor::zeros`] exception list instead.
+    SignLevel,
 }
 
-pub fn nibble_to_msb_code(nib: u8) -> i8 {
-    (nib as i8) - 8
+impl CodeScheme {
+    /// Stable on-disk id (the `.msbt` v2 layout record).
+    pub fn id(self) -> i32 {
+        match self {
+            CodeScheme::Unsigned => 0,
+            CodeScheme::SignMagnitude => 1,
+            CodeScheme::SignLevel => 2,
+        }
+    }
+
+    pub fn from_id(id: i32) -> Option<CodeScheme> {
+        match id {
+            0 => Some(CodeScheme::Unsigned),
+            1 => Some(CodeScheme::SignMagnitude),
+            2 => Some(CodeScheme::SignLevel),
+            _ => None,
+        }
+    }
+
+    /// Symbol for `code` under this scheme, `None` when the code must go
+    /// on the exact-zero exception list ([`CodeScheme::SignLevel`] only).
+    pub fn encode(self, code: i8, width: u32) -> Option<u8> {
+        let neg = (code < 0) as u8;
+        match self {
+            CodeScheme::Unsigned => {
+                debug_assert!(code >= 0);
+                Some(code as u8)
+            }
+            CodeScheme::SignMagnitude => Some((neg << (width - 1)) | code.unsigned_abs()),
+            CodeScheme::SignLevel => {
+                if code == 0 {
+                    None
+                } else {
+                    Some((neg << (width - 1)) | (code.unsigned_abs() - 1))
+                }
+            }
+        }
+    }
+
+    /// Inverse of [`CodeScheme::encode`].
+    pub fn decode(self, sym: u8, width: u32) -> i8 {
+        match self {
+            CodeScheme::Unsigned => sym as i8,
+            CodeScheme::SignMagnitude => {
+                let mag = (sym & ((1u8 << (width - 1)) - 1)) as i8;
+                if (sym >> (width - 1)) & 1 == 1 {
+                    -mag
+                } else {
+                    mag
+                }
+            }
+            CodeScheme::SignLevel => {
+                let mag = (sym & ((1u8 << (width - 1)) - 1)) as i8 + 1;
+                if (sym >> (width - 1)) & 1 == 1 {
+                    -mag
+                } else {
+                    mag
+                }
+            }
+        }
+    }
+}
+
+/// A method's packed-payload descriptor (see
+/// [`BlockQuantizer::pack_spec`](super::engine::BlockQuantizer::pack_spec)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PackSpec {
+    /// Logical bits per code symbol; ≤ 4 → nibble storage, else bytes.
+    pub code_bits: u32,
+    pub scheme: CodeScheme,
+    /// Scale-table entries per block instance.
+    pub scales_per_block: usize,
+    /// Keep the scale table in f32 regardless of the bf16 protocol (the
+    /// BnB layout stores absmax in fp32).
+    pub f32_scales: bool,
+}
+
+// ---------------------------------------------------------------------------
+// The packed payload.
+// ---------------------------------------------------------------------------
+
+/// Per-element code storage: nibbles for code widths ≤ 4, bytes otherwise.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PackedCodes {
+    /// Two 4-bit symbols per byte, low nibble first (`ceil(n/2)` bytes).
+    U4(Vec<u8>),
+    /// One signed byte code per element (the raw i8 code, no scheme).
+    I8(Vec<i8>),
+}
+
+/// Scale-table storage dtype.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PackedScales {
+    Bf16(Vec<u16>),
+    F32(Vec<f32>),
+}
+
+/// A deployable packed tensor: codes + scale table + layout, emitted by
+/// the engine in deterministic [`BlockPlan`] order. `decode(pack(W))` is
+/// bit-identical to the simulated-dequant output (`engine::decode_packed`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTensor {
+    /// `BlockQuantizer::name()` of the emitting method — the decode
+    /// dispatch key (`registry::block_decoder`).
+    pub method: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// Logical bits per code symbol.
+    pub code_bits: u32,
+    pub scheme: CodeScheme,
+    /// Elements per scale group (the whole tensor when `per_tensor`).
+    pub block: usize,
+    pub scales_per_block: usize,
+    pub per_tensor: bool,
+    /// Whether decode finishes through the bf16 storage round-trip.
+    pub bf16: bool,
+    pub codes: PackedCodes,
+    pub scales: PackedScales,
+    /// Element indices decoded as exact zeros ([`CodeScheme::SignLevel`]
+    /// nibble payloads only; their stored symbol is a placeholder).
+    pub zeros: Vec<u32>,
+}
+
+impl PackedTensor {
+    /// Assemble a payload from engine-emitted per-element i8 codes and the
+    /// concatenated per-block scale table (both in `plan` order).
+    pub fn from_codes(
+        method: &str,
+        plan: &BlockPlan,
+        spec: &PackSpec,
+        bf16_protocol: bool,
+        codes: &[i8],
+        scales: &[f32],
+    ) -> PackedTensor {
+        let n = plan.rows * plan.cols;
+        debug_assert_eq!(codes.len(), n);
+        debug_assert_eq!(scales.len(), plan.n_blocks * spec.scales_per_block);
+        let mut zeros = Vec::new();
+        let packed_codes = if spec.code_bits <= 4 {
+            let mut symbols = Vec::with_capacity(n);
+            for (i, &c) in codes.iter().enumerate() {
+                match spec.scheme.encode(c, spec.code_bits) {
+                    Some(s) => symbols.push(s),
+                    None => {
+                        zeros.push(i as u32);
+                        symbols.push(0);
+                    }
+                }
+            }
+            PackedCodes::U4(pack_nibbles(&symbols))
+        } else {
+            PackedCodes::I8(codes.to_vec())
+        };
+        let packed_scales = if spec.f32_scales || !bf16_protocol {
+            PackedScales::F32(scales.to_vec())
+        } else {
+            PackedScales::Bf16(scales.iter().map(|&s| bf16::encode(s)).collect())
+        };
+        PackedTensor {
+            method: method.to_string(),
+            rows: plan.rows,
+            cols: plan.cols,
+            code_bits: spec.code_bits,
+            scheme: spec.scheme,
+            block: plan.block,
+            scales_per_block: spec.scales_per_block,
+            per_tensor: plan.per_tensor,
+            bf16: bf16_protocol,
+            codes: packed_codes,
+            scales: packed_scales,
+            zeros,
+        }
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Number of block instances (tail-tolerant for flat plans).
+    pub fn n_blocks(&self) -> usize {
+        self.n_elems().div_ceil(self.block.max(1))
+    }
+
+    /// Exact serialized payload size: code bytes + scale bytes + the
+    /// exact-zero exception list (u32 each).
+    pub fn payload_bytes(&self) -> usize {
+        let code_bytes = match &self.codes {
+            PackedCodes::U4(p) => p.len(),
+            PackedCodes::I8(v) => v.len(),
+        };
+        let scale_bytes = match &self.scales {
+            PackedScales::Bf16(v) => v.len() * 2,
+            PackedScales::F32(v) => v.len() * 4,
+        };
+        code_bytes + scale_bytes + self.zeros.len() * 4
+    }
+
+    /// Measured storage cost in bits/weight. Agrees exactly with the
+    /// theoretical `*_effective_bits` for 4-bit-code methods with no
+    /// exact-zero exceptions (the paper's Table-1 grid).
+    pub fn effective_bits(&self) -> f64 {
+        self.payload_bytes() as f64 * 8.0 / self.n_elems().max(1) as f64
+    }
+
+    /// Per-element i8 codes, scheme-decoded from the stored symbols.
+    /// Exception-listed positions carry a placeholder code; the decode
+    /// driver overwrites them with exact zeros.
+    pub fn unpacked_codes(&self) -> Vec<i8> {
+        match &self.codes {
+            PackedCodes::U4(p) => unpack_nibbles(p, self.n_elems())
+                .iter()
+                .map(|&s| self.scheme.decode(s, self.code_bits))
+                .collect(),
+            PackedCodes::I8(v) => v.clone(),
+        }
+    }
+
+    /// The scale table decoded to f32 (the exact values quantize used).
+    pub fn scales_f32(&self) -> Vec<f32> {
+        match &self.scales {
+            PackedScales::Bf16(v) => v.iter().map(|&b| bf16::decode(b)).collect(),
+            PackedScales::F32(v) => v.clone(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -137,15 +386,126 @@ mod tests {
     }
 
     #[test]
-    fn msb_code_nibble_roundtrip() {
-        for c in -8i8..=7 {
-            assert_eq!(nibble_to_msb_code(msb_code_to_nibble(c)), c);
+    fn packed_size_halves() {
+        let codes = vec![5u8; 1000];
+        assert_eq!(pack_nibbles(&codes).len(), 500);
+    }
+
+    #[test]
+    fn scheme_roundtrips() {
+        // MSB at 4 bits: the FULL code range ±1..±8 must survive — the old
+        // offset-binary nibble map lost +8
+        for c in (-8i8..=8).filter(|&c| c != 0) {
+            let s = CodeScheme::SignLevel.encode(c, 4).unwrap();
+            assert!(s < 16);
+            assert_eq!(CodeScheme::SignLevel.decode(s, 4), c, "code {c}");
+        }
+        assert_eq!(CodeScheme::SignLevel.encode(0, 4), None);
+        // XNOR at 1 bit: ±1 in a single bit, zero on the exception list
+        assert_eq!(CodeScheme::SignLevel.encode(1, 1), Some(0));
+        assert_eq!(CodeScheme::SignLevel.encode(-1, 1), Some(1));
+        assert_eq!(CodeScheme::SignLevel.decode(0, 1), 1);
+        assert_eq!(CodeScheme::SignLevel.decode(1, 1), -1);
+        // RTN symmetric 4-bit: -7..7 with a natural zero
+        for c in -7i8..=7 {
+            let s = CodeScheme::SignMagnitude.encode(c, 4).unwrap();
+            assert!(s < 16);
+            let back = CodeScheme::SignMagnitude.decode(s, 4);
+            assert_eq!(back, if c == 0 { 0 } else { c });
+        }
+        // unsigned grids pass through
+        for c in 0i8..16 {
+            let s = CodeScheme::Unsigned.encode(c, 4).unwrap();
+            assert_eq!(CodeScheme::Unsigned.decode(s, 4), c);
         }
     }
 
     #[test]
-    fn packed_size_halves() {
-        let codes = vec![5u8; 1000];
-        assert_eq!(pack_nibbles(&codes).len(), 500);
+    fn scheme_ids_roundtrip() {
+        for s in [CodeScheme::Unsigned, CodeScheme::SignMagnitude, CodeScheme::SignLevel] {
+            assert_eq!(CodeScheme::from_id(s.id()), Some(s));
+        }
+        assert_eq!(CodeScheme::from_id(99), None);
+    }
+
+    #[test]
+    fn packed_tensor_msb_accounting_is_exact() {
+        // 8x128 at b=4, t=64: codes n/2 bytes + 8 bf16 scales per block
+        // == the paper's 6.00 bits/weight, measured from real bytes.
+        let plan = BlockPlan::block_wise(8, 128, 64);
+        let spec = PackSpec {
+            code_bits: 4,
+            scheme: CodeScheme::SignLevel,
+            scales_per_block: 8,
+            f32_scales: false,
+        };
+        let codes: Vec<i8> = (0..8 * 128).map(|i| ((i % 8) as i8) + 1).collect();
+        let scales = vec![0.5f32; plan.n_blocks * 8];
+        let pt = PackedTensor::from_codes("msb-wgm", &plan, &spec, true, &codes, &scales);
+        assert_eq!(pt.payload_bytes(), 8 * 128 / 2 + plan.n_blocks * 8 * 2);
+        assert_close(pt.effective_bits(), 6.0, 1e-12, 0.0);
+        assert!(pt.zeros.is_empty());
+        assert_eq!(pt.unpacked_codes(), codes);
+    }
+
+    #[test]
+    fn packed_tensor_zero_exceptions() {
+        let plan = BlockPlan::block_wise(1, 8, 8);
+        let spec = PackSpec {
+            code_bits: 4,
+            scheme: CodeScheme::SignLevel,
+            scales_per_block: 8,
+            f32_scales: false,
+        };
+        let codes: Vec<i8> = vec![1, 0, -8, 8, 0, 2, -1, 3];
+        let scales = vec![1.0f32; 8];
+        let pt = PackedTensor::from_codes("msb-wgm", &plan, &spec, true, &codes, &scales);
+        assert_eq!(pt.zeros, vec![1, 4]);
+        // exception positions come back as placeholders; everything else exact
+        let back = pt.unpacked_codes();
+        for (i, (&a, &b)) in codes.iter().zip(&back).enumerate() {
+            if a != 0 {
+                assert_eq!(a, b, "elem {i}");
+            }
+        }
+        // each exception costs 4 bytes on top of the 6-bit layout
+        assert_eq!(pt.payload_bytes(), 4 + 16 + 2 * 4);
+    }
+
+    #[test]
+    fn packed_tensor_byte_codes() {
+        // per-tensor 6-bit MSB: 32 levels exceed a nibble → i8 byte codes
+        let plan = BlockPlan::per_tensor(4, 16);
+        let spec = PackSpec {
+            code_bits: 6,
+            scheme: CodeScheme::SignLevel,
+            scales_per_block: 32,
+            f32_scales: false,
+        };
+        let codes: Vec<i8> = (0..64).map(|i| (i % 32) as i8 - 16).collect();
+        let scales = vec![0.25f32; 32];
+        let pt = PackedTensor::from_codes("msb-wgm", &plan, &spec, true, &codes, &scales);
+        assert!(matches!(pt.codes, PackedCodes::I8(_)));
+        assert!(pt.zeros.is_empty(), "i8 codes carry zero natively");
+        assert_eq!(pt.unpacked_codes(), codes);
+        assert_eq!(pt.payload_bytes(), 64 + 32 * 2);
+    }
+
+    #[test]
+    fn scales_round_through_bf16_storage() {
+        let plan = BlockPlan::block_wise(1, 64, 64);
+        let spec = PackSpec {
+            code_bits: 4,
+            scheme: CodeScheme::SignMagnitude,
+            scales_per_block: 1,
+            f32_scales: false,
+        };
+        let s = 0.123456789f32; // not bf16-representable
+        let pt = PackedTensor::from_codes("rtn", &plan, &spec, true, &[1i8; 64], &[s]);
+        assert_eq!(pt.scales_f32(), vec![crate::tensor::bf16::round(s)]);
+        // f32 scales requested (BnB absmax / no-bf16 ablations) stay exact
+        let spec_f32 = PackSpec { f32_scales: true, ..spec };
+        let pt = PackedTensor::from_codes("bnb-nf4", &plan, &spec_f32, true, &[1i8; 64], &[s]);
+        assert_eq!(pt.scales_f32(), vec![s]);
     }
 }

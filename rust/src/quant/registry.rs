@@ -5,8 +5,11 @@
 //! random. Now the pipeline, `main.rs`, the bench binaries and the examples
 //! all consume this table.
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 
+use super::engine::BlockQuantizer;
 use super::{
     gptq::GptqQuantizer, hqq::HqqQuantizer, msb::MsbQuantizer, nf4::Nf4Quantizer,
     rtn::RtnQuantizer, xnor::XnorQuantizer, Quantizer,
@@ -108,6 +111,24 @@ pub fn build_quantizer(
     })
 }
 
+/// Resolve a packed payload's `method` string (a `BlockQuantizer::name()`)
+/// to the quantizer whose `decode_block` reconstructs it. Every MSB solver
+/// shares one decode (sign · scale gather), so any `msb-*` name maps to
+/// the WGM instance.
+pub fn block_decoder(method: &str) -> Result<Arc<dyn BlockQuantizer>> {
+    Ok(match method {
+        "rtn" => Arc::new(RtnQuantizer::symmetric()),
+        "rtn-asym" => Arc::new(RtnQuantizer::asymmetric()),
+        "bnb-nf4" => Arc::new(Nf4Quantizer::nf4()),
+        "bnb-fp4" => Arc::new(Nf4Quantizer::fp4()),
+        "hqq" => Arc::new(HqqQuantizer::default()),
+        "xnor" => Arc::new(XnorQuantizer::whole()),
+        "blocked-xnor" => Arc::new(XnorQuantizer::blocked()),
+        m if m.starts_with("msb-") => Arc::new(MsbQuantizer::wgm()),
+        other => anyhow::bail!("no packed decoder for method '{other}'"),
+    })
+}
+
 /// The calibration-free method zoo (GPTQ is constructed separately with its
 /// Hessian). Order matches the paper's tables.
 pub fn calibration_free_zoo() -> Vec<Box<dyn Quantizer>> {
@@ -151,6 +172,22 @@ mod tests {
         assert!(build_quantizer(Method::Fp, None).is_err());
         let h = vec![1.0f32; 4];
         assert_eq!(build_quantizer(Method::Gptq, Some((&h, 2))).unwrap().name(), "gptq");
+    }
+
+    #[test]
+    fn block_decoder_resolves_packable_methods() {
+        for name in
+            ["rtn", "rtn-asym", "bnb-nf4", "bnb-fp4", "hqq", "xnor", "blocked-xnor", "msb-wgm"]
+        {
+            let d = block_decoder(name).unwrap();
+            if name.starts_with("msb-") {
+                assert!(d.name().starts_with("msb-"));
+            } else {
+                assert_eq!(d.name(), name);
+            }
+        }
+        assert!(block_decoder("gptq").is_err());
+        assert!(block_decoder("zero").is_err());
     }
 
     #[test]

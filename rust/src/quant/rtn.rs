@@ -2,8 +2,16 @@
 //! scaling per tensor/block, optional asymmetric zero-point variant.
 //! Expressed per block against the [`engine`](super::engine); slicing,
 //! threading and bf16 finishing live there.
+//!
+//! Storage-true metadata: under the bf16 protocol the scale (and zero
+//! point) are rounded through bf16 *before* reconstruction — the grid a
+//! deployed decoder would actually build from the stored scale table — so
+//! the packed decode path reproduces the simulated dequant bit-for-bit.
+
+use crate::tensor::bf16;
 
 use super::engine::{impl_quantizer_via_engine, BlockMeta, BlockPlan, BlockQuantizer};
+use super::packing::{CodeScheme, PackSpec};
 use super::QuantConfig;
 
 #[derive(Clone, Debug)]
@@ -22,36 +30,70 @@ impl RtnQuantizer {
         RtnQuantizer { asymmetric: true }
     }
 
-    fn quantize_block_sym(block: &[f32], out: &mut [f32], bits: u32) {
+    /// Symmetric path; returns `(scale, codes)` with codes collected only
+    /// when `emit` (packed-payload emission).
+    fn quantize_block_sym(
+        block: &[f32],
+        out: &mut [f32],
+        bits: u32,
+        store_bf16: bool,
+        emit: bool,
+    ) -> (f32, Vec<i8>) {
         let qmax = ((1i64 << (bits - 1)) - 1) as f32; // e.g. 7 at 4-bit
         let absmax = block.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-        if absmax == 0.0 {
-            out.fill(0.0);
-            return;
+        let mut scale = absmax / qmax;
+        if store_bf16 {
+            scale = bf16::round(scale); // the stored grid, not an ideal one
         }
-        let scale = absmax / qmax;
+        if absmax == 0.0 || scale == 0.0 {
+            // all-zero block, or a subnormal scale that underflows bf16
+            out.fill(0.0);
+            return (0.0, vec![0i8; if emit { block.len() } else { 0 }]);
+        }
+        let mut codes = Vec::with_capacity(if emit { block.len() } else { 0 });
         for (o, &v) in out.iter_mut().zip(block) {
             let q = (v / scale).round().clamp(-qmax, qmax);
             *o = q * scale;
+            if emit {
+                codes.push(q as i8);
+            }
         }
+        (scale, codes)
     }
 
-    fn quantize_block_asym(block: &[f32], out: &mut [f32], bits: u32) {
+    /// Asymmetric path; returns `(scale, zero_point, codes)`.
+    fn quantize_block_asym(
+        block: &[f32],
+        out: &mut [f32],
+        bits: u32,
+        store_bf16: bool,
+        emit: bool,
+    ) -> (f32, f32, Vec<i8>) {
         let qmax = ((1i64 << bits) - 1) as f32; // e.g. 15 at 4-bit
         let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
         for &v in block {
             lo = lo.min(v);
             hi = hi.max(v);
         }
-        if hi <= lo {
-            out.fill(lo);
-            return;
+        let zp = if store_bf16 { bf16::round(lo) } else { lo };
+        let mut scale = (hi - lo) / qmax;
+        if store_bf16 {
+            scale = bf16::round(scale);
         }
-        let scale = (hi - lo) / qmax;
+        if hi <= lo || scale == 0.0 {
+            // constant block (or degenerate range): q = 0, value = zp
+            out.fill(zp);
+            return (0.0, zp, vec![0i8; if emit { block.len() } else { 0 }]);
+        }
+        let mut codes = Vec::with_capacity(if emit { block.len() } else { 0 });
         for (o, &v) in out.iter_mut().zip(block) {
-            let q = ((v - lo) / scale).round().clamp(0.0, qmax);
-            *o = q * scale + lo;
+            let q = ((v - zp) / scale).round().clamp(0.0, qmax);
+            *o = q * scale + zp;
+            if emit {
+                codes.push(q as i8);
+            }
         }
+        (scale, zp, codes)
     }
 }
 
@@ -65,17 +107,75 @@ impl BlockQuantizer for RtnQuantizer {
     }
 
     fn quantize_block(&self, data: &[f32], out: &mut [f32], cfg: &QuantConfig) -> BlockMeta {
+        let emit = cfg.emit_packed && self.pack_spec(cfg).is_some();
+        let mut meta = BlockMeta::default();
         if self.asymmetric {
-            Self::quantize_block_asym(data, out, cfg.bits);
+            let (s, z, codes) = Self::quantize_block_asym(data, out, cfg.bits, cfg.bf16, emit);
+            if emit {
+                meta.scales.extend([s, z]);
+                meta.codes = Some(codes);
+            }
         } else {
-            Self::quantize_block_sym(data, out, cfg.bits);
+            let (s, codes) = Self::quantize_block_sym(data, out, cfg.bits, cfg.bf16, emit);
+            if emit {
+                meta.scales.push(s);
+                meta.codes = Some(codes);
+            }
         }
-        BlockMeta::default()
+        meta
     }
 
     /// b-bit codes + one bf16 scale (+ one bf16 zero point) per block.
     fn effective_bits(&self, cfg: &QuantConfig, plan: &BlockPlan) -> f64 {
         super::packing::uniform_effective_bits(cfg.bits, plan.block, self.asymmetric)
+    }
+
+    /// Symmetric: sign-magnitude codes in b bits; asymmetric: unsigned
+    /// grid indices (codes must fit i8, so asym caps at 7 bits).
+    fn pack_spec(&self, cfg: &QuantConfig) -> Option<PackSpec> {
+        if self.asymmetric {
+            if cfg.bits >= 8 {
+                return None;
+            }
+            Some(PackSpec {
+                code_bits: cfg.bits,
+                scheme: CodeScheme::Unsigned,
+                scales_per_block: 2,
+                f32_scales: false,
+            })
+        } else {
+            if cfg.bits > 8 {
+                return None;
+            }
+            Some(PackSpec {
+                code_bits: cfg.bits,
+                scheme: CodeScheme::SignMagnitude,
+                scales_per_block: 1,
+                f32_scales: false,
+            })
+        }
+    }
+
+    fn decode_block(&self, codes: &[i8], scales: &[f32], out: &mut [f32]) {
+        if self.asymmetric {
+            let (s, z) = (scales[0], scales[1]);
+            if s == 0.0 {
+                out.fill(z);
+                return;
+            }
+            for (o, &c) in out.iter_mut().zip(codes) {
+                *o = c as f32 * s + z;
+            }
+        } else {
+            let s = scales[0];
+            if s == 0.0 {
+                out.fill(0.0);
+                return;
+            }
+            for (o, &c) in out.iter_mut().zip(codes) {
+                *o = c as f32 * s;
+            }
+        }
     }
 }
 

@@ -98,8 +98,10 @@ impl<Q: Quantizer> ScaledQuantizer<Q> {
         qt.effective_bits += 16.0 / w.rows as f64;
         // the MSB payload refers to the *transformed* weights; native
         // execution would need the s vector folded into the activations,
-        // which the simulated path does not model — drop it.
+        // which the simulated path does not model — drop it (and the
+        // packed payload, whose codes also describe the scaled matrix).
         qt.msb = None;
+        qt.packed = None;
         qt
     }
 }

@@ -5,6 +5,7 @@
 //! Closed form (eq. 1): B* = sign(W), α* = ‖W‖₁/|W|.
 
 use super::engine::{impl_quantizer_via_engine, BlockMeta, BlockPlan, BlockQuantizer};
+use super::packing::{CodeScheme, PackSpec};
 use super::{Granularity, QuantConfig};
 
 #[derive(Clone, Debug)]
@@ -22,16 +23,24 @@ impl XnorQuantizer {
         XnorQuantizer { blocked: true }
     }
 
-    fn binarize(block: &[f32], out: &mut [f32]) {
+    /// Binarize one block; returns `(α, sign codes)` with codes collected
+    /// only when `emit`.
+    fn binarize(block: &[f32], out: &mut [f32], emit: bool) -> (f32, Vec<i8>) {
         let n = block.len() as f64;
         let alpha = (block.iter().map(|&v| v.abs() as f64).sum::<f64>() / n) as f32;
+        let mut codes = Vec::with_capacity(if emit { block.len() } else { 0 });
         for (o, &v) in out.iter_mut().zip(block) {
             *o = if v == 0.0 {
                 0.0 // zero-loss special group, consistent with MSB
             } else {
                 alpha * v.signum()
             };
+            if emit {
+                let c = if v == 0.0 { 0i8 } else { v.signum() as i8 };
+                codes.push(c);
+            }
         }
+        (alpha, codes)
     }
 }
 
@@ -59,14 +68,44 @@ impl BlockQuantizer for XnorQuantizer {
         }
     }
 
-    fn quantize_block(&self, data: &[f32], out: &mut [f32], _cfg: &QuantConfig) -> BlockMeta {
-        Self::binarize(data, out);
-        BlockMeta::default()
+    fn quantize_block(&self, data: &[f32], out: &mut [f32], cfg: &QuantConfig) -> BlockMeta {
+        let emit = cfg.emit_packed;
+        let (alpha, codes) = Self::binarize(data, out, emit);
+        let mut meta = BlockMeta::default();
+        if emit {
+            meta.scales.push(alpha);
+            meta.codes = Some(codes);
+        }
+        meta
     }
 
     /// Sign bit + one bf16 α per block.
     fn effective_bits(&self, _cfg: &QuantConfig, plan: &BlockPlan) -> f64 {
         1.0 + 16.0 / plan.block as f64
+    }
+
+    /// One sign bit per element (±α); exact zeros ride the exception
+    /// list. Stored at nibble granularity on disk.
+    fn pack_spec(&self, _cfg: &QuantConfig) -> Option<PackSpec> {
+        Some(PackSpec {
+            code_bits: 1,
+            scheme: CodeScheme::SignLevel,
+            scales_per_block: 1,
+            f32_scales: false,
+        })
+    }
+
+    fn decode_block(&self, codes: &[i8], scales: &[f32], out: &mut [f32]) {
+        let alpha = scales[0];
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = if c == 0 {
+                0.0
+            } else if c < 0 {
+                -alpha
+            } else {
+                alpha
+            };
+        }
     }
 }
 

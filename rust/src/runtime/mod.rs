@@ -126,7 +126,13 @@ impl ModelRunner {
 
     /// Replace a subset of weights (by name) — used to swap in each
     /// quantized variant without recompiling or re-uploading the rest.
+    /// Packed payload maps ([`crate::pipeline::QuantizedModel::export_packed`])
+    /// are detected and decoded transparently on a single thread; use
+    /// [`ModelRunner::update_weights_packed`] to control the decode pool.
     pub fn update_weights(&mut self, updates: &TensorMap) -> Result<usize> {
+        if crate::pipeline::is_packed_map(updates) {
+            return self.update_weights_packed(updates, 1);
+        }
         let mut n = 0;
         for (i, name) in self.names.iter().enumerate() {
             if let Some(t) = updates.get(name) {
@@ -136,6 +142,15 @@ impl ModelRunner {
             }
         }
         Ok(n)
+    }
+
+    /// Decode a packed payload map (u4/i8 codes + scale tables, `.msbt`
+    /// v2) on `threads` workers and swap the reconstructed weights in —
+    /// the serving path for booting straight from a packed artifact.
+    pub fn update_weights_packed(&mut self, packed: &TensorMap, threads: usize) -> Result<usize> {
+        // the decoded map is plain f32 (no payload keys): no recursion
+        let decoded = crate::pipeline::decode_packed_model(packed, threads)?;
+        self.update_weights(&decoded)
     }
 
     /// Forward pass: `tokens` is a row-major [batch, seq] i32 buffer;

@@ -21,11 +21,13 @@ bench-smoke:
 	MSB_BENCH_FAST=1 $(CARGO) bench --bench table3_quant_time
 	MSB_BENCH_FAST=1 $(CARGO) bench --bench fig2_3_loss_vs_size
 
-## Engine/solver hot-path throughput; writes BENCH_perf.json (method →
-## blocks/sec) to the bench working directory (rust/), overridable via
-## MSB_BENCH_JSON. Set MSB_BENCH_FAST=1 for a smoke-sized run.
+## Engine/solver hot-path throughput + the scheduler ablation; both
+## binaries merge into one BENCH_perf.json (method → blocks/sec,
+## merge-kernel arms, sched-* keys) committed at the repo root so the perf
+## trajectory accumulates. Set MSB_BENCH_FAST=1 for a smoke-sized run.
 bench-perf:
-	$(CARGO) bench --bench perf_hotpath
+	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_hotpath
+	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench table3_quant_time
 
 ## Packed-payload pipeline: pack/decode blocks/sec + packed-bytes ratio,
 ## self-asserting decode bit-identity; writes BENCH_pack.json (same

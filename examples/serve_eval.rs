@@ -7,9 +7,10 @@
 //!       [--requests 64] [--clients 8] [--method wgm]
 //!       [--packed payload.msbt] [--decode-threads N]
 //!
-//! With `--packed`, the server boots straight from a packed `.msbt` v2
-//! payload (`msb pack`): codes + scale tables are decoded on the pool and
-//! no offline PTQ runs — the deployable-artifact serving path.
+//! With `--packed`, the server boots straight from a packed `.msbt`
+//! payload (`msb pack`): codes + scale tables are decoded on the pool
+//! (`--decode-threads`, default = available cores) and no offline PTQ
+//! runs — the deployable-artifact serving path.
 
 use std::time::{Duration, Instant};
 
@@ -34,8 +35,10 @@ fn main() -> Result<()> {
     let weights = arts.weights(&spec)?;
     let qweights = if let Some(payload) = args.get("packed") {
         // boot from a deployable packed artifact: decode codes + scales
-        // back to f32 on the pool, no PTQ step on the serving host
-        let threads = args.usize_or("decode-threads", 4)?;
+        // back to f32 on the pool, no PTQ step on the serving host;
+        // default to one decode worker per available core
+        let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let threads = args.usize_or("decode-threads", default_threads)?;
         let t0 = Instant::now();
         let map = msbt::read_file(payload)?;
         let decoded = decode_packed_model(&map, threads)?;

@@ -3,22 +3,26 @@
 crate set has no npz/serde; the layout is trivially parseable:
 
     magic   b"MSBT"
-    version u32 LE (writer emits 2; reader accepts 1 and 2)
+    version u32 LE (writer emits 3; reader accepts 1, 2 and 3)
     count   u32 LE
     count * {
         name_len u16 LE, name utf-8,
         dtype    u8   (0=f32, 1=i32, 2=bf16 (u16 payload), 3=i8,
-                       4=u4 packed nibbles — v2 only),
+                       4=u4 packed nibbles — v2+,
+                       5=u2 / 6=u1 bit-packed codes — v3+),
         ndim     u8,
         dims     ndim * u32 LE,
         nbytes   u64 LE,
         data     raw LE bytes
     }
 
-Format v2 generalizes v1's ``nbytes == n * itemsize`` invariant to a
-per-dtype byte count: the ``u4`` dtype stores two 4-bit codes per byte
-(low nibble first), so ``nbytes == ceil(n / 2)`` with ``n`` the logical
-element count (product of dims). U4 tensors surface as :class:`U4`.
+Format v2 generalized v1's ``nbytes == n * itemsize`` invariant to a
+per-dtype byte count (``u4``: two 4-bit codes per byte, low nibble first,
+``nbytes == ceil(n / 2)`` with ``n`` the logical element count); v3 adds
+the sub-nibble ``u2`` (four codes per byte) and ``u1`` (eight codes per
+byte) dtypes so 1/2-bit code payloads stop paying the nibble floor. All
+packed dtypes are LSB-first within each byte and surface as
+:class:`U4` / :class:`U2` / :class:`U1`.
 """
 
 from __future__ import annotations
@@ -27,7 +31,7 @@ import struct
 
 import numpy as np
 
-VERSION = 2
+VERSION = 3
 
 _DTYPES = {
     np.dtype(np.float32): 0,
@@ -36,52 +40,103 @@ _DTYPES = {
     np.dtype(np.int8): 3,
 }
 _NP_OF = {v: k for k, v in _DTYPES.items()}
-_U4 = 4
 
 
-class U4:
-    """Nibble-packed 4-bit codes: logical ``shape`` with two codes per
-    byte (low nibble first) in ``packed`` (uint8, ``ceil(n/2)`` bytes)."""
+class _PackedBits:
+    """Bit-packed codes: logical ``shape`` with ``8 // width`` codes per
+    byte (LSB-first) in ``packed`` (uint8, ``ceil(n * width / 8)``
+    bytes)."""
+
+    width: int = 0  # set by subclasses
+    dtype_code: int = 0
+    min_version: int = 3
 
     def __init__(self, shape, packed):
         self.shape = tuple(int(d) for d in shape)
         self.packed = np.ascontiguousarray(packed, dtype=np.uint8)
-        n = int(np.prod(self.shape, dtype=np.int64)) if self.shape else 1
-        if self.packed.size != (n + 1) // 2:
-            raise ValueError(f"u4 {self.shape}: expected {(n + 1) // 2} bytes, "
-                             f"got {self.packed.size}")
+        per = 8 // self.width
+        n = self.n
+        if self.packed.size != (n + per - 1) // per:
+            raise ValueError(
+                f"u{self.width} {self.shape}: expected {(n + per - 1) // per} "
+                f"bytes, got {self.packed.size}")
 
     @property
     def n(self) -> int:
         return int(np.prod(self.shape, dtype=np.int64)) if self.shape else 1
 
     def unpack(self) -> np.ndarray:
-        """Logical uint8 code array (values 0..15) of ``shape``."""
-        return unpack_u4(self.packed, self.n).reshape(self.shape)
+        """Logical uint8 code array (values 0..2**width) of ``shape``."""
+        return unpack_bits(self.packed, self.n, self.width).reshape(self.shape)
 
     def __eq__(self, other):
-        return (isinstance(other, U4) and self.shape == other.shape
+        return (type(other) is type(self) and self.shape == other.shape
                 and np.array_equal(self.packed, other.packed))
+
+
+class U4(_PackedBits):
+    """Nibble-packed 4-bit codes (two per byte, low nibble first)."""
+
+    width = 4
+    dtype_code = 4
+    min_version = 2
+
+
+class U2(_PackedBits):
+    """Bit-packed 2-bit codes (four per byte, LSB-first) — v3+."""
+
+    width = 2
+    dtype_code = 5
+
+
+class U1(_PackedBits):
+    """Bit-packed 1-bit codes (eight per byte, LSB-first) — v3+."""
+
+    width = 1
+    dtype_code = 6
+
+
+_PACKED_OF = {cls.dtype_code: cls for cls in (U4, U2, U1)}
+
+
+def pack_bits(codes: np.ndarray, width: int) -> np.ndarray:
+    """Pack ``width``-bit values (width in {1, 2, 4}) LSB-first within each
+    byte — byte-compatible with rust ``quant::packing::pack_bits``."""
+    if width not in (1, 2, 4):
+        raise ValueError(f"unsupported pack width {width}")
+    flat = np.ascontiguousarray(codes, dtype=np.uint8).reshape(-1)
+    if np.any(flat >= (1 << width)):
+        raise ValueError(f"u{width} codes must be < {1 << width}")
+    per = 8 // width
+    pad = (-flat.size) % per
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, np.uint8)])
+    flat = flat.reshape(-1, per)
+    shifts = np.arange(per, dtype=np.uint8) * width
+    return np.bitwise_or.reduce(flat << shifts, axis=1).astype(np.uint8)
+
+
+def unpack_bits(packed: np.ndarray, n: int, width: int) -> np.ndarray:
+    """Inverse of :func:`pack_bits`; ``n`` is the original code count."""
+    if width not in (1, 2, 4):
+        raise ValueError(f"unsupported pack width {width}")
+    packed = np.ascontiguousarray(packed, dtype=np.uint8)
+    per = 8 // width
+    shifts = np.arange(per, dtype=np.uint8) * width
+    mask = (1 << width) - 1
+    out = ((packed[:, None] >> shifts) & mask).astype(np.uint8).reshape(-1)
+    return out[:n]
 
 
 def pack_u4(codes: np.ndarray) -> np.ndarray:
     """Pack an array of 4-bit values (0..15) two-per-byte, low nibble
     first — byte-compatible with rust ``quant::packing::pack_nibbles``."""
-    flat = np.ascontiguousarray(codes, dtype=np.uint8).reshape(-1)
-    if np.any(flat > 15):
-        raise ValueError("u4 codes must be < 16")
-    if flat.size % 2:
-        flat = np.concatenate([flat, np.zeros(1, np.uint8)])
-    return (flat[0::2] | (flat[1::2] << 4)).astype(np.uint8)
+    return pack_bits(codes, 4)
 
 
 def unpack_u4(packed: np.ndarray, n: int) -> np.ndarray:
     """Inverse of :func:`pack_u4`; ``n`` is the original code count."""
-    packed = np.ascontiguousarray(packed, dtype=np.uint8)
-    out = np.empty(packed.size * 2, np.uint8)
-    out[0::2] = packed & 0xF
-    out[1::2] = packed >> 4
-    return out[:n]
+    return unpack_bits(packed, n, 4)
 
 
 def write_msbt(path: str, tensors: dict) -> None:
@@ -94,8 +149,8 @@ def write_msbt(path: str, tensors: dict) -> None:
                 raise ValueError(f"tensor name too long: {len(nb)} bytes")
             f.write(struct.pack("<H", len(nb)))
             f.write(nb)
-            if isinstance(arr, U4):
-                f.write(struct.pack("<BB", _U4, len(arr.shape)))
+            if isinstance(arr, _PackedBits):
+                f.write(struct.pack("<BB", arr.dtype_code, len(arr.shape)))
                 for d in arr.shape:
                     f.write(struct.pack("<I", d))
                 raw = arr.packed.tobytes()
@@ -119,7 +174,7 @@ def read_msbt(path: str) -> dict:
     with open(path, "rb") as f:
         assert f.read(4) == b"MSBT"
         version, count = struct.unpack("<II", f.read(8))
-        assert version in (1, 2), f"unsupported msbt version {version}"
+        assert version in (1, 2, 3), f"unsupported msbt version {version}"
         for _ in range(count):
             (nlen,) = struct.unpack("<H", f.read(2))
             name = f.read(nlen).decode()
@@ -127,9 +182,11 @@ def read_msbt(path: str) -> dict:
             dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
             (nbytes,) = struct.unpack("<Q", f.read(8))
             raw = f.read(nbytes)
-            if code == _U4:
-                assert version >= 2, "u4 dtype requires msbt v2"
-                out[name] = U4(dims, np.frombuffer(raw, np.uint8))
+            if code in _PACKED_OF:
+                cls = _PACKED_OF[code]
+                assert version >= cls.min_version, \
+                    f"dtype {code} requires msbt v{cls.min_version}"
+                out[name] = cls(dims, np.frombuffer(raw, np.uint8))
             else:
                 out[name] = (np.frombuffer(raw, dtype=_NP_OF[code])
                              .reshape(dims).copy())

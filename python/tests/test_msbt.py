@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from compile.msbt import U4, pack_u4, read_msbt, unpack_u4, write_msbt
+from compile.msbt import (U1, U2, U4, pack_bits, pack_u4, read_msbt,
+                          unpack_bits, unpack_u4, write_msbt)
 
 
 def test_roundtrip_basic(tmp_path):
@@ -66,13 +67,13 @@ def test_u4_roundtrip(tmp_path):
 
 
 def test_byte_layout_golden(tmp_path):
-    """Pin the exact v2 on-disk layout the rust reader assumes."""
+    """Pin the exact v3 on-disk layout the rust reader assumes."""
     p = tmp_path / "g.msbt"
     write_msbt(str(p), {"ab": np.asarray([1.0], np.float32)})
     raw = p.read_bytes()
     assert raw[:4] == b"MSBT"
     version, count = struct.unpack_from("<II", raw, 4)
-    assert (version, count) == (2, 1)
+    assert (version, count) == (3, 1)
     nlen = struct.unpack_from("<H", raw, 12)[0]
     assert nlen == 2 and raw[14:16] == b"ab"
     dtype, ndim = struct.unpack_from("<BB", raw, 16)
@@ -89,12 +90,59 @@ def test_u4_byte_layout_golden(tmp_path):
     p = tmp_path / "u4.msbt"
     write_msbt(str(p), {"c": U4((5,), np.asarray([0xF1, 0x70, 0x09], np.uint8))})
     raw = p.read_bytes()
-    assert struct.unpack_from("<I", raw, 4)[0] == 2
+    assert struct.unpack_from("<I", raw, 4)[0] == 3
     dtype, ndim = struct.unpack_from("<BB", raw, 15)
     assert (dtype, ndim) == (4, 1)
     assert struct.unpack_from("<I", raw, 17)[0] == 5  # logical count
     assert struct.unpack_from("<Q", raw, 21)[0] == 3  # packed bytes
     assert raw[29:32] == bytes([0xF1, 0x70, 0x09])
+
+
+def test_bit_pack_goldens():
+    # LSB-first within each byte, byte-compatible with rust pack_bits
+    np.testing.assert_array_equal(
+        pack_bits(np.asarray([1, 0, 0, 1, 0, 1, 1, 0], np.uint8), 1), [0b0110_1001])
+    np.testing.assert_array_equal(
+        pack_bits(np.asarray([1, 1, 1], np.uint8), 1), [0b0000_0111])
+    np.testing.assert_array_equal(
+        pack_bits(np.asarray([3, 0, 2, 1], np.uint8), 2), [0b0110_0011])
+    with pytest.raises(ValueError):
+        pack_bits(np.asarray([2], np.uint8), 1)
+    for width in (1, 2, 4):
+        rng = np.random.default_rng(width)
+        codes = rng.integers(0, 1 << width, size=37, dtype=np.uint8)
+        np.testing.assert_array_equal(
+            unpack_bits(pack_bits(codes, width), 37, width), codes)
+
+
+def test_sub_nibble_roundtrip(tmp_path):
+    rng = np.random.default_rng(7)
+    crumbs = rng.integers(0, 4, size=(3, 10), dtype=np.uint8)
+    bits = rng.integers(0, 2, size=(26,), dtype=np.uint8)
+    p = tmp_path / "sub.msbt"
+    write_msbt(str(p), {
+        "w.codes2": U2(crumbs.shape, pack_bits(crumbs, 2)),
+        "w.codes1": U1(bits.shape, pack_bits(bits, 1)),
+    })
+    back = read_msbt(str(p))
+    assert isinstance(back["w.codes2"], U2)
+    assert isinstance(back["w.codes1"], U1)
+    np.testing.assert_array_equal(back["w.codes2"].unpack(), crumbs)
+    np.testing.assert_array_equal(back["w.codes1"].unpack(), bits)
+    # u1 nbytes = ceil(26/8) = 4
+    assert back["w.codes1"].packed.size == 4
+
+
+def test_v2_rejects_sub_nibble(tmp_path):
+    for dtype in (5, 6):
+        raw = b"MSBT" + struct.pack("<II", 2, 1)
+        raw += struct.pack("<H", 1) + b"c"
+        raw += struct.pack("<BB", dtype, 1) + struct.pack("<I", 4)
+        raw += struct.pack("<Q", 1) + bytes([0x1B])
+        p = tmp_path / f"bad{dtype}.msbt"
+        p.write_bytes(raw)
+        with pytest.raises(AssertionError):
+            read_msbt(str(p))
 
 
 def test_reads_v1_files(tmp_path):

@@ -1,16 +1,20 @@
-//! §Perf — solver hot-path throughput, the block-engine method grid, and
-//! the lazy-invalidation ablation (DESIGN.md "Design choices" #2). Reports
-//! elements/second for the production paths, blocks/second per engine
-//! method (serial and pooled), and compares the generation-counter heap
-//! against a naive rebuild-the-heap merger.
+//! §Perf — solver hot-path throughput, the block-engine method grid, the
+//! scan-vs-heap merge-kernel ablation, and the lazy-invalidation ablation
+//! (DESIGN.md "Design choices" #2). Reports elements/second for the
+//! production paths, blocks/second per engine method (serial and pooled),
+//! and compares the merge kernels on the block-wise hot-path instance
+//! shape (64 singletons → 8 groups) — the scan kernel must win there,
+//! asserted below.
 //!
 //! Machine-readable output: `BENCH_perf.json` (method → blocks/sec via
-//! `benchlib::write_bench_json`), uploaded as a CI artifact so the repo's
-//! perf trajectory accumulates.
+//! `benchlib::merge_bench_json`, shared with the `table3_quant_time`
+//! scheduler arm), uploaded as a CI artifact so the repo's perf
+//! trajectory accumulates.
 
 use std::collections::BTreeMap;
 
 use msb_quant::benchlib::{self, time_median};
+use msb_quant::msb::gg::{greedy_merge_ws_kernel, MergeKernel, MergeWorkspace};
 use msb_quant::msb::{Algo, CostParams, Grouping, Prefix, Solver, SortedMags};
 use msb_quant::pool::ThreadPool;
 use msb_quant::quant::{calibration_free_zoo, msb::MsbQuantizer, QuantConfig, Quantizer};
@@ -96,6 +100,81 @@ fn main() {
     );
     results.insert("msb-wgm-pooled".to_string(), bps_pooled);
 
+    // --- merge kernel ablation: scan vs heap on 64-element blocks --------
+    // The block-wise hot path merges ≤64 singletons down to 8 per block;
+    // the flat argmin scan must beat heap push/pop + stale-skip there.
+    let n_insts = if fast { 2048 } else { 8192 };
+    let mut prefixes: Vec<Prefix> = Vec::with_capacity(n_insts);
+    let mut blk = vec![0.0f32; 64];
+    for _ in 0..n_insts {
+        rng.fill_normal(&mut blk, 1.0);
+        let sm = SortedMags::from_values(&blk);
+        prefixes.push(Prefix::new(&sm.mags));
+    }
+    let merge_params = CostParams::unnormalized(0.0);
+    benchlib::header(&format!(
+        "merge kernel ablation ({n_insts} x 64-singleton blocks -> 8 groups)"
+    ));
+    let mut merge_times = BTreeMap::new();
+    for (label, kernel) in [("scan", MergeKernel::Scan), ("heap", MergeKernel::Heap)] {
+        let mut ws = MergeWorkspace::default();
+        let mut bounds = Vec::new();
+        let t = time_median(5, || {
+            for p in &prefixes {
+                let n = p.len();
+                greedy_merge_ws_kernel(
+                    &mut ws,
+                    p,
+                    (0..n).map(|i| (i, i + 1)),
+                    8,
+                    &merge_params,
+                    &mut bounds,
+                    kernel,
+                );
+            }
+        });
+        let bps = n_insts as f64 / t;
+        println!("  merge-{label:<30} {t:>8.4} s   {bps:>12.0} blocks/s");
+        results.insert(format!("merge-{label}-64-bps"), bps);
+        merge_times.insert(label.to_string(), t);
+    }
+    // golden equivalence on a few instances, then the headline claim
+    {
+        let mut ws = MergeWorkspace::default();
+        for p in prefixes.iter().take(32) {
+            let n = p.len();
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            greedy_merge_ws_kernel(
+                &mut ws,
+                p,
+                (0..n).map(|i| (i, i + 1)),
+                8,
+                &merge_params,
+                &mut a,
+                MergeKernel::Scan,
+            );
+            greedy_merge_ws_kernel(
+                &mut ws,
+                p,
+                (0..n).map(|i| (i, i + 1)),
+                8,
+                &merge_params,
+                &mut b,
+                MergeKernel::Heap,
+            );
+            assert_eq!(a, b, "merge kernels must produce identical groupings");
+        }
+    }
+    let speedup = merge_times["heap"] / merge_times["scan"];
+    println!("  scan speedup over heap: {speedup:.2}x");
+    assert!(
+        merge_times["scan"] < merge_times["heap"],
+        "scan kernel must beat the heap on 64-element block instances \
+         ({:.4}s vs {:.4}s)",
+        merge_times["scan"],
+        merge_times["heap"]
+    );
+
     // --- lazy invalidation ablation --------------------------------------
     let n2 = if fast { 2_000 } else { 20_000 };
     let mut small = vec![0.0f32; n2];
@@ -123,8 +202,9 @@ fn main() {
     assert!(t_heap < t_naive, "lazy heap must beat O(g^2) rescan");
 
     // --- machine-readable output -----------------------------------------
-    match benchlib::write_bench_json("perf", &results) {
-        Ok(path) => println!("\nwrote {} ({} methods)", path.display(), results.len()),
+    // merge (not overwrite): the table3 scheduler arm shares this file
+    match benchlib::merge_bench_json("perf", &results) {
+        Ok(path) => println!("\nwrote {} ({} keys)", path.display(), results.len()),
         Err(e) => eprintln!("\nBENCH_perf.json not written: {e}"),
     }
 }

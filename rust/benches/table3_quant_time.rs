@@ -2,21 +2,57 @@
 //! three trained models (4-bit block-wise). The paper's shape: WGM is
 //! 1-2 orders slower than RTN/HQQ/BnB but still tractable on CPU; GPTQ in
 //! between.
+//!
+//! Plus the **scheduler ablation**: the model-global `(layer, tile)` queue
+//! (`pipeline::quantize_model`) against a reproduction of the old
+//! sequential per-layer streaming on one shared pool. Runs on a synthetic
+//! multi-layer model so this arm works without `artifacts/`; bit-identity
+//! of the two paths is asserted before timing is reported, and the global
+//! scheduler must not lose to the per-layer-barrier path. Results merge
+//! into `BENCH_perf.json` (`sched-*` keys) alongside `perf_hotpath`.
 
-use msb_quant::benchlib;
+use std::collections::BTreeMap;
+
+use msb_quant::benchlib::{self, time_median};
 use msb_quant::harness::Artifacts;
+use msb_quant::io::manifest::{ModelSpec, ParamSpec};
+use msb_quant::io::msbt::{Tensor, TensorMap};
 use msb_quant::pipeline::quantize_model;
-use msb_quant::quant::registry::Method;
-use msb_quant::quant::QuantConfig;
+use msb_quant::pool::ThreadPool;
+use msb_quant::quant::registry::{self, Method};
+use msb_quant::quant::{QuantConfig, Quantizer};
+use msb_quant::stats::Rng;
+use msb_quant::tensor::Matrix;
 
-fn main() {
-    let arts = match Artifacts::load() {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("artifacts required: {e}");
-            return;
-        }
+/// A multi-layer stand-in model with alternating tall/wide layers (tail
+/// tiles land unevenly, which is exactly where per-layer barriers hurt).
+fn synthetic_model(layers: usize, dim: usize) -> (ModelSpec, TensorMap) {
+    let mut rng = Rng::new(42);
+    let mut params = Vec::new();
+    let mut weights = TensorMap::new();
+    for li in 0..layers {
+        let (r, c) = if li % 2 == 0 { (dim, dim * 4) } else { (dim * 4, dim) };
+        let name = format!("layer{li}.w");
+        params.push(ParamSpec { name: name.clone(), shape: vec![r, c], quant: true });
+        let m = Matrix::weightlike(r, c, &mut rng);
+        weights.insert(name, Tensor::f32(vec![r, c], m.data));
+    }
+    let spec = ModelSpec {
+        name: "synthetic".into(),
+        d: dim,
+        layers,
+        heads: 4,
+        ff: dim * 4,
+        seq: 64,
+        params,
+        weights_file: String::new(),
+        calib_file: String::new(),
+        fwd_hlo: String::new(),
     };
+    (spec, weights)
+}
+
+fn table3_grid(arts: &Artifacts) {
     let cfg = QuantConfig::block_wise(4, 64).with_window(1);
     let methods =
         [Method::Gptq, Method::Bnb, Method::Hqq, Method::Rtn, Method::Wgm];
@@ -45,4 +81,88 @@ fn main() {
         println!("{}", benchlib::row(&cells));
     }
     println!("\npaper shape: t(wgm) ≫ t(gptq) > t(bnb) ≈ t(hqq) ≈ t(rtn); scales with params.");
+}
+
+fn main() {
+    let fast = benchlib::fast_mode();
+    match Artifacts::load() {
+        Ok(arts) => table3_grid(&arts),
+        Err(e) => eprintln!(
+            "artifacts absent ({e}); skipping the Table 3 grid — the scheduler \
+             ablation below runs on synthetic weights"
+        ),
+    }
+
+    // --- scheduler ablation: global queue vs sequential shared pool ------
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).max(2);
+    let (layers, dim) = if fast { (6, 128) } else { (12, 512) };
+    let (spec, weights) = synthetic_model(layers, dim);
+    let cfg = QuantConfig::block_wise(4, 64).with_window(1);
+    let total_elems: usize = weights.values().map(|t| t.data.len()).sum();
+    let n_blocks = (total_elems / 64) as f64;
+    let reps = 3;
+    benchlib::header(&format!(
+        "scheduler ablation ({layers} layers, {threads} workers, wgm t=64)"
+    ));
+
+    // old path reproduction: layers stream one at a time through a shared
+    // pool, each ending in its own reassembly barrier (pre-scheduler
+    // pipeline, rebuilt from the public engine API). Matrices are
+    // pre-extracted so the arm times pure solve + barrier cost.
+    let mats: Vec<(String, Matrix)> = spec
+        .quantizable()
+        .map(|p| (p.name.clone(), weights.get(&p.name).unwrap().to_matrix().unwrap()))
+        .collect();
+    let q = registry::build_quantizer(Method::Wgm, None).unwrap();
+    let t_seq = time_median(reps, || {
+        let mut pool = ThreadPool::new(threads, threads * 4);
+        for (_, w) in &mats {
+            std::hint::black_box(q.quantize_with_pool(w, &cfg, &pool));
+        }
+        pool.shutdown();
+    });
+
+    // new path: every layer's tiles share one global queue; the only
+    // barrier is end-of-model
+    let t_global = time_median(reps, || {
+        std::hint::black_box(
+            quantize_model(&spec, weights.clone(), None, Method::Wgm, &cfg, threads)
+                .expect("quantize"),
+        );
+    });
+
+    // bit-identity of the two paths before any number is reported
+    {
+        let qm = quantize_model(&spec, weights.clone(), None, Method::Wgm, &cfg, threads)
+            .expect("quantize");
+        let mut pool = ThreadPool::new(threads, threads * 4);
+        for (name, w) in &mats {
+            let qt = q.quantize_with_pool(w, &cfg, &pool);
+            assert_eq!(
+                qt.dequant.data.as_slice(),
+                qm.weights.get(name).unwrap().as_f32().unwrap(),
+                "{name}: scheduler diverged from the sequential path"
+            );
+        }
+        pool.shutdown();
+    }
+
+    let (bps_seq, bps_global) = (n_blocks / t_seq, n_blocks / t_global);
+    println!("  sequential shared pool   {t_seq:>8.3} s   {bps_seq:>12.0} blocks/s");
+    println!("  model-global scheduler   {t_global:>8.3} s   {bps_global:>12.0} blocks/s");
+    println!("  speedup {:.2}x (barrier-free vs per-layer barriers)", t_seq / t_global);
+    assert!(
+        t_global <= t_seq * 1.10,
+        "global scheduler must not lose to the sequential path: \
+         {t_global:.3}s vs {t_seq:.3}s"
+    );
+
+    let mut results: BTreeMap<String, f64> = BTreeMap::new();
+    results.insert("sched-sequential-bps".to_string(), bps_seq);
+    results.insert("sched-global-bps".to_string(), bps_global);
+    results.insert("sched-speedup".to_string(), t_seq / t_global);
+    match benchlib::merge_bench_json("perf", &results) {
+        Ok(path) => println!("\nmerged {} ({} sched keys)", path.display(), results.len()),
+        Err(e) => eprintln!("\nBENCH_perf.json not merged: {e}"),
+    }
 }

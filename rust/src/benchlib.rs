@@ -75,20 +75,35 @@ pub fn bench_json_path(name: &str) -> std::path::PathBuf {
 }
 
 /// Env-independent core of [`write_bench_json`]: serialize
-/// `{schema, fast, results: {key: num}}` to an explicit path.
-pub fn write_bench_json_to(
+/// `{schema, fast, results: {key: num}}` (plus an optional provenance
+/// `note`) to an explicit path.
+fn write_bench_json_full(
     path: &std::path::Path,
     name: &str,
     results: &BTreeMap<String, f64>,
+    fast: bool,
+    note: Option<&str>,
 ) -> std::io::Result<()> {
     let mut obj = BTreeMap::new();
     obj.insert("schema".to_string(), Value::Str(format!("msb-bench/{name}/v1")));
-    obj.insert("fast".to_string(), Value::Bool(fast_mode()));
+    obj.insert("fast".to_string(), Value::Bool(fast));
+    if let Some(n) = note {
+        obj.insert("note".to_string(), Value::Str(n.to_string()));
+    }
     obj.insert(
         "results".to_string(),
         Value::Obj(results.iter().map(|(k, &v)| (k.clone(), Value::Num(v))).collect()),
     );
     std::fs::write(path, crate::io::json::to_string(&Value::Obj(obj)))
+}
+
+/// Serialize `{schema, fast, results}` to an explicit path.
+pub fn write_bench_json_to(
+    path: &std::path::Path,
+    name: &str,
+    results: &BTreeMap<String, f64>,
+) -> std::io::Result<()> {
+    write_bench_json_full(path, name, results, fast_mode(), None)
 }
 
 /// Persist a bench's results as JSON so the repo's perf trajectory
@@ -100,6 +115,52 @@ pub fn write_bench_json(
 ) -> std::io::Result<std::path::PathBuf> {
     let path = bench_json_path(name);
     write_bench_json_to(&path, name, results)?;
+    Ok(path)
+}
+
+/// Env-independent core of [`merge_bench_json`]: union `results` with any
+/// keys already at `path` (fresh `results` win on conflict), then write.
+/// Provenance survives the union: the `fast` flag is the OR of this run
+/// and the file's prior flag (any smoke-mode contribution taints the
+/// merged numbers), and a prior `note` field is carried forward.
+pub fn merge_bench_json_to(
+    path: &std::path::Path,
+    name: &str,
+    results: &BTreeMap<String, f64>,
+) -> std::io::Result<()> {
+    let mut merged = results.clone();
+    let mut fast = fast_mode();
+    let mut note = None;
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(v) = crate::io::json::parse(&text) {
+            if let Some(Value::Obj(old)) = v.get("results") {
+                for (k, val) in old {
+                    if let Some(x) = val.as_f64() {
+                        merged.entry(k.clone()).or_insert(x);
+                    }
+                }
+            }
+            fast |= v.get("fast").and_then(Value::as_bool).unwrap_or(false);
+            note = v.get("note").and_then(Value::as_str).map(String::from);
+        }
+    }
+    write_bench_json_full(path, name, &merged, fast, note.as_deref())
+}
+
+/// Like [`write_bench_json`], but union with any keys already in the
+/// file (fresh `results` win on conflict). Lets several bench binaries
+/// contribute to one trajectory file — `perf_hotpath` and the
+/// `table3_quant_time` scheduler arm both land in `BENCH_perf.json`.
+/// The `fast` taint is sticky by design: a merged file may still carry
+/// smoke-contributed keys you cannot distinguish, so the only way to
+/// certify a clean full-mode trajectory is to delete the file and rerun
+/// `make bench-perf` without `MSB_BENCH_FAST`.
+pub fn merge_bench_json(
+    name: &str,
+    results: &BTreeMap<String, f64>,
+) -> std::io::Result<std::path::PathBuf> {
+    let path = bench_json_path(name);
+    merge_bench_json_to(&path, name, results)?;
     Ok(path)
 }
 
@@ -136,6 +197,40 @@ mod tests {
     fn time_median_positive() {
         let t = time_median(3, || (0..1000).sum::<usize>());
         assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn merge_bench_json_unions_results() {
+        let dir = std::env::temp_dir().join(format!("msb_bench_merge_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("merged.json");
+        let mut first = BTreeMap::new();
+        first.insert("msb-wgm".to_string(), 100.0);
+        first.insert("shared".to_string(), 1.0);
+        write_bench_json_to(&path, "perf", &first).unwrap();
+        let mut second = BTreeMap::new();
+        second.insert("sched-global-bps".to_string(), 7.0);
+        second.insert("shared".to_string(), 2.0); // fresh value wins
+        merge_bench_json_to(&path, "perf", &second).unwrap();
+        let v = crate::io::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let r = v.req("results").unwrap();
+        assert_eq!(r.get("msb-wgm").and_then(Value::as_f64), Some(100.0));
+        assert_eq!(r.get("sched-global-bps").and_then(Value::as_f64), Some(7.0));
+        assert_eq!(r.get("shared").and_then(Value::as_f64), Some(2.0));
+        // merging onto a missing file is a plain write
+        let fresh = dir.join("fresh.json");
+        merge_bench_json_to(&fresh, "perf", &second).unwrap();
+        let v = crate::io::json::parse(&std::fs::read_to_string(&fresh).unwrap()).unwrap();
+        assert_eq!(v.req_str("schema").unwrap(), "msb-bench/perf/v1");
+        // provenance survives the union: a prior fast-mode flag taints the
+        // merged file and a note field is carried forward
+        let prov = dir.join("prov.json");
+        write_bench_json_full(&prov, "perf", &first, true, Some("seed note")).unwrap();
+        merge_bench_json_to(&prov, "perf", &second).unwrap();
+        let v = crate::io::json::parse(&std::fs::read_to_string(&prov).unwrap()).unwrap();
+        assert_eq!(v.get("fast").and_then(Value::as_bool), Some(true));
+        assert_eq!(v.get("note").and_then(Value::as_str), Some("seed note"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

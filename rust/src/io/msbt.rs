@@ -5,13 +5,17 @@
 //! record: name_len u16, name, dtype u8, ndim u8, dims u32*, nbytes u64, data
 //! ```
 //! All integers little-endian. dtype: 0=f32, 1=i32, 2=bf16(u16), 3=i8,
-//! 4=u4 (v2+: two 4-bit codes per byte, low nibble first).
+//! 4=u4 (v2+: two 4-bit codes per byte, low nibble first), 5=u2 (v3+:
+//! four 2-bit codes per byte), 6=u1 (v3+: eight 1-bit codes per byte) —
+//! all packed dtypes are LSB-first within each byte.
 //!
-//! Format v2 generalizes v1's `nbytes == n·sizeof(dtype)` invariant to a
-//! per-dtype byte count so packed sub-byte dtypes fit: for `U4`,
-//! `nbytes == ceil(n/2)` where `n` is the *logical* element count
-//! (`dims` product). The writer emits v2; the reader accepts v1 files
-//! unchanged (v1 never contains dtype 4).
+//! Format v2 generalized v1's `nbytes == n·sizeof(dtype)` invariant to a
+//! per-dtype byte count so packed sub-byte dtypes fit (`U4`: `nbytes ==
+//! ceil(n/2)` with `n` the *logical* element count, the `dims` product);
+//! v3 adds the sub-nibble `U2`/`U1` dtypes (`ceil(n/4)` / `ceil(n/8)`
+//! bytes) so 1- and 2-bit code payloads stop paying the nibble floor.
+//! The writer emits v3; the reader accepts v1 and v2 files unchanged
+//! (older versions never contain the newer dtypes).
 
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -20,7 +24,7 @@ use std::path::Path;
 use anyhow::{bail, ensure, Context, Result};
 
 /// Current container version written by [`write_file`].
-pub const FORMAT_VERSION: u32 = 2;
+pub const FORMAT_VERSION: u32 = 3;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum TensorData {
@@ -31,6 +35,10 @@ pub enum TensorData {
     /// Nibble-packed 4-bit codes: `n` logical elements in `ceil(n/2)`
     /// bytes, low nibble first.
     U4 { n: usize, packed: Vec<u8> },
+    /// Bit-packed 2-bit codes: `n` logical elements in `ceil(n/4)` bytes.
+    U2 { n: usize, packed: Vec<u8> },
+    /// Bit-packed 1-bit codes: `n` logical elements in `ceil(n/8)` bytes.
+    U1 { n: usize, packed: Vec<u8> },
 }
 
 impl TensorData {
@@ -41,7 +49,7 @@ impl TensorData {
             TensorData::I32(v) => v.len(),
             TensorData::Bf16(v) => v.len(),
             TensorData::I8(v) => v.len(),
-            TensorData::U4 { n, .. } => *n,
+            TensorData::U4 { n, .. } | TensorData::U2 { n, .. } | TensorData::U1 { n, .. } => *n,
         }
     }
 
@@ -56,11 +64,13 @@ impl TensorData {
             TensorData::Bf16(_) => 2,
             TensorData::I8(_) => 3,
             TensorData::U4 { .. } => 4,
+            TensorData::U2 { .. } => 5,
+            TensorData::U1 { .. } => 6,
         }
     }
 }
 
-/// Serialized byte count for `n` elements of dtype `code` (the v2
+/// Serialized byte count for `n` elements of dtype `code` (the v2+
 /// generalization of the v1 `n * sizeof` rule).
 fn dtype_nbytes(code: u8, n: usize) -> Option<usize> {
     match code {
@@ -68,7 +78,18 @@ fn dtype_nbytes(code: u8, n: usize) -> Option<usize> {
         2 => Some(n * 2),
         3 => Some(n),
         4 => Some(n.div_ceil(2)),
+        5 => Some(n.div_ceil(4)),
+        6 => Some(n.div_ceil(8)),
         _ => None,
+    }
+}
+
+/// The minimum container version that may contain dtype `code`.
+fn dtype_min_version(code: u8) -> u32 {
+    match code {
+        4 => 2,
+        5 | 6 => 3,
+        _ => 1,
     }
 }
 
@@ -107,6 +128,20 @@ impl Tensor {
         Tensor { dims, data: TensorData::U4 { n, packed } }
     }
 
+    /// Bit-packed 2-bit codes; `packed` holds `ceil(n/4)` bytes.
+    pub fn u2(dims: Vec<usize>, packed: Vec<u8>) -> Self {
+        let n = dims.iter().product::<usize>();
+        assert_eq!(n.div_ceil(4), packed.len(), "u2 byte count");
+        Tensor { dims, data: TensorData::U2 { n, packed } }
+    }
+
+    /// Bit-packed 1-bit codes; `packed` holds `ceil(n/8)` bytes.
+    pub fn u1(dims: Vec<usize>, packed: Vec<u8>) -> Self {
+        let n = dims.iter().product::<usize>();
+        assert_eq!(n.div_ceil(8), packed.len(), "u1 byte count");
+        Tensor { dims, data: TensorData::U1 { n, packed } }
+    }
+
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             TensorData::F32(v) => Ok(v),
@@ -140,6 +175,22 @@ impl Tensor {
         match &self.data {
             TensorData::U4 { packed, .. } => Ok(packed),
             other => bail!("expected u4 tensor, got dtype {}", other.dtype_code()),
+        }
+    }
+
+    /// The packed bytes of a `U2` tensor.
+    pub fn as_u2(&self) -> Result<&[u8]> {
+        match &self.data {
+            TensorData::U2 { packed, .. } => Ok(packed),
+            other => bail!("expected u2 tensor, got dtype {}", other.dtype_code()),
+        }
+    }
+
+    /// The packed bytes of a `U1` tensor.
+    pub fn as_u1(&self) -> Result<&[u8]> {
+        match &self.data {
+            TensorData::U1 { packed, .. } => Ok(packed),
+            other => bail!("expected u1 tensor, got dtype {}", other.dtype_code()),
         }
     }
 
@@ -202,8 +253,11 @@ pub fn read_bytes(bytes: &[u8]) -> Result<TensorMap> {
         let nbytes = r.u64()? as usize;
         let raw = r.take(nbytes)?;
         let n: usize = dims.iter().product();
-        if dtype == 4 && version < 2 {
-            bail!("{name}: u4 dtype requires msbt v2, file is v{version}");
+        if version < dtype_min_version(dtype) {
+            bail!(
+                "{name}: dtype {dtype} requires msbt v{}, file is v{version}",
+                dtype_min_version(dtype)
+            );
         }
         match dtype_nbytes(dtype, n) {
             Some(expect) if expect == nbytes => {}
@@ -226,6 +280,8 @@ pub fn read_bytes(bytes: &[u8]) -> Result<TensorMap> {
             ),
             3 => TensorData::I8(raw.iter().map(|&b| b as i8).collect()),
             4 => TensorData::U4 { n, packed: raw.to_vec() },
+            5 => TensorData::U2 { n, packed: raw.to_vec() },
+            6 => TensorData::U1 { n, packed: raw.to_vec() },
             _ => unreachable!("dtype validated above"),
         };
         out.insert(name, Tensor { dims, data });
@@ -281,7 +337,9 @@ pub fn write_file(path: impl AsRef<Path>, tensors: &TensorMap) -> Result<()> {
                 let bytes: Vec<u8> = v.iter().map(|&x| x as u8).collect();
                 f.write_all(&bytes)?;
             }
-            TensorData::U4 { packed, .. } => {
+            TensorData::U4 { packed, .. }
+            | TensorData::U2 { packed, .. }
+            | TensorData::U1 { packed, .. } => {
                 f.write_all(&(packed.len() as u64).to_le_bytes())?;
                 f.write_all(packed)?;
             }
@@ -339,6 +397,12 @@ mod tests {
             "nibbles".into(),
             Tensor::u4(vec![5], crate::quant::packing::pack_nibbles(&[1, 15, 0, 7, 9])),
         );
+        m.insert(
+            "crumbs".into(),
+            Tensor::u2(vec![6], crate::quant::packing::pack_bits(&[3, 0, 2, 1, 1, 2], 2)),
+        );
+        let bits = crate::quant::packing::pack_bits(&[1, 0, 1, 1, 0, 0, 1, 0, 1, 1], 1);
+        m.insert("bits".into(), Tensor::u1(vec![10], bits));
         m
     }
 
@@ -365,7 +429,7 @@ mod tests {
         write_file(&p, &m).unwrap();
         let raw = std::fs::read(&p).unwrap();
         assert_eq!(&raw[..4], b"MSBT");
-        assert_eq!(u32::from_le_bytes(raw[4..8].try_into().unwrap()), 2);
+        assert_eq!(u32::from_le_bytes(raw[4..8].try_into().unwrap()), 3);
         assert_eq!(u32::from_le_bytes(raw[8..12].try_into().unwrap()), 1);
         assert_eq!(u16::from_le_bytes(raw[12..14].try_into().unwrap()), 2);
         assert_eq!(&raw[14..16], b"ab");
@@ -384,7 +448,7 @@ mod tests {
         let p = dir.join("u4.msbt");
         write_file(&p, &m).unwrap();
         let raw = std::fs::read(&p).unwrap();
-        assert_eq!(u32::from_le_bytes(raw[4..8].try_into().unwrap()), 2); // v2
+        assert_eq!(u32::from_le_bytes(raw[4..8].try_into().unwrap()), 3); // v3
         assert_eq!(raw[15], 4); // dtype u4
         assert_eq!(raw[16], 1); // ndim
         assert_eq!(u32::from_le_bytes(raw[17..21].try_into().unwrap()), 5); // logical n
@@ -394,6 +458,48 @@ mod tests {
         assert_eq!(back.get("c").unwrap().data.len(), 5);
         assert_eq!(back.get("c").unwrap().as_u4().unwrap(), &[0xF1, 0x70, 0x09]);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sub_nibble_golden_layout() {
+        // pin the v3 sub-nibble record: u1 packs 10 logical bits in 2
+        // bytes, LSB-first (u2 round-trips via `sample()` above)
+        let mut m = TensorMap::new();
+        m.insert("b".into(), Tensor::u1(vec![10], vec![0b0100_1101, 0b0000_0011]));
+        let dir = std::env::temp_dir().join(format!("msbt_u1_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("u1.msbt");
+        write_file(&p, &m).unwrap();
+        let raw = std::fs::read(&p).unwrap();
+        assert_eq!(u32::from_le_bytes(raw[4..8].try_into().unwrap()), 3); // v3
+        assert_eq!(raw[15], 6); // dtype u1
+        assert_eq!(u32::from_le_bytes(raw[17..21].try_into().unwrap()), 10); // logical n
+        assert_eq!(u64::from_le_bytes(raw[21..29].try_into().unwrap()), 2); // nbytes
+        assert_eq!(&raw[29..31], &[0b0100_1101, 0b0000_0011]);
+        let back = read_file(&p).unwrap();
+        assert_eq!(back.get("b").unwrap().data.len(), 10);
+        assert_eq!(back.get("b").unwrap().as_u1().unwrap(), &[0b0100_1101, 0b0000_0011]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn older_versions_reject_newer_dtypes() {
+        // a v2 file must not contain the v3 sub-nibble dtypes
+        for dtype in [5u8, 6] {
+            let mut raw: Vec<u8> = Vec::new();
+            raw.extend_from_slice(b"MSBT");
+            raw.extend_from_slice(&2u32.to_le_bytes()); // version 2
+            raw.extend_from_slice(&1u32.to_le_bytes());
+            raw.extend_from_slice(&1u16.to_le_bytes());
+            raw.extend_from_slice(b"c");
+            raw.push(dtype);
+            raw.push(1);
+            raw.extend_from_slice(&4u32.to_le_bytes());
+            raw.extend_from_slice(&1u64.to_le_bytes());
+            raw.push(0x1B);
+            let err = read_bytes(&raw).unwrap_err();
+            assert!(format!("{err:#}").contains("requires msbt v3"), "{err:#}");
+        }
     }
 
     /// v1 files (no u4 dtype, `nbytes == n·sizeof`) must keep reading —
@@ -493,6 +599,8 @@ mod tests {
         assert!(t.as_f32().is_err());
         assert!(t.as_i32().is_ok());
         assert!(t.as_u4().is_err());
+        assert!(t.as_u2().is_err());
+        assert!(t.as_u1().is_err());
         assert!(t.as_bf16().is_err());
     }
 }

@@ -2,12 +2,24 @@
 //! adjacent-merge machinery reused by WGM (Algorithm 3) and WGM-LO
 //! (Algorithm 4).
 //!
-//! Sorted non-zero magnitudes start as singleton groups; a min-heap holds
-//! the cost *delta* of merging each adjacent pair; we repeatedly apply the
-//! cheapest merge until `target` groups remain. The paper's "ignore array"
-//! for invalidated merges is realized as lazy invalidation with per-group
-//! generation counters: stale heap entries are skipped on pop (ablated in
-//! benches/perf_hotpath.rs).
+//! Sorted non-zero magnitudes start as singleton groups; we repeatedly
+//! apply the cheapest adjacent merge until `target` groups remain. Two
+//! kernels compute "cheapest":
+//!
+//! * **Scan** — a flat delta-array argmin scan over the live adjacencies.
+//!   The block-wise hot path merges ≤64 singletons down to 8 per
+//!   64-element block; at that size the whole delta array is
+//!   cache-resident and a branch-light linear scan beats heap push/pop
+//!   and stale-entry skipping by a wide margin (ablated in
+//!   `benches/perf_hotpath.rs`).
+//! * **Heap** — a min-heap of merge deltas with lazy invalidation via
+//!   per-group generation counters (the paper's "ignore array"), which
+//!   wins asymptotically on large per-tensor instances.
+//!
+//! [`greedy_merge_ws`] dispatches on the live-group count
+//! ([`SCAN_KERNEL_MAX`]); both kernels select merges by the same total
+//! order — `(delta cost via f64 total_cmp, leftmost group first)` — so
+//! they produce **bit-identical groupings** (asserted in tests).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -43,6 +55,21 @@ struct Entry {
 
 const NONE: u32 = u32::MAX;
 
+/// Initial group counts at or below this take the scan kernel; above it
+/// the heap's O(g log g) wins. 64-element blocks (g₀ ≤ 64) always scan;
+/// per-tensor instances (g₀ = n/window, thousands+) always heap.
+pub const SCAN_KERNEL_MAX: usize = 128;
+
+/// Which adjacent-merge kernel to run. [`MergeKernel::Auto`] picks by
+/// instance size; the forced variants exist for the golden-equivalence
+/// tests and the `perf_hotpath` ablation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeKernel {
+    Auto,
+    Scan,
+    Heap,
+}
+
 /// Reusable buffers for [`greedy_merge_ws`] — the block-wise hot path runs
 /// one merge per 64-element block, so per-call allocation dominates without
 /// this (§Perf).
@@ -54,6 +81,23 @@ pub struct MergeWorkspace {
     next: Vec<u32>,
     gen: Vec<u32>,
     heap: BinaryHeap<Reverse<Entry>>,
+    delta: Vec<f64>,
+}
+
+/// Cost increase of merging adjacent groups `a` and `b` (O(1) via prefix
+/// sums). Shared by both kernels so their selection keys are bit-equal.
+#[inline]
+fn merge_delta(
+    prefix: &Prefix,
+    params: &CostParams,
+    start: &[u32],
+    end: &[u32],
+    a: usize,
+    b: usize,
+) -> f64 {
+    prefix.cost(start[a] as usize, end[b] as usize, params)
+        - prefix.cost(start[a] as usize, end[a] as usize, params)
+        - prefix.cost(start[b] as usize, end[b] as usize, params)
 }
 
 /// Merge adjacent groups of `initial` (a valid [`Grouping`] over `prefix`)
@@ -76,6 +120,7 @@ pub fn greedy_merge(
 /// Workspace variant: `initial` is an interval iterator; the resulting
 /// bounds land in `out_bounds` (cleared first). If the initial partition
 /// already satisfies `target`, `out_bounds` receives it unchanged.
+/// Dispatches between the scan and heap kernels by instance size.
 pub fn greedy_merge_ws(
     ws: &mut MergeWorkspace,
     prefix: &Prefix,
@@ -84,22 +129,105 @@ pub fn greedy_merge_ws(
     params: &CostParams,
     out_bounds: &mut Vec<usize>,
 ) {
+    greedy_merge_ws_kernel(ws, prefix, initial, target, params, out_bounds, MergeKernel::Auto)
+}
+
+/// [`greedy_merge_ws`] with an explicit kernel choice (tests / ablation).
+pub fn greedy_merge_ws_kernel(
+    ws: &mut MergeWorkspace,
+    prefix: &Prefix,
+    initial: impl Iterator<Item = (usize, usize)>,
+    target: usize,
+    params: &CostParams,
+    out_bounds: &mut Vec<usize>,
+    kernel: MergeKernel,
+) {
     let target = target.max(1);
-    let start = &mut ws.start;
-    let end = &mut ws.end;
-    start.clear();
-    end.clear();
+    ws.start.clear();
+    ws.end.clear();
     for (s, e) in initial {
-        start.push(s as u32);
-        end.push(e as u32);
+        ws.start.push(s as u32);
+        ws.end.push(e as u32);
     }
-    let g0 = start.len();
+    let g0 = ws.start.len();
     out_bounds.clear();
     if g0 <= target {
-        out_bounds.extend(end.iter().map(|&e| e as usize));
+        out_bounds.extend(ws.end.iter().map(|&e| e as usize));
         return;
     }
+    let scan = match kernel {
+        MergeKernel::Auto => g0 <= SCAN_KERNEL_MAX,
+        MergeKernel::Scan => true,
+        MergeKernel::Heap => false,
+    };
+    if scan {
+        scan_merge(ws, prefix, target, params, out_bounds);
+    } else {
+        heap_merge(ws, prefix, target, params, out_bounds);
+    }
+}
 
+/// Scan kernel: live groups stay compacted in `ws.start`/`ws.end` and the
+/// adjacency deltas in a flat `ws.delta` array; every round is one linear
+/// argmin plus two delta refreshes and an O(g) compaction memmove —
+/// trivially cache-resident for block-sized instances.
+fn scan_merge(
+    ws: &mut MergeWorkspace,
+    prefix: &Prefix,
+    target: usize,
+    params: &CostParams,
+    out_bounds: &mut Vec<usize>,
+) {
+    let start = &mut ws.start;
+    let end = &mut ws.end;
+    let delta = &mut ws.delta;
+    let mut len = start.len();
+    delta.clear();
+    delta.reserve(len - 1);
+    for a in 0..len - 1 {
+        delta.push(merge_delta(prefix, params, start, end, a, a + 1));
+    }
+    while len > target {
+        // first-index argmin under f64 total order — the same selection
+        // rule as the heap's (cost, leftmost-slot) entry ordering
+        let mut k = 0usize;
+        let mut best = delta[0];
+        for (i, &d) in delta.iter().enumerate().skip(1) {
+            if d.total_cmp(&best) == std::cmp::Ordering::Less {
+                best = d;
+                k = i;
+            }
+        }
+        // merge k+1 into k, compact, refresh the two touched adjacencies
+        end[k] = end[k + 1];
+        start.remove(k + 1);
+        end.remove(k + 1);
+        delta.remove(k);
+        len -= 1;
+        if k > 0 {
+            delta[k - 1] = merge_delta(prefix, params, start, end, k - 1, k);
+        }
+        if k + 1 < len {
+            delta[k] = merge_delta(prefix, params, start, end, k, k + 1);
+        }
+    }
+    out_bounds.reserve(len);
+    out_bounds.extend(end.iter().map(|&e| e as usize));
+}
+
+/// Heap kernel: min-heap of merge deltas with lazy invalidation via
+/// per-group generation counters (stale entries are skipped on pop — the
+/// paper's "ignore array").
+fn heap_merge(
+    ws: &mut MergeWorkspace,
+    prefix: &Prefix,
+    target: usize,
+    params: &CostParams,
+    out_bounds: &mut Vec<usize>,
+) {
+    let start = &mut ws.start;
+    let end = &mut ws.end;
+    let g0 = start.len();
     let prev = &mut ws.prev;
     let next = &mut ws.next;
     let gen = &mut ws.gen;
@@ -112,18 +240,11 @@ pub fn greedy_merge_ws(
     next[g0 - 1] = NONE;
     gen.resize(g0, 0);
 
-    let delta = |start: &[u32], end: &[u32], a: usize, b: usize| -> f64 {
-        let merged = prefix.cost(start[a] as usize, end[b] as usize, params);
-        merged
-            - prefix.cost(start[a] as usize, end[a] as usize, params)
-            - prefix.cost(start[b] as usize, end[b] as usize, params)
-    };
-
     let heap = &mut ws.heap;
     heap.clear();
     for a in 0..g0 - 1 {
         heap.push(Reverse(Entry {
-            cost: Cost(delta(start, end, a, a + 1)),
+            cost: Cost(merge_delta(prefix, params, start, end, a, a + 1)),
             left: a as u32,
             lgen: 0,
             rgen: 0,
@@ -163,7 +284,7 @@ pub fn greedy_merge_ws(
         if pa != NONE {
             let pa = pa as usize;
             heap.push(Reverse(Entry {
-                cost: Cost(delta(start, end, pa, a)),
+                cost: Cost(merge_delta(prefix, params, start, end, pa, a)),
                 left: pa as u32,
                 lgen: gen[pa],
                 rgen: gen[a],
@@ -172,7 +293,7 @@ pub fn greedy_merge_ws(
         if nb != NONE {
             let nb = nb as usize;
             heap.push(Reverse(Entry {
-                cost: Cost(delta(start, end, a, nb)),
+                cost: Cost(merge_delta(prefix, params, start, end, a, nb)),
                 left: a as u32,
                 lgen: gen[a],
                 rgen: gen[nb],
@@ -243,6 +364,70 @@ mod tests {
         let vals = [1.0f32, 2.0, 3.0];
         let (_, g) = solve_values(&vals, 10, 0.0);
         assert_eq!(g.num_groups(), 3);
+    }
+
+    /// Both kernels for every instance below the dispatch threshold (and
+    /// the heap above it) must emit the exact same bounds — the
+    /// bit-identity guarantee the scan kernel ships under.
+    #[test]
+    fn scan_and_heap_kernels_bit_identical() {
+        crate::testing::check(
+            "scan == heap on hostile magnitudes",
+            40,
+            |rng| {
+                let n = 2 + rng.below(SCAN_KERNEL_MAX + 64);
+                let window = 1 + rng.below(4);
+                (hostile_magnitudes(rng, n), 1 + rng.below(16), window)
+            },
+            |(vals, g_target, window)| {
+                let sm = SortedMags::from_values(vals);
+                if sm.mags.is_empty() {
+                    return true;
+                }
+                let p = Prefix::new(&sm.mags);
+                let params = CostParams::unnormalized(0.01);
+                let n = sm.mags.len();
+                let win = *window;
+                let n_init = n.div_ceil(win);
+                let initial = move || (0..n_init).map(move |i| (i * win, ((i + 1) * win).min(n)));
+                let mut ws = MergeWorkspace::default();
+                let mut out = Vec::new();
+                let mut runs: Vec<Vec<usize>> = Vec::new();
+                for kernel in [MergeKernel::Scan, MergeKernel::Heap, MergeKernel::Auto] {
+                    greedy_merge_ws_kernel(
+                        &mut ws,
+                        &p,
+                        initial(),
+                        *g_target,
+                        &params,
+                        &mut out,
+                        kernel,
+                    );
+                    runs.push(out.clone());
+                }
+                runs[0] == runs[1] && runs[2] == runs[0]
+            },
+        );
+    }
+
+    /// Ties are where kernel equivalence usually breaks: constant inputs
+    /// make every merge delta identical, so selection order is decided
+    /// purely by the leftmost-first rule both kernels must share.
+    #[test]
+    fn kernels_agree_on_all_tied_deltas() {
+        let vals = vec![1.0f32; 64];
+        let sm = SortedMags::from_values(&vals);
+        let p = Prefix::new(&sm.mags);
+        let params = CostParams::unnormalized(0.25);
+        let singles = (0..64).map(|i| (i, i + 1));
+        let mut ws = MergeWorkspace::default();
+        let (mut scan, mut heap) = (Vec::new(), Vec::new());
+        let s = singles.clone();
+        greedy_merge_ws_kernel(&mut ws, &p, s, 8, &params, &mut scan, MergeKernel::Scan);
+        greedy_merge_ws_kernel(&mut ws, &p, singles, 8, &params, &mut heap, MergeKernel::Heap);
+        assert_eq!(scan, heap);
+        assert_eq!(scan.len(), 8);
+        assert_eq!(*scan.last().unwrap(), 64);
     }
 
     #[test]

@@ -3,12 +3,12 @@
 //! the L3 "offline PTQ" path (the paper's CPU-based quantization step); the
 //! online path is `runtime`/`server`.
 //!
-//! Parallelism: block-partitioned methods fan the *blocks within each
-//! layer* out over a shared [`ThreadPool`] (`quant::engine`), so a single
-//! large FFN matrix no longer serializes a solve — the dominant wall-time
-//! term for Table-3-style runs. Whole-matrix methods (GPTQ's
-//! column-sequential error propagation) keep the per-layer fan-out instead.
-//! Method dispatch lives in [`crate::quant::registry`].
+//! Parallelism: the model-global [`scheduler`] enqueues *every* layer's
+//! work at once on one shared [`ThreadPool`] — block-partitioned layers as
+//! `(layer, tile)` jobs, whole-matrix layers (GPTQ's column-sequential
+//! error propagation, per-tensor configs) as single jobs beside them — so
+//! the only barrier is end-of-model and workers never idle at a layer's
+//! tail tile. Method dispatch lives in [`crate::quant::registry`].
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -18,13 +18,14 @@ use anyhow::{ensure, Context, Result};
 use crate::io::manifest::ModelSpec;
 use crate::io::msbt::{Tensor, TensorData, TensorMap};
 use crate::pool::ThreadPool;
-use crate::quant::dq::{double_quantize, DqConfig};
 use crate::quant::engine;
 use crate::quant::packing::{CodeScheme, PackedCodes, PackedScales, PackedTensor};
-use crate::quant::{registry, Granularity, QuantConfig, Quantizer};
-use crate::tensor::Matrix;
+use crate::quant::{registry, QuantConfig};
+
+pub mod scheduler;
 
 pub use crate::quant::registry::Method;
+pub use scheduler::LayerJob;
 
 /// `<layer>.layout` record version for packed payload maps.
 const PACKED_LAYOUT_VERSION: i32 = 2;
@@ -53,9 +54,9 @@ pub struct QuantizedModel {
     pub weights: TensorMap,
     pub layers: Vec<LayerStat>,
     pub wall_seconds: f64,
-    /// `(submitted, completed)` block-tile jobs on the intra-layer pool;
-    /// `None` when the run used the per-layer path (FP, GPTQ, per-tensor
-    /// configs, whole-tensor XNOR, threads=1).
+    /// `(submitted, completed)` jobs on the model-global pool — block
+    /// tiles and whole-matrix layer jobs combined; `None` when the run
+    /// took the serial reference path (threads=1, or nothing to quantize).
     pub pool_stats: Option<(usize, usize)>,
     /// Per-layer packed payloads (codes + scale tables); populated when
     /// [`QuantConfig::emit_packed`] was set and the method supports
@@ -84,8 +85,9 @@ impl QuantizedModel {
         bytes as f64 * 8.0 / elems.max(1) as f64
     }
 
-    /// Serialize the packed payloads into a `.msbt`-v2-ready [`TensorMap`]:
-    /// per layer `<name>.codes` (U4 or I8) + `<name>.scales` (bf16/f32) +
+    /// Serialize the packed payloads into a `.msbt`-v3-ready [`TensorMap`]:
+    /// per layer `<name>.codes` (U1/U2/U4/I8 at the true code width) +
+    /// `<name>.scales` (bf16/f32) +
     /// `<name>.layout` (+ `<name>.zeros` when exact-zero exceptions
     /// exist), one global `__packed__.method` record, and the pass-through
     /// (non-quantized) tensors copied as-is so a runner can boot from the
@@ -110,6 +112,8 @@ impl QuantizedModel {
             }
             let dims = vec![pt.rows, pt.cols];
             let codes = match &pt.codes {
+                PackedCodes::U1(p) => Tensor::u1(dims, p.clone()),
+                PackedCodes::U2(p) => Tensor::u2(dims, p.clone()),
                 PackedCodes::U4(p) => Tensor::u4(dims, p.clone()),
                 PackedCodes::I8(v) => Tensor::i8(dims, v.clone()),
             };
@@ -242,6 +246,16 @@ fn reconstruct_packed(
     let (rows, cols) = (codes_t.dims[0], codes_t.dims[1]);
     let n = rows * cols;
     let codes = match &codes_t.data {
+        TensorData::U1 { packed, .. } => {
+            ensure!(code_bits == 1, "{name}: u1 codes with {code_bits}-bit layout");
+            PackedCodes::U1(packed.clone())
+        }
+        TensorData::U2 { packed, .. } => {
+            ensure!(code_bits <= 2, "{name}: u2 codes with {code_bits}-bit layout");
+            PackedCodes::U2(packed.clone())
+        }
+        // u4 also carries legacy sub-nibble payloads (v2 artifacts stored
+        // 1-bit codes at nibble granularity)
         TensorData::U4 { packed, .. } => {
             ensure!(code_bits <= 4, "{name}: u4 codes with {code_bits}-bit layout");
             PackedCodes::U4(packed.clone())
@@ -253,10 +267,10 @@ fn reconstruct_packed(
             }
             PackedCodes::I8(v.clone())
         }
-        _ => anyhow::bail!("{name}: codes must be u4 or i8"),
+        _ => anyhow::bail!("{name}: codes must be u1, u2, u4 or i8"),
     };
-    if matches!(codes, PackedCodes::U4(_)) && scheme == CodeScheme::SignLevel {
-        // nibble symbols can address up to 2^{w-1} levels — the scale
+    if !matches!(codes, PackedCodes::I8(_)) && scheme == CodeScheme::SignLevel {
+        // packed symbols can address up to 2^{w-1} levels — the scale
         // table must cover them or decode would index out of bounds
         ensure!(
             scales_per_block >= 1usize << (code_bits - 1),
@@ -307,126 +321,86 @@ fn reconstruct_packed(
     })
 }
 
-/// Pull the layer Hessian out of the calibration tensors (GPTQ only).
-fn layer_hessian<'a>(
-    calib: Option<&'a TensorMap>,
-    layer: &str,
-    in_dim: usize,
-) -> Result<(&'a [f32], usize)> {
-    let calib = calib.context("gptq requires calibration tensors")?;
-    let h = calib
-        .get(layer)
-        .with_context(|| format!("calib missing Hessian for {layer}"))?;
-    anyhow::ensure!(h.dims == vec![in_dim, in_dim], "{layer}: bad Hessian dims");
-    Ok((h.as_f32()?, in_dim))
-}
-
-type LayerResult = (String, LayerStat, Vec<f32>, Option<PackedTensor>);
-
-/// Quantize one layer (already-built quantizer borrowed or fresh) and
-/// record its stats. `pool` enables block-level parallelism.
-fn quantize_layer(
-    method: Method,
-    name: String,
-    w: &Matrix,
-    cfg: &QuantConfig,
-    calib: Option<&TensorMap>,
-    pool: Option<&ThreadPool>,
-) -> Result<LayerResult> {
-    let lt0 = Instant::now();
-    let hessian;
-    let h_ref = if method.needs_calibration() {
-        hessian = layer_hessian(calib, &name, w.cols)?;
-        Some(hessian)
-    } else {
-        None
-    };
-    let q = registry::build_quantizer(method, h_ref)?;
-    let mut qt = match pool {
-        Some(pool) => q.quantize_with_pool(w, cfg, pool),
-        None => q.quantize(w, cfg),
-    };
-    if method == Method::WgmDq {
-        // the coarsened-scale rebuild invalidates the base payload
-        qt = double_quantize(&qt, cfg, &DqConfig::default());
-    }
-    let stat = LayerStat {
-        name: name.clone(),
-        rows: w.rows,
-        cols: w.cols,
-        sse: qt.mse(w),
-        effective_bits: qt.effective_bits,
-        seconds: lt0.elapsed().as_secs_f64(),
-    };
-    Ok((name, stat, qt.dequant.data, qt.packed))
-}
-
 /// Quantize every quantizable matrix of `spec` with `method` under `cfg`
-/// using `threads` workers. Block-wise configs parallelize *within* each
-/// layer (tiles of blocks on a shared pool); GPTQ and per-tensor configs
-/// fan out across layers instead. Non-quantizable parameters (norms,
-/// embeddings) pass through untouched — the paper's weight-only protocol.
+/// using `threads` workers via the model-global [`scheduler`]: all layers'
+/// block tiles and whole-matrix jobs share one pool, and the only barrier
+/// is end-of-model. Non-quantizable parameters (norms, embeddings) pass
+/// through untouched — the paper's weight-only protocol.
 ///
 /// `weights` is taken by value: quantized tensors are *moved* into their
 /// layer solves and replaced in place, and pass-through tensors are never
-/// copied — the old deep-clone of the whole map is gone.
+/// copied.
 pub fn quantize_model(
     spec: &ModelSpec,
-    mut weights: TensorMap,
+    weights: TensorMap,
     calib: Option<&TensorMap>,
     method: Method,
     cfg: &QuantConfig,
     threads: usize,
 ) -> Result<QuantizedModel> {
+    quantize_model_mixed(spec, weights, calib, method, &BTreeMap::new(), cfg, threads)
+}
+
+/// [`quantize_model`] with a heterogeneous per-layer method assignment:
+/// layers named in `overrides` use their assigned method, everything else
+/// uses `default`. Tiled layers (block-wise calibration-free methods) and
+/// whole-matrix layers (GPTQ, per-tensor configs, `Method::Fp`
+/// pass-through) mix freely on the one global pool; results are
+/// bit-identical to the serial path for every assignment (asserted by
+/// tests). The returned [`QuantizedModel::method`] records `default`.
+pub fn quantize_model_mixed(
+    spec: &ModelSpec,
+    mut weights: TensorMap,
+    calib: Option<&TensorMap>,
+    default: Method,
+    overrides: &BTreeMap<String, Method>,
+    cfg: &QuantConfig,
+    threads: usize,
+) -> Result<QuantizedModel> {
     let t0 = Instant::now();
     let threads = threads.max(1);
-    if method == Method::Fp {
-        return Ok(QuantizedModel {
-            method,
-            weights,
-            layers: Vec::new(),
-            wall_seconds: t0.elapsed().as_secs_f64(),
-            pool_stats: None,
-            packed: BTreeMap::new(),
-        });
+
+    // every override must name a quantizable param — a typo'd layer name
+    // silently falling through to the default method would ship an
+    // artifact with the wrong per-layer precision and no diagnostic
+    for key in overrides.keys() {
+        ensure!(
+            spec.quantizable().any(|p| &p.name == key),
+            "override '{key}' does not name a quantizable parameter of '{}'",
+            spec.name
+        );
     }
 
-    // collect the work list, moving each quantizable tensor out of the map
-    let mut jobs: Vec<(String, Matrix)> = Vec::new();
+    // collect the work list, moving each quantizable tensor out of the map;
+    // FP-assigned layers are the identity and stay in place untouched
+    let mut jobs: Vec<LayerJob> = Vec::new();
+    let mut packing: Option<Method> = None;
     for p in spec.quantizable() {
+        let method = overrides.get(&p.name).copied().unwrap_or(default);
+        if method == Method::Fp {
+            continue;
+        }
+        // fail BEFORE the (expensive) solve: export_packed can only emit a
+        // single-method artifact, and WGM-DQ / GPTQ never carry payloads
+        if cfg.emit_packed && !matches!(method, Method::Gptq | Method::WgmDq) {
+            match packing {
+                None => packing = Some(method),
+                Some(prev) if prev != method => anyhow::bail!(
+                    "emit_packed with mixed packable methods ({} vs {}): \
+                     payloads cannot share one artifact",
+                    prev.name(),
+                    method.name()
+                ),
+                _ => {}
+            }
+        }
         let t = weights
             .remove(&p.name)
             .with_context(|| format!("weights missing {}", p.name))?;
-        jobs.push((p.name.clone(), t.into_matrix()?));
+        jobs.push(LayerJob { name: p.name.clone(), w: t.into_matrix()?, method });
     }
 
-    // Per-layer fan-out when block tiling cannot help: GPTQ is whole-matrix
-    // (column-sequential), per-tensor configs and whole-tensor XNOR are a
-    // single block instance per layer, and one worker gains nothing from
-    // tiling.
-    let per_layer = method.needs_calibration()
-        || threads == 1
-        || matches!(cfg.granularity, Granularity::PerTensor)
-        || method == Method::Xnor;
-
-    let mut pool_stats = None;
-    let results: Vec<LayerResult> = if per_layer {
-        let raw: Vec<Result<LayerResult>> = crate::pool::scoped_map(jobs, threads, |(name, w)| {
-            quantize_layer(method, name, &w, cfg, calib, None)
-        });
-        raw.into_iter().collect::<Result<Vec<_>>>()?
-    } else {
-        // intra-layer block parallelism on a shared pool: layers stream
-        // through sequentially, each saturating every worker
-        let mut pool = ThreadPool::new(threads, threads * 4);
-        let mut out = Vec::with_capacity(jobs.len());
-        for (name, w) in jobs {
-            out.push(quantize_layer(method, name, &w, cfg, calib, Some(&pool))?);
-        }
-        pool.shutdown();
-        pool_stats = Some(pool.stats());
-        out
-    };
+    let (results, pool_stats) = scheduler::run(jobs, calib, cfg, threads)?;
 
     let mut packed = BTreeMap::new();
     let mut layers = Vec::new();
@@ -440,7 +414,7 @@ pub fn quantize_model(
     layers.sort_by(|a, b| a.name.cmp(&b.name));
 
     Ok(QuantizedModel {
-        method,
+        method: default,
         weights,
         layers,
         wall_seconds: t0.elapsed().as_secs_f64(),
@@ -454,6 +428,7 @@ mod tests {
     use super::*;
     use crate::io::manifest::{ModelSpec, ParamSpec};
     use crate::stats::Rng;
+    use crate::tensor::Matrix;
 
     fn tiny_spec() -> ModelSpec {
         ModelSpec {
@@ -563,7 +538,9 @@ mod tests {
         )
         .unwrap();
         assert_eq!(qm.layers.len(), 2);
-        assert!(qm.pool_stats.is_none(), "gptq keeps the per-layer path");
+        // GPTQ layers run as whole-matrix jobs on the global pool now:
+        // one job per layer, all drained
+        assert_eq!(qm.pool_stats, Some((2, 2)));
     }
 
     #[test]
@@ -638,6 +615,115 @@ mod tests {
         assert_eq!(submitted, completed, "all tile jobs must drain");
     }
 
+    /// Tentpole anchor: a heterogeneous method set — a calibrated
+    /// whole-matrix GPTQ layer next to a tiled MSB layer — in ONE model on
+    /// ONE global pool must be bit-identical to the serial path, and each
+    /// layer must match its homogeneous-model counterpart exactly.
+    #[test]
+    fn global_scheduler_mixed_methods_bit_identity() {
+        let spec = tiny_spec();
+        let w = tiny_weights(20);
+        let mut calib = TensorMap::new();
+        let mut h = vec![0.0f32; 64 * 64];
+        for i in 0..64 {
+            h[i * 64 + i] = 1.0;
+        }
+        calib.insert("layer0.wq".into(), Tensor::f32(vec![64, 64], h));
+        let mut overrides = BTreeMap::new();
+        overrides.insert("layer0.wq".to_string(), Method::Gptq);
+        let cfg = QuantConfig::block_wise(4, 64);
+
+        let serial =
+            quantize_model_mixed(&spec, w.clone(), Some(&calib), Method::Wgm, &overrides, &cfg, 1)
+                .unwrap();
+        assert!(serial.pool_stats.is_none(), "threads=1 is the serial reference");
+        for threads in [2usize, 4] {
+            let global = quantize_model_mixed(
+                &spec,
+                w.clone(),
+                Some(&calib),
+                Method::Wgm,
+                &overrides,
+                &cfg,
+                threads,
+            )
+            .unwrap();
+            assert_eq!(serial.weights, global.weights, "threads={threads}");
+            let (submitted, completed) = global.pool_stats.expect("global pool engaged");
+            assert_eq!(submitted, completed, "threads={threads}: all jobs drained");
+        }
+
+        // each layer == its homogeneous-model counterpart
+        let gptq_only = quantize_model(&spec, w.clone(), Some(&calib), Method::Gptq, &cfg, 1);
+        // (gptq needs a Hessian for BOTH layers in a homogeneous run)
+        assert!(gptq_only.is_err());
+        let wgm_only = quantize_model(&spec, w.clone(), None, Method::Wgm, &cfg, 1).unwrap();
+        assert_eq!(serial.weights.get("layer0.wv"), wgm_only.weights.get("layer0.wv"));
+        assert_ne!(serial.weights.get("layer0.wq"), wgm_only.weights.get("layer0.wq"));
+    }
+
+    /// Whole-tensor XNOR (a per-layer job) mixed with tiled MSB blocks:
+    /// the exact `(submitted, completed)` accounting is 1 whole job + the
+    /// deterministic tile count of the tiled layer.
+    #[test]
+    fn global_scheduler_pool_accounting() {
+        let spec = tiny_spec();
+        let w = tiny_weights(21);
+        let mut overrides = BTreeMap::new();
+        overrides.insert("layer0.wq".to_string(), Method::Xnor);
+        let cfg = QuantConfig::block_wise(4, 64);
+        let qm = quantize_model_mixed(&spec, w.clone(), None, Method::Wgm, &overrides, &cfg, 4)
+            .unwrap();
+        // layer0.wv: 32x64 = 2048 elems / 64 = 32 blocks; tile_size(32, 4)
+        // = 2 blocks/tile => 16 tiles; plus 1 whole-matrix xnor job
+        assert_eq!(qm.pool_stats, Some((17, 17)));
+        let serial = quantize_model_mixed(&spec, w, None, Method::Wgm, &overrides, &cfg, 1)
+            .unwrap();
+        assert_eq!(serial.weights, qm.weights);
+    }
+
+    /// An FP override passes that layer through untouched while the rest
+    /// of the model still quantizes.
+    #[test]
+    fn mixed_fp_override_passes_through() {
+        let spec = tiny_spec();
+        let w = tiny_weights(22);
+        let mut overrides = BTreeMap::new();
+        overrides.insert("layer0.wv".to_string(), Method::Fp);
+        let cfg = QuantConfig::block_wise(4, 64);
+        let qm = quantize_model_mixed(&spec, w.clone(), None, Method::Wgm, &overrides, &cfg, 2)
+            .unwrap();
+        assert_eq!(qm.weights.get("layer0.wv"), w.get("layer0.wv"));
+        assert_ne!(qm.weights.get("layer0.wq"), w.get("layer0.wq"));
+        assert_eq!(qm.layers.len(), 1);
+    }
+
+    /// Misassignments fail fast: a typo'd override key errors instead of
+    /// silently quantizing with the default method, and a packed-emission
+    /// run with two different packable methods is rejected BEFORE the
+    /// solve instead of after it (export_packed can only emit one method).
+    #[test]
+    fn mixed_guards_reject_bad_assignments() {
+        let spec = tiny_spec();
+        let w = tiny_weights(24);
+        let cfg = QuantConfig::block_wise(4, 64);
+        let mut typo = BTreeMap::new();
+        typo.insert("layer0.Wq".to_string(), Method::Rtn); // wrong case
+        let err = quantize_model_mixed(&spec, w.clone(), None, Method::Wgm, &typo, &cfg, 1)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("layer0.Wq"), "{err:#}");
+
+        let mut mixed = BTreeMap::new();
+        mixed.insert("layer0.wq".to_string(), Method::BlockedXnor);
+        let packed_cfg = cfg.clone().with_packed();
+        let err =
+            quantize_model_mixed(&spec, w.clone(), None, Method::Wgm, &mixed, &packed_cfg, 1)
+                .unwrap_err();
+        assert!(format!("{err:#}").contains("mixed packable methods"), "{err:#}");
+        // without emission the same assignment is fine
+        assert!(quantize_model_mixed(&spec, w, None, Method::Wgm, &mixed, &cfg, 1).is_ok());
+    }
+
     /// Packed export → decode round-trips bit-identically through the
     /// TensorMap payload layout, pass-through tensors included, and the
     /// payload itself is thread-count deterministic.
@@ -665,6 +751,29 @@ mod tests {
             }
             let qm4 = quantize_model(&spec, w.clone(), None, method, &cfg, 4).unwrap();
             assert_eq!(qm.packed, qm4.packed, "{method:?} payload thread determinism");
+        }
+    }
+
+    /// Sub-nibble payloads survive the full export → TensorMap → decode
+    /// path: blocked-XNOR emits u1 codes, 2-bit MSB u2 codes, and both
+    /// decode back bit-identically to the simulated dequant.
+    #[test]
+    fn packed_sub_nibble_export_roundtrip() {
+        let spec = tiny_spec();
+        let w = tiny_weights(23);
+        for (method, bits) in [(Method::BlockedXnor, 1u32), (Method::Wgm, 2)] {
+            let cfg = QuantConfig::block_wise(bits, 64).with_packed();
+            let qm = quantize_model(&spec, w.clone(), None, method, &cfg, 2).unwrap();
+            let map = qm.export_packed().unwrap();
+            let codes = map.get("layer0.wq.codes").unwrap();
+            match bits {
+                1 => assert!(codes.as_u1().is_ok(), "{method:?}"),
+                _ => assert!(codes.as_u2().is_ok(), "{method:?}"),
+            }
+            for threads in [1usize, 3] {
+                let decoded = decode_packed_model(&map, threads).unwrap();
+                assert_eq!(decoded, qm.weights, "{method:?} threads={threads}");
+            }
         }
     }
 

@@ -1,0 +1,314 @@
+//! The model-global work scheduler: one queue of `(layer, tile)` and
+//! whole-layer jobs spanning *every* eligible layer at once.
+//!
+//! The previous pipeline streamed layers sequentially through the shared
+//! [`ThreadPool`] — each layer ended in an ordered-reassembly barrier, so
+//! workers idled at every layer's tail tile, and per-layer jobs (GPTQ,
+//! per-tensor configs) could not mix with tiled layers at all. Here the
+//! whole model is enqueued up front ([`ThreadPool::submit_many`] batches
+//! the tiles), heterogeneous jobs share the pool — a whole-matrix GPTQ
+//! solve runs *next to* another layer's MSB tiles — and the only barrier
+//! is end-of-model. Per-layer completion is tracked by the collector,
+//! which reassembles each layer's tiles in input order the moment its last
+//! tile lands (overlapping assembly with ongoing worker compute).
+//!
+//! Determinism: every tile is computed by the same
+//! [`engine::run_tile`](crate::quant::engine::run_tile) kernel on the same
+//! bytes as the serial driver, and reassembly is input-ordered, so results
+//! are bit-identical to `threads = 1` for any worker count and any
+//! completion order (asserted across the method × granularity grid).
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::io::msbt::TensorMap;
+use crate::pool::ThreadPool;
+use crate::quant::dq::{double_quantize, DqConfig};
+use crate::quant::engine::{self, BlockQuantizer, TileLayout, TileMeta};
+use crate::quant::packing::PackedTensor;
+use crate::quant::registry::{self, Method};
+use crate::quant::{Granularity, QuantConfig, QuantizedTensor};
+use crate::tensor::Matrix;
+
+use super::LayerStat;
+
+/// One layer's work order: the (already extracted) weight matrix and the
+/// method quantizing it. Heterogeneous method sets are allowed — the
+/// scheduler mixes tiled and whole-layer jobs freely.
+pub struct LayerJob {
+    pub name: String,
+    pub w: Matrix,
+    pub method: Method,
+}
+
+/// What the pipeline collects per layer: name, metrics, dequantized data,
+/// optional packed payload.
+pub(crate) type LayerResult = (String, LayerStat, Vec<f32>, Option<PackedTensor>);
+
+/// Whether `method` under `cfg` runs as a single whole-matrix job instead
+/// of block tiles: GPTQ couples the whole matrix (column-sequential error
+/// propagation), per-tensor configs and whole-tensor XNOR are one block
+/// instance per layer, so tiling cannot help them.
+fn runs_whole(method: Method, cfg: &QuantConfig) -> bool {
+    method.needs_calibration()
+        || matches!(cfg.granularity, Granularity::PerTensor)
+        || method == Method::Xnor
+        || registry::block_quantizer(method).is_none()
+}
+
+/// Pull the layer Hessian out of the calibration tensors (GPTQ only).
+fn layer_hessian<'a>(
+    calib: Option<&'a TensorMap>,
+    layer: &str,
+    in_dim: usize,
+) -> Result<(&'a [f32], usize)> {
+    let calib = calib.context("gptq requires calibration tensors")?;
+    let h = calib
+        .get(layer)
+        .with_context(|| format!("calib missing Hessian for {layer}"))?;
+    anyhow::ensure!(h.dims == vec![in_dim, in_dim], "{layer}: bad Hessian dims");
+    Ok((h.as_f32()?, in_dim))
+}
+
+/// The WGM-DQ coarsened-scale rebuild (which invalidates the base packed
+/// payload) — the one per-layer finishing step shared by every path.
+fn finish_qt(method: Method, qt: QuantizedTensor, cfg: &QuantConfig) -> QuantizedTensor {
+    if method == Method::WgmDq {
+        double_quantize(&qt, cfg, &DqConfig::default())
+    } else {
+        qt
+    }
+}
+
+/// Build the per-layer record from a finished tensor.
+fn layer_result(name: String, original: &[f32], qt: QuantizedTensor, seconds: f64) -> LayerResult {
+    let stat = LayerStat {
+        name: name.clone(),
+        rows: qt.dequant.rows,
+        cols: qt.dequant.cols,
+        // same arithmetic as `QuantizedTensor::mse` (dequant vs original)
+        sse: crate::stats::sse(&qt.dequant.data, original),
+        effective_bits: qt.effective_bits,
+        seconds,
+    };
+    (name, stat, qt.dequant.data, qt.packed)
+}
+
+/// Quantize one layer as a single job (serial path and whole-layer pool
+/// jobs). `hessian` is pre-extracted so the job can own its inputs.
+fn solve_whole(
+    method: Method,
+    name: String,
+    w: &Matrix,
+    cfg: &QuantConfig,
+    hessian: Option<(&[f32], usize)>,
+) -> Result<LayerResult> {
+    let t0 = Instant::now();
+    let q = registry::build_quantizer(method, hessian)?;
+    let qt = finish_qt(method, q.quantize(w, cfg), cfg);
+    Ok(layer_result(name, &w.data, qt, t0.elapsed().as_secs_f64()))
+}
+
+/// A whole-matrix job awaiting submission.
+struct WholeJob {
+    layer: usize,
+    name: String,
+    w: Matrix,
+    method: Method,
+    hessian: Option<(Vec<f32>, usize)>,
+}
+
+/// A tiled layer: submission inputs + the collector's reassembly state.
+struct TiledState {
+    name: String,
+    method: Method,
+    q: Arc<dyn BlockQuantizer>,
+    data: Arc<Vec<f32>>,
+    layout: TileLayout,
+    tiles: Vec<Option<(Vec<f32>, TileMeta)>>,
+    remaining: usize,
+    /// Summed worker-side tile compute time (the layer's CPU cost; layers
+    /// overlap under the global queue, so per-layer wall time is not
+    /// well-defined).
+    seconds: f64,
+}
+
+/// Messages landing on the collector channel.
+enum Done {
+    Whole { layer: usize, result: std::thread::Result<Result<LayerResult>> },
+    Tile {
+        layer: usize,
+        tile: usize,
+        result: std::thread::Result<(Vec<f32>, TileMeta)>,
+        seconds: f64,
+    },
+}
+
+/// Execute `jobs` under `cfg` with `threads` workers. Returns per-layer
+/// results in input order plus the pool's `(submitted, completed)` stats
+/// (`None` on the serial path).
+pub(crate) fn run(
+    jobs: Vec<LayerJob>,
+    calib: Option<&TensorMap>,
+    cfg: &QuantConfig,
+    threads: usize,
+) -> Result<(Vec<LayerResult>, Option<(usize, usize)>)> {
+    let threads = threads.max(1);
+    if threads == 1 || jobs.is_empty() {
+        // serial reference path: every scheduler must match it bit-for-bit
+        let mut out = Vec::with_capacity(jobs.len());
+        for LayerJob { name, w, method } in jobs {
+            let hessian;
+            let h_ref = if method.needs_calibration() {
+                hessian = layer_hessian(calib, &name, w.cols)?;
+                Some(hessian)
+            } else {
+                None
+            };
+            out.push(solve_whole(method, name, &w, cfg, h_ref)?);
+        }
+        return Ok((out, None));
+    }
+
+    // classify + extract up front so job closures own everything
+    let n_layers = jobs.len();
+    let mut wholes: Vec<WholeJob> = Vec::new();
+    let mut tiled: Vec<Option<TiledState>> = Vec::with_capacity(n_layers);
+    let mut total_jobs = 0usize;
+    for (layer, LayerJob { name, w, method }) in jobs.into_iter().enumerate() {
+        if runs_whole(method, cfg) {
+            // Calibrated jobs own a copy of their Hessian ('static pool
+            // jobs cannot borrow `calib`). Copies are extracted up front
+            // and each freed as its job retires, so the transient peak is
+            // one extra copy of the calibrated layers' Hessians on top of
+            // the resident calib map.
+            let hessian = if method.needs_calibration() {
+                let (h, d) = layer_hessian(calib, &name, w.cols)?;
+                Some((h.to_vec(), d))
+            } else {
+                None
+            };
+            total_jobs += 1;
+            wholes.push(WholeJob { layer, name, w, method, hessian });
+            tiled.push(None);
+        } else {
+            let q = registry::block_quantizer(method).expect("tiled method");
+            let layout = engine::tile_layout(&*q, w.rows, w.cols, cfg, threads);
+            total_jobs += layout.n_tiles;
+            tiled.push(Some(TiledState {
+                name,
+                method,
+                q,
+                data: Arc::new(w.data),
+                tiles: (0..layout.n_tiles).map(|_| None).collect(),
+                remaining: layout.n_tiles,
+                layout,
+                seconds: 0.0,
+            }));
+        }
+    }
+
+    // the scheduler enqueues the whole model without blocking: capacity is
+    // sized to the job count (job closures are a few pointers each)
+    let mut pool = ThreadPool::new(threads, total_jobs.max(threads * 4));
+    let (tx, rx) = mpsc::channel::<Done>();
+    let shared_cfg = Arc::new(cfg.clone());
+
+    // whole-matrix jobs first (the longest poles start earliest), then
+    // every tiled layer's tiles in one batched enqueue per layer
+    for WholeJob { layer, name, w, method, hessian } in wholes {
+        let tx = tx.clone();
+        let cfg = Arc::clone(&shared_cfg);
+        pool.submit(move || {
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                let h_ref = hessian.as_ref().map(|(h, d)| (h.as_slice(), *d));
+                solve_whole(method, name.clone(), &w, &cfg, h_ref)
+            }));
+            let _ = tx.send(Done::Whole { layer, result });
+        });
+    }
+    for (layer, slot) in tiled.iter().enumerate() {
+        let Some(st) = slot else { continue };
+        let q = Arc::clone(&st.q);
+        let data = Arc::clone(&st.data);
+        let layout = st.layout;
+        let cfg = Arc::clone(&shared_cfg);
+        let tx = tx.clone();
+        pool.submit_many((0..layout.n_tiles).map(move |ti| {
+            let q = Arc::clone(&q);
+            let data = Arc::clone(&data);
+            let cfg = Arc::clone(&cfg);
+            let tx = tx.clone();
+            move || {
+                let t0 = Instant::now();
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    engine::run_tile(&*q, &data, &cfg, &layout, ti)
+                }));
+                let seconds = t0.elapsed().as_secs_f64();
+                let _ = tx.send(Done::Tile { layer, tile: ti, result, seconds });
+            }
+        }));
+    }
+    drop(tx);
+
+    // collect: assemble each layer the moment its last tile lands
+    let mut results: Vec<Option<LayerResult>> = (0..n_layers).map(|_| None).collect();
+    let mut first_err: Option<anyhow::Error> = None;
+    for _ in 0..total_jobs {
+        let Ok(msg) = rx.recv() else {
+            break; // workers gone (only reachable after a worker died)
+        };
+        match msg {
+            Done::Whole { layer, result } => match result {
+                Err(payload) => resume_unwind(payload),
+                Ok(Ok(r)) => results[layer] = Some(r),
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            },
+            Done::Tile { layer, tile, result, seconds } => match result {
+                Err(payload) => resume_unwind(payload),
+                Ok(out) => {
+                    let st = tiled[layer].as_mut().expect("tile for non-tiled layer");
+                    st.tiles[tile] = Some(out);
+                    st.seconds += seconds;
+                    st.remaining -= 1;
+                    if st.remaining == 0 {
+                        let st = tiled[layer].take().expect("layer state");
+                        results[layer] = Some(assemble_layer(st, cfg));
+                    }
+                }
+            },
+        }
+    }
+
+    pool.shutdown();
+    let stats = pool.stats();
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let results = results
+        .into_iter()
+        .map(|r| r.context("scheduler dropped a layer result"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((results, Some(stats)))
+}
+
+/// Ordered per-layer reassembly: identical epilogue to the engine's
+/// drivers, then the shared per-layer finishing.
+fn assemble_layer(st: TiledState, cfg: &QuantConfig) -> LayerResult {
+    let TiledState { name, method, q, data, layout, tiles, seconds, .. } = st;
+    let qt = engine::assemble_tiles(
+        &*q,
+        cfg,
+        &layout.plan,
+        tiles.into_iter().map(|t| t.expect("missing tile")),
+    );
+    let qt = finish_qt(method, qt, cfg);
+    layer_result(name, &data, qt, seconds)
+}

@@ -1,54 +1,147 @@
 //! Worker-pool substrate (no rayon offline): a fixed set of threads pulling
-//! boxed jobs from a bounded channel — the bound is the pipeline's
-//! backpressure — plus a scoped map helper for data-parallel solver work.
+//! boxed jobs from *sharded* (striped) queues — one stripe per worker, with
+//! work stealing — plus a scoped map helper for data-parallel solver work.
+//!
+//! §Perf: the previous pool funneled every pop through a single
+//! `Mutex<Receiver>`, so at high tile rates workers serialized on the
+//! channel lock. Dispatch is now striped: `submit` round-robins jobs over
+//! per-worker `Mutex<VecDeque>` stripes (each lock touched by one worker in
+//! the common case), `submit_many` enqueues a whole batch with one lock
+//! acquisition per stripe, and idle workers steal from neighboring stripes
+//! before sleeping on a condvar. The bounded-capacity backpressure
+//! semantics of the old pool are preserved.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Fixed-size thread pool with a bounded queue. `submit` blocks when the
-/// queue is full (backpressure), so producers can't outrun the workers.
+/// Shared pool state: striped job queues + sleep/wake machinery.
+struct PoolState {
+    /// One stripe per worker; `submit` round-robins across them and worker
+    /// `i` always tries stripe `i` first, so under load each lock is
+    /// touched by one producer hand-off and one consumer.
+    stripes: Vec<Mutex<VecDeque<Job>>>,
+    /// Jobs enqueued but not yet popped (not "not yet completed").
+    pending: AtomicUsize,
+    /// Workers currently asleep on `work_cv`.
+    sleepers: AtomicUsize,
+    /// Producers currently asleep on `space_cv` (capacity backpressure).
+    waiters: AtomicUsize,
+    closed: AtomicBool,
+    /// Guards the sleep/wake protocol only — never held while running a
+    /// job or while a stripe lock is held.
+    sleep: Mutex<()>,
+    work_cv: Condvar,
+    space_cv: Condvar,
+    /// Queue capacity: `submit` blocks while `pending >= cap`.
+    cap: usize,
+    /// Round-robin submission cursor.
+    rr: AtomicUsize,
+    submitted: AtomicUsize,
+    completed: AtomicUsize,
+}
+
+impl PoolState {
+    fn lock_sleep(&self) -> MutexGuard<'_, ()> {
+        self.sleep.lock().expect("pool sleep lock poisoned")
+    }
+
+    /// Pop one job, trying stripe `home` first then stealing round-robin.
+    fn pop(&self, home: usize) -> Option<Job> {
+        let s = self.stripes.len();
+        for k in 0..s {
+            let mut q = self.stripes[(home + k) % s].lock().expect("pool stripe poisoned");
+            if let Some(job) = q.pop_front() {
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    /// Push `jobs` onto stripe `idx` under one lock acquisition.
+    fn push_batch(&self, idx: usize, jobs: impl IntoIterator<Item = Job>) {
+        let mut q = self.stripes[idx % self.stripes.len()].lock().expect("pool stripe poisoned");
+        q.extend(jobs);
+    }
+
+    /// Block until the queue has room for ~`n` more jobs (Dekker-style
+    /// handshake with the workers' `waiters` check; SeqCst on both sides).
+    fn wait_for_space(&self, n: usize) {
+        let want = self.cap.saturating_sub(n.min(self.cap));
+        while self.pending.load(Ordering::SeqCst) > want && !self.closed.load(Ordering::SeqCst) {
+            let mut guard = self.lock_sleep();
+            self.waiters.fetch_add(1, Ordering::SeqCst);
+            if self.pending.load(Ordering::SeqCst) > want && !self.closed.load(Ordering::SeqCst) {
+                guard = self.space_cv.wait(guard).expect("pool space wait");
+            }
+            self.waiters.fetch_sub(1, Ordering::SeqCst);
+            drop(guard);
+        }
+    }
+
+    /// Wake sleeping workers after enqueueing `n` jobs. Producers touch the
+    /// sleep lock only when a worker is actually parked (SeqCst pairs with
+    /// the worker's recheck-under-lock, so no wakeup is lost).
+    fn wake_workers(&self, n: usize) {
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            let _guard = self.lock_sleep();
+            if n == 1 {
+                self.work_cv.notify_one();
+            } else {
+                self.work_cv.notify_all();
+            }
+        }
+    }
+
+    /// Signal producers blocked on capacity after a pop.
+    fn signal_space(&self) {
+        if self.waiters.load(Ordering::SeqCst) > 0 {
+            let _guard = self.lock_sleep();
+            self.space_cv.notify_all();
+        }
+    }
+}
+
+/// Fixed-size thread pool with striped bounded queues. `submit` blocks when
+/// the queues are at capacity (backpressure), so producers can't outrun the
+/// workers; `submit_many` enqueues a batch with one lock acquisition per
+/// stripe.
 pub struct ThreadPool {
-    tx: Option<SyncSender<Job>>,
+    state: Arc<PoolState>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
-    submitted: Arc<AtomicUsize>,
-    completed: Arc<AtomicUsize>,
 }
 
 impl ThreadPool {
     pub fn new(threads: usize, queue_cap: usize) -> Self {
         let threads = threads.max(1);
-        let (tx, rx) = sync_channel::<Job>(queue_cap.max(1));
-        let rx = Arc::new(Mutex::new(rx));
-        let submitted = Arc::new(AtomicUsize::new(0));
-        let completed = Arc::new(AtomicUsize::new(0));
+        let state = Arc::new(PoolState {
+            stripes: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pending: AtomicUsize::new(0),
+            sleepers: AtomicUsize::new(0),
+            waiters: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            sleep: Mutex::new(()),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            cap: queue_cap.max(1),
+            rr: AtomicUsize::new(0),
+            submitted: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+        });
         let workers = (0..threads)
             .map(|i| {
-                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
-                let completed = Arc::clone(&completed);
+                let state = Arc::clone(&state);
                 std::thread::Builder::new()
                     .name(format!("msb-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().expect("pool lock poisoned");
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => {
-                                job();
-                                completed.fetch_add(1, Ordering::Release);
-                            }
-                            Err(_) => break, // sender dropped: shutdown
-                        }
-                    })
+                    .spawn(move || worker_loop(&state, i))
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, size: threads, submitted, completed }
+        ThreadPool { state, workers, size: threads }
     }
 
     /// Default pool: one worker per available core.
@@ -57,14 +150,54 @@ impl ThreadPool {
         ThreadPool::new(n, n * 4)
     }
 
-    /// Enqueue a job; blocks when the queue is at capacity.
+    /// Enqueue a job; blocks when the queues are at capacity.
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
-        self.submitted.fetch_add(1, Ordering::Release);
-        self.tx
-            .as_ref()
-            .expect("pool already shut down")
-            .send(Box::new(job))
-            .expect("workers gone");
+        assert!(!self.state.closed.load(Ordering::SeqCst), "pool already shut down");
+        self.state.wait_for_space(1);
+        let idx = self.state.rr.fetch_add(1, Ordering::Relaxed);
+        self.state.submitted.fetch_add(1, Ordering::Release);
+        // count BEFORE publishing: a worker that pops the job immediately
+        // must never drive `pending` below zero (it is unsigned)
+        self.state.pending.fetch_add(1, Ordering::SeqCst);
+        self.state.push_batch(idx, std::iter::once(Box::new(job) as Job));
+        self.state.wake_workers(1);
+    }
+
+    /// Enqueue a batch of jobs with one stripe-lock acquisition per worker
+    /// stripe — the low-contention path the model-global scheduler uses to
+    /// dump hundreds of tiles at once. Blocks for capacity once up front;
+    /// a batch may transiently overshoot the bound by its own length.
+    pub fn submit_many<I, F>(&self, jobs: I)
+    where
+        I: IntoIterator<Item = F>,
+        F: FnOnce() + Send + 'static,
+    {
+        assert!(!self.state.closed.load(Ordering::SeqCst), "pool already shut down");
+        let jobs: Vec<Job> = jobs.into_iter().map(|j| Box::new(j) as Job).collect();
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        self.state.wait_for_space(n);
+        let stripes = self.state.stripes.len();
+        let base = self.state.rr.fetch_add(n, Ordering::Relaxed);
+        self.state.submitted.fetch_add(n, Ordering::Release);
+        // count BEFORE publishing (see `submit`); workers that drain early
+        // chunks while later ones are still being dealt stay non-negative
+        self.state.pending.fetch_add(n, Ordering::SeqCst);
+        // deal the batch into `stripes` contiguous runs, one lock each
+        let chunk = n.div_ceil(stripes);
+        let mut it = jobs.into_iter();
+        let mut stripe = base;
+        loop {
+            let run: Vec<Job> = it.by_ref().take(chunk).collect();
+            if run.is_empty() {
+                break;
+            }
+            self.state.push_batch(stripe, run);
+            stripe += 1;
+        }
+        self.state.wake_workers(n);
     }
 
     /// Worker count the pool was built with (stable across shutdown).
@@ -76,15 +209,21 @@ impl ThreadPool {
     /// the two are equal: the join synchronizes every completion.
     pub fn stats(&self) -> (usize, usize) {
         (
-            self.submitted.load(Ordering::Acquire),
-            self.completed.load(Ordering::Acquire),
+            self.state.submitted.load(Ordering::Acquire),
+            self.state.completed.load(Ordering::Acquire),
         )
     }
 
-    /// Drop the sender and join all workers (drains the queue first).
+    /// Close the queues and join all workers (the queues drain first).
     /// Idempotent; the pool remains readable (`stats`) afterwards.
     pub fn shutdown(&mut self) {
-        self.tx.take();
+        self.state.closed.store(true, Ordering::SeqCst);
+        {
+            // serialize with any worker between its recheck and its wait
+            let _guard = self.state.lock_sleep();
+        }
+        self.state.work_cv.notify_all();
+        self.state.space_cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -97,9 +236,51 @@ impl Drop for ThreadPool {
     }
 }
 
+fn worker_loop(state: &PoolState, home: usize) {
+    loop {
+        match state.pop(home) {
+            Some(job) => {
+                state.pending.fetch_sub(1, Ordering::SeqCst);
+                state.signal_space();
+                job();
+                state.completed.fetch_add(1, Ordering::Release);
+            }
+            None => {
+                let guard = state.lock_sleep();
+                state.sleepers.fetch_add(1, Ordering::SeqCst);
+                // recheck under the lock: a producer that missed our
+                // sleepers increment must have published its count first
+                // (SeqCst), and one that saw it will notify under the lock
+                if state.pending.load(Ordering::SeqCst) == 0 {
+                    if state.closed.load(Ordering::SeqCst) {
+                        state.sleepers.fetch_sub(1, Ordering::SeqCst);
+                        return;
+                    }
+                    let guard = state.work_cv.wait(guard).expect("pool work wait");
+                    drop(guard);
+                } else {
+                    // pending is counted before jobs are published, so a
+                    // push may still be in flight: yield instead of
+                    // hot-spinning on the stripe locks
+                    drop(guard);
+                    std::thread::yield_now();
+                }
+                state.sleepers.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
 /// Data-parallel map over items using scoped threads: results keep input
-/// order; panics propagate. For CPU-bound solver fan-out (quantizing many
-/// layer matrices).
+/// order; panics propagate. Unlike [`ThreadPool`] jobs (which must be
+/// `'static`), the closure may borrow local state — this is the crate's
+/// fan-out utility for callers with non-owned data, now that the pipeline
+/// itself schedules through the model-global queue.
+///
+/// §Perf: work is claimed through a single atomic cursor and every result
+/// lands in its own per-slot cell, so neither the claim nor the write ever
+/// serializes behind a shared lock (the old implementation funneled all
+/// result writes through one `Mutex<&mut Vec<_>>`).
 pub fn scoped_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -114,25 +295,27 @@ where
     if threads == 1 || n == 1 {
         return items.into_iter().map(f).collect();
     }
-    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
-    let queue = Mutex::new(work);
-    let slots_mtx = Mutex::new(&mut slots);
+    // per-slot cells: each item/result owns its own (uncontended) lock
+    let work: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..threads.min(n) {
             s.spawn(|| loop {
-                let item = queue.lock().expect("queue").pop();
-                match item {
-                    Some((i, t)) => {
-                        let r = f(t);
-                        slots_mtx.lock().expect("slots")[i] = Some(r);
-                    }
-                    None => break,
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
                 }
+                let t = work[i].lock().expect("scoped_map item").take().expect("item taken twice");
+                let r = f(t);
+                *slots[i].lock().expect("scoped_map slot") = Some(r);
             });
         }
     });
-    slots.into_iter().map(|o| o.expect("scoped_map slot unfilled")).collect()
+    slots
+        .into_iter()
+        .map(|c| c.into_inner().expect("scoped_map slot poisoned").expect("slot unfilled"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -187,6 +370,65 @@ mod tests {
     }
 
     #[test]
+    fn submit_many_runs_all_and_counts() {
+        let mut pool = ThreadPool::new(3, 256);
+        let counter = Arc::new(AtomicU64::new(0));
+        pool.submit_many((0..200u64).map(|i| {
+            let c = Arc::clone(&counter);
+            move || {
+                c.fetch_add(i, Ordering::Relaxed);
+            }
+        }));
+        pool.submit_many(std::iter::empty::<fn()>());
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::Relaxed), (0..200).sum::<u64>());
+        assert_eq!(pool.stats(), (200, 200));
+    }
+
+    #[test]
+    fn submit_many_interleaves_with_submit() {
+        // batch + singleton submissions from several concurrent producer
+        // threads must all drain; exercises the striped queues and the
+        // wake protocol under real submission contention
+        let mut pool = ThreadPool::new(4, 64);
+        let counter = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            let pool = &pool;
+            for p in 0..4 {
+                let counter = Arc::clone(&counter);
+                s.spawn(move || {
+                    if p % 2 == 0 {
+                        pool.submit_many((0..50u64).map(|_| {
+                            let c = Arc::clone(&counter);
+                            move || {
+                                c.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }));
+                    } else {
+                        for _ in 0..50 {
+                            let c = Arc::clone(&counter);
+                            pool.submit(move || {
+                                c.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    }
+                });
+            }
+        });
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::Relaxed), 200);
+        assert_eq!(pool.stats(), (200, 200));
+    }
+
+    #[test]
+    #[should_panic(expected = "already shut down")]
+    fn submit_after_shutdown_panics() {
+        let mut pool = ThreadPool::new(1, 1);
+        pool.shutdown();
+        pool.submit(|| {});
+    }
+
+    #[test]
     fn scoped_map_order_preserved() {
         let items: Vec<u64> = (0..257).collect();
         let out = scoped_map(items.clone(), 4, |x| x * 2);
@@ -203,5 +445,11 @@ mod tests {
     fn scoped_map_empty() {
         let out: Vec<u32> = scoped_map(Vec::<u32>::new(), 4, |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scoped_map_more_threads_than_items() {
+        let out = scoped_map(vec![5, 6], 16, |x| x * x);
+        assert_eq!(out, vec![25, 36]);
     }
 }

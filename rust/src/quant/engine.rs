@@ -92,10 +92,6 @@ impl BlockPlan {
         }
     }
 
-    /// Blocks per pool job under this plan (see [`tile_size`]).
-    fn tile_blocks(&self, threads: usize) -> usize {
-        tile_size(self.n_blocks, threads)
-    }
 }
 
 /// Blocks per pool job: ~4 tiles per worker so stragglers rebalance,
@@ -230,6 +226,72 @@ pub fn quantize_serial(q: &dyn BlockQuantizer, w: &Matrix, cfg: &QuantConfig) ->
     assemble(q, cfg, &plan, dequant, meta)
 }
 
+/// Tiling geometry for scheduling one layer's blocks as pool jobs — the
+/// unit the model-global scheduler (`pipeline`) enqueues without blocking.
+#[derive(Clone, Copy, Debug)]
+pub struct TileLayout {
+    pub plan: BlockPlan,
+    /// Blocks per job (see [`tile_size`]).
+    pub tile: usize,
+    pub n_tiles: usize,
+}
+
+/// Compute the layout a `threads`-worker pool would execute for this
+/// method/config/shape. Deterministic in `threads`, so results stay
+/// bit-identical for a fixed worker count — and block independence makes
+/// them identical across worker counts too (asserted by tests).
+pub fn tile_layout(
+    q: &dyn BlockQuantizer,
+    rows: usize,
+    cols: usize,
+    cfg: &QuantConfig,
+    threads: usize,
+) -> TileLayout {
+    let plan = q.plan(rows, cols, cfg);
+    let tile = tile_size(plan.n_blocks, threads);
+    let n_tiles = plan.n_blocks.div_ceil(tile.max(1)).max(1);
+    TileLayout { plan, tile, n_tiles }
+}
+
+/// Quantize tile `ti` of `layout` (a contiguous run of blocks) out of the
+/// full layer buffer; returns the tile's dequant chunk plus metadata. The
+/// worker-side kernel of both the pooled driver and the global scheduler.
+pub fn run_tile(
+    q: &dyn BlockQuantizer,
+    data: &[f32],
+    cfg: &QuantConfig,
+    layout: &TileLayout,
+    ti: usize,
+) -> (Vec<f32>, TileMeta) {
+    let tile_elems = layout.tile * layout.plan.block;
+    let start = ti * tile_elems;
+    let end = ((ti + 1) * tile_elems).min(data.len());
+    let mut out = vec![0.0f32; end - start];
+    let meta = q.quantize_tile(&data[start..end], layout.plan.block, &mut out, cfg);
+    (out, meta)
+}
+
+/// Input-ordered reassembly of per-tile outputs into the finished tensor:
+/// identical to the serial driver's epilogue (bf16 finish, accounting,
+/// payload assembly), so any scheduler that supplies tiles in input order
+/// reproduces [`quantize_serial`] bit-for-bit.
+pub fn assemble_tiles(
+    q: &dyn BlockQuantizer,
+    cfg: &QuantConfig,
+    plan: &BlockPlan,
+    tiles: impl IntoIterator<Item = (Vec<f32>, TileMeta)>,
+) -> QuantizedTensor {
+    let mut dequant = Matrix::zeros(plan.rows, plan.cols);
+    let mut meta = TileMeta::new();
+    let mut off = 0usize;
+    for (out, m) in tiles {
+        dequant.data[off..off + out.len()].copy_from_slice(&out);
+        off += out.len();
+        meta.append(m);
+    }
+    assemble(q, cfg, plan, dequant, meta)
+}
+
 /// Pooled engine driver: slices the plan into tiles, runs them on `pool`,
 /// and reassembles in input order — deterministic and bit-identical to
 /// [`quantize_serial`] regardless of worker count or completion order.
@@ -240,10 +302,8 @@ pub fn quantize_pooled(
     cfg: &QuantConfig,
     pool: &ThreadPool,
 ) -> QuantizedTensor {
-    let plan = q.plan(w.rows, w.cols, cfg);
-    let tile = plan.tile_blocks(pool.threads());
-    let n_tiles = plan.n_blocks.div_ceil(tile.max(1)).max(1);
-    if plan.n_blocks <= 1 || pool.threads() <= 1 || n_tiles <= 1 {
+    let layout = tile_layout(&*q, w.rows, w.cols, cfg, pool.threads());
+    if layout.plan.n_blocks <= 1 || pool.threads() <= 1 || layout.n_tiles <= 1 {
         return quantize_serial(&*q, w, cfg);
     }
 
@@ -251,38 +311,24 @@ pub fn quantize_pooled(
     // is orders of magnitude cheaper than the per-block solves it unblocks.
     let data: Arc<Vec<f32>> = Arc::new(w.data.clone());
     let shared_cfg = Arc::new(cfg.clone());
-    let tile_elems = tile * plan.block;
-    let block = plan.block;
-    let jobs: Vec<_> = (0..n_tiles)
+    let jobs: Vec<_> = (0..layout.n_tiles)
         .map(|ti| {
             let q = Arc::clone(&q);
             let data = Arc::clone(&data);
             let cfg = Arc::clone(&shared_cfg);
-            move || {
-                let start = ti * tile_elems;
-                let end = ((ti + 1) * tile_elems).min(data.len());
-                let mut out = vec![0.0f32; end - start];
-                let meta = q.quantize_tile(&data[start..end], block, &mut out, &cfg);
-                (out, meta)
-            }
+            move || run_tile(&*q, &data, &cfg, &layout, ti)
         })
         .collect();
     let tiles = pool_ordered_map(pool, jobs);
-
-    let mut dequant = Matrix::zeros(w.rows, w.cols);
-    let mut meta = TileMeta::new();
-    let mut off = 0usize;
-    for (out, m) in tiles {
-        dequant.data[off..off + out.len()].copy_from_slice(&out);
-        off += out.len();
-        meta.append(m);
-    }
-    assemble(&*q, cfg, &plan, dequant, meta)
+    assemble_tiles(&*q, cfg, &layout.plan, tiles)
 }
 
 /// Run `jobs` on `pool`, returning results in input order regardless of
-/// completion order. Worker panics are caught per job and re-raised here,
-/// so callers see the same panic they would on the serial path.
+/// completion order. The whole batch is enqueued with one
+/// [`ThreadPool::submit_many`] call (one stripe-lock acquisition per
+/// worker stripe rather than per job). Worker panics are caught per job
+/// and re-raised here, so callers see the same panic they would on the
+/// serial path.
 pub fn pool_ordered_map<R, F>(pool: &ThreadPool, jobs: Vec<F>) -> Vec<R>
 where
     R: Send + 'static,
@@ -290,13 +336,13 @@ where
 {
     let n = jobs.len();
     let (tx, rx) = mpsc::channel();
-    for (i, job) in jobs.into_iter().enumerate() {
+    pool.submit_many(jobs.into_iter().enumerate().map(|(i, job)| {
         let tx = tx.clone();
-        pool.submit(move || {
+        move || {
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
             let _ = tx.send((i, r));
-        });
-    }
+        }
+    }));
     drop(tx);
     let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
     for _ in 0..n {
@@ -750,17 +796,46 @@ mod tests {
         let cfg = QuantConfig::block_wise(4, 64).with_packed();
         for q in packable_arcs() {
             let name = BlockQuantizer::name(&*q);
-            if name.starts_with("xnor") || name.starts_with("blocked") {
-                continue; // 1-bit codes are stored at nibble granularity
-            }
             let qt = quantize_serial(&*q, &w, &cfg);
             let pt = qt.packed.unwrap_or_else(|| panic!("{name}: no payload"));
             crate::testing::assert_close(pt.effective_bits(), qt.effective_bits, 1e-12, 0.0);
         }
-        // XNOR's sub-nibble codes pay the nibble floor: 4 + 16/64 bits.
+        // XNOR's 1-bit codes now pack 8 signs/byte — the measured payload
+        // hits the 1 + 16/64 = 1.25 bits/weight theoretical exactly (the
+        // nibble floor of 4.25 is gone)
         let qt = quantize_serial(&XnorQuantizer::blocked(), &w, &cfg);
         let pt = qt.packed.unwrap();
-        crate::testing::assert_close(pt.effective_bits(), 4.25, 1e-12, 0.0);
+        crate::testing::assert_close(pt.effective_bits(), 1.25, 1e-12, 0.0);
+    }
+
+    /// Sub-nibble widths end to end: 2-bit MSB (u2 codes) and 1-bit XNOR
+    /// (u1 codes) must round-trip decode(pack(W)) bit-identically and hit
+    /// their theoretical storage exactly.
+    #[test]
+    fn sub_nibble_packed_roundtrip() {
+        let mut w = weight(8, 256, 25);
+        w.data[17] = 0.0; // exception-list coverage at 1-bit width
+        let cfg = QuantConfig::block_wise(2, 64).with_window(1).with_packed();
+        let cases: Vec<(Arc<dyn BlockQuantizer>, f64)> = vec![
+            // MSB at b=2: L=2 scales/block → 2 + 2·16/64 = 2.5 bits/wt
+            (Arc::new(MsbQuantizer::wgm()), 2.5),
+            // blocked XNOR: 1 + 16/64 = 1.25 bits/wt
+            (Arc::new(XnorQuantizer::blocked()), 1.25),
+        ];
+        let pool = ThreadPool::new(3, 12);
+        for (q, want_bits) in cases {
+            let name = BlockQuantizer::name(&*q);
+            let serial = quantize_serial(&*q, &w, &cfg);
+            let pt = serial.packed.clone().unwrap_or_else(|| panic!("{name}: no payload"));
+            let zero_bits = pt.zeros.len() as f64 * 32.0 / w.len() as f64;
+            crate::testing::assert_close(pt.effective_bits(), want_bits + zero_bits, 1e-12, 0.0);
+            let dec = decode_packed(Arc::clone(&q), &pt, None);
+            assert_eq!(dec.data, serial.dequant.data, "{name} serial decode");
+            let dec_p = decode_packed(Arc::clone(&q), &pt, Some(&pool));
+            assert_eq!(dec_p.data, serial.dequant.data, "{name} pooled decode");
+            let pooled = quantize_pooled(Arc::clone(&q), &w, &cfg, &pool);
+            assert_eq!(pooled.packed.as_ref(), Some(&pt), "{name} pooled payload");
+        }
     }
 
     /// Randomized property: for random shapes, zero densities and

@@ -101,8 +101,11 @@ impl MsbQuantizer {
 
     /// Allocation-free block-wise WGM path (§Perf): reuses the sort,
     /// prefix-sum and merge workspaces across every block of the tile and
-    /// writes scales/codes/dequant directly into the output buffers.
-    /// Semantically identical to the generic path (asserted by tests).
+    /// writes scales/codes/dequant directly into the output buffers. The
+    /// merge itself dispatches to the flat scan kernel for block-sized
+    /// instances (`msb::gg::SCAN_KERNEL_MAX`) — bit-identical to the heap,
+    /// ablated in `benches/perf_hotpath.rs`. Semantically identical to the
+    /// generic path (asserted by tests).
     fn quantize_tile_fast(
         &self,
         data: &[f32],

@@ -7,12 +7,14 @@
 //!
 //! * the accounting formulas the quantizers advertise
 //!   ([`msb_effective_bits`] & friends), and
-//! * [`PackedTensor`] — the real payload the engine emits: nibble-packed u4
-//!   codes for code widths ≤ 4 (byte codes otherwise), a bf16 (or, for the
-//!   BnB absmax, f32) scale table in deterministic [`BlockPlan`] order, and
-//!   an exact-zero exception list. Its [`PackedTensor::effective_bits`] is
-//!   *measured from the serialized bytes* and must agree with the
-//!   theoretical `*_effective_bits` for the paper's 4-bit grid.
+//! * [`PackedTensor`] — the real payload the engine emits: bit-packed
+//!   codes at their true width (u1 for XNOR signs, u2 for 2-bit MSB,
+//!   nibble-packed u4 for 3–4-bit codes, i8 bytes otherwise), a bf16 (or,
+//!   for the BnB absmax, f32) scale table in deterministic [`BlockPlan`]
+//!   order, and an exact-zero exception list. Its
+//!   [`PackedTensor::effective_bits`] is *measured from the serialized
+//!   bytes* and must agree with the theoretical `*_effective_bits` for
+//!   both the paper's 4-bit grid and the sub-nibble widths.
 //!
 //! Decoding a packed tensor (`engine::decode_packed`) reproduces the
 //! simulated-dequant weights bit-identically: scale metadata is rounded
@@ -66,31 +68,55 @@ pub fn nf4_effective_bits(block: usize) -> f64 {
 }
 
 // ---------------------------------------------------------------------------
-// Nibble packing: two 4-bit codes per byte.
+// Sub-byte packing: 1/2/4-bit symbols, LSB-first within each byte.
 // ---------------------------------------------------------------------------
 
-/// Pack unsigned 4-bit values (0..16) two-per-byte, low nibble first.
-pub fn pack_nibbles(codes: &[u8]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
-    for pair in codes.chunks(2) {
-        debug_assert!(pair.iter().all(|&c| c < 16));
-        let lo = pair[0] & 0xF;
-        let hi = if pair.len() == 2 { pair[1] & 0xF } else { 0 };
-        out.push(lo | (hi << 4));
+/// Pack `width`-bit unsigned symbols (width ∈ {1, 2, 4}) LSB-first within
+/// each byte — the generalization of nibble packing that lets 1-bit XNOR
+/// signs and 2-bit MSB codes escape the nibble floor. `width = 4` is
+/// byte-compatible with the historical [`pack_nibbles`] layout (low
+/// nibble first).
+pub fn pack_bits(codes: &[u8], width: u32) -> Vec<u8> {
+    assert!(matches!(width, 1 | 2 | 4), "unsupported pack width {width}");
+    let per = (8 / width) as usize;
+    let mask = (1u8 << width) - 1;
+    let mut out = vec![0u8; codes.len().div_ceil(per)];
+    for (i, &c) in codes.iter().enumerate() {
+        debug_assert!(c <= mask, "symbol {c} exceeds {width}-bit width");
+        out[i / per] |= (c & mask) << ((i % per) as u32 * width);
     }
     out
 }
 
+/// Inverse of [`pack_bits`]; `n` is the original symbol count.
+pub fn unpack_bits(packed: &[u8], n: usize, width: u32) -> Vec<u8> {
+    assert!(matches!(width, 1 | 2 | 4), "unsupported pack width {width}");
+    let per = (8 / width) as usize;
+    debug_assert_eq!(packed.len(), n.div_ceil(per), "packed len != ceil(n/{per})");
+    let mask = (1u8 << width) - 1;
+    (0..n).map(|i| (packed[i / per] >> ((i % per) as u32 * width)) & mask).collect()
+}
+
+/// Pack unsigned 4-bit values (0..16) two-per-byte, low nibble first.
+pub fn pack_nibbles(codes: &[u8]) -> Vec<u8> {
+    pack_bits(codes, 4)
+}
+
 /// Inverse of [`pack_nibbles`]; `n` is the original code count.
 pub fn unpack_nibbles(packed: &[u8], n: usize) -> Vec<u8> {
-    debug_assert_eq!(packed.len(), n.div_ceil(2), "packed len != ceil(n/2)");
-    let mut out = Vec::with_capacity(packed.len() * 2);
-    for &b in packed {
-        out.push(b & 0xF);
-        out.push(b >> 4);
+    unpack_bits(packed, n, 4)
+}
+
+/// Storage width in bits for a logical code width: sub-nibble codes pack
+/// tightly (1-bit XNOR signs, 2-bit MSB), 3–4-bit codes share the nibble
+/// layout, anything wider stays i8 bytes (`None`).
+pub fn storage_width(code_bits: u32) -> Option<u32> {
+    match code_bits {
+        1 => Some(1),
+        2 => Some(2),
+        3 | 4 => Some(4),
+        _ => None,
     }
-    out.truncate(n);
-    out
 }
 
 // ---------------------------------------------------------------------------
@@ -196,13 +222,31 @@ pub struct PackSpec {
 // The packed payload.
 // ---------------------------------------------------------------------------
 
-/// Per-element code storage: nibbles for code widths ≤ 4, bytes otherwise.
+/// Per-element code storage: bit-packed symbols for code widths ≤ 4
+/// (1-bit and 2-bit codes pack tightly — no nibble floor), bytes
+/// otherwise. All packed layouts are LSB-first within each byte.
 #[derive(Clone, Debug, PartialEq)]
 pub enum PackedCodes {
+    /// Eight 1-bit symbols per byte (`ceil(n/8)` bytes): XNOR signs.
+    U1(Vec<u8>),
+    /// Four 2-bit symbols per byte (`ceil(n/4)` bytes): 2-bit MSB codes.
+    U2(Vec<u8>),
     /// Two 4-bit symbols per byte, low nibble first (`ceil(n/2)` bytes).
     U4(Vec<u8>),
     /// One signed byte code per element (the raw i8 code, no scheme).
     I8(Vec<i8>),
+}
+
+impl PackedCodes {
+    /// The stored symbol width in bits (8 for raw i8 codes).
+    pub fn width(&self) -> u32 {
+        match self {
+            PackedCodes::U1(_) => 1,
+            PackedCodes::U2(_) => 2,
+            PackedCodes::U4(_) => 4,
+            PackedCodes::I8(_) => 8,
+        }
+    }
 }
 
 /// Scale-table storage dtype.
@@ -253,7 +297,7 @@ impl PackedTensor {
         debug_assert_eq!(codes.len(), n);
         debug_assert_eq!(scales.len(), plan.n_blocks * spec.scales_per_block);
         let mut zeros = Vec::new();
-        let packed_codes = if spec.code_bits <= 4 {
+        let packed_codes = if let Some(width) = storage_width(spec.code_bits) {
             let mut symbols = Vec::with_capacity(n);
             for (i, &c) in codes.iter().enumerate() {
                 match spec.scheme.encode(c, spec.code_bits) {
@@ -264,7 +308,12 @@ impl PackedTensor {
                     }
                 }
             }
-            PackedCodes::U4(pack_nibbles(&symbols))
+            let packed = pack_bits(&symbols, width);
+            match width {
+                1 => PackedCodes::U1(packed),
+                2 => PackedCodes::U2(packed),
+                _ => PackedCodes::U4(packed),
+            }
         } else {
             PackedCodes::I8(codes.to_vec())
         };
@@ -302,7 +351,7 @@ impl PackedTensor {
     /// exact-zero exception list (u32 each).
     pub fn payload_bytes(&self) -> usize {
         let code_bytes = match &self.codes {
-            PackedCodes::U4(p) => p.len(),
+            PackedCodes::U1(p) | PackedCodes::U2(p) | PackedCodes::U4(p) => p.len(),
             PackedCodes::I8(v) => v.len(),
         };
         let scale_bytes = match &self.scales {
@@ -324,10 +373,12 @@ impl PackedTensor {
     /// driver overwrites them with exact zeros.
     pub fn unpacked_codes(&self) -> Vec<i8> {
         match &self.codes {
-            PackedCodes::U4(p) => unpack_nibbles(p, self.n_elems())
-                .iter()
-                .map(|&s| self.scheme.decode(s, self.code_bits))
-                .collect(),
+            PackedCodes::U1(p) | PackedCodes::U2(p) | PackedCodes::U4(p) => {
+                unpack_bits(p, self.n_elems(), self.codes.width())
+                    .iter()
+                    .map(|&s| self.scheme.decode(s, self.code_bits))
+                    .collect()
+            }
             PackedCodes::I8(v) => v.clone(),
         }
     }
@@ -383,6 +434,48 @@ mod tests {
         let packed = pack_nibbles(&codes);
         assert_eq!(packed.len(), 2);
         assert_eq!(unpack_nibbles(&packed, 3), codes);
+    }
+
+    #[test]
+    fn bit_pack_roundtrip_all_widths() {
+        crate::testing::check(
+            "pack_bits/unpack_bits",
+            30,
+            |rng| {
+                let width = [1u32, 2, 4][rng.below(3)];
+                let n = 1 + rng.below(200);
+                let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << width) as u8).collect();
+                (codes, width)
+            },
+            |(codes, width)| {
+                let packed = pack_bits(codes, *width);
+                packed.len() == codes.len().div_ceil((8 / width) as usize)
+                    && unpack_bits(&packed, codes.len(), *width) == *codes
+            },
+        );
+    }
+
+    #[test]
+    fn bit_pack_goldens() {
+        // 1-bit: LSB-first => 0b0110_1001 for [1,0,0,1,0,1,1,0]
+        assert_eq!(pack_bits(&[1, 0, 0, 1, 0, 1, 1, 0], 1), vec![0b0110_1001]);
+        // ragged tail pads with zeros
+        assert_eq!(pack_bits(&[1, 1, 1], 1), vec![0b0000_0111]);
+        // 2-bit: [3, 0, 2, 1] => 0b01_10_00_11
+        assert_eq!(pack_bits(&[3, 0, 2, 1], 2), vec![0b0110_0011]);
+        // width 4 stays byte-compatible with the historical nibble layout
+        assert_eq!(pack_bits(&[1, 15, 0, 7, 9], 4), pack_nibbles(&[1, 15, 0, 7, 9]));
+        assert_eq!(pack_bits(&[1, 15, 0, 7, 9], 4), vec![0xF1, 0x70, 0x09]);
+    }
+
+    #[test]
+    fn storage_width_table() {
+        assert_eq!(storage_width(1), Some(1));
+        assert_eq!(storage_width(2), Some(2));
+        assert_eq!(storage_width(3), Some(4));
+        assert_eq!(storage_width(4), Some(4));
+        assert_eq!(storage_width(5), None);
+        assert_eq!(storage_width(8), None);
     }
 
     #[test]
@@ -470,6 +563,55 @@ mod tests {
         }
         // each exception costs 4 bytes on top of the 6-bit layout
         assert_eq!(pt.payload_bytes(), 4 + 16 + 2 * 4);
+    }
+
+    #[test]
+    fn packed_tensor_sub_nibble_widths() {
+        // 1-bit XNOR signs: 64 codes in 8 bytes + one bf16 α = 1.25 b/wt
+        let plan = BlockPlan::block_wise(1, 64, 64);
+        let spec = PackSpec {
+            code_bits: 1,
+            scheme: CodeScheme::SignLevel,
+            scales_per_block: 1,
+            f32_scales: false,
+        };
+        let codes: Vec<i8> = (0..64).map(|i| if i % 3 == 0 { -1 } else { 1 }).collect();
+        let pt = PackedTensor::from_codes("xnor", &plan, &spec, true, &codes, &[0.7]);
+        assert!(matches!(pt.codes, PackedCodes::U1(_)));
+        assert_eq!(pt.payload_bytes(), 64 / 8 + 2);
+        assert_close(pt.effective_bits(), 1.25, 1e-12, 0.0);
+        assert_eq!(pt.unpacked_codes(), codes);
+
+        // 2-bit MSB (L=2): 64 codes in 16 bytes + 2 bf16 scales = 2.5 b/wt
+        let spec = PackSpec {
+            code_bits: 2,
+            scheme: CodeScheme::SignLevel,
+            scales_per_block: 2,
+            f32_scales: false,
+        };
+        let codes: Vec<i8> = (0..64).map(|i| [1, 2, -1, -2][i % 4]).collect();
+        let pt = PackedTensor::from_codes("msb-wgm", &plan, &spec, true, &codes, &[0.5, 1.5]);
+        assert!(matches!(pt.codes, PackedCodes::U2(_)));
+        assert_eq!(pt.payload_bytes(), 64 / 4 + 2 * 2);
+        assert_close(pt.effective_bits(), 2.5, 1e-12, 0.0);
+        assert_eq!(pt.unpacked_codes(), codes);
+
+        // exact zeros still ride the exception list at sub-nibble widths
+        let codes: Vec<i8> = (0..64).map(|i| if i == 5 { 0 } else { 1 }).collect();
+        let spec1 = PackSpec {
+            code_bits: 1,
+            scheme: CodeScheme::SignLevel,
+            scales_per_block: 1,
+            f32_scales: false,
+        };
+        let pt = PackedTensor::from_codes("xnor", &plan, &spec1, true, &codes, &[0.7]);
+        assert_eq!(pt.zeros, vec![5]);
+        let back = pt.unpacked_codes();
+        for (i, (&a, &b)) in codes.iter().zip(&back).enumerate() {
+            if a != 0 {
+                assert_eq!(a, b, "elem {i}");
+            }
+        }
     }
 
     #[test]

@@ -111,6 +111,28 @@ pub fn build_quantizer(
     })
 }
 
+/// The engine view of `method` for tile-level scheduling: the
+/// [`BlockQuantizer`] whose `quantize_tile` the model-global scheduler
+/// (`pipeline`) fans out as `(layer, tile)` jobs. `None` for methods that
+/// are not block-partitionable (GPTQ's column-sequential error
+/// propagation) or have no quantizer at all (FP). Must stay consistent
+/// with [`build_quantizer`]: the returned instance is the same type the
+/// boxed `Quantizer` wires to the engine drivers, so tiled scheduling is
+/// bit-identical to `quantize_with_pool`.
+pub fn block_quantizer(method: Method) -> Option<Arc<dyn BlockQuantizer>> {
+    Some(match method {
+        Method::Fp | Method::Gptq => return None,
+        Method::Rtn => Arc::new(RtnQuantizer::symmetric()),
+        Method::Bnb => Arc::new(Nf4Quantizer::nf4()),
+        Method::Hqq => Arc::new(HqqQuantizer::default()),
+        Method::Wgm | Method::WgmDq => Arc::new(MsbQuantizer::wgm()),
+        Method::WgmLo => Arc::new(MsbQuantizer::wgm_lo()),
+        Method::Gg => Arc::new(MsbQuantizer::gg()),
+        Method::Xnor => Arc::new(XnorQuantizer::whole()),
+        Method::BlockedXnor => Arc::new(XnorQuantizer::blocked()),
+    })
+}
+
 /// Resolve a packed payload's `method` string (a `BlockQuantizer::name()`)
 /// to the quantizer whose `decode_block` reconstructs it. Every MSB solver
 /// shares one decode (sign · scale gather), so any `msb-*` name maps to
@@ -188,6 +210,30 @@ mod tests {
         }
         assert!(block_decoder("gptq").is_err());
         assert!(block_decoder("zero").is_err());
+    }
+
+    /// The scheduler relies on `block_quantizer` agreeing with
+    /// `build_quantizer` method-for-method — a mismatch would silently
+    /// change results between the tiled and whole-layer paths.
+    #[test]
+    fn block_quantizer_consistent_with_build() {
+        for m in [
+            Method::Rtn,
+            Method::Bnb,
+            Method::Hqq,
+            Method::Wgm,
+            Method::WgmDq,
+            Method::WgmLo,
+            Method::Gg,
+            Method::Xnor,
+            Method::BlockedXnor,
+        ] {
+            let bq = block_quantizer(m).unwrap_or_else(|| panic!("{m:?} must tile"));
+            let boxed = build_quantizer(m, None).unwrap();
+            assert_eq!(bq.name(), boxed.name(), "{m:?}");
+        }
+        assert!(block_quantizer(Method::Fp).is_none());
+        assert!(block_quantizer(Method::Gptq).is_none());
     }
 
     #[test]

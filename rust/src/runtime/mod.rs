@@ -127,11 +127,13 @@ impl ModelRunner {
     /// Replace a subset of weights (by name) — used to swap in each
     /// quantized variant without recompiling or re-uploading the rest.
     /// Packed payload maps ([`crate::pipeline::QuantizedModel::export_packed`])
-    /// are detected and decoded transparently on a single thread; use
-    /// [`ModelRunner::update_weights_packed`] to control the decode pool.
+    /// are detected and decoded transparently on one worker per available
+    /// core; use [`ModelRunner::update_weights_packed`] to pick the decode
+    /// pool size explicitly.
     pub fn update_weights(&mut self, updates: &TensorMap) -> Result<usize> {
         if crate::pipeline::is_packed_map(updates) {
-            return self.update_weights_packed(updates, 1);
+            let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            return self.update_weights_packed(updates, threads);
         }
         let mut n = 0;
         for (i, name) in self.names.iter().enumerate() {

@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench-smoke bench-perf bench-pack lint fmt artifacts clean
+.PHONY: build test bench-smoke bench-perf bench-pack bench-gemv lint fmt artifacts clean
 
 ## Release build of the library, `msb` CLI, all benches and all examples.
 build:
@@ -34,6 +34,13 @@ bench-perf:
 ## conventions as bench-perf).
 bench-pack:
 	$(CARGO) bench --bench perf_pack
+
+## Fused packed-weight GEMV vs decode-then-matmul ablation (gemv-* keys
+## merged into the same BENCH_perf.json as bench-perf). Self-asserting:
+## fused must match the reference, beat the decode baseline, and allocate
+## no f32 weight buffer (peak-allocation gate).
+bench-gemv:
+	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_gemv
 
 ## Style gate: rustfmt + clippy with warnings denied.
 lint:

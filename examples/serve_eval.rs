@@ -6,11 +6,18 @@
 //!   cargo run --release --example serve_eval -- [--model small]
 //!       [--requests 64] [--clients 8] [--method wgm]
 //!       [--packed payload.msbt] [--decode-threads N]
+//!       [--fused payload.msbt] [--threads N] [--batch B]
 //!
 //! With `--packed`, the server boots straight from a packed `.msbt`
 //! payload (`msb pack`): codes + scale tables are decoded on the pool
 //! (`--decode-threads`, default = available cores) and no offline PTQ
 //! runs — the deployable-artifact serving path.
+//!
+//! With `--fused`, the server never decodes at all: it holds one
+//! `kernels::PackedLinear` per layer (codes + scale tables, 4–6x smaller
+//! than f32) behind a dynamic-batching `GemvServer`, and every request is
+//! answered by the fused GEMV/GEMM kernels straight off the codes. This
+//! path needs no `artifacts/` directory — the payload is the model.
 
 use std::time::{Duration, Instant};
 
@@ -21,11 +28,16 @@ use msb_quant::io::msbt;
 use msb_quant::pipeline::{decode_packed_model, quantize_model};
 use msb_quant::quant::registry::Method;
 use msb_quant::quant::QuantConfig;
-use msb_quant::runtime::ModelRunner;
-use msb_quant::server::EvalServer;
+use msb_quant::runtime::{FusedModel, ModelRunner};
+use msb_quant::server::{EvalServer, GemvServer};
+use msb_quant::stats::Rng;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
+    if let Some(payload) = args.get("fused") {
+        let payload = payload.to_string();
+        return serve_fused(&args, &payload);
+    }
     let arts = Artifacts::load()?;
     let spec = arts.manifest.model(args.str_or("model", "small"))?.clone();
     let n_requests = args.usize_or("requests", 64)?;
@@ -141,6 +153,113 @@ fn main() -> Result<()> {
         stats.requests as f64 / stats.batches.max(1) as f64,
         stats.max_batch_fill,
         mean_nll.exp()
+    );
+    Ok(())
+}
+
+/// Fused serving: hold the model as `PackedLinear` handles (never decoded
+/// f32), dynamic-batch concurrent matvec requests through `GemvServer`,
+/// and self-check one served response per layer against the serial fused
+/// gemv (bit-identical by the kernels' determinism contract).
+fn serve_fused(args: &Args, payload: &str) -> Result<()> {
+    let n_requests = args.usize_or("requests", 64)?;
+    let n_clients = args.usize_or("clients", 8)?.max(1);
+    anyhow::ensure!(n_requests >= n_clients, "--requests must be >= --clients");
+    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = args.usize_or("threads", default_threads)?;
+    let batch_cap = args.usize_or("batch", 8)?;
+
+    let t0 = Instant::now();
+    let map = msbt::read_file(payload)?;
+    let model = FusedModel::from_packed_map(&map)?;
+    let (pb, fb) = (model.payload_bytes(), model.f32_bytes());
+    println!(
+        "serving {} fused {} layers from {payload} in {:.2}s \
+         ({pb} payload bytes = {:.3}x of the {fb}-byte f32 set; no decode)",
+        model.method(),
+        model.linears().len(),
+        t0.elapsed().as_secs_f64(),
+        pb as f64 / fb as f64,
+    );
+
+    // reference answers computed serially BEFORE the model moves into the
+    // server thread; the served responses must be bit-identical
+    let probe = |cols: usize, seed: u64| {
+        let mut x = vec![0.0f32; cols];
+        Rng::new(seed).fill_normal(&mut x, 1.0);
+        x
+    };
+    let layers: Vec<(String, usize)> =
+        model.linears().iter().map(|(n, l)| (n.clone(), l.cols())).collect();
+    let references: Vec<(String, Vec<f32>, Vec<f32>)> = layers
+        .iter()
+        .enumerate()
+        .map(|(i, (name, cols))| {
+            let x = probe(*cols, 0x5EED + i as u64);
+            let y = model.linear(name).expect("layer").gemv(&x);
+            (name.clone(), x, y)
+        })
+        .collect();
+
+    let (server, client) = GemvServer::spawn(model, threads, batch_cap, Duration::from_millis(5));
+    for (name, x, want) in &references {
+        let got = client.infer(name, x.clone())?;
+        anyhow::ensure!(&got == want, "{name}: served response != serial fused gemv");
+    }
+    println!("self-check OK: served responses bit-identical to serial fused gemv");
+    // the self-check requests above ride the same server; subtract them
+    // from the reported load numbers so throughput/fill reflect the run
+    let warmup = references.len() as u64;
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let client = client.clone();
+        let layers = layers.clone();
+        let per_client = n_requests / n_clients;
+        handles.push(std::thread::spawn(move || -> Vec<f64> {
+            let mut lat = Vec::new();
+            for r in 0..per_client {
+                let (name, cols) = &layers[(c * 7919 + r) % layers.len()];
+                let x = {
+                    let mut v = vec![0.0f32; *cols];
+                    Rng::new((c * 104729 + r) as u64).fill_normal(&mut v, 1.0);
+                    v
+                };
+                let t = Instant::now();
+                let y = client.infer(name, x).expect("fused infer");
+                lat.push(t.elapsed().as_secs_f64() * 1e3);
+                assert!(y.iter().all(|v| v.is_finite()), "{name}: non-finite output");
+            }
+            lat
+        }));
+    }
+    let mut all_lat = Vec::new();
+    for h in handles {
+        all_lat.extend(h.join().expect("client thread"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(client);
+    let stats = server.shutdown();
+
+    all_lat.sort_by(f64::total_cmp);
+    let p = |q: f64| all_lat[((all_lat.len() - 1) as f64 * q) as usize];
+    let (reqs, batches) = (
+        stats.requests.saturating_sub(warmup),
+        stats.batches.saturating_sub(warmup),
+    );
+    println!("\n{reqs} fused requests over {n_clients} clients in {wall:.2}s");
+    println!(
+        "throughput {:.1} req/s | latency p50 {:.2}ms p90 {:.2}ms p99 {:.2}ms",
+        reqs as f64 / wall,
+        p(0.5),
+        p(0.9),
+        p(0.99)
+    );
+    println!(
+        "gemm batches {batches} (mean fill {:.2}, max {}) — each batch decodes every tile once",
+        reqs as f64 / batches.max(1) as f64,
+        stats.max_batch_fill
     );
     Ok(())
 }

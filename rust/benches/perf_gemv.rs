@@ -1,0 +1,249 @@
+//! §Perf — fused packed-weight GEMV vs decode-then-matmul ablation.
+//!
+//! The claim under test: computing `y = W·x` directly on the codes
+//! (`kernels::PackedLinear`) beats decoding the packed payload to a full
+//! f32 matrix and multiplying — because the fused path touches only the
+//! 4–6x-smaller payload and never allocates, writes, or re-reads the f32
+//! weight buffer. Self-asserting before any number is reported:
+//!
+//! * fused output matches the f64 decode-then-matvec reference to 1e-5
+//!   relative (per row, scaled by the row's |w·x| mass);
+//! * serial, pooled, scalar and SIMD fused paths are bit-identical;
+//! * fused throughput >= the decode-then-matmul baseline;
+//! * the fused call's **peak heap allocation** stays under `n` bytes —
+//!   a quarter of the `4n`-byte f32 weight buffer the baseline must
+//!   materialize (tracked by a counting global allocator; the baseline is
+//!   also measured and must exceed `4n`, proving the counter sees it).
+//!
+//! Results merge into `BENCH_perf.json` (`gemv-*` keys) next to the
+//! engine/scheduler numbers via `benchlib::merge_bench_json`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use msb_quant::benchlib::{self, time_median};
+use msb_quant::kernels::{assert_matvec_close, dense_gemv, Kernel, PackedLinear};
+use msb_quant::pool::ThreadPool;
+use msb_quant::quant::engine::{decode_packed, quantize_serial, BlockQuantizer};
+use msb_quant::quant::msb::MsbQuantizer;
+use msb_quant::quant::rtn::RtnQuantizer;
+use msb_quant::quant::xnor::XnorQuantizer;
+use msb_quant::quant::QuantConfig;
+use msb_quant::stats::Rng;
+
+/// Counting allocator: tracks live bytes and their high-water mark so the
+/// bench can assert the fused path never materializes an f32-sized
+/// buffer. Wraps `System`; the accounting is two relaxed atomics per
+/// alloc/dealloc, identical overhead for both sides of the ablation.
+struct CountingAlloc;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+        System.dealloc(ptr, layout);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            let live = LIVE.fetch_add(new_size, Ordering::Relaxed) + new_size;
+            PEAK.fetch_max(live, Ordering::Relaxed);
+            LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Run `f` and return its peak heap growth in bytes over the live
+/// baseline at entry. Only meaningful for single-threaded `f` (the
+/// measured calls below are serial).
+fn peak_alloc_of<R>(f: impl FnOnce() -> R) -> (R, usize) {
+    let base = LIVE.load(Ordering::Relaxed);
+    PEAK.store(base, Ordering::Relaxed);
+    let r = f();
+    let peak = PEAK.load(Ordering::Relaxed);
+    (r, peak.saturating_sub(base))
+}
+
+fn activation(cols: usize, seed: u64) -> Vec<f32> {
+    let mut x = vec![0.0f32; cols];
+    Rng::new(seed).fill_normal(&mut x, 1.0);
+    x
+}
+
+struct Case {
+    label: &'static str,
+    q: Arc<dyn BlockQuantizer>,
+    cfg: QuantConfig,
+    rows: usize,
+    cols: usize,
+}
+
+fn main() {
+    let fast = benchlib::fast_mode();
+    let mut results: BTreeMap<String, f64> = BTreeMap::new();
+    let dim = if fast { 256 } else { 2048 };
+    let reps = if fast { 3 } else { 5 };
+
+    let cases = vec![
+        Case {
+            label: "msb-wgm-u4",
+            q: Arc::new(MsbQuantizer::wgm()),
+            cfg: QuantConfig::block_wise(4, 64).with_window(1),
+            rows: dim,
+            cols: dim,
+        },
+        Case {
+            label: "rtn-u4",
+            q: Arc::new(RtnQuantizer::symmetric()),
+            cfg: QuantConfig::block_wise(4, 64),
+            rows: dim,
+            cols: dim,
+        },
+        Case {
+            label: "xnor-u1",
+            q: Arc::new(XnorQuantizer::blocked()),
+            cfg: QuantConfig::block_wise(1, 64),
+            rows: dim,
+            cols: dim,
+        },
+        Case {
+            label: "msb-wgm-u2",
+            q: Arc::new(MsbQuantizer::wgm()),
+            cfg: QuantConfig::block_wise(2, 64).with_window(1),
+            rows: dim,
+            cols: dim,
+        },
+        Case {
+            label: "msb-wgm-i8",
+            q: Arc::new(MsbQuantizer::wgm()),
+            cfg: QuantConfig::per_tensor(6).with_window(16),
+            rows: dim.min(512),
+            cols: dim.min(512),
+        },
+    ];
+
+    let kernel = Kernel::detect();
+    benchlib::header(&format!("fused GEMV vs decode+matmul ({} kernel)", kernel.name()));
+    results.insert("gemv-simd".to_string(), u64::from(kernel != Kernel::Scalar) as f64);
+
+    for case in &cases {
+        let mut w = benchlib::proxy_matrix(case.rows, case.cols);
+        for i in (0..w.len()).step_by(397) {
+            w.data[i] = 0.0; // keep the zero-exception path on the hot loop
+        }
+        let cfg = case.cfg.clone().with_packed();
+        let qt = quantize_serial(&*case.q, &w, &cfg);
+        let pt = qt.packed.expect("packed payload");
+        let n = pt.n_elems();
+        let n_blocks = pt.n_blocks() as f64;
+        let decoded = decode_packed(Arc::clone(&case.q), &pt, None);
+        assert_eq!(decoded.data, qt.dequant.data, "{}: decode sanity", case.label);
+
+        let pl = PackedLinear::new(pt).expect("fused handle");
+        let x = activation(case.cols, 0xBEA7);
+
+        // --- correctness gates -----------------------------------------
+        let (y, fused_peak) = peak_alloc_of(|| pl.gemv(&x));
+        assert_matvec_close(&decoded, &x, &y, 1e-5);
+        let scalar = pl.clone().with_kernel(Kernel::Scalar);
+        assert_eq!(scalar.gemv(&x), y, "{}: SIMD != scalar", case.label);
+
+        // --- the headline assertion: no f32 weight buffer ---------------
+        let (_, base_peak) = peak_alloc_of(|| {
+            let m = decode_packed(Arc::clone(&case.q), pl.packed(), None);
+            dense_gemv(&m, &x, kernel)
+        });
+        assert!(
+            fused_peak < n,
+            "{}: fused gemv peaked at {fused_peak} B — must stay under {n} B \
+             (no f32 weight buffer; f32 would be {} B)",
+            case.label,
+            4 * n
+        );
+        assert!(
+            base_peak >= 4 * n,
+            "{}: baseline peak {base_peak} B should include the {} B f32 buffer \
+             (allocation counter broken?)",
+            case.label,
+            4 * n
+        );
+
+        // --- throughput --------------------------------------------------
+        let t_fused = time_median(reps, || pl.gemv(&x));
+        let t_base = time_median(reps, || {
+            let m = decode_packed(Arc::clone(&case.q), pl.packed(), None);
+            dense_gemv(&m, &x, kernel)
+        });
+        assert!(
+            t_fused <= t_base,
+            "{}: fused {t_fused:.5}s slower than decode+matmul {t_base:.5}s",
+            case.label
+        );
+        println!(
+            "  {:<12} fused {:>9.5}s ({:>11.0} blk/s, peak {:>7} B)   \
+             decode+mm {:>9.5}s ({:.2}x)",
+            case.label,
+            t_fused,
+            n_blocks / t_fused,
+            fused_peak,
+            t_base,
+            t_base / t_fused
+        );
+        results.insert(format!("gemv-fused-{}-bps", case.label), n_blocks / t_fused);
+        results.insert(format!("gemv-decode-{}-bps", case.label), n_blocks / t_base);
+        results.insert(format!("gemv-speedup-{}", case.label), t_base / t_fused);
+    }
+
+    // --- pooled + batched arms on the paper-point case ---------------------
+    let case = &cases[0];
+    let cfg = case.cfg.clone().with_packed();
+    let w = benchlib::proxy_matrix(case.rows, case.cols);
+    let pt = quantize_serial(&*case.q, &w, &cfg).packed.expect("packed payload");
+    let n_blocks = pt.n_blocks() as f64;
+    let pl = PackedLinear::new(pt).expect("fused handle");
+    let x = activation(case.cols, 0xBEA8);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut pool = ThreadPool::new(threads, threads * 4);
+    let y = pl.gemv(&x);
+    assert_eq!(y, pl.gemv_pooled(&x, &pool), "pooled gemv != serial");
+    let t_pooled = time_median(reps, || pl.gemv_pooled(&x, &pool));
+    let batch = 8usize;
+    let mut xs = vec![0.0f32; batch * case.cols];
+    Rng::new(0xBEA9).fill_normal(&mut xs, 1.0);
+    let t_gemm = time_median(reps, || pl.gemm_pooled(&xs, batch, &pool));
+    pool.shutdown();
+    benchlib::header(&format!("pooled fused GEMV ({threads} workers)"));
+    println!(
+        "  msb-wgm-u4   pooled {:>9.5}s ({:>11.0} blk/s)   gemm x{batch} {:>9.5}s \
+         ({:>11.0} blk/s amortized)",
+        t_pooled,
+        n_blocks / t_pooled,
+        t_gemm,
+        n_blocks * batch as f64 / t_gemm
+    );
+    results.insert("gemv-pooled-bps".to_string(), n_blocks / t_pooled);
+    results.insert("gemv-gemm8-bps".to_string(), n_blocks * batch as f64 / t_gemm);
+
+    match benchlib::merge_bench_json("perf", &results) {
+        Ok(path) => println!("\nmerged {} keys into {}", results.len(), path.display()),
+        Err(e) => eprintln!("\nBENCH_perf.json not written: {e}"),
+    }
+}

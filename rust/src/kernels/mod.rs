@@ -1,0 +1,689 @@
+//! Fused packed-weight GEMV/GEMM kernels: compute directly on codes.
+//!
+//! Every serving path used to pay an O(model) unpack-to-f32
+//! materialization (`engine::decode_packed`) before the first multiply —
+//! throwing away the 4–6× memory win the packed `.msbt` format bought.
+//! This module computes `y = W·x` (and small-batch `Y = W·Xᵀ`) straight
+//! from a [`PackedTensor`]: per block, the codes are decoded into a
+//! register-resident 64-element tile, the block's scales applied, and the
+//! multiply-accumulate fused — the f32 weight matrix never exists.
+//!
+//! Determinism is a hard invariant, matching the engine's contract:
+//!
+//! * **Threading** — rows are striped over [`ThreadPool`] via
+//!   `submit_many`; every output row is computed start-to-finish by one
+//!   worker in the same order the serial path uses, so threaded and
+//!   serial runs are bit-identical.
+//! * **SIMD** — accumulation is structured as fixed per-block partial
+//!   sums: each ≤64-element chunk reduces through eight strided lanes and
+//!   a fixed lane-combination tree (exactly the AVX2 horizontal-add
+//!   shape), then chunk partials add in block order. The runtime-dispatched
+//!   AVX2 path (`std::arch` + `is_x86_feature_detected!`) and the portable
+//!   scalar fallback — always compiled, always tested — execute the same
+//!   tree, so they are bit-identical too. The AVX2 kernel deliberately
+//!   uses separate multiply+add rather than `vfmadd`: FP contraction would
+//!   change the rounding of every product and break identity with the
+//!   scalar path (whose only single-rounding fallback is a slow libm
+//!   `fmaf`).
+//!
+//! Decode semantics are exactly [`engine::decode_packed`]'s: scheme-decoded
+//! codes through the method's `decode_block`, exact-zero exception-list
+//! positions forced to 0.0, and the bf16 storage round-trip applied per
+//! tile — so the fused product matches the decode-then-matvec reference to
+//! f32 summation-order error (≤ 1e-5 relative; asserted across the method
+//! grid by tests and by the `perf_gemv` bench).
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::pool::ThreadPool;
+use crate::quant::engine::{pool_ordered_map, BlockQuantizer};
+use crate::quant::packing::{PackedCodes, PackedTensor};
+use crate::quant::registry;
+use crate::tensor::{bf16, Matrix};
+
+/// Elements per register-resident tile: one paper block (t=64). Larger
+/// blocks and per-tensor plans are walked in 64-element sub-chunks; the
+/// partial-sum structure is anchored at block starts, so the chunking is
+/// deterministic for a given payload regardless of threads or SIMD.
+const CHUNK: usize = 64;
+
+// ---------------------------------------------------------------------------
+// The dot-product micro-kernel: scalar reference + runtime-dispatched AVX2.
+// ---------------------------------------------------------------------------
+
+/// Which micro-kernel executes the per-chunk dot products.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable 8-lane scalar fallback — always compiled, always tested;
+    /// the reference the SIMD path must reproduce bit-for-bit.
+    Scalar,
+    /// AVX2 path (requires only `avx2` at runtime — the kernel
+    /// deliberately avoids `vfmadd`, so FMA support is not needed; see
+    /// the module docs).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+impl Kernel {
+    /// Pick the fastest kernel this CPU supports.
+    pub fn detect() -> Kernel {
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("avx2") {
+            return Kernel::Avx2;
+        }
+        Kernel::Scalar
+    }
+
+    /// The detected SIMD kernel, or `None` when only the scalar fallback
+    /// is available (lets tests compare both paths without cfg gymnastics).
+    pub fn detect_simd() -> Option<Kernel> {
+        let k = Kernel::detect();
+        if k == Kernel::Scalar {
+            None
+        } else {
+            Some(k)
+        }
+    }
+
+    /// Whether this kernel can run on the current CPU.
+    pub fn available(self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => is_x86_feature_detected!("avx2"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => "avx2",
+        }
+    }
+
+    /// Dot product of one ≤64-element chunk in the fixed lane structure.
+    #[inline]
+    fn dot(self, w: &[f32], x: &[f32]) -> f32 {
+        match self {
+            Kernel::Scalar => dot_chunk_scalar(w, x),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: every entry point accepting a Kernel (detect,
+            // with_kernel, dense_gemv) asserts `available()` before this
+            // variant can reach the hot loop, so avx2 is present.
+            Kernel::Avx2 => unsafe { dot_chunk_avx2(w, x) },
+        }
+    }
+}
+
+/// Portable chunk dot: eight strided lanes (`lanes[j] += w[8k+j]·x[8k+j]`)
+/// reduced through the fixed tree `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`
+/// — the exact shape of the AVX2 `vextractf128`/`movehl`/`shuffle`
+/// horizontal add — then a sequential tail for `len % 8` elements.
+fn dot_chunk_scalar(w: &[f32], x: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), x.len());
+    let n = w.len();
+    let m = n - n % 8;
+    let mut lanes = [0.0f32; 8];
+    let mut k = 0;
+    while k < m {
+        for j in 0..8 {
+            lanes[j] += w[k + j] * x[k + j];
+        }
+        k += 8;
+    }
+    let q = [lanes[0] + lanes[4], lanes[1] + lanes[5], lanes[2] + lanes[6], lanes[3] + lanes[7]];
+    let mut sum = (q[0] + q[2]) + (q[1] + q[3]);
+    for i in m..n {
+        sum += w[i] * x[i];
+    }
+    sum
+}
+
+/// AVX2 chunk dot with the same lane/reduction structure as
+/// [`dot_chunk_scalar`]. Multiply and add stay separate instructions
+/// (no `vfmadd`): Rust/LLVM never contracts FP by default, so both paths
+/// round every product identically and the results are bit-equal.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_chunk_avx2(w: &[f32], x: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(w.len(), x.len());
+    let n = w.len();
+    let m = n - n % 8;
+    let mut acc = _mm256_setzero_ps();
+    let mut k = 0;
+    while k < m {
+        let a = _mm256_loadu_ps(w.as_ptr().add(k));
+        let b = _mm256_loadu_ps(x.as_ptr().add(k));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(a, b));
+        k += 8;
+    }
+    // horizontal add in the fixed tree: q = lo128 + hi128, r = q + movehl(q),
+    // sum = r0 + r1  ==  ((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))
+    let q = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps(acc, 1));
+    let r = _mm_add_ps(q, _mm_movehl_ps(q, q));
+    let s = _mm_add_ss(r, _mm_shuffle_ps(r, r, 0b01));
+    let mut sum = _mm_cvtss_f32(s);
+    for i in m..n {
+        sum += w[i] * x[i];
+    }
+    sum
+}
+
+// ---------------------------------------------------------------------------
+// PackedLinear: the serving-side handle over a packed layer.
+// ---------------------------------------------------------------------------
+
+/// What [`PackedLinear`] shares between the caller and its pool jobs.
+struct Shared {
+    pt: PackedTensor,
+    decoder: Arc<dyn BlockQuantizer>,
+    /// Scale table decoded to f32 once (the exact values quantize used).
+    scales: Vec<f32>,
+    /// Exact-zero exception indices, sorted ascending.
+    zeros: Vec<u32>,
+}
+
+/// A linear layer held *as its packed payload*: codes + scale table +
+/// exception list, never the f32 weight matrix. The runtime/server keep
+/// one of these per layer instead of decoded f32 buffers; [`gemv`] /
+/// [`gemm`] fuse decode and multiply-accumulate per block.
+///
+/// Cloning is cheap (the payload is shared behind an `Arc`), so handles
+/// can be handed to server threads freely.
+///
+/// [`gemv`]: PackedLinear::gemv
+/// [`gemm`]: PackedLinear::gemm
+#[derive(Clone)]
+pub struct PackedLinear {
+    inner: Arc<Shared>,
+    kernel: Kernel,
+}
+
+impl PackedLinear {
+    /// Wrap a payload, resolving its decode method and validating the
+    /// layout (the same invariants `pipeline`'s reconstruction enforces on
+    /// files, re-checked so handles built from in-memory payloads cannot
+    /// index out of bounds in the hot loop).
+    pub fn new(pt: PackedTensor) -> Result<PackedLinear> {
+        let decoder = registry::block_decoder(&pt.method)
+            .with_context(|| format!("no fused kernel for method '{}'", pt.method))?;
+        let n = pt.n_elems();
+        let scales = pt.scales_f32();
+        ensure!(
+            scales.len() == pt.n_blocks() * pt.scales_per_block,
+            "scale table len {} != {} blocks x {} scales/block",
+            scales.len(),
+            pt.n_blocks(),
+            pt.scales_per_block
+        );
+        ensure!(pt.block > 0 || n == 0, "degenerate block size");
+        let code_len_ok = match &pt.codes {
+            PackedCodes::I8(v) => v.len() == n,
+            PackedCodes::U1(p) | PackedCodes::U2(p) | PackedCodes::U4(p) => {
+                p.len() == n.div_ceil((8 / pt.codes.width()) as usize)
+            }
+        };
+        ensure!(code_len_ok, "code buffer does not cover {n} elements");
+        let mut zeros = pt.zeros.clone();
+        zeros.sort_unstable();
+        if let Some(&last) = zeros.last() {
+            ensure!((last as usize) < n, "zero exception {last} out of range");
+        }
+        Ok(PackedLinear {
+            inner: Arc::new(Shared { pt, decoder, scales, zeros }),
+            kernel: Kernel::detect(),
+        })
+    }
+
+    /// Force a specific micro-kernel (tests and the SIMD-vs-scalar bench
+    /// ablation). Panics if the kernel is unavailable on this CPU.
+    pub fn with_kernel(mut self, kernel: Kernel) -> PackedLinear {
+        assert!(kernel.available(), "{} kernel not available on this CPU", kernel.name());
+        self.kernel = kernel;
+        self
+    }
+
+    pub fn rows(&self) -> usize {
+        self.inner.pt.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.inner.pt.cols
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// The wrapped payload (storage accounting, layout inspection).
+    pub fn packed(&self) -> &PackedTensor {
+        &self.inner.pt
+    }
+
+    /// Serialized payload size — the bytes this handle actually holds, vs
+    /// the `rows·cols·4` an f32 weight buffer would cost.
+    pub fn payload_bytes(&self) -> usize {
+        self.inner.pt.payload_bytes()
+    }
+
+    /// Fused matrix-vector product `y = W·x` (`x.len() == cols`,
+    /// `y.len() == rows`), serial reference order.
+    pub fn gemv(&self, x: &[f32]) -> Vec<f32> {
+        self.gemm(x, 1)
+    }
+
+    /// Fused small-batch product: `xs` is row-major `[batch, cols]`, the
+    /// result row-major `[batch, rows]`. Each block tile is decoded once
+    /// and multiplied against every batch row — the decode cost amortizes
+    /// across the batch, which is where fused serving wins hardest.
+    pub fn gemm(&self, xs: &[f32], batch: usize) -> Vec<f32> {
+        let (rows, cols) = (self.rows(), self.cols());
+        assert_eq!(xs.len(), batch * cols, "activation shape != [batch, cols]");
+        let mut out = vec![0.0f32; batch * rows];
+        run_rows(&self.inner, self.kernel, 0, rows, xs, batch, &mut out);
+        out
+    }
+
+    /// [`PackedLinear::gemv`] with rows striped over `pool` — bit-identical
+    /// to the serial path for every worker count.
+    pub fn gemv_pooled(&self, x: &[f32], pool: &ThreadPool) -> Vec<f32> {
+        self.gemm_pooled(x, 1, pool)
+    }
+
+    /// [`PackedLinear::gemm`] with rows striped over `pool` via
+    /// `submit_many` (one lock acquisition per worker stripe). Every row is
+    /// computed whole by one job, so the output is bit-identical to the
+    /// serial path regardless of worker count or completion order. Copies
+    /// `xs` once to share with the jobs; callers that already own the
+    /// batch buffer can avoid that copy with [`PackedLinear::gemm_shared`].
+    pub fn gemm_pooled(&self, xs: &[f32], batch: usize, pool: &ThreadPool) -> Vec<f32> {
+        self.gemm_shared(Arc::new(xs.to_vec()), batch, pool)
+    }
+
+    /// [`PackedLinear::gemm_pooled`] over a caller-owned shared buffer —
+    /// no activation copy (the serving loop builds its batch directly
+    /// into the `Arc`).
+    pub fn gemm_shared(&self, xs: Arc<Vec<f32>>, batch: usize, pool: &ThreadPool) -> Vec<f32> {
+        let (rows, cols) = (self.rows(), self.cols());
+        assert_eq!(xs.len(), batch * cols, "activation shape != [batch, cols]");
+        let threads = pool.threads();
+        if threads <= 1 || rows <= 1 {
+            return self.gemm(&xs, batch);
+        }
+        let stripe = rows.div_ceil(threads * 4).max(1);
+        let n_stripes = rows.div_ceil(stripe);
+        if n_stripes <= 1 {
+            return self.gemm(&xs, batch);
+        }
+        let kernel = self.kernel;
+        let jobs: Vec<_> = (0..n_stripes)
+            .map(|si| {
+                let sh = Arc::clone(&self.inner);
+                let xs = Arc::clone(&xs);
+                move || {
+                    let r0 = si * stripe;
+                    let r1 = ((si + 1) * stripe).min(rows);
+                    let mut out = vec![0.0f32; batch * (r1 - r0)];
+                    run_rows(&sh, kernel, r0, r1, &xs, batch, &mut out);
+                    out
+                }
+            })
+            .collect();
+        let stripes = pool_ordered_map(pool, jobs);
+        let mut y = vec![0.0f32; batch * rows];
+        for (si, chunk) in stripes.into_iter().enumerate() {
+            let r0 = si * stripe;
+            let width = chunk.len() / batch;
+            for b in 0..batch {
+                y[b * rows + r0..b * rows + r0 + width]
+                    .copy_from_slice(&chunk[b * width..(b + 1) * width]);
+            }
+        }
+        y
+    }
+}
+
+/// The fused row kernel: rows `[r0, r1)` of `y = W·x` for every batch row,
+/// written into `out[b·(r1−r0) + (r−r0)]`. Walks each row as segments
+/// (row ∩ block instance) sub-chunked at [`CHUNK`] elements: unpack codes
+/// into an i8 tile, method-decode with the block's scales into an f32
+/// tile, zero the exception-listed positions, apply the bf16 storage
+/// round-trip, then one [`Kernel::dot`] per batch row. Partial sums add in
+/// chunk order — the fixed structure every execution mode shares.
+fn run_rows(
+    sh: &Shared,
+    kernel: Kernel,
+    r0: usize,
+    r1: usize,
+    xs: &[f32],
+    batch: usize,
+    out: &mut [f32],
+) {
+    let (rows, cols) = (sh.pt.rows, sh.pt.cols);
+    let n = rows * cols;
+    let block = sh.pt.block.max(1);
+    let spb = sh.pt.scales_per_block;
+    let out_rows = r1 - r0;
+    let mut ctile = [0i8; CHUNK];
+    let mut wtile = [0.0f32; CHUNK];
+    for r in r0..r1 {
+        let row_start = r * cols;
+        let row_end = row_start + cols;
+        let mut g = row_start;
+        while g < row_end {
+            // flat plans let blocks cross rows; clamp the segment to both
+            let bi = g / block;
+            let seg_end = row_end.min(((bi + 1) * block).min(n));
+            let scales = &sh.scales[bi * spb..(bi + 1) * spb];
+            let mut c = g;
+            while c < seg_end {
+                let end = (c + CHUNK).min(seg_end);
+                let len = end - c;
+                let codes = &mut ctile[..len];
+                sh.pt.codes_range_into(c, codes);
+                let w = &mut wtile[..len];
+                sh.decoder.decode_block(codes, scales, w);
+                if !sh.zeros.is_empty() {
+                    let z0 = sh.zeros.partition_point(|&z| (z as usize) < c);
+                    let z1 = sh.zeros.partition_point(|&z| (z as usize) < end);
+                    for &z in &sh.zeros[z0..z1] {
+                        w[z as usize - c] = 0.0;
+                    }
+                }
+                if sh.pt.bf16 {
+                    for v in w.iter_mut() {
+                        *v = bf16::round(*v);
+                    }
+                }
+                let x_off = c - row_start;
+                for b in 0..batch {
+                    let xb = &xs[b * cols + x_off..b * cols + x_off + len];
+                    out[b * out_rows + (r - r0)] += kernel.dot(w, xb);
+                }
+                c = end;
+            }
+            g = seg_end;
+        }
+    }
+}
+
+/// Dense matvec over an already-decoded f32 matrix with the *same* chunked
+/// lane structure the fused path uses — the fair decode-then-matmul
+/// baseline for the `perf_gemv` ablation and `msb gemv-bench`.
+pub fn dense_gemv(m: &Matrix, x: &[f32], kernel: Kernel) -> Vec<f32> {
+    assert!(kernel.available(), "{} kernel not available on this CPU", kernel.name());
+    assert_eq!(x.len(), m.cols, "x len != cols");
+    let mut y = vec![0.0f32; m.rows];
+    for (r, yr) in y.iter_mut().enumerate() {
+        let row = m.row(r);
+        let mut c = 0;
+        while c < m.cols {
+            let end = (c + CHUNK).min(m.cols);
+            *yr += kernel.dot(&row[c..end], &x[c..end]);
+            c = end;
+        }
+    }
+    y
+}
+
+/// f64-accumulated matvec — the near-exact reference the fused output is
+/// checked against (1e-5 relative, scaled by the row's |w·x| mass so
+/// cancellation-heavy rows don't produce false alarms).
+pub fn reference_matvec(m: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), m.cols, "x len != cols");
+    (0..m.rows)
+        .map(|r| {
+            m.row(r).iter().zip(x).map(|(&w, &v)| w as f64 * v as f64).sum::<f64>() as f32
+        })
+        .collect()
+}
+
+/// Assert `got` matches the f64 reference for `m·x` within `rel` of each
+/// row's L1 product mass (the natural scale for f32 summation error).
+pub fn assert_matvec_close(m: &Matrix, x: &[f32], got: &[f32], rel: f64) {
+    assert_eq!(got.len(), m.rows);
+    for r in 0..m.rows {
+        let row = m.row(r);
+        let (mut sum, mut mass) = (0.0f64, 0.0f64);
+        for (&w, &v) in row.iter().zip(x) {
+            let p = w as f64 * v as f64;
+            sum += p;
+            mass += p.abs();
+        }
+        let tol = rel * mass.max(1e-30) + 1e-12;
+        let diff = (got[r] as f64 - sum).abs();
+        assert!(diff <= tol, "row {r}: got {} vs ref {sum} (diff {diff} > {tol})", got[r]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::engine::{decode_packed, quantize_serial};
+    use crate::quant::hqq::HqqQuantizer;
+    use crate::quant::msb::MsbQuantizer;
+    use crate::quant::nf4::Nf4Quantizer;
+    use crate::quant::rtn::RtnQuantizer;
+    use crate::quant::xnor::XnorQuantizer;
+    use crate::quant::QuantConfig;
+    use crate::stats::Rng;
+
+    fn weight_with_zeros(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut w = Matrix::randn(rows, cols, &mut Rng::new(seed));
+        for i in (0..w.len()).step_by(41) {
+            w.data[i] = 0.0; // exercise the exact-zero exception list
+        }
+        w
+    }
+
+    fn activation(cols: usize, seed: u64) -> Vec<f32> {
+        let mut x = vec![0.0f32; cols];
+        Rng::new(seed).fill_normal(&mut x, 1.0);
+        x
+    }
+
+    /// Fused gemv must (a) match the decode-then-matvec f64 reference to
+    /// 1e-5 relative, (b) be bit-identical serial vs pooled at every
+    /// thread count, and (c) be bit-identical scalar vs SIMD.
+    fn check_fused(q: Arc<dyn BlockQuantizer>, w: &Matrix, cfg: &QuantConfig, label: &str) {
+        let cfg = cfg.clone().with_packed();
+        let qt = quantize_serial(&*q, w, &cfg);
+        let pt = qt.packed.unwrap_or_else(|| panic!("{label}: no payload"));
+        let decoded = decode_packed(Arc::clone(&q), &pt, None);
+        assert_eq!(decoded.data, qt.dequant.data, "{label}: decode sanity");
+        let pl = PackedLinear::new(pt).unwrap_or_else(|e| panic!("{label}: {e}"));
+        let x = activation(w.cols, 0xA11CE);
+
+        let scalar = pl.clone().with_kernel(Kernel::Scalar);
+        let y = scalar.gemv(&x);
+        assert_matvec_close(&decoded, &x, &y, 1e-5);
+
+        for threads in [1usize, 4] {
+            let pool = ThreadPool::new(threads, threads * 4);
+            let yp = scalar.gemv_pooled(&x, &pool);
+            assert_eq!(y, yp, "{label}: pooled (threads={threads}) != serial");
+        }
+
+        if Kernel::detect_simd().is_some() {
+            let ys = pl.clone().with_kernel(Kernel::detect()).gemv(&x);
+            assert_eq!(y, ys, "{label}: SIMD != scalar");
+        }
+    }
+
+    /// Satellite grid: every packable method × both granularities, all
+    /// four storage widths (U1 xnor, U2 2-bit MSB, U4 4-bit grid, I8
+    /// per-tensor 6-bit MSB), zero-exception rows included.
+    #[test]
+    fn fused_grid_matches_reference() {
+        let w = weight_with_zeros(16, 256, 51);
+        let bw = QuantConfig::block_wise(4, 64);
+        let pt_cfg = QuantConfig::per_tensor(4).with_window(16);
+        let grid: Vec<(Arc<dyn BlockQuantizer>, &QuantConfig, &str)> = vec![
+            (Arc::new(RtnQuantizer::symmetric()), &bw, "rtn/bw"),
+            (Arc::new(RtnQuantizer::asymmetric()), &bw, "rtn-asym/bw"),
+            (Arc::new(Nf4Quantizer::nf4()), &bw, "nf4/bw"),
+            (Arc::new(HqqQuantizer::default()), &bw, "hqq/bw"),
+            (Arc::new(XnorQuantizer::whole()), &bw, "xnor/bw"),
+            (Arc::new(XnorQuantizer::blocked()), &bw, "blocked-xnor/bw"),
+            (Arc::new(MsbQuantizer::wgm()), &bw, "wgm/bw"),
+            (Arc::new(RtnQuantizer::symmetric()), &pt_cfg, "rtn/pt"),
+            (Arc::new(HqqQuantizer::default()), &pt_cfg, "hqq/pt"),
+            (Arc::new(XnorQuantizer::whole()), &pt_cfg, "xnor/pt"),
+            (Arc::new(MsbQuantizer::wgm()), &pt_cfg, "wgm/pt"),
+        ];
+        for (q, cfg, label) in grid {
+            check_fused(q, &w, cfg, label);
+        }
+        // U2: 2-bit MSB codes; U1: blocked-XNOR sign bits
+        let two_bit = QuantConfig::block_wise(2, 64).with_window(1);
+        check_fused(Arc::new(MsbQuantizer::wgm()), &w, &two_bit, "wgm/2-bit(u2)");
+        check_fused(Arc::new(XnorQuantizer::blocked()), &w, &two_bit, "blocked-xnor(u1)");
+        // I8: per-tensor 6-bit MSB (32 levels overflow a nibble)
+        let six_bit = QuantConfig::per_tensor(6).with_window(16);
+        let w_small = weight_with_zeros(8, 96, 52);
+        check_fused(Arc::new(MsbQuantizer::wgm()), &w_small, &six_bit, "wgm/6-bit(i8)");
+    }
+
+    /// Ragged shapes: `cols % 64 != 0` (t=32 over 96 columns) and a flat
+    /// plan whose blocks cross row boundaries (blocked-XNOR on 5×7, t=8).
+    #[test]
+    fn fused_ragged_and_flat_plans() {
+        let w = weight_with_zeros(9, 96, 53);
+        let cfg = QuantConfig::block_wise(4, 32);
+        check_fused(Arc::new(MsbQuantizer::wgm()), &w, &cfg, "wgm/t=32,cols=96");
+        check_fused(Arc::new(RtnQuantizer::symmetric()), &w, &cfg, "rtn/t=32,cols=96");
+        let tiny = Matrix::randn(5, 7, &mut Rng::new(54));
+        let flat = QuantConfig::block_wise(4, 8);
+        check_fused(Arc::new(XnorQuantizer::blocked()), &tiny, &flat, "blocked-xnor/flat5x7");
+    }
+
+    #[test]
+    fn gemm_batches_match_individual_gemvs() {
+        let w = weight_with_zeros(12, 128, 55);
+        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let q: Arc<dyn BlockQuantizer> = Arc::new(MsbQuantizer::wgm());
+        let pt = quantize_serial(&*q, &w, &cfg).packed.unwrap();
+        let pl = PackedLinear::new(pt).unwrap();
+        let batch = 3;
+        let mut xs = vec![0.0f32; batch * w.cols];
+        Rng::new(56).fill_normal(&mut xs, 1.0);
+        let ys = pl.gemm(&xs, batch);
+        for b in 0..batch {
+            let yb = pl.gemv(&xs[b * w.cols..(b + 1) * w.cols]);
+            assert_eq!(&ys[b * w.rows..(b + 1) * w.rows], &yb[..], "batch row {b}");
+        }
+        let pool = ThreadPool::new(3, 12);
+        assert_eq!(ys, pl.gemm_pooled(&xs, batch, &pool), "pooled gemm != serial");
+    }
+
+    #[test]
+    fn dense_gemv_matches_fused_at_aligned_blocks() {
+        // at t=64 the dense baseline's chunk anchoring coincides with the
+        // fused path's, so the two are bit-identical — the ablation in
+        // perf_gemv compares equal math, differing only in weight residency
+        let w = weight_with_zeros(8, 256, 57);
+        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let q: Arc<dyn BlockQuantizer> = Arc::new(MsbQuantizer::wgm());
+        let pt = quantize_serial(&*q, &w, &cfg).packed.unwrap();
+        let decoded = decode_packed(Arc::clone(&q), &pt, None);
+        let pl = PackedLinear::new(pt).unwrap().with_kernel(Kernel::Scalar);
+        let x = activation(w.cols, 58);
+        assert_eq!(pl.gemv(&x), dense_gemv(&decoded, &x, Kernel::Scalar));
+    }
+
+    #[test]
+    fn scalar_dot_reduction_tree_is_fixed() {
+        // a permutation-sensitive probe: if the lane tree changed, the
+        // rounded result would drift from this frozen expectation
+        let w: Vec<f32> = (0..19).map(|i| 1.0 + i as f32 * 0.125).collect();
+        let x: Vec<f32> = (0..19).map(|i| 0.5 - i as f32 * 0.0625).collect();
+        let d = dot_chunk_scalar(&w, &x);
+        let mut lanes = [0.0f32; 8];
+        for k in (0..16).step_by(8) {
+            for j in 0..8 {
+                lanes[j] += w[k + j] * x[k + j];
+            }
+        }
+        let q =
+            [lanes[0] + lanes[4], lanes[1] + lanes[5], lanes[2] + lanes[6], lanes[3] + lanes[7]];
+        let mut want = (q[0] + q[2]) + (q[1] + q[3]);
+        for i in 16..19 {
+            want += w[i] * x[i];
+        }
+        assert_eq!(d, want);
+    }
+
+    #[test]
+    fn simd_dot_bit_identical_to_scalar() {
+        let Some(simd) = Kernel::detect_simd() else {
+            eprintln!("skipping: no SIMD kernel on this CPU");
+            return;
+        };
+        let mut rng = Rng::new(59);
+        for len in [1usize, 7, 8, 9, 16, 33, 63, 64] {
+            let mut w = vec![0.0f32; len];
+            let mut x = vec![0.0f32; len];
+            rng.fill_normal(&mut w, 1.0);
+            rng.fill_normal(&mut x, 1.0);
+            assert_eq!(simd.dot(&w, &x), Kernel::Scalar.dot(&w, &x), "len {len}");
+        }
+    }
+
+    /// Randomized property: random shapes (cols a multiple of 32, so the
+    /// ragged `cols % 64 != 0` case comes up constantly), random zero
+    /// sprinkling, two methods — fused gemv always matches the
+    /// decode-then-matvec reference.
+    #[test]
+    fn fused_gemv_property() {
+        crate::testing::check(
+            "fused gemv matches reference",
+            8,
+            |rng| {
+                let rows = 1 + rng.below(12);
+                let cols = 32 * (1 + rng.below(6));
+                let mut w = Matrix::randn(rows, cols, rng);
+                for v in &mut w.data {
+                    if rng.uniform() < 0.02 {
+                        *v = 0.0;
+                    }
+                }
+                (w, rng.below(2))
+            },
+            |(w, pick)| {
+                let q: Arc<dyn BlockQuantizer> = if *pick == 0 {
+                    Arc::new(MsbQuantizer::wgm())
+                } else {
+                    Arc::new(RtnQuantizer::symmetric())
+                };
+                let cfg = QuantConfig::block_wise(4, 32).with_packed();
+                let qt = quantize_serial(&*q, w, &cfg);
+                let decoded = decode_packed(Arc::clone(&q), qt.packed.as_ref().unwrap(), None);
+                let pl = PackedLinear::new(qt.packed.unwrap()).unwrap();
+                let x = activation(w.cols, 0xCAFE);
+                assert_matvec_close(&decoded, &x, &pl.gemv(&x), 1e-5);
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn rejects_corrupt_payloads() {
+        let w = Matrix::randn(4, 64, &mut Rng::new(60));
+        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let q: Arc<dyn BlockQuantizer> = Arc::new(RtnQuantizer::symmetric());
+        let pt = quantize_serial(&*q, &w, &cfg).packed.unwrap();
+        let mut bad = pt.clone();
+        bad.method = "nope".into();
+        assert!(PackedLinear::new(bad).is_err());
+        let mut bad = pt.clone();
+        bad.zeros.push(1 << 30);
+        assert!(PackedLinear::new(bad).is_err());
+        let mut bad = pt;
+        bad.scales_per_block = 7; // scale table no longer covers the blocks
+        assert!(PackedLinear::new(bad).is_err());
+    }
+}

@@ -32,6 +32,7 @@ pub mod cli;
 pub mod eval;
 pub mod harness;
 pub mod io;
+pub mod kernels;
 pub mod la;
 pub mod msb;
 pub mod pipeline;

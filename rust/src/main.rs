@@ -38,6 +38,7 @@ fn main() {
         "eval" => cmd_eval(&args),
         "pack" => cmd_pack(&args),
         "decode" => cmd_decode(&args),
+        "gemv-bench" => cmd_gemv_bench(&args),
         "kernel" => cmd_kernel(),
         "" | "help" | "--help" => {
             print!("{}", HELP);
@@ -68,7 +69,13 @@ commands:
              default --out <model>_<method>_packed.msbt
   decode     reconstruct f32 weights from a packed payload
              --in <packed.msbt> [--out decoded.msbt] [--threads N]
-             [--verify <f32.msbt>]  (bit-exact check against a reference)
+             [--verify <f32.msbt>]  (bit-exact check against a reference,
+             per tensor, reusing the decoded map; skips the output write
+             unless --out is given)
+  gemv-bench fused packed-weight GEMV vs decode-then-matmul ablation
+             --in <packed.msbt> [--layer L] | --rows R --cols C
+             [--method wgm --bits 4 --block 64 --granularity block]
+             [--threads N] [--batch B] [--reps K]
   kernel     execute the native Pallas-MSB HLO for the small model
 ";
 
@@ -240,6 +247,10 @@ fn cmd_pack(args: &Args) -> Result<()> {
 }
 
 /// Reconstruct f32 weights from a packed payload; artifacts not required.
+/// `--verify` checks the *in-memory* decoded map against the reference —
+/// one decode serves both the output and the verification (no second
+/// decode, and verify-only runs skip the O(model) file write entirely
+/// unless `--out` is given explicitly).
 fn cmd_decode(args: &Args) -> Result<()> {
     let input = args.get("in").context("--in <packed.msbt> required")?;
     let threads = args.usize_or("threads", 1)?;
@@ -251,17 +262,138 @@ fn cmd_decode(args: &Args) -> Result<()> {
         decoded.len(),
         t0.elapsed().as_secs_f64()
     );
+    let verifying = args.get("verify").is_some();
     if let Some(reference) = args.get("verify") {
         let expect = msbt::read_file(reference)?;
-        anyhow::ensure!(
-            decoded == expect,
-            "decode mismatch: {input} does not reproduce {reference}"
-        );
-        println!("verify OK: bit-identical to {reference}");
+        for (name, want) in &expect {
+            match decoded.get(name) {
+                Some(got) if got == want => {}
+                Some(_) => anyhow::bail!(
+                    "decode mismatch: tensor '{name}' of {input} differs from {reference}"
+                ),
+                None => anyhow::bail!("decode mismatch: {reference} has '{name}', decode lacks it"),
+            }
+        }
+        for name in decoded.keys() {
+            anyhow::ensure!(
+                expect.contains_key(name),
+                "decode mismatch: decode has '{name}', {reference} lacks it"
+            );
+        }
+        println!("verify OK: bit-identical to {reference} ({} tensors)", expect.len());
     }
-    let out = args.str_or("out", "decoded.msbt");
-    msbt::write_file(out, &decoded)?;
-    println!("wrote {out}");
+    if let Some(out) = args.get("out") {
+        msbt::write_file(out, &decoded)?;
+        println!("wrote {out}");
+    } else if !verifying {
+        let out = "decoded.msbt";
+        msbt::write_file(out, &decoded)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// Fused packed-weight GEMV ablation: compute `y = W·x` directly on the
+/// codes ([`msb_quant::kernels::PackedLinear`]) vs the old
+/// decode-to-f32-then-matmul path, on a real packed artifact (`--in`) or
+/// a synthetic proxy layer. Self-checking: the fused result must match
+/// the f64 reference to 1e-5 relative before any number is printed.
+fn cmd_gemv_bench(args: &Args) -> Result<()> {
+    use msb_quant::benchlib;
+    use msb_quant::kernels::{dense_gemv, PackedLinear};
+    use msb_quant::quant::engine::{decode_packed, quantize_serial};
+    use msb_quant::quant::registry;
+
+    let reps = args.usize_or("reps", 5)?.max(1);
+    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = args.usize_or("threads", default_threads)?.max(1);
+    let batch = args.usize_or("batch", 8)?.max(1);
+
+    let (label, pt) = if let Some(path) = args.get("in") {
+        let map = msbt::read_file(path)?;
+        let (method, mut packed, _) = msb_quant::pipeline::packed_tensors(&map)?;
+        let name = match args.get("layer") {
+            Some(l) => l.to_string(),
+            None => packed
+                .iter()
+                .max_by_key(|(_, p)| p.n_elems())
+                .map(|(n, _)| n.clone())
+                .context("empty packed artifact")?,
+        };
+        let pt = packed.remove(&name).with_context(|| format!("no packed layer '{name}'"))?;
+        (format!("{method} {name} ({}x{})", pt.rows, pt.cols), pt)
+    } else {
+        let rows = args.usize_or("rows", 1024)?;
+        let cols = args.usize_or("cols", 1024)?;
+        let method = Method::parse(args.str_or("method", "wgm"))?;
+        let cfg = parse_cfg(args)?.with_packed();
+        let q = registry::block_quantizer(method)
+            .with_context(|| format!("{} has no block-partitioned path", method.name()))?;
+        let w = benchlib::proxy_matrix(rows, cols);
+        let qt = quantize_serial(&*q, &w, &cfg);
+        let pt = qt.packed.with_context(|| format!("{} emits no packed payload", method.name()))?;
+        (format!("{} {rows}x{cols}", method.name()), pt)
+    };
+
+    let n_blocks = pt.n_blocks() as f64;
+    let n = pt.n_elems() as f64;
+    let decoder = registry::block_decoder(&pt.method)?;
+    let pl = PackedLinear::new(pt)?;
+    let mut x = vec![0.0f32; pl.cols()];
+    Rng::new(0xF00D).fill_normal(&mut x, 1.0);
+
+    // correctness gate: fused vs f64 reference on the decoded matrix
+    let decoded = decode_packed(decoder.clone(), pl.packed(), None);
+    let y = pl.gemv(&x);
+    msb_quant::kernels::assert_matvec_close(&decoded, &x, &y, 1e-5);
+
+    let t_fused = benchlib::time_median(reps, || pl.gemv(&x));
+    let t_base = benchlib::time_median(reps, || {
+        let m = decode_packed(decoder.clone(), pl.packed(), None);
+        dense_gemv(&m, &x, pl.kernel())
+    });
+    let mut pool = msb_quant::pool::ThreadPool::new(threads, threads * 4);
+    let y_pooled = pl.gemv_pooled(&x, &pool);
+    anyhow::ensure!(y == y_pooled, "pooled gemv diverged from serial");
+    let t_pooled = benchlib::time_median(reps, || pl.gemv_pooled(&x, &pool));
+    let mut xs = vec![0.0f32; batch * pl.cols()];
+    Rng::new(0xF00E).fill_normal(&mut xs, 1.0);
+    let t_gemm = benchlib::time_median(reps, || pl.gemm_pooled(&xs, batch, &pool));
+    pool.shutdown();
+
+    println!("fused GEMV ablation: {label} ({} kernel, {threads} threads)", pl.kernel().name());
+    println!(
+        "  payload {} bytes ({:.3}x of f32); {} zero exceptions",
+        pl.payload_bytes(),
+        pl.payload_bytes() as f64 / (n * 4.0),
+        pl.packed().zeros.len()
+    );
+    let gflops = |t: f64, mults: f64| 2.0 * mults / t / 1e9;
+    println!(
+        "  decode+matmul  {:>9.4}s  {:>10.0} blk/s  {:>6.2} GFLOP/s",
+        t_base,
+        n_blocks / t_base,
+        gflops(t_base, n)
+    );
+    println!(
+        "  fused serial   {:>9.4}s  {:>10.0} blk/s  {:>6.2} GFLOP/s  ({:.2}x)",
+        t_fused,
+        n_blocks / t_fused,
+        gflops(t_fused, n),
+        t_base / t_fused
+    );
+    println!(
+        "  fused pooled   {:>9.4}s  {:>10.0} blk/s  {:>6.2} GFLOP/s",
+        t_pooled,
+        n_blocks / t_pooled,
+        gflops(t_pooled, n)
+    );
+    println!(
+        "  fused gemm x{batch} {:>8.4}s  {:>10.0} blk/s  {:>6.2} GFLOP/s (amortized decode)",
+        t_gemm,
+        n_blocks * batch as f64 / t_gemm,
+        gflops(t_gemm, n * batch as f64)
+    );
     Ok(())
 }
 

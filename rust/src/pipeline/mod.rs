@@ -160,21 +160,14 @@ pub fn is_packed_map(map: &TensorMap) -> bool {
     map.contains_key(PACKED_METHOD_KEY)
 }
 
-/// Reconstruct the full f32 weight set from a packed payload map (the
-/// output of [`QuantizedModel::export_packed`], typically read back from a
-/// `.msbt` v2 file). Each layer decodes through the emitting method's
-/// `decode_block` via the same `BlockPlan` geometry, fanned out over a
-/// shared [`ThreadPool`] when `threads > 1`; pass-through tensors are
-/// copied as-is. The result is bit-identical to the simulated-dequant
-/// weights the payload was exported from.
-pub fn decode_packed_model(map: &TensorMap, threads: usize) -> Result<TensorMap> {
+/// The method name and layer list of an `export_packed` artifact, plus
+/// every key the payload records occupy (for pass-through filtering).
+fn packed_map_index(map: &TensorMap) -> Result<(String, Vec<String>, Vec<String>)> {
     let method_t = map
         .get(PACKED_METHOD_KEY)
         .context("not a packed artifact: __packed__.method missing")?;
     let method_bytes: Vec<u8> = method_t.as_i8()?.iter().map(|&b| b as u8).collect();
     let method = String::from_utf8(method_bytes).context("packed method name not utf-8")?;
-    let decoder = registry::block_decoder(&method)?;
-
     let layers: Vec<String> = map
         .keys()
         .filter_map(|k| k.strip_suffix(".layout").map(String::from))
@@ -186,12 +179,53 @@ pub fn decode_packed_model(map: &TensorMap, threads: usize) -> Result<TensorMap>
             payload_keys.push(format!("{name}{suffix}"));
         }
     }
+    Ok((method, layers, payload_keys))
+}
 
+/// Parse an `export_packed` artifact back into its parts: the emitting
+/// method name, each layer's validated [`PackedTensor`], and the
+/// pass-through (non-payload) tensors. This is the front half of the
+/// fused serving boot path ([`crate::runtime::FusedModel`]), which must
+/// hold every layer's payload at once anyway; the f32 decode path below
+/// reconstructs lazily instead so its peak memory stays one layer deep.
+pub fn packed_tensors(
+    map: &TensorMap,
+) -> Result<(String, BTreeMap<String, PackedTensor>, TensorMap)> {
+    let (method, layers, payload_keys) = packed_map_index(map)?;
+    let decoder = registry::block_decoder(&method)?;
+    let mut packed = BTreeMap::new();
+    for name in &layers {
+        packed.insert(name.clone(), reconstruct_packed(map, name, &method, &*decoder)?);
+    }
+    let mut passthrough = TensorMap::new();
+    for (k, t) in map {
+        if !payload_keys.iter().any(|p| p == k) {
+            passthrough.insert(k.clone(), t.clone());
+        }
+    }
+    Ok((method, packed, passthrough))
+}
+
+/// Reconstruct the full f32 weight set from a packed payload map (the
+/// output of [`QuantizedModel::export_packed`], typically read back from a
+/// `.msbt` v2 file). Each layer's [`PackedTensor`] is reconstructed
+/// lazily (peak payload residency = one layer) and decoded through the
+/// emitting method's `decode_block` via the same `BlockPlan` geometry,
+/// fanned out over a shared [`ThreadPool`] when `threads > 1`, threading
+/// one [`engine::DecodeScratch`] through the layer loop so the code/scale
+/// buffers allocate once at the high-water mark; pass-through tensors are
+/// copied as-is. The result is bit-identical to the simulated-dequant
+/// weights the payload was exported from.
+pub fn decode_packed_model(map: &TensorMap, threads: usize) -> Result<TensorMap> {
+    let (method, layers, payload_keys) = packed_map_index(map)?;
+    let decoder = registry::block_decoder(&method)?;
     let mut pool = (threads > 1).then(|| ThreadPool::new(threads, threads * 4));
+    let mut scratch = engine::DecodeScratch::default();
     let mut out = TensorMap::new();
     for name in &layers {
         let pt = reconstruct_packed(map, name, &method, &*decoder)?;
-        let m = engine::decode_packed(decoder.clone(), &pt, pool.as_ref());
+        let m =
+            engine::decode_packed_with_scratch(decoder.clone(), &pt, pool.as_ref(), &mut scratch);
         out.insert(name.clone(), Tensor::f32(vec![pt.rows, pt.cols], m.data));
     }
     if let Some(p) = pool.as_mut() {

@@ -50,11 +50,35 @@ impl PoolState {
     }
 
     /// Pop one job, trying stripe `home` first then stealing round-robin.
+    ///
+    /// §Perf (steal-half batching): a steal takes a *run* of half the
+    /// victim's queue under one lock acquisition and re-homes the surplus
+    /// onto the thief's own stripe, so a worker that finds a loaded victim
+    /// does not return to the victim's lock for every subsequent job —
+    /// on very large models a single `submit_many` burst lands on few
+    /// stripes and the old one-job steals serialized every idle worker on
+    /// those locks. The surplus jobs stay *enqueued* (only the returned
+    /// job is popped; `pending` counts enqueued-not-popped and is
+    /// decremented by the caller exactly once), so the
+    /// pending-count-before-publish invariant is untouched, and the two
+    /// stripe locks are never held simultaneously.
     fn pop(&self, home: usize) -> Option<Job> {
         let s = self.stripes.len();
-        for k in 0..s {
-            let mut q = self.stripes[(home + k) % s].lock().expect("pool stripe poisoned");
-            if let Some(job) = q.pop_front() {
+        if let Some(job) = self.stripes[home].lock().expect("pool stripe poisoned").pop_front() {
+            return Some(job);
+        }
+        for k in 1..s {
+            let victim = (home + k) % s;
+            let mut run: VecDeque<Job> = {
+                let mut q = self.stripes[victim].lock().expect("pool stripe poisoned");
+                let take = q.len().div_ceil(2);
+                q.drain(..take).collect()
+            };
+            if let Some(job) = run.pop_front() {
+                if !run.is_empty() {
+                    let mut mine = self.stripes[home].lock().expect("pool stripe poisoned");
+                    mine.extend(run);
+                }
                 return Some(job);
             }
         }
@@ -418,6 +442,39 @@ mod tests {
         pool.shutdown();
         assert_eq!(counter.load(Ordering::Relaxed), 200);
         assert_eq!(pool.stats(), (200, 200));
+    }
+
+    /// Steal-half batching: a burst landing on few stripes (single
+    /// producer, one `submit_many`) while most workers idle must drain
+    /// completely with exact accounting — the surplus of each steal run is
+    /// re-homed but never popped twice, never lost, and `pending` (counted
+    /// before publish, decremented once per pop) never underflows.
+    #[test]
+    fn steal_half_drains_bursts_with_exact_accounting() {
+        let mut pool = ThreadPool::new(8, 4096);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 0..4 {
+            pool.submit_many((0..500u64).map(|i| {
+                let c = Arc::clone(&counter);
+                move || {
+                    if i % 97 == 0 {
+                        std::thread::sleep(std::time::Duration::from_micros(100));
+                    }
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+            // interleave singleton submissions so thieves race producers
+            for _ in 0..25 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            let _ = round;
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::Relaxed), 4 * 525);
+        assert_eq!(pool.stats(), (4 * 525, 4 * 525));
     }
 
     #[test]

@@ -397,6 +397,20 @@ fn assemble(
     }
 }
 
+/// Reusable scratch for the packed decode path: the unpacked i8 code and
+/// f32 scale buffers. §Perf: the decode loop used to allocate (and, for
+/// bit-packed payloads, double-allocate via an intermediate symbol
+/// vector) fresh buffers for every tensor; threading one scratch through
+/// a model's layer loop ([`crate::pipeline::decode_packed_model`]) or a
+/// bench's repeat loop reuses the high-water-mark allocation instead.
+/// Pooled decodes move the buffers into `Arc`s for the tile jobs and
+/// recover them once the tiles drain.
+#[derive(Default)]
+pub struct DecodeScratch {
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+}
+
 /// Reconstruct the dequantized weights from a packed payload — the
 /// serving-path inverse of the quantize drivers. Blocks are decoded via
 /// the same [`BlockPlan`] geometry, fanned over `pool` in tiles with
@@ -410,13 +424,26 @@ pub fn decode_packed(
     pt: &PackedTensor,
     pool: Option<&ThreadPool>,
 ) -> Matrix {
+    decode_packed_with_scratch(q, pt, pool, &mut DecodeScratch::default())
+}
+
+/// [`decode_packed`] with caller-owned scratch buffers — see
+/// [`DecodeScratch`] for when reuse pays.
+pub fn decode_packed_with_scratch(
+    q: Arc<dyn BlockQuantizer>,
+    pt: &PackedTensor,
+    pool: Option<&ThreadPool>,
+    scratch: &mut DecodeScratch,
+) -> Matrix {
     let n = pt.n_elems();
     let mut out = Matrix::zeros(pt.rows, pt.cols);
     if n == 0 {
         return out;
     }
-    let codes = pt.unpacked_codes();
-    let scales = pt.scales_f32();
+    let mut codes = std::mem::take(&mut scratch.codes);
+    pt.unpacked_codes_into(&mut codes);
+    let mut scales = std::mem::take(&mut scratch.scales);
+    pt.scales_f32_into(&mut scales);
     let block = pt.block.max(1);
     let spb = pt.scales_per_block;
     let n_blocks = pt.n_blocks();
@@ -425,6 +452,8 @@ pub fn decode_packed(
     let n_tiles = n_blocks.div_ceil(tile).max(1);
     if threads <= 1 || n_tiles <= 1 {
         decode_blocks(&*q, &codes, &scales, block, spb, 0..n_blocks, &mut out.data);
+        scratch.codes = codes;
+        scratch.scales = scales;
     } else {
         let pool = pool.expect("threads > 1 implies a pool");
         let codes = Arc::new(codes);
@@ -450,6 +479,15 @@ pub fn decode_packed(
         for c in chunks {
             out.data[off..off + c.len()].copy_from_slice(&c);
             off += c.len();
+        }
+        // every job has finished and dropped its clones (results arrive
+        // only after the closure consumed them), so the buffers come back
+        // for the next layer; fall through to fresh ones if not
+        if let Ok(v) = Arc::try_unwrap(codes) {
+            scratch.codes = v;
+        }
+        if let Ok(v) = Arc::try_unwrap(scales) {
+            scratch.scales = v;
         }
     }
     for &z in &pt.zeros {
@@ -872,6 +910,29 @@ mod tests {
                 pooled.packed.as_ref() == Some(&pt) && dec.data == serial.dequant.data
             },
         );
+    }
+
+    /// Scratch-threaded decode is bit-identical to the fresh-buffer path,
+    /// and the pooled variant actually recovers its buffers from the tile
+    /// jobs (no per-call reallocation of the code vector).
+    #[test]
+    fn decode_scratch_reuse_is_bit_identical() {
+        let mut w = weight(8, 256, 26);
+        w.data[5] = 0.0;
+        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let q: Arc<dyn BlockQuantizer> = Arc::new(MsbQuantizer::wgm());
+        let qt = quantize_serial(&*q, &w, &cfg);
+        let pt = qt.packed.unwrap();
+        let pool = ThreadPool::new(3, 12);
+        let mut scratch = DecodeScratch::default();
+        for pass in 0..3 {
+            let serial = decode_packed_with_scratch(Arc::clone(&q), &pt, None, &mut scratch);
+            assert_eq!(serial.data, qt.dequant.data, "pass {pass} serial");
+            let pooled = decode_packed_with_scratch(q.clone(), &pt, Some(&pool), &mut scratch);
+            assert_eq!(pooled.data, qt.dequant.data, "pass {pass} pooled");
+            // buffers came back from the jobs and keep their capacity
+            assert!(scratch.codes.capacity() >= w.len(), "pass {pass}: codes not recovered");
+        }
     }
 
     #[test]

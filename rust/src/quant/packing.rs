@@ -368,27 +368,62 @@ impl PackedTensor {
         self.payload_bytes() as f64 * 8.0 / self.n_elems().max(1) as f64
     }
 
-    /// Per-element i8 codes, scheme-decoded from the stored symbols.
-    /// Exception-listed positions carry a placeholder code; the decode
-    /// driver overwrites them with exact zeros.
-    pub fn unpacked_codes(&self) -> Vec<i8> {
+    /// Scheme-decode the i8 codes for the element range starting at
+    /// `start` (length `out.len()`) without materializing the whole code
+    /// vector — the fused-kernel tile path ([`crate::kernels`]) walks the
+    /// payload 64 elements at a time through this, and the full unpack
+    /// below is built on it. Handles any bit alignment (flat plans and
+    /// per-tensor rows need not start on byte boundaries).
+    pub fn codes_range_into(&self, start: usize, out: &mut [i8]) {
+        debug_assert!(start + out.len() <= self.n_elems(), "code range out of bounds");
         match &self.codes {
+            PackedCodes::I8(v) => out.copy_from_slice(&v[start..start + out.len()]),
             PackedCodes::U1(p) | PackedCodes::U2(p) | PackedCodes::U4(p) => {
-                unpack_bits(p, self.n_elems(), self.codes.width())
-                    .iter()
-                    .map(|&s| self.scheme.decode(s, self.code_bits))
-                    .collect()
+                let width = self.codes.width();
+                let per = (8 / width) as usize;
+                let mask = (1u8 << width) - 1;
+                for (k, o) in out.iter_mut().enumerate() {
+                    let i = start + k;
+                    let sym = (p[i / per] >> ((i % per) as u32 * width)) & mask;
+                    *o = self.scheme.decode(sym, self.code_bits);
+                }
             }
-            PackedCodes::I8(v) => v.clone(),
         }
     }
 
-    /// The scale table decoded to f32 (the exact values quantize used).
-    pub fn scales_f32(&self) -> Vec<f32> {
+    /// Per-element i8 codes, scheme-decoded from the stored symbols, into
+    /// a reusable buffer (cleared and resized) — single pass, no
+    /// intermediate symbol vector. Exception-listed positions carry a
+    /// placeholder code; the decode driver overwrites them with exact
+    /// zeros.
+    pub fn unpacked_codes_into(&self, out: &mut Vec<i8>) {
+        out.clear();
+        out.resize(self.n_elems(), 0);
+        self.codes_range_into(0, out);
+    }
+
+    /// Allocating wrapper over [`PackedTensor::unpacked_codes_into`].
+    pub fn unpacked_codes(&self) -> Vec<i8> {
+        let mut out = Vec::new();
+        self.unpacked_codes_into(&mut out);
+        out
+    }
+
+    /// The scale table decoded to f32 (the exact values quantize used)
+    /// into a reusable buffer (cleared first).
+    pub fn scales_f32_into(&self, out: &mut Vec<f32>) {
+        out.clear();
         match &self.scales {
-            PackedScales::Bf16(v) => v.iter().map(|&b| bf16::decode(b)).collect(),
-            PackedScales::F32(v) => v.clone(),
+            PackedScales::Bf16(v) => out.extend(v.iter().map(|&b| bf16::decode(b))),
+            PackedScales::F32(v) => out.extend_from_slice(v),
         }
+    }
+
+    /// Allocating wrapper over [`PackedTensor::scales_f32_into`].
+    pub fn scales_f32(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.scales_f32_into(&mut out);
+        out
     }
 }
 
@@ -631,6 +666,57 @@ mod tests {
         assert!(pt.zeros.is_empty(), "i8 codes carry zero natively");
         assert_eq!(pt.unpacked_codes(), codes);
         assert_eq!(pt.payload_bytes(), 64 + 32 * 2);
+    }
+
+    #[test]
+    fn codes_range_matches_full_unpack_at_any_alignment() {
+        // every width, every (start, len) including sub-byte starts: the
+        // streamed range decode must agree with the full unpack
+        let plan = BlockPlan::block_wise(1, 64, 64);
+        let signs: Vec<i8> = (0..64).map(|i| if i % 3 == 0 { -1 } else { 1 }).collect();
+        let two: Vec<i8> = (0..64).map(|i| [1, 2, -1, -2][i % 4]).collect();
+        let four: Vec<i8> = (0..64).map(|i| ((i % 8) as i8) + 1).collect();
+        for (bits, spb, codes) in [(1u32, 1usize, signs), (2, 2, two), (4, 8, four)] {
+            let spec = PackSpec {
+                code_bits: bits,
+                scheme: CodeScheme::SignLevel,
+                scales_per_block: spb,
+                f32_scales: false,
+            };
+            let scales = vec![1.0f32; spb];
+            let pt = PackedTensor::from_codes("msb-wgm", &plan, &spec, true, &codes, &scales);
+            let full = pt.unpacked_codes();
+            assert_eq!(full, codes);
+            for start in [0usize, 1, 3, 7, 9, 31] {
+                for len in [1usize, 2, 5, 8, 33] {
+                    if start + len > 64 {
+                        continue;
+                    }
+                    let mut out = vec![0i8; len];
+                    pt.codes_range_into(start, &mut out);
+                    assert_eq!(out, full[start..start + len], "bits={bits} {start}+{len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn into_buffers_reuse_capacity() {
+        let plan = BlockPlan::block_wise(1, 64, 64);
+        let spec = PackSpec {
+            code_bits: 4,
+            scheme: CodeScheme::SignMagnitude,
+            scales_per_block: 1,
+            f32_scales: false,
+        };
+        let pt = PackedTensor::from_codes("rtn", &plan, &spec, true, &[2i8; 64], &[0.5]);
+        let mut codes = Vec::with_capacity(256);
+        let mut scales = Vec::with_capacity(256);
+        pt.unpacked_codes_into(&mut codes);
+        pt.scales_f32_into(&mut scales);
+        assert_eq!(codes, pt.unpacked_codes());
+        assert_eq!(scales, pt.scales_f32());
+        assert!(codes.capacity() >= 256 && scales.capacity() >= 256, "buffers must be reused");
     }
 
     #[test]

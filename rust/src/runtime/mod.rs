@@ -173,6 +173,92 @@ impl ModelRunner {
     }
 }
 
+/// A model held *entirely in the packed domain*: one
+/// [`PackedLinear`](crate::kernels::PackedLinear) handle per quantized
+/// layer plus the pass-through tensors — never the decoded f32 weight
+/// set. Where [`ModelRunner::update_weights_packed`] pays an O(model)
+/// unpack-to-f32 before PJRT upload, a `FusedModel` keeps the 4–6×
+/// storage win at serve time and answers matvec/batched-matmul requests
+/// straight off the codes (`kernels::PackedLinear::gemv`/`gemm`).
+/// `server::GemvServer` wraps one of these behind a dynamic-batching
+/// request loop; `serve_eval --fused` is the end-to-end driver.
+pub struct FusedModel {
+    method: String,
+    linears: std::collections::BTreeMap<String, crate::kernels::PackedLinear>,
+    passthrough: TensorMap,
+}
+
+impl FusedModel {
+    /// Build fused handles from an `export_packed` artifact (typically a
+    /// `.msbt` file written by `msb pack`). No f32 weight buffer is
+    /// materialized at any point.
+    pub fn from_packed_map(map: &TensorMap) -> Result<FusedModel> {
+        let (method, packed, passthrough) = crate::pipeline::packed_tensors(map)?;
+        let mut linears = std::collections::BTreeMap::new();
+        for (name, pt) in packed {
+            let pl = crate::kernels::PackedLinear::new(pt)
+                .with_context(|| format!("fused handle for layer '{name}'"))?;
+            linears.insert(name, pl);
+        }
+        Ok(FusedModel { method, linears, passthrough })
+    }
+
+    /// The quantization method the payloads were emitted by.
+    pub fn method(&self) -> &str {
+        &self.method
+    }
+
+    /// Layer name → fused handle map (iteration order = BTreeMap order).
+    pub fn linears(&self) -> &std::collections::BTreeMap<String, crate::kernels::PackedLinear> {
+        &self.linears
+    }
+
+    pub fn linear(&self, name: &str) -> Option<&crate::kernels::PackedLinear> {
+        self.linears.get(name)
+    }
+
+    /// Non-quantized tensors carried alongside (norms, embeddings).
+    pub fn passthrough(&self) -> &TensorMap {
+        &self.passthrough
+    }
+
+    /// Total serialized payload bytes actually held by the fused handles.
+    pub fn payload_bytes(&self) -> usize {
+        self.linears.values().map(|l| l.payload_bytes()).sum()
+    }
+
+    /// What the same layers would cost as decoded f32 buffers.
+    pub fn f32_bytes(&self) -> usize {
+        self.linears.values().map(|l| l.rows() * l.cols() * 4).sum()
+    }
+
+    /// Fused `y = W·x` for one layer (serial reference order).
+    pub fn gemv(&self, layer: &str, x: &[f32]) -> Result<Vec<f32>> {
+        let l = self.linears.get(layer).with_context(|| format!("no packed layer '{layer}'"))?;
+        anyhow::ensure!(x.len() == l.cols(), "{layer}: x len {} != cols {}", x.len(), l.cols());
+        Ok(l.gemv(x))
+    }
+
+    /// Fused batched product for one layer; bit-identical to per-request
+    /// [`FusedModel::gemv`] for every batch size and worker count.
+    pub fn gemm_pooled(
+        &self,
+        layer: &str,
+        xs: &[f32],
+        batch: usize,
+        pool: &crate::pool::ThreadPool,
+    ) -> Result<Vec<f32>> {
+        let l = self.linears.get(layer).with_context(|| format!("no packed layer '{layer}'"))?;
+        anyhow::ensure!(
+            xs.len() == batch * l.cols(),
+            "{layer}: activations {} != {batch}x{}",
+            xs.len(),
+            l.cols()
+        );
+        Ok(l.gemm_pooled(xs, batch, pool))
+    }
+}
+
 /// Anything that maps a [batch, seq] token tensor to [batch, seq, vocab]
 /// logits. `ModelRunner` is the real one; tests use closures/mocks.
 pub trait LogitsFn {
@@ -224,5 +310,70 @@ mod tests {
         };
         assert!(rt.upload_f32(&[1.0, 2.0], &[3]).is_err());
         assert!(rt.upload_f32(&[1.0, 2.0], &[2]).is_ok());
+    }
+
+    fn packed_fixture() -> (crate::pipeline::QuantizedModel, TensorMap) {
+        use crate::io::manifest::{ModelSpec, ParamSpec};
+        use crate::io::msbt::Tensor;
+        use crate::pipeline::{quantize_model, Method};
+        use crate::quant::QuantConfig;
+        let spec = ModelSpec {
+            name: "f".into(),
+            d: 32,
+            layers: 1,
+            heads: 2,
+            ff: 64,
+            seq: 16,
+            params: vec![
+                ParamSpec { name: "tok_emb".into(), shape: vec![10, 32], quant: false },
+                ParamSpec { name: "layer0.wq".into(), shape: vec![32, 64], quant: true },
+                ParamSpec { name: "layer0.wv".into(), shape: vec![48, 128], quant: true },
+            ],
+            weights_file: String::new(),
+            calib_file: String::new(),
+            fwd_hlo: String::new(),
+        };
+        let mut rng = crate::stats::Rng::new(71);
+        let mut weights = TensorMap::new();
+        let dims = [("tok_emb", 10, 32), ("layer0.wq", 32, 64), ("layer0.wv", 48, 128)];
+        for (name, r, c) in dims {
+            let mut m = crate::tensor::Matrix::randn(r, c, &mut rng);
+            m.data[7] = 0.0; // exception-list coverage
+            weights.insert(name.into(), Tensor::f32(vec![r, c], m.data));
+        }
+        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let qm = quantize_model(&spec, weights, None, Method::Wgm, &cfg, 2).unwrap();
+        let map = qm.export_packed().unwrap();
+        (qm, map)
+    }
+
+    /// The fused serving handle never materializes f32 weights yet its
+    /// matvec agrees with the decode-then-matvec reference, and its byte
+    /// accounting reflects the packed payload, not the f32 set.
+    #[test]
+    fn fused_model_matches_decoded_reference() {
+        let (qm, map) = packed_fixture();
+        let fm = FusedModel::from_packed_map(&map).unwrap();
+        assert_eq!(fm.method(), "msb-wgm");
+        assert_eq!(fm.linears().len(), 2);
+        assert!(fm.passthrough().contains_key("tok_emb"));
+        assert!(fm.payload_bytes() * 4 < fm.f32_bytes(), "fused handle must stay packed");
+
+        let decoded = crate::pipeline::decode_packed_model(&map, 1).unwrap();
+        let pool = crate::pool::ThreadPool::new(3, 12);
+        for (name, l) in fm.linears() {
+            let w = decoded.get(name).unwrap().to_matrix().unwrap();
+            assert_eq!(w.data, qm.weights.get(name).unwrap().as_f32().unwrap());
+            let mut x = vec![0.0f32; l.cols()];
+            crate::stats::Rng::new(72).fill_normal(&mut x, 1.0);
+            let y = fm.gemv(name, &x).unwrap();
+            crate::kernels::assert_matvec_close(&w, &x, &y, 1e-5);
+            // batched + pooled path is bit-identical to per-request gemv
+            let xs: Vec<f32> = x.iter().chain(x.iter()).copied().collect();
+            let ys = fm.gemm_pooled(name, &xs, 2, &pool).unwrap();
+            assert_eq!(&ys[..l.rows()], &y[..]);
+            assert_eq!(&ys[l.rows()..], &y[..]);
+        }
+        assert!(fm.gemv("nope", &[]).is_err());
     }
 }

@@ -1,15 +1,25 @@
-//! Batched evaluation service: a long-lived server thread owns the PJRT
-//! executable (device buffers are not Sync) and drains a request channel,
-//! coalescing up to `batch` sequences per forward pass — the classic
-//! dynamic-batching loop, exercised by `examples/serve_eval.rs`.
+//! Batched serving: long-lived server threads that own the model and
+//! drain a request channel with dynamic batching.
+//!
+//! * [`EvalServer`] — the PJRT scoring loop (device buffers are not
+//!   Sync), coalescing up to `batch` sequences per forward pass;
+//!   exercised by `examples/serve_eval.rs`.
+//! * [`GemvServer`] — the fused packed-weight loop: holds a
+//!   [`FusedModel`] (codes + scale tables, never decoded f32 buffers) and
+//!   coalesces same-layer matvec requests into one
+//!   `PackedLinear::gemm_pooled` call, so each block tile is decoded once
+//!   per batch instead of once per request; exercised by
+//!   `serve_eval --fused`.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::runtime::LogitsFn;
+use crate::pool::ThreadPool;
+use crate::runtime::{FusedModel, LogitsFn};
 
 /// One scoring request: a (≤ seq)-token sequence; the response is the
 /// per-position next-token logprob of the sequence under the model.
@@ -169,6 +179,177 @@ fn serve<M: LogitsFn>(model: M, rx: Receiver<Msg>, linger: Duration) -> ServerSt
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fused packed-weight serving.
+// ---------------------------------------------------------------------------
+
+/// One fused matvec request: an activation vector for a named packed
+/// layer; the response is `y = W·x` computed directly on the codes.
+struct GemvRequest {
+    layer: String,
+    x: Vec<f32>,
+    resp: Sender<Result<Vec<f32>>>,
+}
+
+enum GemvMsg {
+    Infer(GemvRequest),
+    Stop,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GemvStats {
+    pub requests: u64,
+    /// Fused `gemm` dispatches — coalescing makes this < `requests`.
+    pub batches: u64,
+    pub max_batch_fill: usize,
+}
+
+/// Client handle for [`GemvServer`]: cloneable, thread-safe.
+#[derive(Clone)]
+pub struct GemvClient {
+    tx: Sender<GemvMsg>,
+}
+
+impl GemvClient {
+    /// Blocking fused-matvec call against a packed layer.
+    pub fn infer(&self, layer: &str, x: Vec<f32>) -> Result<Vec<f32>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(GemvMsg::Infer(GemvRequest { layer: layer.to_string(), x, resp: tx }))
+            .map_err(|_| anyhow::anyhow!("gemv server gone"))?;
+        rx.recv()?
+    }
+}
+
+/// A long-lived server thread that owns a [`FusedModel`] — the packed
+/// payloads, never decoded f32 weights — plus a [`ThreadPool`] for row
+/// striping, and drains matvec requests with dynamic batching: requests
+/// arriving within `linger` coalesce per layer into one batched
+/// `gemm_pooled`, amortizing each block tile's decode across the batch.
+/// Responses are bit-identical to serial per-request `gemv` (the fused
+/// kernels' determinism contract), regardless of batch composition.
+pub struct GemvServer {
+    handle: Option<JoinHandle<GemvStats>>,
+    tx: Option<Sender<GemvMsg>>,
+}
+
+impl GemvServer {
+    /// Spawn the serving thread. `threads` sizes the row-striping pool,
+    /// `batch_cap` bounds how many requests one dispatch coalesces.
+    pub fn spawn(
+        model: FusedModel,
+        threads: usize,
+        batch_cap: usize,
+        linger: Duration,
+    ) -> (GemvServer, GemvClient) {
+        let (tx, rx) = channel::<GemvMsg>();
+        let client = GemvClient { tx: tx.clone() };
+        let (threads, cap) = (threads.max(1), batch_cap.max(1));
+        let handle = std::thread::Builder::new()
+            .name("msb-gemv-server".into())
+            .spawn(move || serve_gemv(model, rx, threads, cap, linger))
+            .expect("spawn gemv server");
+        (GemvServer { handle: Some(handle), tx: Some(tx) }, client)
+    }
+
+    /// Stop the server and collect telemetry (safe with live clients).
+    pub fn shutdown(mut self) -> GemvStats {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(GemvMsg::Stop);
+        }
+        self.handle.take().map(|h| h.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+impl Drop for GemvServer {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(GemvMsg::Stop);
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_gemv(
+    model: FusedModel,
+    rx: Receiver<GemvMsg>,
+    threads: usize,
+    batch_cap: usize,
+    linger: Duration,
+) -> GemvStats {
+    let pool = ThreadPool::new(threads, threads * 4);
+    let mut stats = GemvStats::default();
+    loop {
+        let first = match rx.recv() {
+            Ok(GemvMsg::Infer(r)) => r,
+            Ok(GemvMsg::Stop) | Err(_) => return stats,
+        };
+        let mut pending = vec![first];
+        let mut stop_after = false;
+        let deadline = Instant::now() + linger;
+        while pending.len() < batch_cap {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(GemvMsg::Infer(r)) => pending.push(r),
+                Ok(GemvMsg::Stop) => {
+                    stop_after = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        stats.requests += pending.len() as u64;
+
+        // group by layer so one fused gemm serves each group
+        let mut groups: BTreeMap<String, Vec<GemvRequest>> = BTreeMap::new();
+        for r in pending {
+            groups.entry(r.layer.clone()).or_default().push(r);
+        }
+        for (layer, reqs) in groups {
+            let Some(l) = model.linear(&layer) else {
+                for r in reqs {
+                    let _ = r.resp.send(Err(anyhow::anyhow!("no packed layer '{layer}'")));
+                }
+                continue;
+            };
+            let (cols, rows) = (l.cols(), l.rows());
+            let mut valid = Vec::with_capacity(reqs.len());
+            for r in reqs {
+                if r.x.len() == cols {
+                    valid.push(r);
+                } else {
+                    let msg = anyhow::anyhow!("{layer}: x len {} != cols {cols}", r.x.len());
+                    let _ = r.resp.send(Err(msg));
+                }
+            }
+            if valid.is_empty() {
+                continue;
+            }
+            let batch = valid.len();
+            let mut xs = vec![0.0f32; batch * cols];
+            for (b, r) in valid.iter().enumerate() {
+                xs[b * cols..(b + 1) * cols].copy_from_slice(&r.x);
+            }
+            // the batch buffer is handed to the jobs as-is (gemm_shared):
+            // assembling it above was the only copy
+            let ys = l.gemm_shared(std::sync::Arc::new(xs), batch, &pool);
+            stats.batches += 1;
+            stats.max_batch_fill = stats.max_batch_fill.max(batch);
+            for (b, r) in valid.into_iter().enumerate() {
+                let _ = r.resp.send(Ok(ys[b * rows..(b + 1) * rows].to_vec()));
+            }
+        }
+        if stop_after {
+            return stats;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,5 +407,106 @@ mod tests {
         let (server, client) = EvalServer::spawn(model(), Duration::from_millis(1));
         drop(client);
         drop(server); // must not hang
+    }
+
+    // -----------------------------------------------------------------------
+    // fused packed-weight serving
+    // -----------------------------------------------------------------------
+
+    fn fused_model() -> FusedModel {
+        use crate::io::manifest::{ModelSpec, ParamSpec};
+        use crate::io::msbt::{Tensor, TensorMap};
+        use crate::pipeline::{quantize_model, Method};
+        use crate::quant::QuantConfig;
+        let spec = ModelSpec {
+            name: "g".into(),
+            d: 32,
+            layers: 1,
+            heads: 2,
+            ff: 64,
+            seq: 16,
+            params: vec![
+                ParamSpec { name: "wq".into(), shape: vec![24, 64], quant: true },
+                ParamSpec { name: "wv".into(), shape: vec![16, 128], quant: true },
+            ],
+            weights_file: String::new(),
+            calib_file: String::new(),
+            fwd_hlo: String::new(),
+        };
+        let mut rng = crate::stats::Rng::new(81);
+        let mut weights = TensorMap::new();
+        for (name, r, c) in [("wq", 24usize, 64usize), ("wv", 16, 128)] {
+            let m = crate::tensor::Matrix::randn(r, c, &mut rng);
+            weights.insert(name.into(), Tensor::f32(vec![r, c], m.data));
+        }
+        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let qm = quantize_model(&spec, weights, None, Method::Wgm, &cfg, 1).unwrap();
+        FusedModel::from_packed_map(&qm.export_packed().unwrap()).unwrap()
+    }
+
+    fn probe(cols: usize, seed: u64) -> Vec<f32> {
+        let mut x = vec![0.0f32; cols];
+        crate::stats::Rng::new(seed).fill_normal(&mut x, 1.0);
+        x
+    }
+
+    #[test]
+    fn gemv_server_roundtrip_is_bit_identical_to_serial() {
+        let fm = fused_model();
+        let expect: BTreeMap<String, (Vec<f32>, Vec<f32>)> = fm
+            .linears()
+            .iter()
+            .map(|(name, l)| {
+                let x = probe(l.cols(), 90);
+                let y = l.gemv(&x);
+                (name.clone(), (x, y))
+            })
+            .collect();
+        let (server, client) = GemvServer::spawn(fm, 2, 4, Duration::from_millis(1));
+        for (name, (x, y)) in &expect {
+            let got = client.infer(name, x.clone()).unwrap();
+            assert_eq!(&got, y, "{name}: served != serial gemv");
+        }
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, expect.len() as u64);
+    }
+
+    #[test]
+    fn gemv_server_coalesces_same_layer_requests() {
+        let fm = fused_model();
+        let cols = fm.linear("wq").unwrap().cols();
+        let serial: Vec<Vec<f32>> =
+            (0..4).map(|i| fm.linear("wq").unwrap().gemv(&probe(cols, 100 + i))).collect();
+        let (server, client) = GemvServer::spawn(fm, 2, 8, Duration::from_millis(50));
+        let mut handles = Vec::new();
+        for i in 0..4u64 {
+            let c = client.clone();
+            handles.push(std::thread::spawn(move || {
+                c.infer("wq", probe(cols, 100 + i)).unwrap()
+            }));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), serial[i], "request {i}");
+        }
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 4);
+        assert!(stats.batches < 4, "same-layer requests must coalesce: {stats:?}");
+        assert!(stats.max_batch_fill >= 2);
+    }
+
+    #[test]
+    fn gemv_server_rejects_bad_requests_without_dying() {
+        let fm = fused_model();
+        let cols = fm.linear("wq").unwrap().cols();
+        let (server, client) = GemvServer::spawn(fm, 1, 4, Duration::from_millis(1));
+        assert!(client.infer("nope", probe(8, 1)).is_err());
+        assert!(client.infer("wq", probe(cols + 1, 2)).is_err());
+        // the server survives bad requests and keeps serving good ones
+        assert_eq!(client.infer("wq", probe(cols, 3)).unwrap().len(), 24);
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 3);
     }
 }

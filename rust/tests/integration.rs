@@ -158,6 +158,74 @@ fn packed_msbt_v2_roundtrip_size_and_bits() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Acceptance anchor for the fused kernels: packed `.msbt` file →
+/// `FusedModel` (PackedLinear handles, no f32 decode) → served through
+/// `GemvServer` — responses bit-identical to the serial fused gemv, the
+/// fused gemv within 1e-5 of the decode-then-matvec reference, and the
+/// handles holding ≤ 0.25× the f32 bytes.
+#[test]
+fn fused_gemv_serves_packed_file_end_to_end() {
+    use msb_quant::io::manifest::{ModelSpec, ParamSpec};
+    use msb_quant::io::msbt::{Tensor, TensorMap};
+    use msb_quant::pipeline::decode_packed_model;
+    use msb_quant::runtime::FusedModel;
+    use msb_quant::server::GemvServer;
+
+    let spec = ModelSpec {
+        name: "fz".into(),
+        d: 32,
+        layers: 1,
+        heads: 2,
+        ff: 64,
+        seq: 16,
+        params: vec![
+            ParamSpec { name: "layer0.w1".into(), shape: vec![32, 512], quant: true },
+            ParamSpec { name: "layer0.w2".into(), shape: vec![64, 256], quant: true },
+        ],
+        weights_file: String::new(),
+        calib_file: String::new(),
+        fwd_hlo: String::new(),
+    };
+    let mut rng = Rng::new(32);
+    let mut weights = TensorMap::new();
+    for (name, r, c) in [("layer0.w1", 32usize, 512usize), ("layer0.w2", 64, 256)] {
+        let mut m = Matrix::randn(r, c, &mut rng);
+        m.data[11] = 0.0; // exception-list coverage through the file format
+        weights.insert(name.into(), Tensor::f32(vec![r, c], m.data));
+    }
+    let cfg = QuantConfig::block_wise(4, 64).with_packed();
+    let qm = quantize_model(&spec, weights, None, Method::Wgm, &cfg, 2).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("msbt_fused_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("packed.msbt");
+    msbt::write_file(&path, &qm.export_packed().unwrap()).unwrap();
+    let back = msbt::read_file(&path).unwrap();
+
+    let fm = FusedModel::from_packed_map(&back).unwrap();
+    assert!(4 * fm.payload_bytes() <= fm.f32_bytes(), "handles must stay packed");
+    let decoded = decode_packed_model(&back, 1).unwrap();
+    let mut probes: Vec<(String, Vec<f32>, Vec<f32>)> = Vec::new();
+    for (name, l) in fm.linears() {
+        let w = decoded.get(name).unwrap().to_matrix().unwrap();
+        let mut x = vec![0.0f32; l.cols()];
+        Rng::new(33).fill_normal(&mut x, 1.0);
+        let y = l.gemv(&x);
+        msb_quant::kernels::assert_matvec_close(&w, &x, &y, 1e-5);
+        probes.push((name.clone(), x, y));
+    }
+
+    let (server, client) = GemvServer::spawn(fm, 2, 4, std::time::Duration::from_millis(1));
+    for (name, x, want) in &probes {
+        let got = client.infer(name, x.clone()).unwrap();
+        assert_eq!(&got, want, "{name}: served != serial fused gemv");
+    }
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, probes.len() as u64);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn solver_hierarchy_on_shared_instance() {
     // The paper's expectation is DG ≤ GG ≤ WGM "typically, with small

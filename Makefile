@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench-smoke bench-perf bench-pack bench-gemv lint fmt artifacts clean
+.PHONY: build test bench-smoke bench-perf bench-pack bench-gemv bench-forward lint fmt artifacts clean
 
 ## Release build of the library, `msb` CLI, all benches and all examples.
 build:
@@ -41,6 +41,14 @@ bench-pack:
 ## no f32 weight buffer (peak-allocation gate).
 bench-gemv:
 	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_gemv
+
+## Fused CPU transformer forward: full-sequence scoring and KV-cached
+## incremental decode on a synthetic packed model (forward-* keys merged
+## into BENCH_perf.json). Self-asserting: quantized logits must match the
+## f32 twin to 1e-4, threads must be bit-identical to serial, and the KV
+## cache must beat per-position full recompute.
+bench-forward:
+	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_forward
 
 ## Style gate: rustfmt + clippy with warnings denied.
 lint:

@@ -27,8 +27,8 @@ fn main() -> Result<()> {
     let threads = args.usize_or("threads", 1)?;
 
     let (cfg, per_tensor, label) = match setting.as_str() {
-        "block" => (QuantConfig::block_wise(4, 64).with_window(1), false, "4-bit block-wise"),
-        "per-tensor" => (QuantConfig::per_tensor(6).with_window(64), true, "6-bit per-tensor"),
+        "block" => (QuantConfig::block_wise(4, 64).unwrap().with_window(1).unwrap(), false, "4-bit block-wise"),
+        "per-tensor" => (QuantConfig::per_tensor(6).unwrap().with_window(64).unwrap(), true, "6-bit per-tensor"),
         s => anyhow::bail!("--setting {s}? use block|per-tensor"),
     };
 

@@ -17,7 +17,7 @@ fn main() {
     println!("matrix 512x512, ||W||_F = {:.3}\n", w.fro_norm());
 
     // --- 4-bit block-wise (the paper's primary setting) ------------------
-    let cfg = QuantConfig::block_wise(4, 64);
+    let cfg = QuantConfig::block_wise(4, 64).unwrap();
     println!("4-bit block-wise (t=64):        SSE        bits/weight");
     let methods: Vec<Box<dyn Quantizer>> = vec![
         Box::new(RtnQuantizer::symmetric()),
@@ -39,7 +39,7 @@ fn main() {
     }
 
     // --- 6-bit per-tensor --------------------------------------------------
-    let cfg6 = QuantConfig::per_tensor(6);
+    let cfg6 = QuantConfig::per_tensor(6).unwrap();
     println!("\n6-bit per-tensor (w=64):");
     for m in [MsbQuantizer::wgm(), MsbQuantizer::wgm_lo()] {
         let t0 = std::time::Instant::now();

@@ -1,43 +1,86 @@
-//! Serving demo: a long-lived eval server owns the PJRT-compiled model,
-//! dynamic-batches concurrent scoring requests, and reports latency /
-//! throughput / batch-fill telemetry — the request path with Python
-//! nowhere in sight.
+//! Serving demo: a long-lived server owns the model, dynamic-batches
+//! concurrent scoring requests, and reports latency / throughput /
+//! batch-fill telemetry — the request path with Python nowhere in sight.
 //!
-//!   cargo run --release --example serve_eval -- [--model small]
-//!       [--requests 64] [--clients 8] [--method wgm]
-//!       [--packed payload.msbt] [--decode-threads N]
-//!       [--fused payload.msbt] [--threads N] [--batch B]
+//!   cargo run --release --example serve_eval -- [--backend runner|fused|forward]
+//!       [--payload payload.msbt] [--requests 64] [--clients 8]
+//!       [--threads N] [--model small] [--method wgm] [--batch B]
+//!       [--vocab V --d D --layers L --heads H --ff F --seq S --rows R]
 //!
-//! With `--packed`, the server boots straight from a packed `.msbt`
-//! payload (`msb pack`): codes + scale tables are decoded on the pool
-//! (`--decode-threads`, default = available cores) and no offline PTQ
-//! runs — the deployable-artifact serving path.
+//! One `--backend` flag selects the serving construction; every backend
+//! is built through `runtime::BackendBuilder`, which carries the shared
+//! knobs (`--threads`, 0 = one per core):
 //!
-//! With `--fused`, the server never decodes at all: it holds one
-//! `kernels::PackedLinear` per layer (codes + scale tables, 4–6x smaller
-//! than f32) behind a dynamic-batching `GemvServer`, and every request is
-//! answered by the fused GEMV/GEMM kernels straight off the codes. This
-//! path needs no `artifacts/` directory — the payload is the model.
+//! * `runner` — the PJRT-compiled XLA forward (needs `artifacts/`).
+//!   With `--payload`, boots straight from a packed `.msbt` artifact
+//!   (codes + scales decode on the builder's pool at swap-in); without
+//!   it, runs offline PTQ with `--method` first.
+//! * `fused` — holds one `kernels::PackedLinear` per layer (4–6x smaller
+//!   than f32) behind a dynamic-batching `GemvServer`; every request is
+//!   answered straight off the codes, nothing is ever decoded.
+//! * `forward` — the fused CPU transformer forward (`forward::ForwardModel`):
+//!   full token scoring straight off the codes behind the same
+//!   `EvalServer` the runner uses — no `artifacts/`, no XLA. The
+//!   architecture flags must match the payload (shapes are validated
+//!   at load; `msb score` emits compatible payloads).
+//!
+//! The old `--packed file` / `--fused file` spellings still work but are
+//! deprecated aliases for `--backend runner|fused --payload file`.
 
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use msb_quant::cli::Args;
+use msb_quant::forward::{synth, ForwardSpec};
 use msb_quant::harness::Artifacts;
 use msb_quant::io::msbt;
-use msb_quant::pipeline::{decode_packed_model, quantize_model};
+use msb_quant::pipeline::{quantize, QuantizeOptions};
 use msb_quant::quant::registry::Method;
 use msb_quant::quant::QuantConfig;
-use msb_quant::runtime::{FusedModel, ModelRunner};
+use msb_quant::runtime::BackendBuilder;
 use msb_quant::server::{EvalServer, GemvServer};
 use msb_quant::stats::Rng;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    if let Some(payload) = args.get("fused") {
-        let payload = payload.to_string();
-        return serve_fused(&args, &payload);
+    // unified interface, with the legacy mutually exclusive flags mapped on
+    let mut backend = args.str_or("backend", "runner").to_string();
+    let mut payload = args.get("payload").map(String::from);
+    if let Some(p) = args.get("fused") {
+        eprintln!("note: --fused is deprecated; use --backend fused --payload <file>");
+        backend = "fused".into();
+        payload = Some(p.to_string());
     }
+    if let Some(p) = args.get("packed") {
+        eprintln!("note: --packed is deprecated; use --backend runner --payload <file>");
+        backend = "runner".into();
+        payload = Some(p.to_string());
+    }
+    let threads = args.usize_or("threads", args.usize_or("decode-threads", 0)?)?;
+    let builder = BackendBuilder::new().threads(threads);
+    match backend.as_str() {
+        "runner" => serve_runner(&args, &builder, payload),
+        "fused" => {
+            serve_fused(&args, &builder, &payload.context("--backend fused needs --payload")?)
+        }
+        "forward" => {
+            serve_forward(&args, &builder, &payload.context("--backend forward needs --payload")?)
+        }
+        other => anyhow::bail!("unknown backend '{other}' (expected runner|fused|forward)"),
+    }
+}
+
+/// How many workers "0 = auto" resolves to for paths that need a count
+/// up front (the fused server's kernel pool).
+fn auto_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+fn serve_runner(args: &Args, builder: &BackendBuilder, payload: Option<String>) -> Result<()> {
     let arts = Artifacts::load()?;
     let spec = arts.manifest.model(args.str_or("model", "small"))?.clone();
     let n_requests = args.usize_or("requests", 64)?;
@@ -45,25 +88,16 @@ fn main() -> Result<()> {
     let method = Method::parse(args.str_or("method", "wgm"))?;
 
     let weights = arts.weights(&spec)?;
-    let qweights = if let Some(payload) = args.get("packed") {
-        // boot from a deployable packed artifact: decode codes + scales
-        // back to f32 on the pool, no PTQ step on the serving host;
-        // default to one decode worker per available core
-        let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        let threads = args.usize_or("decode-threads", default_threads)?;
-        let t0 = Instant::now();
+    let qweights = if let Some(payload) = &payload {
+        // boot from a deployable packed artifact: the payload map goes to
+        // update_weights as-is and decodes on the builder's pool at
+        // swap-in — no PTQ step on the serving host
         let map = msbt::read_file(payload)?;
-        let decoded = decode_packed_model(&map, threads)?;
-        println!(
-            "serving {} from packed artifact {payload} (decoded {} tensors in {:.2}s)",
-            spec.name,
-            decoded.len(),
-            t0.elapsed().as_secs_f64()
-        );
-        decoded
+        println!("serving {} from packed artifact {payload} (decode on swap-in)", spec.name);
+        map
     } else {
         // offline PTQ step (L3 coordinator), then serve the quantized model
-        let cfg = QuantConfig::block_wise(4, 64);
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
         let calib;
         let calib_ref = if method.needs_calibration() {
             calib = arts.calib(&spec)?;
@@ -71,7 +105,8 @@ fn main() -> Result<()> {
         } else {
             None
         };
-        let qm = quantize_model(&spec, weights.clone(), calib_ref, method, &cfg, 1)?;
+        let opts = QuantizeOptions::new().with_threads(1);
+        let qm = quantize(&spec, weights.clone(), calib_ref, method, &cfg, &opts)?;
         println!(
             "serving {} quantized with {} ({:.2} bits/weight, PTQ took {:.2}s)",
             spec.name,
@@ -86,9 +121,12 @@ fn main() -> Result<()> {
     let manifest = arts.manifest.clone();
     let spec_for_server = spec.clone();
     let base_weights = weights; // moved: the base set is only needed once
+    let builder = builder.clone();
     let (server, client) = EvalServer::spawn_with(
         move || {
-            let mut runner = ModelRunner::new(&manifest, &spec_for_server, &base_weights)
+            let mut runner = builder
+                .runner(&manifest, &spec_for_server, &base_weights)
+                .and_then(|b| b.into_runner())
                 .expect("compile model in server thread");
             runner.update_weights(&qweights).expect("swap quantized weights");
             runner
@@ -136,24 +174,8 @@ fn main() -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     drop(client);
     let stats = server.shutdown();
-
-    all_lat.sort_by(f64::total_cmp);
-    let p = |q: f64| all_lat[((all_lat.len() - 1) as f64 * q) as usize];
-    println!("\n{} requests over {} clients in {:.2}s", stats.requests, n_clients, wall);
-    println!(
-        "throughput {:.1} req/s | latency p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms",
-        stats.requests as f64 / wall,
-        p(0.5),
-        p(0.9),
-        p(0.99)
-    );
-    println!(
-        "batches {} (mean fill {:.2}, max {}) | stream ppl≈{:.2}",
-        stats.batches,
-        stats.requests as f64 / stats.batches.max(1) as f64,
-        stats.max_batch_fill,
-        mean_nll.exp()
-    );
+    report(&mut all_lat, stats.requests, stats.batches, stats.max_batch_fill, n_clients, wall);
+    println!("stream ppl≈{:.2}", mean_nll.exp());
     Ok(())
 }
 
@@ -161,17 +183,16 @@ fn main() -> Result<()> {
 /// f32), dynamic-batch concurrent matvec requests through `GemvServer`,
 /// and self-check one served response per layer against the serial fused
 /// gemv (bit-identical by the kernels' determinism contract).
-fn serve_fused(args: &Args, payload: &str) -> Result<()> {
+fn serve_fused(args: &Args, builder: &BackendBuilder, payload: &str) -> Result<()> {
     let n_requests = args.usize_or("requests", 64)?;
     let n_clients = args.usize_or("clients", 8)?.max(1);
     anyhow::ensure!(n_requests >= n_clients, "--requests must be >= --clients");
-    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let threads = args.usize_or("threads", default_threads)?;
+    let threads = auto_threads(args.usize_or("threads", 0)?);
     let batch_cap = args.usize_or("batch", 8)?;
 
     let t0 = Instant::now();
     let map = msbt::read_file(payload)?;
-    let model = FusedModel::from_packed_map(&map)?;
+    let model = builder.fused(&map)?.into_fused()?;
     let (pb, fb) = (model.payload_bytes(), model.f32_bytes());
     println!(
         "serving {} fused {} layers from {payload} in {:.2}s \
@@ -241,25 +262,120 @@ fn serve_fused(args: &Args, payload: &str) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     drop(client);
     let stats = server.shutdown();
+    let (reqs, batches) =
+        (stats.requests.saturating_sub(warmup), stats.batches.saturating_sub(warmup));
+    report(&mut all_lat, reqs, batches, stats.max_batch_fill, n_clients, wall);
+    Ok(())
+}
 
-    all_lat.sort_by(f64::total_cmp);
-    let p = |q: f64| all_lat[((all_lat.len() - 1) as f64 * q) as usize];
-    let (reqs, batches) = (
-        stats.requests.saturating_sub(warmup),
-        stats.batches.saturating_sub(warmup),
+/// CPU-forward serving: full token scoring straight off the packed codes
+/// behind the same `EvalServer` the PJRT runner uses. Before serving, the
+/// KV-cached incremental decode is checked bit-identical against the
+/// full-sequence recompute (the forward pass determinism contract).
+fn serve_forward(args: &Args, builder: &BackendBuilder, payload: &str) -> Result<()> {
+    let n_requests = args.usize_or("requests", 64)?;
+    let n_clients = args.usize_or("clients", 8)?.max(1);
+    let fs = ForwardSpec::new(
+        args.usize_or("vocab", 256)?,
+        args.usize_or("d", 64)?,
+        args.usize_or("layers", 2)?,
+        args.usize_or("heads", 4)?,
+        args.usize_or("ff", 128)?,
+        args.usize_or("seq", 32)?,
+        args.usize_or("rows", 4)?,
+    )?;
+    let t0 = Instant::now();
+    let map = msbt::read_file(payload)?;
+    let model = builder.forward(fs.clone(), &map)?.into_forward()?;
+    let (pb, fb) = (model.payload_bytes(), model.f32_bytes());
+    println!(
+        "serving fused CPU forward ({} layers, d={}, vocab={}) from {payload} in {:.2}s \
+         ({pb} payload bytes = {:.3}x of the {fb}-byte f32 projections)",
+        fs.layers,
+        fs.d,
+        fs.vocab,
+        t0.elapsed().as_secs_f64(),
+        pb as f64 / fb as f64,
     );
-    println!("\n{reqs} fused requests over {n_clients} clients in {wall:.2}s");
+
+    // self-check: incremental decode reproduces the full recompute exactly
+    let toks = synth::synth_tokens(&fs, fs.seq, 0x5EED);
+    let full = model.logits(&toks)?;
+    let mut kv = model.kv_state();
+    for i in 0..fs.seq {
+        let col: Vec<i32> = (0..fs.batch).map(|bi| toks[bi * fs.seq + i]).collect();
+        let step = model.step(&mut kv, &col)?;
+        for bi in 0..fs.batch {
+            let want = &full[(bi * fs.seq + i) * fs.vocab..(bi * fs.seq + i + 1) * fs.vocab];
+            anyhow::ensure!(
+                step[bi * fs.vocab..(bi + 1) * fs.vocab] == *want,
+                "incremental decode diverged at position {i}"
+            );
+        }
+    }
+    println!("self-check OK: KV-cached decode bit-identical to full recompute");
+
+    let (vocab, seq) = (fs.vocab, fs.seq);
+    let (server, client) = EvalServer::spawn(model, Duration::from_millis(5));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let client = client.clone();
+        let per_client = n_requests / n_clients;
+        handles.push(std::thread::spawn(move || -> (f64, Vec<f64>) {
+            let mut nll = 0.0;
+            let mut lat = Vec::new();
+            let mut count = 0usize;
+            for r in 0..per_client {
+                let mut rng = Rng::new((c * 104729 + r) as u64);
+                let toks: Vec<i32> = (0..seq).map(|_| rng.below(vocab) as i32).collect();
+                let t = Instant::now();
+                let resp = client.score(toks).expect("score");
+                lat.push(t.elapsed().as_secs_f64() * 1e3);
+                nll -= resp.logprobs.iter().sum::<f64>() / resp.logprobs.len() as f64;
+                count += 1;
+            }
+            (nll / count.max(1) as f64, lat)
+        }));
+    }
+    let mut all_lat = Vec::new();
+    let mut mean_nll = 0.0;
+    for h in handles {
+        let (nll, lat) = h.join().expect("client thread");
+        mean_nll += nll / n_clients as f64;
+        all_lat.extend(lat);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(client);
+    let stats = server.shutdown();
+    report(&mut all_lat, stats.requests, stats.batches, stats.max_batch_fill, n_clients, wall);
+    println!("random-stream ppl≈{:.2} (uniform tokens ⇒ ≈vocab {})", mean_nll.exp(), vocab);
+    Ok(())
+}
+
+/// Shared telemetry footer: request totals, latency percentiles, fill.
+fn report(
+    all_lat: &mut [f64],
+    requests: u64,
+    batches: u64,
+    max_fill: usize,
+    n_clients: usize,
+    wall: f64,
+) {
+    all_lat.sort_by(f64::total_cmp);
+    let p = |q: f64| {
+        if all_lat.is_empty() { 0.0 } else { all_lat[((all_lat.len() - 1) as f64 * q) as usize] }
+    };
+    println!("\n{requests} requests over {n_clients} clients in {wall:.2}s");
     println!(
         "throughput {:.1} req/s | latency p50 {:.2}ms p90 {:.2}ms p99 {:.2}ms",
-        reqs as f64 / wall,
+        requests as f64 / wall,
         p(0.5),
         p(0.9),
         p(0.99)
     );
     println!(
-        "gemm batches {batches} (mean fill {:.2}, max {}) — each batch decodes every tile once",
-        reqs as f64 / batches.max(1) as f64,
-        stats.max_batch_fill
+        "batches {batches} (mean fill {:.2}, max {max_fill})",
+        requests as f64 / batches.max(1) as f64
     );
-    Ok(())
 }

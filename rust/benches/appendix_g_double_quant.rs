@@ -16,7 +16,7 @@ fn main() {
             return;
         }
     };
-    let cfg = QuantConfig::block_wise(4, 64).with_window(1);
+    let cfg = QuantConfig::block_wise(4, 64).unwrap().with_window(1).unwrap();
     benchlib::header("Appendix G analog — double quantization (4-bit block-wise)");
     println!(
         "{}",

@@ -39,7 +39,7 @@ fn main() {
         })
         .collect();
 
-    let cfg = QuantConfig::block_wise(3, 64).with_window(1).no_bf16();
+    let cfg = QuantConfig::block_wise(3, 64).unwrap().with_window(1).unwrap().no_bf16();
     benchlib::header(&format!("extensions ablation — {dim}x{dim}, 3-bit block-wise"));
     println!(
         "{}",

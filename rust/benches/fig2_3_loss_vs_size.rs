@@ -14,8 +14,8 @@ fn mse_of(q: &dyn Quantizer, w: &Matrix, cfg: &QuantConfig) -> f64 {
 }
 
 fn main() {
-    let cfg = QuantConfig::per_tensor(4).no_bf16().with_lambda(0.0);
-    let bcfg = QuantConfig::block_wise(4, 64).no_bf16().with_lambda(0.0);
+    let cfg = QuantConfig::per_tensor(4).unwrap().no_bf16().with_lambda(0.0);
+    let bcfg = QuantConfig::block_wise(4, 64).unwrap().no_bf16().with_lambda(0.0);
 
     benchlib::header("Fig 2 analog — small matrices (per-tensor g=8, λ=0)");
     println!("n,dg,gg,wgm_w16,xnor,blocked_xnor,zero");
@@ -27,7 +27,7 @@ fn main() {
         let dg = mse_of(&MsbQuantizer::dg(), &w, &cfg);
         let gg = mse_of(&MsbQuantizer::gg(), &w, &cfg);
         let wgm =
-            mse_of(&MsbQuantizer::wgm(), &w, &cfg.clone().with_window(16));
+            mse_of(&MsbQuantizer::wgm(), &w, &cfg.clone().with_window(16).unwrap());
         let xn = mse_of(&XnorQuantizer::whole(), &w, &cfg);
         let bx = mse_of(&XnorQuantizer::blocked(), &w, &bcfg);
         let zero = mse_of(&ZeroQuantizer, &w, &cfg);
@@ -46,8 +46,8 @@ fn main() {
         let mut rng = Rng::new(2000 + n as u64);
         let w = Matrix::randn(n, n, &mut rng);
         let gg = mse_of(&MsbQuantizer::gg(), &w, &cfg);
-        let w16 = mse_of(&MsbQuantizer::wgm(), &w, &cfg.clone().with_window(16));
-        let w64 = mse_of(&MsbQuantizer::wgm(), &w, &cfg.clone().with_window(64));
+        let w16 = mse_of(&MsbQuantizer::wgm(), &w, &cfg.clone().with_window(16).unwrap());
+        let w64 = mse_of(&MsbQuantizer::wgm(), &w, &cfg.clone().with_window(64).unwrap());
         let xn = mse_of(&XnorQuantizer::whole(), &w, &cfg);
         let bx = mse_of(&XnorQuantizer::blocked(), &w, &bcfg);
         let zero = mse_of(&ZeroQuantizer, &w, &cfg);

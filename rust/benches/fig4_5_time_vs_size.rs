@@ -8,8 +8,8 @@ use msb_quant::stats::Rng;
 use msb_quant::tensor::Matrix;
 
 fn main() {
-    let cfg = QuantConfig::per_tensor(4).no_bf16().with_lambda(0.0);
-    let bcfg = QuantConfig::block_wise(4, 64).no_bf16().with_lambda(0.0);
+    let cfg = QuantConfig::per_tensor(4).unwrap().no_bf16().with_lambda(0.0);
+    let bcfg = QuantConfig::block_wise(4, 64).unwrap().no_bf16().with_lambda(0.0);
 
     benchlib::header("Fig 4 analog — small-matrix quantization time (s)");
     println!("n,dg,gg,wgm_w16,xnor,blocked_xnor");
@@ -21,7 +21,7 @@ fn main() {
         let t_dg = time_median(3, || MsbQuantizer::dg().quantize(&w, &cfg));
         let t_gg = time_median(3, || MsbQuantizer::gg().quantize(&w, &cfg));
         let t_w = time_median(3, || {
-            MsbQuantizer::wgm().quantize(&w, &cfg.clone().with_window(16))
+            MsbQuantizer::wgm().quantize(&w, &cfg.clone().with_window(16).unwrap())
         });
         let t_x = time_median(3, || XnorQuantizer::whole().quantize(&w, &cfg));
         let t_b = time_median(3, || XnorQuantizer::blocked().quantize(&w, &bcfg));
@@ -37,7 +37,7 @@ fn main() {
         let w = Matrix::randn(n, n, &mut rng);
         let t_gg = time_median(1, || MsbQuantizer::gg().quantize(&w, &cfg));
         let t_w = time_median(1, || {
-            MsbQuantizer::wgm().quantize(&w, &cfg.clone().with_window(64))
+            MsbQuantizer::wgm().quantize(&w, &cfg.clone().with_window(64).unwrap())
         });
         let t_lo = time_median(1, || MsbQuantizer::wgm_lo().quantize(&w, &cfg));
         let t_x = time_median(3, || XnorQuantizer::whole().quantize(&w, &cfg));

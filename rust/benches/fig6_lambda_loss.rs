@@ -21,10 +21,10 @@ fn main() {
     for i in 0..steps {
         let tilde = i as f64 / (steps - 1) as f64;
         let lam = lambda::lambda_of(tilde, &sm.mags);
-        let cfg = QuantConfig::per_tensor(4).no_bf16().with_lambda(lam);
+        let cfg = QuantConfig::per_tensor(4).unwrap().no_bf16().with_lambda(lam);
         let gg = MsbQuantizer::gg().quantize(&w, &cfg).mse(&w);
         let wgm = MsbQuantizer::wgm()
-            .quantize(&w, &cfg.clone().with_window(64))
+            .quantize(&w, &cfg.clone().with_window(64).unwrap())
             .mse(&w);
         println!("{tilde:.2},{gg:.5},{wgm:.5}");
         series.push((gg, wgm));

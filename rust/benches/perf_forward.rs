@@ -1,0 +1,159 @@
+//! §Perf — fused CPU transformer forward: full-sequence scoring and
+//! KV-cached incremental decode, straight off the packed codes.
+//!
+//! The claims under test:
+//!
+//! * the quantized forward (`forward::ForwardModel`, every projection a
+//!   `kernels::PackedLinear`) matches its f32 twin — same layer graph
+//!   over the decoded weights — within 1e-4 relative on the logits;
+//! * multi-threaded full-sequence scoring is bit-identical to serial
+//!   (PR-5 discipline: anchored tiles, fixed reduction tree, whole rows
+//!   per worker);
+//! * incremental decode (one `KvState`, one token per `step`) is
+//!   bit-identical to recomputing the whole prefix per position, and
+//!   strictly faster — the KV cache turns O(T²) projection work into
+//!   O(T).
+//!
+//! All three are hard asserts: no number is reported from a run that
+//! fails them. Results merge into `BENCH_perf.json` (`forward-*` keys)
+//! next to the engine/scheduler/gemv numbers.
+
+use std::collections::BTreeMap;
+
+use msb_quant::benchlib::{self, time_median};
+use msb_quant::forward::{synth, ForwardModel, ForwardSpec};
+use msb_quant::kernels::Kernel;
+use msb_quant::pipeline::{decode_packed_model, quantize, QuantizeOptions};
+use msb_quant::quant::registry::Method;
+use msb_quant::quant::QuantConfig;
+
+fn max_rel(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let scale = f64::from(x.abs().max(y.abs())).max(1e-3);
+            (f64::from(x) - f64::from(y)).abs() / scale
+        })
+        .fold(0.0, f64::max)
+}
+
+/// One token column `t` of a `[batch, seq]` token slab.
+fn column(toks: &[i32], batch: usize, seq: usize, t: usize) -> Vec<i32> {
+    (0..batch).map(|bi| toks[bi * seq + t]).collect()
+}
+
+/// Run `seq` single-token steps through one KV cache; returns the
+/// per-step `[batch, 1, vocab]` logit slabs.
+fn incremental(model: &ForwardModel, toks: &[i32], fs: &ForwardSpec) -> Vec<Vec<f32>> {
+    let mut kv = model.kv_state();
+    (0..fs.seq)
+        .map(|t| {
+            model.step(&mut kv, &column(toks, fs.batch, fs.seq, t)).expect("incremental step")
+        })
+        .collect()
+}
+
+fn main() {
+    let fast = benchlib::fast_mode();
+    let mut results: BTreeMap<String, f64> = BTreeMap::new();
+    let reps = if fast { 3 } else { 5 };
+    let fs = if fast {
+        ForwardSpec::new(64, 32, 2, 4, 48, 16, 2)
+    } else {
+        ForwardSpec::new(256, 64, 2, 4, 128, 32, 2)
+    }
+    .expect("bench spec");
+    let block = if fast { 16 } else { 64 };
+
+    let spec = synth::model_spec(&fs, "perf_forward");
+    let weights = synth::synth_weights(&fs, 0xF0D_u64);
+    let cfg = QuantConfig::block_wise(4, block).expect("cfg").with_packed();
+    let opts = QuantizeOptions::new().with_threads(2);
+    let ((payload, decoded), t_quant) = benchlib::time_once(|| {
+        let qm = quantize(&spec, weights, None, Method::Wgm, &cfg, &opts).expect("quantize");
+        let payload = qm.export_packed().expect("packed payload");
+        let decoded = decode_packed_model(&payload, 2).expect("decode");
+        (payload, decoded)
+    });
+
+    let model = ForwardModel::from_packed_map(fs.clone(), &payload).expect("packed model");
+    let twin = ForwardModel::from_dense(fs.clone(), &decoded).expect("f32 twin");
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let pooled = ForwardModel::from_packed_map(fs.clone(), &payload)
+        .expect("packed model")
+        .with_threads(threads);
+
+    let toks = synth::synth_tokens(&fs, fs.seq, 0x70CA_u64);
+    let tokens = (fs.batch * fs.seq) as f64;
+
+    // --- correctness gates --------------------------------------------------
+    let y = model.logits(&toks).expect("serial logits");
+    let rel = max_rel(&y, &twin.logits(&toks).expect("twin logits"));
+    assert!(rel <= 1e-4, "quantized forward diverged from the f32 twin: {rel:.3e}");
+    assert_eq!(y, pooled.logits(&toks).expect("pooled logits"), "threads != serial");
+
+    let steps = incremental(&model, &toks, &fs);
+    for (t, step) in steps.iter().enumerate() {
+        let full = model.score_prefix(&toks, t + 1).expect("score_prefix");
+        assert_eq!(step, &full, "incremental step {t} != full recompute of the prefix");
+    }
+
+    // --- throughput ---------------------------------------------------------
+    let t_serial = time_median(reps, || model.logits(&toks).expect("serial logits"));
+    let t_pooled = time_median(reps, || pooled.logits(&toks).expect("pooled logits"));
+    let t_incr = time_median(reps, || incremental(&pooled, &toks, &fs));
+    let t_full = time_median(reps, || {
+        (0..fs.seq)
+            .map(|t| pooled.score_prefix(&toks, t + 1).expect("score_prefix"))
+            .collect::<Vec<_>>()
+    });
+    assert!(
+        t_incr < t_full,
+        "KV-cached incremental decode ({t_incr:.4}s) must beat per-position full \
+         recompute ({t_full:.4}s)"
+    );
+
+    benchlib::header(&format!(
+        "fused CPU forward: vocab {} d {} L{} seq {} batch {} ({} kernel, {threads} threads)",
+        fs.vocab,
+        fs.d,
+        fs.layers,
+        fs.seq,
+        fs.batch,
+        Kernel::detect().name()
+    ));
+    println!(
+        "  payload {} B ({:.3}x of f32 projections), quantize+decode {:.2}s, max rel {rel:.2e}",
+        model.payload_bytes(),
+        model.payload_bytes() as f64 / model.f32_bytes() as f64,
+        t_quant
+    );
+    println!(
+        "  full-seq   serial {:>9.4}s ({:>8.1} tok/s)   pooled {:>9.4}s ({:>8.1} tok/s)",
+        t_serial,
+        tokens / t_serial,
+        t_pooled,
+        tokens / t_pooled
+    );
+    println!(
+        "  decode     KV-cached {:>8.4}s ({:>8.1} tok/s)   recompute {:>8.4}s  ({:.2}x)",
+        t_incr,
+        tokens / t_incr,
+        t_full,
+        t_full / t_incr
+    );
+
+    let simd = u64::from(Kernel::detect() != Kernel::Scalar) as f64;
+    results.insert("forward-simd".to_string(), simd);
+    results.insert("forward-full-serial-tps".to_string(), tokens / t_serial);
+    results.insert("forward-full-pooled-tps".to_string(), tokens / t_pooled);
+    results.insert("forward-incr-tps".to_string(), tokens / t_incr);
+    results.insert("forward-recompute-tps".to_string(), tokens / t_full);
+    results.insert("forward-kv-speedup".to_string(), t_full / t_incr);
+    results.insert("forward-max-rel".to_string(), rel);
+
+    match benchlib::merge_bench_json("perf", &results) {
+        Ok(path) => println!("\nmerged {} keys into {}", results.len(), path.display()),
+        Err(e) => eprintln!("\nBENCH_perf.json not written: {e}"),
+    }
+}

@@ -106,35 +106,35 @@ fn main() {
         Case {
             label: "msb-wgm-u4",
             q: Arc::new(MsbQuantizer::wgm()),
-            cfg: QuantConfig::block_wise(4, 64).with_window(1),
+            cfg: QuantConfig::block_wise(4, 64).unwrap().with_window(1).unwrap(),
             rows: dim,
             cols: dim,
         },
         Case {
             label: "rtn-u4",
             q: Arc::new(RtnQuantizer::symmetric()),
-            cfg: QuantConfig::block_wise(4, 64),
+            cfg: QuantConfig::block_wise(4, 64).unwrap(),
             rows: dim,
             cols: dim,
         },
         Case {
             label: "xnor-u1",
             q: Arc::new(XnorQuantizer::blocked()),
-            cfg: QuantConfig::block_wise(1, 64),
+            cfg: QuantConfig::block_wise(1, 64).unwrap(),
             rows: dim,
             cols: dim,
         },
         Case {
             label: "msb-wgm-u2",
             q: Arc::new(MsbQuantizer::wgm()),
-            cfg: QuantConfig::block_wise(2, 64).with_window(1),
+            cfg: QuantConfig::block_wise(2, 64).unwrap().with_window(1).unwrap(),
             rows: dim,
             cols: dim,
         },
         Case {
             label: "msb-wgm-i8",
             q: Arc::new(MsbQuantizer::wgm()),
-            cfg: QuantConfig::per_tensor(6).with_window(16),
+            cfg: QuantConfig::per_tensor(6).unwrap().with_window(16).unwrap(),
             rows: dim.min(512),
             cols: dim.min(512),
         },

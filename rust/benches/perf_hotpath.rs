@@ -73,7 +73,7 @@ fn main() {
     // --- engine block throughput: the method grid ------------------------
     let dim = if fast { 256 } else { 2048 };
     let w = Matrix::weightlike(dim, dim, &mut rng);
-    let cfg = QuantConfig::block_wise(4, 64).with_window(1).no_bf16();
+    let cfg = QuantConfig::block_wise(4, 64).unwrap().with_window(1).unwrap().no_bf16();
     let n_blocks = (w.len() / 64) as f64;
     let reps = if fast { 1 } else { 3 };
     benchlib::header(&format!("engine block throughput ({dim}x{dim}, t=64, serial)"));

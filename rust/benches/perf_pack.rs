@@ -29,7 +29,7 @@ fn main() {
     let dim = if fast { 256 } else { 2048 };
     let reps = if fast { 1 } else { 3 };
     let w = benchlib::proxy_matrix(dim, dim);
-    let cfg = QuantConfig::block_wise(4, 64).with_window(1).with_packed();
+    let cfg = QuantConfig::block_wise(4, 64).unwrap().with_window(1).unwrap().with_packed();
     let n_blocks = (w.len() / 64) as f64;
     let f32_bytes = (w.len() * 4) as f64;
 

@@ -32,13 +32,13 @@ fn main() {
         arts.manifest.models.clone()
     };
 
-    let bw_cfg = QuantConfig::block_wise(4, 64).with_window(1);
-    let pt_cfg = QuantConfig::per_tensor(6).with_window(64);
+    let bw_cfg = QuantConfig::block_wise(4, 64).unwrap().with_window(1).unwrap();
+    let pt_cfg = QuantConfig::per_tensor(6).unwrap().with_window(64).unwrap();
     // Our trained stand-ins are far more noise-robust than billion-param
     // LLMs: the fragility the paper observes at 6-bit per-tensor appears
     // here around 3-bit, so we additionally report a 3-bit "stress" column
     // where the paper's per-tensor method ordering becomes visible.
-    let pt3_cfg = QuantConfig::per_tensor(3).with_window(64);
+    let pt3_cfg = QuantConfig::per_tensor(3).unwrap().with_window(64).unwrap();
     let bw_methods =
         [Method::Fp, Method::Gptq, Method::Rtn, Method::Bnb, Method::Hqq, Method::Wgm];
     let pt_methods = [Method::Rtn, Method::Hqq, Method::Wgm, Method::WgmLo];

@@ -26,7 +26,7 @@ fn main() {
 
     for (name, q) in &methods {
         for bits in [6u32, 5, 4] {
-            let cfg = QuantConfig::per_tensor(bits).with_window(64);
+            let cfg = QuantConfig::per_tensor(bits).unwrap().with_window(64).unwrap();
             let (qt, dt) = time_once(|| q.quantize(&w, &cfg));
             println!(
                 "{}",
@@ -43,7 +43,7 @@ fn main() {
     println!();
     for (name, q) in &methods {
         for bits in [4u32, 3, 2] {
-            let cfg = QuantConfig::block_wise(bits, 64).with_window(1);
+            let cfg = QuantConfig::block_wise(bits, 64).unwrap().with_window(1).unwrap();
             let (qt, dt) = time_once(|| q.quantize(&w, &cfg));
             println!(
                 "{}",

@@ -4,7 +4,7 @@
 //! between.
 //!
 //! Plus the **scheduler ablation**: the model-global `(layer, tile)` queue
-//! (`pipeline::quantize_model`) against a reproduction of the old
+//! (`pipeline::quantize`) against a reproduction of the old
 //! sequential per-layer streaming on one shared pool. Runs on a synthetic
 //! multi-layer model so this arm works without `artifacts/`; bit-identity
 //! of the two paths is asserted before timing is reported, and the global
@@ -17,7 +17,7 @@ use msb_quant::benchlib::{self, time_median};
 use msb_quant::harness::Artifacts;
 use msb_quant::io::manifest::{ModelSpec, ParamSpec};
 use msb_quant::io::msbt::{Tensor, TensorMap};
-use msb_quant::pipeline::quantize_model;
+use msb_quant::pipeline::{quantize, QuantizeOptions};
 use msb_quant::pool::ThreadPool;
 use msb_quant::quant::registry::{self, Method};
 use msb_quant::quant::{QuantConfig, Quantizer};
@@ -53,7 +53,7 @@ fn synthetic_model(layers: usize, dim: usize) -> (ModelSpec, TensorMap) {
 }
 
 fn table3_grid(arts: &Artifacts) {
-    let cfg = QuantConfig::block_wise(4, 64).with_window(1);
+    let cfg = QuantConfig::block_wise(4, 64).unwrap().with_window(1).unwrap();
     let methods =
         [Method::Gptq, Method::Bnb, Method::Hqq, Method::Rtn, Method::Wgm];
     benchlib::header("Table 3 analog — full-model quantization time (s)");
@@ -74,7 +74,8 @@ fn table3_grid(arts: &Artifacts) {
         let mut cells = vec![spec.name.clone(), spec.total_params().to_string()];
         for method in methods {
             let calib_ref = method.needs_calibration().then_some(&calib);
-            let qm = quantize_model(spec, weights.clone(), calib_ref, method, &cfg, 1)
+            let qm = quantize(spec, weights.clone(), calib_ref, method, &cfg,
+                &QuantizeOptions::new().with_threads(1))
                 .expect("quantize");
             cells.push(benchlib::fmt_f(qm.wall_seconds, 2));
         }
@@ -97,7 +98,7 @@ fn main() {
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).max(2);
     let (layers, dim) = if fast { (6, 128) } else { (12, 512) };
     let (spec, weights) = synthetic_model(layers, dim);
-    let cfg = QuantConfig::block_wise(4, 64).with_window(1);
+    let cfg = QuantConfig::block_wise(4, 64).unwrap().with_window(1).unwrap();
     let total_elems: usize = weights.values().map(|t| t.data.len()).sum();
     let n_blocks = (total_elems / 64) as f64;
     let reps = 3;
@@ -126,15 +127,17 @@ fn main() {
     // barrier is end-of-model
     let t_global = time_median(reps, || {
         std::hint::black_box(
-            quantize_model(&spec, weights.clone(), None, Method::Wgm, &cfg, threads)
-                .expect("quantize"),
+            quantize(&spec, weights.clone(), None, Method::Wgm, &cfg,
+                &QuantizeOptions::new().with_threads(threads))
+            .expect("quantize"),
         );
     });
 
     // bit-identity of the two paths before any number is reported
     {
-        let qm = quantize_model(&spec, weights.clone(), None, Method::Wgm, &cfg, threads)
-            .expect("quantize");
+        let qm = quantize(&spec, weights.clone(), None, Method::Wgm, &cfg,
+            &QuantizeOptions::new().with_threads(threads))
+        .expect("quantize");
         let mut pool = ThreadPool::new(threads, threads * 4);
         for (name, w) in &mats {
             let qt = q.quantize_with_pool(w, &cfg, &pool);

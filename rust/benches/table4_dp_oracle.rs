@@ -17,7 +17,7 @@ fn main() {
         // λ=0: both solvers must spend the identical per-tile bit budget
         // (DG would otherwise trade groups away against the λ penalty,
         // which is not the paper's matched-bits comparison)
-        let cfg = QuantConfig::block_wise(bits, 64).with_window(1).no_bf16().with_lambda(0.0);
+        let cfg = QuantConfig::block_wise(bits, 64).unwrap().with_window(1).unwrap().no_bf16().with_lambda(0.0);
         let (dp, t_dp) = time_once(|| MsbQuantizer::dg().quantize(&w, &cfg));
         let (wgm, t_wgm) = time_once(|| MsbQuantizer::wgm().quantize(&w, &cfg));
         let (m_dp, m_wgm) = (dp.mse(&w), wgm.mse(&w));

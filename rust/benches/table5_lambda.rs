@@ -7,7 +7,7 @@ use msb_quant::benchlib::{self, time_once};
 use msb_quant::eval;
 use msb_quant::harness::Artifacts;
 use msb_quant::io::msbt::Tensor;
-use msb_quant::quant::{msb::MsbQuantizer, QuantConfig, Quantizer};
+use msb_quant::quant::{msb::MsbQuantizer, Granularity, QuantConfig, Quantizer};
 use msb_quant::runtime::ModelRunner;
 
 fn main() {
@@ -40,10 +40,17 @@ fn main() {
             for p in spec.quantizable() {
                 let w = weights.get(&p.name).unwrap().to_matrix().unwrap();
                 // QuantConfig.lambda *is* λ̃ — the quantizer applies the
-                // Appendix C Λ map per instance
-                let cfg = QuantConfig::per_tensor(9) // g=256 => 2^(9-1)
-                    .with_window(256)
-                    .with_lambda(tilde);
+                // Appendix C Λ map per instance. g=256 => 2^(9-1): the
+                // oracle setting exceeds the deployable 1..=8 bit range,
+                // so the config is built literally.
+                let cfg = QuantConfig {
+                    bits: 9,
+                    granularity: Granularity::PerTensor,
+                    window: 256,
+                    lambda: tilde,
+                    bf16: true,
+                    emit_packed: false,
+                };
                 let q = MsbQuantizer::wgm().quantize(&w, &cfg);
                 out.insert(p.name.clone(), Tensor::f32(p.shape.clone(), q.dequant.data));
             }

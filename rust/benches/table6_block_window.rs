@@ -27,7 +27,7 @@ fn main() {
                 trow.push(f64::NAN);
                 continue;
             }
-            let cfg = QuantConfig::block_wise(4, t).with_window(win).no_bf16();
+            let cfg = QuantConfig::block_wise(4, t).unwrap().with_window(win).unwrap().no_bf16();
             let (qt, dt) = time_once(|| MsbQuantizer::wgm().quantize(&w, &cfg));
             cells.push(benchlib::fmt_f(qt.mse(&w), 2));
             trow.push(dt);

@@ -7,8 +7,21 @@ use msb_quant::benchlib::{self, time_once};
 use msb_quant::eval;
 use msb_quant::harness::Artifacts;
 use msb_quant::io::msbt::Tensor;
-use msb_quant::quant::{msb::MsbQuantizer, QuantConfig, Quantizer};
+use msb_quant::quant::{msb::MsbQuantizer, Granularity, QuantConfig, Quantizer};
 use msb_quant::runtime::ModelRunner;
+
+/// Oracle sweeps run past the deployable 1..=8 bit range (g up to 512), so
+/// the config is built literally instead of via the validated constructors.
+fn per_tensor_oracle(bits: u32, window: usize) -> QuantConfig {
+    QuantConfig {
+        bits,
+        granularity: Granularity::PerTensor,
+        window,
+        lambda: 0.75,
+        bf16: true,
+        emit_packed: false,
+    }
+}
 
 fn eval_cfg(
     arts: &Artifacts,
@@ -51,7 +64,7 @@ fn main() {
     let bits: Vec<u32> =
         if benchlib::fast_mode() { vec![4, 6, 8] } else { vec![4, 5, 6, 7, 8, 9, 10] };
     for bit in bits {
-        let cfg = QuantConfig::per_tensor(bit).with_window(256);
+        let cfg = per_tensor_oracle(bit, 256);
         let (ppl, dt) = eval_cfg(&arts, &mut runner, &weights, &spec, &cfg);
         println!(
             "{}",
@@ -69,7 +82,7 @@ fn main() {
     let windows: Vec<usize> =
         if benchlib::fast_mode() { vec![8, 64, 512] } else { vec![8, 16, 32, 64, 128, 256, 512] };
     for w in windows {
-        let cfg = QuantConfig::per_tensor(9).with_window(w);
+        let cfg = per_tensor_oracle(9, w);
         let (ppl, dt) = eval_cfg(&arts, &mut runner, &weights, &spec, &cfg);
         println!(
             "{}",

@@ -1,0 +1,736 @@
+//! Fused CPU transformer forward pass for full token scoring — no XLA.
+//!
+//! [`ForwardModel`] runs the whole decoder stack (embedding lookup,
+//! RMSNorm, RoPE, causal attention with a KV cache, SwiGLU MLP,
+//! final-norm + logits) with *every projection* going through
+//! [`crate::kernels`]: quantized layers as [`PackedLinear`] handles that
+//! multiply straight off the packed codes, and non-quantized layers (an
+//! exception list, or the f32-reference twin) through [`dense_gemv`] with
+//! the same chunked lane structure. Quantized-vs-full-precision logits can
+//! therefore be compared directly — same layer graph, same accumulation
+//! order, only the projection weights differ.
+//!
+//! # Determinism contract
+//!
+//! The PR 5 bit-identity discipline extends to the whole stack:
+//!
+//! * projections inherit [`PackedLinear`]'s fixed block-accumulation
+//!   order (serial / pooled / scalar / AVX2 all bit-identical, any batch);
+//! * every position-local op ([`ops`]) walks its input in one fixed order
+//!   with f64 accumulators;
+//! * attention parallelism is per `(batch row, head)` with each output
+//!   head-slice computed whole by one worker ([`crate::pool::scoped_map`]
+//!   keeps input order);
+//! * [`ForwardModel::logits`] and incremental [`ForwardModel::step`]
+//!   share one forward chunk path, so a KV-cached decode reproduces the
+//!   full-sequence recompute bit for bit.
+//!
+//! [`PackedLinear`]: crate::kernels::PackedLinear
+//! [`dense_gemv`]: crate::kernels::dense_gemv
+
+pub mod ops;
+pub mod synth;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::io::msbt::TensorMap;
+use crate::kernels::{dense_gemv, Kernel, PackedLinear};
+use crate::pool::{scoped_map, ThreadPool};
+use crate::quant::packing::PackedTensor;
+use crate::runtime::LogitsFn;
+use crate::tensor::Matrix;
+
+/// Architecture of a [`ForwardModel`]: dimensions only, no weights.
+#[derive(Clone, Debug)]
+pub struct ForwardSpec {
+    pub vocab: usize,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ff: usize,
+    /// Maximum sequence length (KV cache capacity; [`LogitsFn`] shape).
+    pub seq: usize,
+    pub batch: usize,
+    /// RoPE frequency base (10 000 unless stated otherwise).
+    pub rope_base: f64,
+}
+
+impl ForwardSpec {
+    pub fn new(
+        vocab: usize,
+        d: usize,
+        layers: usize,
+        heads: usize,
+        ff: usize,
+        seq: usize,
+        batch: usize,
+    ) -> Result<ForwardSpec> {
+        let fs = ForwardSpec { vocab, d, layers, heads, ff, seq, batch, rope_base: 10_000.0 };
+        fs.validate()?;
+        Ok(fs)
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d / self.heads
+    }
+
+    fn validate(&self) -> Result<()> {
+        for (v, what) in [
+            (self.vocab, "vocab"),
+            (self.d, "d"),
+            (self.layers, "layers"),
+            (self.heads, "heads"),
+            (self.ff, "ff"),
+            (self.seq, "seq"),
+            (self.batch, "batch"),
+        ] {
+            ensure!(v > 0, "{what} must be positive");
+        }
+        ensure!(self.d % self.heads == 0, "d {} not divisible by heads {}", self.d, self.heads);
+        ensure!(self.head_dim() % 2 == 0, "head dim {} must be even for RoPE", self.head_dim());
+        ensure!(self.rope_base > 1.0, "rope base must exceed 1");
+        Ok(())
+    }
+}
+
+/// One projection in the layer graph: packed codes or a dense f32 matrix.
+/// Both multiply through [`crate::kernels`] with the same chunked lane
+/// structure; which one a layer gets is decided per parameter, so payload
+/// exception lists (layers the quantizer left at f32) mix freely with
+/// packed ones inside a single model.
+pub enum Linear {
+    Packed(PackedLinear),
+    Dense(Matrix),
+}
+
+impl Linear {
+    pub fn rows(&self) -> usize {
+        match self {
+            Linear::Packed(p) => p.rows(),
+            Linear::Dense(m) => m.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Linear::Packed(p) => p.cols(),
+            Linear::Dense(m) => m.cols,
+        }
+    }
+
+    /// Serialized payload bytes actually held (dense layers count f32).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            Linear::Packed(p) => p.payload_bytes(),
+            Linear::Dense(m) => m.len() * 4,
+        }
+    }
+
+    fn with_kernel(self, kernel: Kernel) -> Linear {
+        match self {
+            Linear::Packed(p) => Linear::Packed(p.with_kernel(kernel)),
+            dense => dense,
+        }
+    }
+
+    /// `y[b] = W · xs[b]` for `batch` activation rows, `[batch, rows]`
+    /// row-major out. Every output element is computed whole by one
+    /// worker in the fixed chunk order, so the bits never depend on
+    /// `pool`/`threads`.
+    fn gemm(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        kernel: Kernel,
+        pool: Option<&ThreadPool>,
+        threads: usize,
+    ) -> Vec<f32> {
+        match self {
+            Linear::Packed(p) => match pool {
+                Some(pl) => p.gemm_pooled(xs, batch, pl),
+                None => p.gemm(xs, batch),
+            },
+            Linear::Dense(m) => {
+                assert_eq!(xs.len(), batch * m.cols, "activation shape != [batch, cols]");
+                let rows: Vec<usize> = (0..batch).collect();
+                let outs = scoped_map(rows, threads, |b| {
+                    dense_gemv(m, &xs[b * m.cols..(b + 1) * m.cols], kernel)
+                });
+                let mut y = Vec::with_capacity(batch * m.rows);
+                for o in outs {
+                    y.extend_from_slice(&o);
+                }
+                y
+            }
+        }
+    }
+}
+
+/// One decoder layer's parameters.
+struct Layer {
+    attn_norm: Vec<f32>,
+    wq: Linear,
+    wk: Linear,
+    wv: Linear,
+    wo: Linear,
+    mlp_norm: Vec<f32>,
+    w_gate: Linear,
+    w_up: Linear,
+    w_down: Linear,
+}
+
+/// Per-sequence decode state: the roped key/value cache, one
+/// `[batch, seq, d]` slab per layer. Create with
+/// [`ForwardModel::kv_state`], feed to [`ForwardModel::step`].
+pub struct KvState {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    len: usize,
+    batch: usize,
+    seq: usize,
+    d: usize,
+}
+
+impl KvState {
+    /// Positions already decoded into the cache.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write the chunk's roped keys/values (`[batch, t_new, d]`) into
+    /// layer `li` at positions `t0..t0 + t_new`.
+    fn append(&mut self, li: usize, t0: usize, k: &[f32], v: &[f32], t_new: usize) {
+        let d = self.d;
+        for bi in 0..self.batch {
+            for i in 0..t_new {
+                let src = (bi * t_new + i) * d;
+                let dst = (bi * self.seq + t0 + i) * d;
+                self.k[li][dst..dst + d].copy_from_slice(&k[src..src + d]);
+                self.v[li][dst..dst + d].copy_from_slice(&v[src..src + d]);
+            }
+        }
+    }
+}
+
+/// The fused CPU forward model. See the module docs for the determinism
+/// contract; see [`synth`] for the parameter naming the constructors load.
+pub struct ForwardModel {
+    spec: ForwardSpec,
+    tok_emb: Matrix,
+    layers: Vec<Layer>,
+    final_norm: Vec<f32>,
+    lm_head: Linear,
+    kernel: Kernel,
+    threads: usize,
+    pool: Option<ThreadPool>,
+}
+
+/// Parameter source shared by the two constructors: packed payloads win,
+/// anything else is looked up as a dense f32 tensor.
+struct Params<'a> {
+    packed: std::collections::BTreeMap<String, PackedTensor>,
+    dense: &'a TensorMap,
+}
+
+impl Params<'_> {
+    fn linear(&mut self, name: &str, rows: usize, cols: usize) -> Result<Linear> {
+        if let Some(pt) = self.packed.remove(name) {
+            ensure!(
+                pt.rows == rows && pt.cols == cols,
+                "{name}: packed shape [{}, {}] != expected [{rows}, {cols}]",
+                pt.rows,
+                pt.cols
+            );
+            let pl =
+                PackedLinear::new(pt).with_context(|| format!("fused handle for '{name}'"))?;
+            return Ok(Linear::Packed(pl));
+        }
+        Ok(Linear::Dense(self.matrix(name, rows, cols)?))
+    }
+
+    fn matrix(&self, name: &str, rows: usize, cols: usize) -> Result<Matrix> {
+        let t = self.dense.get(name).with_context(|| format!("missing tensor '{name}'"))?;
+        ensure!(
+            t.dims == [rows, cols],
+            "{name}: shape {:?} != expected [{rows}, {cols}]",
+            t.dims
+        );
+        Ok(Matrix::from_vec(rows, cols, t.as_f32()?.to_vec()))
+    }
+
+    fn vector(&self, name: &str, len: usize) -> Result<Vec<f32>> {
+        let t = self.dense.get(name).with_context(|| format!("missing tensor '{name}'"))?;
+        ensure!(t.dims == [len], "{name}: shape {:?} != expected [{len}]", t.dims);
+        Ok(t.as_f32()?.to_vec())
+    }
+}
+
+impl ForwardModel {
+    /// Boot from an `export_packed` artifact: quantized projections stay
+    /// packed ([`PackedLinear`] handles computing straight off the codes),
+    /// pass-through tensors (norms, embeddings, exception-listed layers)
+    /// load dense. No full f32 weight set is ever materialized.
+    pub fn from_packed_map(spec: ForwardSpec, map: &TensorMap) -> Result<ForwardModel> {
+        spec.validate()?;
+        let (_method, packed, passthrough) = crate::pipeline::packed_tensors(map)?;
+        Self::build(spec, Params { packed, dense: &passthrough })
+    }
+
+    /// The f32-reference twin: every projection dense, same layer graph.
+    /// Feed it the original weights for the full-precision baseline, or a
+    /// [`crate::pipeline::decode_packed_model`] output to isolate the
+    /// fused kernels from the quantization error itself.
+    pub fn from_dense(spec: ForwardSpec, map: &TensorMap) -> Result<ForwardModel> {
+        spec.validate()?;
+        Self::build(spec, Params { packed: Default::default(), dense: map })
+    }
+
+    fn build(spec: ForwardSpec, mut params: Params<'_>) -> Result<ForwardModel> {
+        let (v, d, ff) = (spec.vocab, spec.d, spec.ff);
+        let tok_emb = params.matrix("tok_emb", v, d)?;
+        let mut layers = Vec::with_capacity(spec.layers);
+        for l in 0..spec.layers {
+            let p = |s: &str| format!("layer{l}.{s}");
+            layers.push(Layer {
+                attn_norm: params.vector(&p("attn_norm"), d)?,
+                wq: params.linear(&p("wq"), d, d)?,
+                wk: params.linear(&p("wk"), d, d)?,
+                wv: params.linear(&p("wv"), d, d)?,
+                wo: params.linear(&p("wo"), d, d)?,
+                mlp_norm: params.vector(&p("mlp_norm"), d)?,
+                w_gate: params.linear(&p("w_gate"), ff, d)?,
+                w_up: params.linear(&p("w_up"), ff, d)?,
+                w_down: params.linear(&p("w_down"), d, ff)?,
+            });
+        }
+        let final_norm = params.vector("final_norm", d)?;
+        let lm_head = params.linear("lm_head", v, d)?;
+        ensure!(
+            params.packed.is_empty(),
+            "packed payload has layers the spec does not name: {:?}",
+            params.packed.keys().collect::<Vec<_>>()
+        );
+        Ok(ForwardModel {
+            spec,
+            tok_emb,
+            layers,
+            final_norm,
+            lm_head,
+            kernel: Kernel::detect(),
+            threads: 1,
+            pool: None,
+        })
+    }
+
+    /// Stripe projections and attention heads over `threads` workers.
+    /// Output bits are unchanged (see the module docs).
+    pub fn with_threads(mut self, threads: usize) -> ForwardModel {
+        self.threads = threads.max(1);
+        self.pool = (self.threads > 1).then(|| ThreadPool::new(self.threads, self.threads * 4));
+        self
+    }
+
+    /// Force a specific dot micro-kernel (tests compare scalar vs SIMD).
+    pub fn with_kernel(mut self, kernel: Kernel) -> ForwardModel {
+        assert!(kernel.available(), "{} kernel not available on this CPU", kernel.name());
+        self.kernel = kernel;
+        self.lm_head = std::mem::replace(&mut self.lm_head, Linear::Dense(Matrix::zeros(0, 0)))
+            .with_kernel(kernel);
+        for l in &mut self.layers {
+            for w in [&mut l.wq, &mut l.wk, &mut l.wv, &mut l.wo, &mut l.w_gate, &mut l.w_up,
+                &mut l.w_down]
+            {
+                let owned = std::mem::replace(w, Linear::Dense(Matrix::zeros(0, 0)));
+                *w = owned.with_kernel(kernel);
+            }
+        }
+        self
+    }
+
+    pub fn spec(&self) -> &ForwardSpec {
+        &self.spec
+    }
+
+    /// Projection payload bytes actually resident (packed layers count
+    /// their codes + scales, dense layers f32).
+    pub fn payload_bytes(&self) -> usize {
+        let mut n = self.lm_head.payload_bytes();
+        for l in &self.layers {
+            for w in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_gate, &l.w_up, &l.w_down] {
+                n += w.payload_bytes();
+            }
+        }
+        n
+    }
+
+    /// What the same projections would cost decoded to f32.
+    pub fn f32_bytes(&self) -> usize {
+        let per_layer = 4 * self.spec.d * self.spec.d + 3 * self.spec.ff * self.spec.d;
+        (per_layer * self.spec.layers + self.spec.vocab * self.spec.d) * 4
+    }
+
+    /// A fresh (empty) KV cache sized for this model.
+    pub fn kv_state(&self) -> KvState {
+        let slab = self.spec.batch * self.spec.seq * self.spec.d;
+        KvState {
+            k: (0..self.spec.layers).map(|_| vec![0.0; slab]).collect(),
+            v: (0..self.spec.layers).map(|_| vec![0.0; slab]).collect(),
+            len: 0,
+            batch: self.spec.batch,
+            seq: self.spec.seq,
+            d: self.spec.d,
+        }
+    }
+
+    /// Full-sequence scoring: `tokens` is `[batch, seq]` row-major,
+    /// returns `[batch, seq, vocab]` logits. Equivalent to (and
+    /// bit-identical with) one [`ForwardModel::step`] on a fresh cache.
+    pub fn logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        ensure!(
+            tokens.len() == self.spec.batch * self.spec.seq,
+            "tokens len {} != {}x{}",
+            tokens.len(),
+            self.spec.batch,
+            self.spec.seq
+        );
+        self.step(&mut self.kv_state(), tokens)
+    }
+
+    /// Incremental decode: append `tokens` (`[batch, t_new]` row-major,
+    /// any `t_new ≥ 1` that fits the cache) and return `[batch, t_new,
+    /// vocab]` logits for the new positions. Splitting a sequence into
+    /// chunks in any way yields the same bits as one full-sequence call.
+    pub fn step(&self, kv: &mut KvState, tokens: &[i32]) -> Result<Vec<f32>> {
+        let ForwardSpec { d, heads, batch: b, seq, vocab, rope_base, .. } = self.spec;
+        ensure!(
+            kv.batch == b && kv.seq == seq && kv.d == d && kv.k.len() == self.layers.len(),
+            "KV cache shape does not match this model"
+        );
+        ensure!(!tokens.is_empty() && tokens.len() % b == 0, "tokens not [batch, t_new]");
+        let t_new = tokens.len() / b;
+        let t0 = kv.len;
+        ensure!(t0 + t_new <= seq, "cache overflow: {t0} + {t_new} > {seq}");
+        let n = b * t_new;
+        let hd = self.spec.head_dim();
+        let (kernel, pool, threads) = (self.kernel, self.pool.as_ref(), self.threads);
+
+        // Embedding lookup, rows laid out [batch, t_new, d].
+        let mut x = vec![0.0f32; n * d];
+        for (r, &tok) in tokens.iter().enumerate() {
+            ensure!(
+                tok >= 0 && (tok as usize) < vocab,
+                "token {tok} outside vocab 0..{vocab}"
+            );
+            x[r * d..(r + 1) * d].copy_from_slice(self.tok_emb.row(tok as usize));
+        }
+
+        let mut nrm = vec![0.0f32; n * d];
+        for (li, layer) in self.layers.iter().enumerate() {
+            // attention block
+            for (xs, os) in x.chunks_exact(d).zip(nrm.chunks_exact_mut(d)) {
+                ops::rmsnorm(xs, &layer.attn_norm, os);
+            }
+            let mut q = layer.wq.gemm(&nrm, n, kernel, pool, threads);
+            let mut k = layer.wk.gemm(&nrm, n, kernel, pool, threads);
+            let v = layer.wv.gemm(&nrm, n, kernel, pool, threads);
+            for bi in 0..b {
+                for i in 0..t_new {
+                    let r = (bi * t_new + i) * d;
+                    ops::rope_in_place(&mut q[r..r + d], heads, t0 + i, rope_base);
+                    ops::rope_in_place(&mut k[r..r + d], heads, t0 + i, rope_base);
+                }
+            }
+            kv.append(li, t0, &k, &v, t_new);
+
+            // one job per (batch row, head); each head-slice computed whole
+            let kb_all = &kv.k[li];
+            let vb_all = &kv.v[li];
+            let jobs: Vec<(usize, usize)> =
+                (0..b).flat_map(|bi| (0..heads).map(move |h| (bi, h))).collect();
+            let head_outs = scoped_map(jobs, threads, |(bi, h)| {
+                let kb = &kb_all[bi * seq * d..(bi + 1) * seq * d];
+                let vb = &vb_all[bi * seq * d..(bi + 1) * seq * d];
+                let h0 = h * hd;
+                let (mut scores, mut acc) = (Vec::new(), Vec::new());
+                let mut out = vec![0.0f32; t_new * hd];
+                for i in 0..t_new {
+                    let r = (bi * t_new + i) * d;
+                    ops::attend(
+                        &q[r + h0..r + h0 + hd],
+                        kb,
+                        vb,
+                        d,
+                        h0,
+                        t0 + i,
+                        &mut scores,
+                        &mut acc,
+                        &mut out[i * hd..(i + 1) * hd],
+                    );
+                }
+                out
+            });
+            let mut att = vec![0.0f32; n * d];
+            for (idx, ho) in head_outs.iter().enumerate() {
+                let (bi, h) = (idx / heads, idx % heads);
+                for i in 0..t_new {
+                    let dst = (bi * t_new + i) * d + h * hd;
+                    att[dst..dst + hd].copy_from_slice(&ho[i * hd..(i + 1) * hd]);
+                }
+            }
+            let o = layer.wo.gemm(&att, n, kernel, pool, threads);
+            for (xv, &ov) in x.iter_mut().zip(&o) {
+                *xv += ov;
+            }
+
+            // SwiGLU MLP block
+            for (xs, os) in x.chunks_exact(d).zip(nrm.chunks_exact_mut(d)) {
+                ops::rmsnorm(xs, &layer.mlp_norm, os);
+            }
+            let mut g = layer.w_gate.gemm(&nrm, n, kernel, pool, threads);
+            let u = layer.w_up.gemm(&nrm, n, kernel, pool, threads);
+            for (gv, &uv) in g.iter_mut().zip(&u) {
+                *gv = ops::silu(*gv) * uv;
+            }
+            let down = layer.w_down.gemm(&g, n, kernel, pool, threads);
+            for (xv, &dv) in x.iter_mut().zip(&down) {
+                *xv += dv;
+            }
+        }
+
+        for (xs, os) in x.chunks_exact(d).zip(nrm.chunks_exact_mut(d)) {
+            ops::rmsnorm(xs, &self.final_norm, os);
+        }
+        let logits = self.lm_head.gemm(&nrm, n, kernel, pool, threads);
+        kv.len = t0 + t_new;
+        Ok(logits)
+    }
+
+    /// Score the next token after a prefix: run positions `0..p` of each
+    /// batch row from scratch and return the last position's logits,
+    /// `[batch, vocab]`. This is the full-recompute arm the `perf_forward`
+    /// bench races against KV-cached [`ForwardModel::step`]s.
+    pub fn score_prefix(&self, tokens: &[i32], p: usize) -> Result<Vec<f32>> {
+        let b = self.spec.batch;
+        ensure!(tokens.len() % b == 0, "tokens not [batch, len]");
+        let len = tokens.len() / b;
+        ensure!(p >= 1 && p <= len, "prefix {p} outside 1..={len}");
+        let mut pref = Vec::with_capacity(b * p);
+        for bi in 0..b {
+            pref.extend_from_slice(&tokens[bi * len..bi * len + p]);
+        }
+        let logits = self.step(&mut self.kv_state(), &pref)?;
+        let vocab = self.spec.vocab;
+        let mut out = Vec::with_capacity(b * vocab);
+        for bi in 0..b {
+            let last = (bi * p + p - 1) * vocab;
+            out.extend_from_slice(&logits[last..last + vocab]);
+        }
+        Ok(out)
+    }
+}
+
+impl LogitsFn for ForwardModel {
+    fn batch(&self) -> usize {
+        self.spec.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.spec.seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.spec.vocab
+    }
+
+    fn logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        ForwardModel::logits(self, tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{self, quantize, Method, QuantizeOptions};
+    use crate::quant::QuantConfig;
+
+    fn tiny() -> ForwardSpec {
+        ForwardSpec::new(40, 32, 2, 4, 48, 8, 2).unwrap()
+    }
+
+    /// Quantize the synthetic instance and return (packed artifact map,
+    /// decoded f32 map, original f32 map).
+    fn fixture(fs: &ForwardSpec) -> (TensorMap, TensorMap, TensorMap) {
+        let spec = synth::model_spec(fs, "fwd-test");
+        let weights = synth::synth_weights(fs, 21);
+        let cfg = QuantConfig::block_wise(4, 16).unwrap();
+        let opts = QuantizeOptions::new().with_threads(2).with_packed();
+        let qm = quantize(&spec, weights.clone(), None, Method::Wgm, &cfg, &opts).unwrap();
+        let packed = qm.export_packed().unwrap();
+        let decoded = pipeline::decode_packed_model(&packed, 1).unwrap();
+        (packed, decoded, weights)
+    }
+
+    fn max_rel_diff(a: &[f32], b: &[f32]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| {
+                let scale = f64::max(x.abs().max(y.abs()) as f64, 1e-3);
+                (x as f64 - y as f64).abs() / scale
+            })
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn spec_rejects_degenerate_shapes() {
+        assert!(ForwardSpec::new(0, 32, 1, 4, 48, 8, 1).is_err());
+        assert!(ForwardSpec::new(40, 30, 1, 4, 48, 8, 1).is_err(), "d % heads != 0");
+        assert!(ForwardSpec::new(40, 4, 1, 4, 48, 8, 1).is_err(), "odd head dim");
+        assert!(ForwardSpec::new(40, 32, 1, 4, 48, 0, 1).is_err());
+    }
+
+    #[test]
+    fn quantized_logits_match_dense_twin() {
+        let fs = tiny();
+        let (packed, decoded, original) = fixture(&fs);
+        let fused = ForwardModel::from_packed_map(fs.clone(), &packed).unwrap();
+        // fused handles stay packed: payload well under the f32 footprint
+        assert!(fused.payload_bytes() * 2 < fused.f32_bytes());
+        let twin = ForwardModel::from_dense(fs.clone(), &decoded).unwrap();
+        let full = ForwardModel::from_dense(fs.clone(), &original).unwrap();
+        let toks = synth::synth_tokens(&fs, fs.seq, 4);
+        let yf = fused.logits(&toks).unwrap();
+        let yt = twin.logits(&toks).unwrap();
+        let y0 = full.logits(&toks).unwrap();
+        assert_eq!(yf.len(), fs.batch * fs.seq * fs.vocab);
+        assert!(yf.iter().all(|v| v.is_finite()));
+        // same layer graph on the decoded weights: only kernel-side
+        // rounding differs, well inside 1e-4 relative
+        let rel = max_rel_diff(&yf, &yt);
+        assert!(rel <= 1e-4, "fused vs decoded twin rel diff {rel}");
+        // the full-precision baseline differs by genuine quantization
+        // error — nonzero, but small relative to the logit mass
+        let rel0 = max_rel_diff(&yf, &y0);
+        assert!(rel0 > 1e-4, "quantization should move the logits");
+        let mass: f64 = y0.iter().map(|v| v.abs() as f64).sum::<f64>() / y0.len() as f64;
+        let err: f64 = yf.iter().zip(&y0).map(|(&a, &b)| (a as f64 - b as f64).abs()).sum::<f64>()
+            / y0.len() as f64;
+        assert!(err < 0.5 * mass, "4-bit logits drifted: mean err {err} vs mass {mass}");
+    }
+
+    #[test]
+    fn logits_bit_identical_across_threads_and_kernels() {
+        let fs = tiny();
+        let (packed, _, _) = fixture(&fs);
+        let toks = synth::synth_tokens(&fs, fs.seq, 7);
+        let base = ForwardModel::from_packed_map(fs.clone(), &packed)
+            .unwrap()
+            .with_kernel(Kernel::Scalar);
+        let y1 = base.logits(&toks).unwrap();
+        for threads in [2, 4] {
+            let m = ForwardModel::from_packed_map(fs.clone(), &packed)
+                .unwrap()
+                .with_kernel(Kernel::Scalar)
+                .with_threads(threads);
+            assert_eq!(y1, m.logits(&toks).unwrap(), "threads={threads} changed bits");
+        }
+        if let Some(simd) = Kernel::detect_simd() {
+            let m = ForwardModel::from_packed_map(fs.clone(), &packed)
+                .unwrap()
+                .with_kernel(simd)
+                .with_threads(3);
+            assert_eq!(y1, m.logits(&toks).unwrap(), "{} changed bits", simd.name());
+        }
+    }
+
+    #[test]
+    fn incremental_decode_matches_full_recompute() {
+        let fs = tiny();
+        let (packed, _, _) = fixture(&fs);
+        let model =
+            ForwardModel::from_packed_map(fs.clone(), &packed).unwrap().with_threads(2);
+        let toks = synth::synth_tokens(&fs, fs.seq, 11);
+        let full = model.logits(&toks).unwrap();
+        let (b, t, v) = (fs.batch, fs.seq, fs.vocab);
+
+        // one token at a time through a shared cache
+        let mut kv = model.kv_state();
+        let mut inc = vec![0.0f32; b * t * v];
+        for i in 0..t {
+            let col: Vec<i32> = (0..b).map(|bi| toks[bi * t + i]).collect();
+            let step = model.step(&mut kv, &col).unwrap();
+            assert_eq!(kv.len(), i + 1);
+            for bi in 0..b {
+                inc[(bi * t + i) * v..(bi * t + i) * v + v]
+                    .copy_from_slice(&step[bi * v..(bi + 1) * v]);
+            }
+        }
+        assert_eq!(full, inc, "KV-cached decode != full-sequence recompute");
+
+        // uneven chunking (prefill 3, then 1, then 4) also reproduces it
+        let mut kv2 = model.kv_state();
+        let mut at = 0;
+        for w in [3usize, 1, 4] {
+            let chunk: Vec<i32> = (0..b)
+                .flat_map(|bi| toks[bi * t + at..bi * t + at + w].to_vec())
+                .collect();
+            let y = model.step(&mut kv2, &chunk).unwrap();
+            for bi in 0..b {
+                for i in 0..w {
+                    let want = &full[(bi * t + at + i) * v..(bi * t + at + i) * v + v];
+                    let got = &y[(bi * w + i) * v..(bi * w + i) * v + v];
+                    assert_eq!(want, got, "chunk at {at} width {w} pos {i}");
+                }
+            }
+            at += w;
+        }
+        assert_eq!(kv2.len(), t);
+
+        // score_prefix agrees with the full pass at every cut point
+        for p in 1..=t {
+            let sp = model.score_prefix(&toks, p).unwrap();
+            for bi in 0..b {
+                let want = &full[(bi * t + p - 1) * v..(bi * t + p - 1) * v + v];
+                assert_eq!(&sp[bi * v..(bi + 1) * v], want, "score_prefix({p})");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_model_feeds_eval_ppl() {
+        let fs = tiny();
+        let (packed, decoded, _) = fixture(&fs);
+        let model = ForwardModel::from_packed_map(fs.clone(), &packed).unwrap();
+        let stream: Vec<i32> =
+            (0..64).map(|i| ((i * 7 + 3) % fs.vocab as i64) as i32).collect();
+        let ppl = crate::eval::perplexity(&model, &stream).unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0, "ppl {ppl}");
+        // the dense twin plugs into the same evaluator
+        let twin = ForwardModel::from_dense(fs, &decoded).unwrap();
+        let ppl_twin = crate::eval::perplexity(&twin, &stream).unwrap();
+        assert!((ppl - ppl_twin).abs() / ppl < 1e-3, "{ppl} vs {ppl_twin}");
+    }
+
+    #[test]
+    fn constructors_reject_mismatched_payloads() {
+        let fs = tiny();
+        let (packed, decoded, _) = fixture(&fs);
+        // a spec whose shapes disagree with the payload
+        let wrong = ForwardSpec::new(40, 32, 3, 4, 48, 8, 2).unwrap();
+        assert!(ForwardModel::from_packed_map(wrong.clone(), &packed).is_err());
+        assert!(ForwardModel::from_dense(wrong, &decoded).is_err());
+        // a dense map missing a norm vector
+        let mut broken = decoded.clone();
+        broken.remove("layer1.mlp_norm");
+        assert!(ForwardModel::from_dense(fs.clone(), &broken).is_err());
+        // token ids outside the vocab are rejected, not indexed
+        let model = ForwardModel::from_packed_map(fs.clone(), &packed).unwrap();
+        let mut toks = synth::synth_tokens(&fs, fs.seq, 2);
+        toks[3] = fs.vocab as i32;
+        assert!(model.logits(&toks).is_err());
+    }
+}

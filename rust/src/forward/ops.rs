@@ -1,0 +1,200 @@
+//! Position-local math for the CPU forward pass: RMSNorm, rotary position
+//! embedding, causal attention over a KV cache, and the SwiGLU activation.
+//!
+//! Everything here is *per position* (or per query row) and walks its
+//! inputs in one fixed order with f64 accumulators, so the results are
+//! bit-identical no matter how the caller schedules positions across
+//! threads or whether the surrounding projections ran full-sequence or
+//! incrementally. The projections themselves are NOT here — they go
+//! through [`crate::kernels`], which owns the chunked lane structure.
+
+/// RMSNorm epsilon (added to the mean square before the square root).
+pub const RMS_EPS: f64 = 1e-5;
+
+/// RMSNorm one position: `out[i] = x[i] / rms(x) * w[i]` with the sum of
+/// squares accumulated in f64 (one fixed left-to-right order).
+pub fn rmsnorm(x: &[f32], w: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), w.len());
+    debug_assert_eq!(x.len(), out.len());
+    let ss: f64 = x.iter().map(|&v| v as f64 * v as f64).sum();
+    let inv = 1.0 / (ss / x.len() as f64 + RMS_EPS).sqrt();
+    for ((o, &v), &g) in out.iter_mut().zip(x).zip(w) {
+        *o = (v as f64 * inv) as f32 * g;
+    }
+}
+
+/// Rotary position embedding over one position's `[d]` projection row,
+/// rotating pairs `(i, i + hd/2)` within each head by
+/// `pos / base^(2i/hd)` radians. Trig runs in f64 and each output element
+/// rounds to f32 once, so the value depends only on `(x, pos)` — never on
+/// chunking or thread count.
+pub fn rope_in_place(x: &mut [f32], heads: usize, pos: usize, base: f64) {
+    let d = x.len();
+    debug_assert_eq!(d % heads, 0);
+    let hd = d / heads;
+    let half = hd / 2;
+    for h in 0..heads {
+        let xs = &mut x[h * hd..(h + 1) * hd];
+        for i in 0..half {
+            let freq = base.powf(-((2 * i) as f64) / hd as f64);
+            let (sin, cos) = (pos as f64 * freq).sin_cos();
+            let a = xs[i] as f64;
+            let b = xs[i + half] as f64;
+            xs[i] = (a * cos - b * sin) as f32;
+            xs[i + half] = (a * sin + b * cos) as f32;
+        }
+    }
+}
+
+/// Causal attention for one `(batch row, head, query position)` triple.
+///
+/// `q` is the head's roped `[hd]` query row; `kb`/`vb` are the batch row's
+/// cached key/value slabs laid out `[seq, d]` with `h0 = head * hd` the
+/// head's column offset. Attends positions `0..=p` in ascending order:
+/// f64 dot products scaled by `1/sqrt(hd)`, a max-subtracted softmax, and
+/// an f64 weighted value sum — all in position order, so full-sequence and
+/// incremental callers produce the same bits from the same cache contents.
+///
+/// `scores` and `acc` are caller-owned scratch (cleared/resized here) so a
+/// per-head job allocates once, not once per position.
+#[allow(clippy::too_many_arguments)]
+pub fn attend(
+    q: &[f32],
+    kb: &[f32],
+    vb: &[f32],
+    d: usize,
+    h0: usize,
+    p: usize,
+    scores: &mut Vec<f32>,
+    acc: &mut Vec<f64>,
+    out: &mut [f32],
+) {
+    let hd = q.len();
+    debug_assert_eq!(out.len(), hd);
+    let scale = 1.0 / (hd as f64).sqrt();
+    scores.clear();
+    let mut max = f32::NEG_INFINITY;
+    for j in 0..=p {
+        let krow = &kb[j * d + h0..j * d + h0 + hd];
+        let dot: f64 = q.iter().zip(krow).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let s = (dot * scale) as f32;
+        if s > max {
+            max = s;
+        }
+        scores.push(s);
+    }
+    let mut denom = 0.0f64;
+    for s in scores.iter_mut() {
+        let e = ((*s - max) as f64).exp();
+        denom += e;
+        *s = e as f32;
+    }
+    acc.clear();
+    acc.resize(hd, 0.0);
+    for (j, &w) in scores.iter().enumerate() {
+        let vrow = &vb[j * d + h0..j * d + h0 + hd];
+        for (a, &v) in acc.iter_mut().zip(vrow) {
+            *a += w as f64 * v as f64;
+        }
+    }
+    for (o, &a) in out.iter_mut().zip(acc.iter()) {
+        *o = (a / denom) as f32;
+    }
+}
+
+/// SiLU (swish) activation, computed in f64: `x * sigmoid(x)`.
+pub fn silu(x: f32) -> f32 {
+    let xf = x as f64;
+    (xf / (1.0 + (-xf).exp())) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsnorm_scales_to_unit_rms() {
+        let x = [2.0f32; 8];
+        let w = [1.0f32; 8];
+        let mut out = [0.0f32; 8];
+        rmsnorm(&x, &w, &mut out);
+        // rms(x) = sqrt(4 + eps) ≈ 2, so every output is ≈ 1
+        for &o in &out {
+            assert!((o - 1.0).abs() < 1e-3, "got {o}");
+        }
+        // gain vector is applied per element
+        let w2 = [0.5f32; 8];
+        let mut out2 = [0.0f32; 8];
+        rmsnorm(&x, &w2, &mut out2);
+        for (o, o2) in out.iter().zip(&out2) {
+            assert_eq!(o2, &(o * 0.5));
+        }
+    }
+
+    #[test]
+    fn rope_identity_at_position_zero_and_norm_preserving() {
+        let mut rng = crate::stats::Rng::new(9);
+        let mut x = vec![0.0f32; 32];
+        rng.fill_normal(&mut x, 1.0);
+        let orig = x.clone();
+        let mut at0 = x.clone();
+        rope_in_place(&mut at0, 4, 0, 10_000.0);
+        assert_eq!(at0, orig, "pos 0 rotates by zero radians");
+        rope_in_place(&mut x, 4, 17, 10_000.0);
+        assert_ne!(x, orig);
+        // each rotated pair keeps its Euclidean norm
+        let hd = 8;
+        for h in 0..4 {
+            for i in 0..hd / 2 {
+                let (a, b) = (orig[h * hd + i], orig[h * hd + i + hd / 2]);
+                let (c, d) = (x[h * hd + i], x[h * hd + i + hd / 2]);
+                let n0 = (a * a + b * b).sqrt();
+                let n1 = (c * c + d * d).sqrt();
+                assert!((n0 - n1).abs() < 1e-5, "pair ({h},{i}): {n0} vs {n1}");
+            }
+        }
+    }
+
+    #[test]
+    fn attend_single_position_returns_value_row() {
+        let d = 8;
+        let hd = 4;
+        let q = [0.3f32, -1.0, 0.7, 0.2];
+        let kb = vec![0.5f32; d];
+        let vb: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let (mut scores, mut acc) = (Vec::new(), Vec::new());
+        let mut out = [0.0f32; 4];
+        // head 1 (h0 = 4): softmax over one score is 1, so out == v[4..8]
+        attend(&q, &kb, &vb, d, 4, 0, &mut scores, &mut acc, &mut out);
+        assert_eq!(out, [4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn attend_equal_keys_average_values() {
+        let d = 4;
+        let q = [1.0f32, 2.0, -0.5, 0.25];
+        // three cached positions, identical keys -> uniform weights
+        let kb = vec![0.1f32; 3 * d];
+        let mut vb = vec![0.0f32; 3 * d];
+        for j in 0..3 {
+            for c in 0..d {
+                vb[j * d + c] = (j * 10 + c) as f32;
+            }
+        }
+        let (mut scores, mut acc) = (Vec::new(), Vec::new());
+        let mut out = [0.0f32; 4];
+        attend(&q, &kb, &vb, d, 0, 2, &mut scores, &mut acc, &mut out);
+        for c in 0..d {
+            let want = (vb[c] + vb[d + c] + vb[2 * d + c]) / 3.0;
+            assert!((out[c] - want).abs() < 1e-5, "col {c}: {} vs {want}", out[c]);
+        }
+    }
+
+    #[test]
+    fn silu_shape() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!((silu(10.0) - 10.0).abs() < 1e-3);
+        assert!(silu(-10.0).abs() < 1e-3);
+        assert!(silu(1.0) > 0.7 && silu(1.0) < 0.74);
+    }
+}

@@ -1,0 +1,140 @@
+//! Synthetic transformer instances for the forward pass: the parameter
+//! naming contract, a [`ModelSpec`] view the quantization pipeline can
+//! consume, and seeded weight generation.
+//!
+//! Parameter naming (the contract [`super::ForwardModel`] loads by):
+//!
+//! | name                | shape        | quantized |
+//! |---------------------|--------------|-----------|
+//! | `tok_emb`           | `[vocab, d]` | no        |
+//! | `layer{l}.attn_norm`| `[d]`        | no        |
+//! | `layer{l}.wq/wk/wv/wo` | `[d, d]`  | yes       |
+//! | `layer{l}.mlp_norm` | `[d]`        | no        |
+//! | `layer{l}.w_gate`   | `[ff, d]`    | yes       |
+//! | `layer{l}.w_up`     | `[ff, d]`    | yes       |
+//! | `layer{l}.w_down`   | `[d, ff]`    | yes       |
+//! | `final_norm`        | `[d]`        | no        |
+//! | `lm_head`           | `[vocab, d]` | yes       |
+
+use crate::io::manifest::{ModelSpec, ParamSpec};
+use crate::io::msbt::{Tensor, TensorMap};
+use crate::stats::Rng;
+use crate::tensor::Matrix;
+
+use super::ForwardSpec;
+
+/// The full parameter list for `fs`, in forward-pass order.
+pub fn param_specs(fs: &ForwardSpec) -> Vec<ParamSpec> {
+    let (v, d, ff) = (fs.vocab, fs.d, fs.ff);
+    let mut out = vec![ParamSpec { name: "tok_emb".into(), shape: vec![v, d], quant: false }];
+    for l in 0..fs.layers {
+        let p = |s: &str| format!("layer{l}.{s}");
+        out.push(ParamSpec { name: p("attn_norm"), shape: vec![d], quant: false });
+        for w in ["wq", "wk", "wv", "wo"] {
+            out.push(ParamSpec { name: p(w), shape: vec![d, d], quant: true });
+        }
+        out.push(ParamSpec { name: p("mlp_norm"), shape: vec![d], quant: false });
+        out.push(ParamSpec { name: p("w_gate"), shape: vec![ff, d], quant: true });
+        out.push(ParamSpec { name: p("w_up"), shape: vec![ff, d], quant: true });
+        out.push(ParamSpec { name: p("w_down"), shape: vec![d, ff], quant: true });
+    }
+    out.push(ParamSpec { name: "final_norm".into(), shape: vec![d], quant: false });
+    out.push(ParamSpec { name: "lm_head".into(), shape: vec![v, d], quant: true });
+    out
+}
+
+/// A [`ModelSpec`] over the synthetic parameter list, ready for
+/// [`crate::pipeline::quantize`] (no artifact files are referenced).
+pub fn model_spec(fs: &ForwardSpec, name: &str) -> ModelSpec {
+    ModelSpec {
+        name: name.into(),
+        d: fs.d,
+        layers: fs.layers,
+        heads: fs.heads,
+        ff: fs.ff,
+        seq: fs.seq,
+        params: param_specs(fs),
+        weights_file: String::new(),
+        calib_file: String::new(),
+        fwd_hlo: String::new(),
+    }
+}
+
+/// Seeded synthetic weights matching [`param_specs`]: heavy-tailed
+/// weight-like projections (so quantizers see realistic outliers and
+/// exception lists), N(0,1) embeddings, and near-unit norm gains.
+pub fn synth_weights(fs: &ForwardSpec, seed: u64) -> TensorMap {
+    let mut rng = Rng::new(seed);
+    let mut map = TensorMap::new();
+    for p in param_specs(fs) {
+        let t = match p.shape.as_slice() {
+            [n] => {
+                let gains: Vec<f32> =
+                    (0..*n).map(|_| 1.0 + 0.05 * rng.normal() as f32).collect();
+                Tensor::f32(p.shape.clone(), gains)
+            }
+            [r, c] if p.quant => {
+                Tensor::f32(p.shape.clone(), Matrix::weightlike(*r, *c, &mut rng).data)
+            }
+            [r, c] => Tensor::f32(p.shape.clone(), Matrix::randn(*r, *c, &mut rng).data),
+            other => unreachable!("synthetic param {} has rank {}", p.name, other.len()),
+        };
+        map.insert(p.name, t);
+    }
+    map
+}
+
+/// A seeded token batch in `[batch, len]` row-major order, every id
+/// strictly below `fs.vocab`.
+pub fn synth_tokens(fs: &ForwardSpec, len: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..fs.batch * len).map(|_| rng.below(fs.vocab) as i32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ForwardSpec {
+        ForwardSpec::new(40, 32, 2, 4, 48, 8, 2).unwrap()
+    }
+
+    #[test]
+    fn specs_and_weights_agree() {
+        let fs = tiny();
+        let specs = param_specs(&fs);
+        // 1 embedding + 9 per layer + final_norm + lm_head
+        assert_eq!(specs.len(), 1 + 9 * fs.layers + 2);
+        let w = synth_weights(&fs, 3);
+        for p in &specs {
+            let t = w.get(&p.name).unwrap_or_else(|| panic!("missing {}", p.name));
+            assert_eq!(t.dims, p.shape, "{}", p.name);
+        }
+        let ms = model_spec(&fs, "tiny");
+        assert_eq!(ms.quantizable().count(), 7 * fs.layers + 1);
+    }
+
+    #[test]
+    fn weights_are_seed_deterministic() {
+        let fs = tiny();
+        let a = synth_weights(&fs, 11);
+        let b = synth_weights(&fs, 11);
+        let c = synth_weights(&fs, 12);
+        assert_eq!(
+            a.get("layer0.wq").unwrap().as_f32().unwrap(),
+            b.get("layer0.wq").unwrap().as_f32().unwrap()
+        );
+        assert_ne!(
+            a.get("layer0.wq").unwrap().as_f32().unwrap(),
+            c.get("layer0.wq").unwrap().as_f32().unwrap()
+        );
+    }
+
+    #[test]
+    fn tokens_stay_in_vocab() {
+        let fs = tiny();
+        let toks = synth_tokens(&fs, fs.seq, 5);
+        assert_eq!(toks.len(), fs.batch * fs.seq);
+        assert!(toks.iter().all(|&t| t >= 0 && (t as usize) < fs.vocab));
+    }
+}

@@ -107,11 +107,12 @@ pub fn eval_quantized(
     } else {
         None
     };
-    // quantize_model consumes its weight map (pass-through tensors are
+    // pipeline::quantize consumes its weight map (pass-through tensors are
     // moved, quantized ones solved in place); the harness keeps the caller's
     // base set borrowable across repeated evals, so clone here.
+    let opts = pipeline::QuantizeOptions::new().with_threads(threads);
     let qm: QuantizedModel =
-        pipeline::quantize_model(spec, base_weights.clone(), calib_ref, method, cfg, threads)?;
+        pipeline::quantize(spec, base_weights.clone(), calib_ref, method, cfg, &opts)?;
     runner.update_weights(&qm.weights)?;
 
     let t0 = Instant::now();

@@ -28,10 +28,15 @@
 //!
 //! Decode semantics are exactly [`engine::decode_packed`]'s: scheme-decoded
 //! codes through the method's `decode_block`, exact-zero exception-list
-//! positions forced to 0.0, and the bf16 storage round-trip applied per
-//! tile — so the fused product matches the decode-then-matvec reference to
-//! f32 summation-order error (≤ 1e-5 relative; asserted across the method
-//! grid by tests and by the `perf_gemv` bench).
+//! positions forced to 0.0, and the bf16 storage round-trip applied — so
+//! the fused product matches the decode-then-matvec reference to f32
+//! summation-order error (≤ 1e-5 relative; asserted across the method
+//! grid by tests and by the `perf_gemv` bench). Since every method decodes
+//! pointwise (a code's value depends only on its block's scales),
+//! [`PackedLinear::new`] folds method-decode *and* the bf16 finish into a
+//! per-block reconstruction table once at construction; the hot loop is a
+//! plain table gather, with no rounding pass per tile. Bit-identity with
+//! the historical decode-per-tile path is asserted by the kernel grid test.
 
 use std::sync::Arc;
 
@@ -39,7 +44,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::pool::ThreadPool;
 use crate::quant::engine::{pool_ordered_map, BlockQuantizer};
-use crate::quant::packing::{PackedCodes, PackedTensor};
+use crate::quant::packing::{CodeScheme, PackedCodes, PackedTensor};
 use crate::quant::registry;
 use crate::tensor::{bf16, Matrix};
 
@@ -180,11 +185,18 @@ unsafe fn dot_chunk_avx2(w: &[f32], x: &[f32]) -> f32 {
 /// What [`PackedLinear`] shares between the caller and its pool jobs.
 struct Shared {
     pt: PackedTensor,
-    decoder: Arc<dyn BlockQuantizer>,
-    /// Scale table decoded to f32 once (the exact values quantize used).
-    scales: Vec<f32>,
     /// Exact-zero exception indices, sorted ascending.
     zeros: Vec<u32>,
+    /// Per-block reconstruction table, `lut_len` entries per block: entry
+    /// `bi * lut_len + (c - code_min)` holds the decoded value of code `c`
+    /// in block `bi`, with the bf16 storage round-trip already applied when
+    /// the payload calls for it. Every method decodes pointwise, so this
+    /// table is exact — the hot loop gathers instead of re-deriving values.
+    recon: Vec<f32>,
+    /// Smallest decodable code value (the table's index origin).
+    code_min: i16,
+    /// Table entries per block.
+    lut_len: usize,
 }
 
 /// A linear layer held *as its packed payload*: codes + scale table +
@@ -233,8 +245,43 @@ impl PackedLinear {
         if let Some(&last) = zeros.last() {
             ensure!((last as usize) < n, "zero exception {last} out of range");
         }
+        // Reconstruction range: every code value the payload can decode to.
+        // Sub-byte storage is enumerated through the scheme (≤ 2^code_bits
+        // symbols); i8 storage scans the actual buffer.
+        let (code_min, code_max) = match &pt.codes {
+            PackedCodes::I8(v) => v
+                .iter()
+                .fold((0i16, 0i16), |(lo, hi), &c| (lo.min(c as i16), hi.max(c as i16))),
+            PackedCodes::U1(_) | PackedCodes::U2(_) | PackedCodes::U4(_) => (0u16
+                ..1u16 << pt.code_bits)
+                .map(|s| pt.scheme.decode(s as u8, pt.code_bits) as i16)
+                .fold((0i16, 0i16), |(lo, hi), c| (lo.min(c), hi.max(c))),
+        };
+        if n > 0 && pt.scheme == CodeScheme::SignLevel {
+            // Scale-indexing schemes read scales[|c| - 1]; bound the
+            // magnitude here so a corrupt payload fails construction
+            // instead of panicking in the table build.
+            let max_mag = (-code_min).max(code_max) as usize;
+            ensure!(
+                max_mag <= pt.scales_per_block,
+                "code magnitude {max_mag} exceeds {} scales/block",
+                pt.scales_per_block
+            );
+        }
+        let lut_len = (code_max - code_min) as usize + 1;
+        let codes_enum: Vec<i8> = (code_min..=code_max).map(|c| c as i8).collect();
+        let spb = pt.scales_per_block;
+        let mut recon = vec![0.0f32; pt.n_blocks() * lut_len];
+        for (bi, lut) in recon.chunks_exact_mut(lut_len).enumerate() {
+            decoder.decode_block(&codes_enum, &scales[bi * spb..(bi + 1) * spb], lut);
+        }
+        if pt.bf16 {
+            for v in &mut recon {
+                *v = bf16::round(*v);
+            }
+        }
         Ok(PackedLinear {
-            inner: Arc::new(Shared { pt, decoder, scales, zeros }),
+            inner: Arc::new(Shared { pt, zeros, recon, code_min, lut_len }),
             kernel: Kernel::detect(),
         })
     }
@@ -350,10 +397,12 @@ impl PackedLinear {
 /// The fused row kernel: rows `[r0, r1)` of `y = W·x` for every batch row,
 /// written into `out[b·(r1−r0) + (r−r0)]`. Walks each row as segments
 /// (row ∩ block instance) sub-chunked at [`CHUNK`] elements: unpack codes
-/// into an i8 tile, method-decode with the block's scales into an f32
-/// tile, zero the exception-listed positions, apply the bf16 storage
-/// round-trip, then one [`Kernel::dot`] per batch row. Partial sums add in
-/// chunk order — the fixed structure every execution mode shares.
+/// into an i8 tile, gather the block's reconstruction table (decode + bf16
+/// already folded in at construction) into an f32 tile, zero the
+/// exception-listed positions, then one [`Kernel::dot`] per batch row.
+/// Partial sums add in chunk order — the fixed structure every execution
+/// mode shares. Zeroing after the gather is exact because
+/// `bf16::round(0.0) == 0.0`.
 fn run_rows(
     sh: &Shared,
     kernel: Kernel,
@@ -366,7 +415,7 @@ fn run_rows(
     let (rows, cols) = (sh.pt.rows, sh.pt.cols);
     let n = rows * cols;
     let block = sh.pt.block.max(1);
-    let spb = sh.pt.scales_per_block;
+    let (lut_len, code_min) = (sh.lut_len, sh.code_min);
     let out_rows = r1 - r0;
     let mut ctile = [0i8; CHUNK];
     let mut wtile = [0.0f32; CHUNK];
@@ -378,25 +427,21 @@ fn run_rows(
             // flat plans let blocks cross rows; clamp the segment to both
             let bi = g / block;
             let seg_end = row_end.min(((bi + 1) * block).min(n));
-            let scales = &sh.scales[bi * spb..(bi + 1) * spb];
+            let lut = &sh.recon[bi * lut_len..(bi + 1) * lut_len];
             let mut c = g;
             while c < seg_end {
                 let end = (c + CHUNK).min(seg_end);
                 let len = end - c;
-                let codes = &mut ctile[..len];
-                sh.pt.codes_range_into(c, codes);
+                sh.pt.codes_range_into(c, &mut ctile[..len]);
                 let w = &mut wtile[..len];
-                sh.decoder.decode_block(codes, scales, w);
+                for (o, &cd) in w.iter_mut().zip(&ctile[..len]) {
+                    *o = lut[(cd as i16 - code_min) as usize];
+                }
                 if !sh.zeros.is_empty() {
                     let z0 = sh.zeros.partition_point(|&z| (z as usize) < c);
                     let z1 = sh.zeros.partition_point(|&z| (z as usize) < end);
                     for &z in &sh.zeros[z0..z1] {
                         w[z as usize - c] = 0.0;
-                    }
-                }
-                if sh.pt.bf16 {
-                    for v in w.iter_mut() {
-                        *v = bf16::round(*v);
                     }
                 }
                 let x_off = c - row_start;
@@ -486,9 +531,62 @@ mod tests {
         x
     }
 
+    /// The pre-fold hot loop: per-tile method decode, exception zeroing,
+    /// then a bf16 rounding pass, with scalar dots — exactly the flow
+    /// `run_rows` used before the reconstruction table existed. The LUT
+    /// fold must reproduce it bit-for-bit.
+    fn gemv_old_path(pt: &PackedTensor, x: &[f32]) -> Vec<f32> {
+        let decoder = registry::block_decoder(&pt.method).unwrap();
+        let (rows, cols) = (pt.rows, pt.cols);
+        let n = rows * cols;
+        let block = pt.block.max(1);
+        let spb = pt.scales_per_block;
+        let scales = pt.scales_f32();
+        let mut zeros = pt.zeros.clone();
+        zeros.sort_unstable();
+        let mut y = vec![0.0f32; rows];
+        let mut ctile = [0i8; CHUNK];
+        let mut wtile = [0.0f32; CHUNK];
+        for (r, yr) in y.iter_mut().enumerate() {
+            let row_start = r * cols;
+            let row_end = row_start + cols;
+            let mut g = row_start;
+            while g < row_end {
+                let bi = g / block;
+                let seg_end = row_end.min(((bi + 1) * block).min(n));
+                let sc = &scales[bi * spb..(bi + 1) * spb];
+                let mut c = g;
+                while c < seg_end {
+                    let end = (c + CHUNK).min(seg_end);
+                    let len = end - c;
+                    pt.codes_range_into(c, &mut ctile[..len]);
+                    let w = &mut wtile[..len];
+                    decoder.decode_block(&ctile[..len], sc, w);
+                    let z0 = zeros.partition_point(|&z| (z as usize) < c);
+                    let z1 = zeros.partition_point(|&z| (z as usize) < end);
+                    for &z in &zeros[z0..z1] {
+                        w[z as usize - c] = 0.0;
+                    }
+                    if pt.bf16 {
+                        for v in w.iter_mut() {
+                            *v = bf16::round(*v);
+                        }
+                    }
+                    let x_off = c - row_start;
+                    *yr += Kernel::Scalar.dot(w, &x[x_off..x_off + len]);
+                    c = end;
+                }
+                g = seg_end;
+            }
+        }
+        y
+    }
+
     /// Fused gemv must (a) match the decode-then-matvec f64 reference to
     /// 1e-5 relative, (b) be bit-identical serial vs pooled at every
-    /// thread count, and (c) be bit-identical scalar vs SIMD.
+    /// thread count, (c) be bit-identical scalar vs SIMD, and (d) be
+    /// bit-identical to the historical decode-per-tile path the LUT fold
+    /// replaced.
     fn check_fused(q: Arc<dyn BlockQuantizer>, w: &Matrix, cfg: &QuantConfig, label: &str) {
         let cfg = cfg.clone().with_packed();
         let qt = quantize_serial(&*q, w, &cfg);
@@ -501,6 +599,7 @@ mod tests {
         let scalar = pl.clone().with_kernel(Kernel::Scalar);
         let y = scalar.gemv(&x);
         assert_matvec_close(&decoded, &x, &y, 1e-5);
+        assert_eq!(y, gemv_old_path(pl.packed(), &x), "{label}: LUT fold != historical path");
 
         for threads in [1usize, 4] {
             let pool = ThreadPool::new(threads, threads * 4);
@@ -520,8 +619,8 @@ mod tests {
     #[test]
     fn fused_grid_matches_reference() {
         let w = weight_with_zeros(16, 256, 51);
-        let bw = QuantConfig::block_wise(4, 64);
-        let pt_cfg = QuantConfig::per_tensor(4).with_window(16);
+        let bw = QuantConfig::block_wise(4, 64).unwrap();
+        let pt_cfg = QuantConfig::per_tensor(4).unwrap().with_window(16).unwrap();
         let grid: Vec<(Arc<dyn BlockQuantizer>, &QuantConfig, &str)> = vec![
             (Arc::new(RtnQuantizer::symmetric()), &bw, "rtn/bw"),
             (Arc::new(RtnQuantizer::asymmetric()), &bw, "rtn-asym/bw"),
@@ -539,11 +638,11 @@ mod tests {
             check_fused(q, &w, cfg, label);
         }
         // U2: 2-bit MSB codes; U1: blocked-XNOR sign bits
-        let two_bit = QuantConfig::block_wise(2, 64).with_window(1);
+        let two_bit = QuantConfig::block_wise(2, 64).unwrap().with_window(1).unwrap();
         check_fused(Arc::new(MsbQuantizer::wgm()), &w, &two_bit, "wgm/2-bit(u2)");
         check_fused(Arc::new(XnorQuantizer::blocked()), &w, &two_bit, "blocked-xnor(u1)");
         // I8: per-tensor 6-bit MSB (32 levels overflow a nibble)
-        let six_bit = QuantConfig::per_tensor(6).with_window(16);
+        let six_bit = QuantConfig::per_tensor(6).unwrap().with_window(16).unwrap();
         let w_small = weight_with_zeros(8, 96, 52);
         check_fused(Arc::new(MsbQuantizer::wgm()), &w_small, &six_bit, "wgm/6-bit(i8)");
     }
@@ -553,18 +652,18 @@ mod tests {
     #[test]
     fn fused_ragged_and_flat_plans() {
         let w = weight_with_zeros(9, 96, 53);
-        let cfg = QuantConfig::block_wise(4, 32);
+        let cfg = QuantConfig::block_wise(4, 32).unwrap();
         check_fused(Arc::new(MsbQuantizer::wgm()), &w, &cfg, "wgm/t=32,cols=96");
         check_fused(Arc::new(RtnQuantizer::symmetric()), &w, &cfg, "rtn/t=32,cols=96");
         let tiny = Matrix::randn(5, 7, &mut Rng::new(54));
-        let flat = QuantConfig::block_wise(4, 8);
+        let flat = QuantConfig::block_wise(4, 8).unwrap();
         check_fused(Arc::new(XnorQuantizer::blocked()), &tiny, &flat, "blocked-xnor/flat5x7");
     }
 
     #[test]
     fn gemm_batches_match_individual_gemvs() {
         let w = weight_with_zeros(12, 128, 55);
-        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().with_packed();
         let q: Arc<dyn BlockQuantizer> = Arc::new(MsbQuantizer::wgm());
         let pt = quantize_serial(&*q, &w, &cfg).packed.unwrap();
         let pl = PackedLinear::new(pt).unwrap();
@@ -586,7 +685,7 @@ mod tests {
         // fused path's, so the two are bit-identical — the ablation in
         // perf_gemv compares equal math, differing only in weight residency
         let w = weight_with_zeros(8, 256, 57);
-        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().with_packed();
         let q: Arc<dyn BlockQuantizer> = Arc::new(MsbQuantizer::wgm());
         let pt = quantize_serial(&*q, &w, &cfg).packed.unwrap();
         let decoded = decode_packed(Arc::clone(&q), &pt, None);
@@ -659,7 +758,7 @@ mod tests {
                 } else {
                     Arc::new(RtnQuantizer::symmetric())
                 };
-                let cfg = QuantConfig::block_wise(4, 32).with_packed();
+                let cfg = QuantConfig::block_wise(4, 32).unwrap().with_packed();
                 let qt = quantize_serial(&*q, w, &cfg);
                 let decoded = decode_packed(Arc::clone(&q), qt.packed.as_ref().unwrap(), None);
                 let pl = PackedLinear::new(qt.packed.unwrap()).unwrap();
@@ -673,7 +772,7 @@ mod tests {
     #[test]
     fn rejects_corrupt_payloads() {
         let w = Matrix::randn(4, 64, &mut Rng::new(60));
-        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().with_packed();
         let q: Arc<dyn BlockQuantizer> = Arc::new(RtnQuantizer::symmetric());
         let pt = quantize_serial(&*q, &w, &cfg).packed.unwrap();
         let mut bad = pt.clone();
@@ -684,6 +783,18 @@ mod tests {
         assert!(PackedLinear::new(bad).is_err());
         let mut bad = pt;
         bad.scales_per_block = 7; // scale table no longer covers the blocks
+        assert!(PackedLinear::new(bad).is_err());
+        // SignLevel i8 magnitude beyond the scale table fails construction
+        // instead of panicking inside the reconstruction-table build.
+        let w6 = Matrix::randn(4, 64, &mut Rng::new(61));
+        let cfg6 = QuantConfig::per_tensor(6).unwrap().with_window(16).unwrap().with_packed();
+        let q6: Arc<dyn BlockQuantizer> = Arc::new(MsbQuantizer::wgm());
+        let mut bad = quantize_serial(&*q6, &w6, &cfg6).packed.unwrap();
+        if let PackedCodes::I8(v) = &mut bad.codes {
+            v[0] = 127;
+        } else {
+            panic!("6-bit per-tensor payload should store i8 codes");
+        }
         assert!(PackedLinear::new(bad).is_err());
     }
 }

@@ -6,8 +6,10 @@
 //!
 //! * **Layer 3 (this crate)** — the paper's contribution: the MSB objective
 //!   and its four CPU solvers ([`msb`]), the baseline quantizer zoo
-//!   ([`quant`]), the quantization pipeline coordinator ([`pipeline`]), and
-//!   the PJRT-backed evaluation runtime ([`runtime`], [`eval`], [`server`]).
+//!   ([`quant`]), the quantization pipeline coordinator ([`pipeline`]), the
+//!   PJRT-backed evaluation runtime ([`runtime`], [`eval`], [`server`]), and
+//!   a fused CPU transformer forward pass for XLA-free token scoring
+//!   ([`forward`]).
 //! * **Layer 2** — a JAX transformer lowered at build time to HLO text
 //!   (`python/compile/model.py` → `artifacts/*_fwd.hlo.txt`).
 //! * **Layer 1** — a Pallas MSB dequant-matmul kernel
@@ -21,15 +23,18 @@
 //!
 //! ```no_run
 //! use msb_quant::{quant, quant::Quantizer, stats, tensor::Matrix};
+//! # fn main() -> msb_quant::Result<()> {
 //! let mut rng = stats::Rng::new(7);
 //! let w = Matrix::randn(256, 256, &mut rng);
-//! let cfg = quant::QuantConfig::block_wise(4, 64).with_window(1);
+//! let cfg = quant::QuantConfig::block_wise(4, 64)?.with_window(1)?;
 //! let q = quant::msb::MsbQuantizer::wgm().quantize(&w, &cfg);
 //! println!("4-bit block-wise MSE = {}", q.mse(&w));
+//! # Ok(()) }
 //! ```
 
 pub mod cli;
 pub mod eval;
+pub mod forward;
 pub mod harness;
 pub mod io;
 pub mod kernels;

@@ -7,6 +7,7 @@
 //! msb eval    --model base --method wgm --bits 4 --granularity block
 //! msb pack    --model base --method wgm  write a packed .msbt v2 payload
 //! msb decode  --in base_wgm_packed.msbt  reconstruct f32 weights
+//! msb score   --method wgm --bits 4      fused CPU forward token scoring
 //! msb kernel  run the Pallas-MSB native executable (small model)
 //! ```
 
@@ -17,7 +18,7 @@ use msb_quant::cli::Args;
 use msb_quant::harness::{eval_quantized, Artifacts};
 use msb_quant::io::msbt;
 use msb_quant::msb::{Algo, Solver};
-use msb_quant::pipeline::{decode_packed_model, quantize_model};
+use msb_quant::pipeline::{decode_packed_model, quantize, QuantizeOptions};
 use msb_quant::quant::registry::Method;
 use msb_quant::quant::QuantConfig;
 use msb_quant::runtime::ModelRunner;
@@ -39,6 +40,7 @@ fn main() {
         "pack" => cmd_pack(&args),
         "decode" => cmd_decode(&args),
         "gemv-bench" => cmd_gemv_bench(&args),
+        "score" => cmd_score(&args),
         "kernel" => cmd_kernel(),
         "" | "help" | "--help" => {
             print!("{}", HELP);
@@ -76,6 +78,13 @@ commands:
              --in <packed.msbt> [--layer L] | --rows R --cols C
              [--method wgm --bits 4 --block 64 --granularity block]
              [--threads N] [--batch B] [--reps K]
+  score      fused CPU transformer forward token scoring on a synthetic
+             model (no artifacts/, no XLA): quantize to a packed payload,
+             run every projection straight off the codes, gate against
+             the f32 twin at 1e-4 relative, report ppl + logprobs
+             [--method wgm --bits 4 --block 64] [--vocab V --d D
+             --layers L --heads H --ff F --seq S --rows R]
+             [--threads N] [--seed K] [--out payload.msbt]
   kernel     execute the native Pallas-MSB HLO for the small model
 ";
 
@@ -84,12 +93,12 @@ fn parse_cfg(args: &Args) -> Result<QuantConfig> {
     let block = args.usize_or("block", 64)?;
     let gran = args.str_or("granularity", "block");
     let mut cfg = match gran {
-        "block" | "blockwise" => QuantConfig::block_wise(bits, block),
-        "tensor" | "per-tensor" => QuantConfig::per_tensor(bits),
+        "block" | "blockwise" => QuantConfig::block_wise(bits, block)?,
+        "tensor" | "per-tensor" => QuantConfig::per_tensor(bits)?,
         g => anyhow::bail!("bad --granularity '{g}'"),
     };
     if let Some(w) = args.get("window") {
-        cfg = cfg.with_window(w.parse().context("--window")?);
+        cfg = cfg.with_window(w.parse().context("--window")?)?;
     }
     if let Some(l) = args.get("lambda") {
         cfg = cfg.with_lambda(l.parse().context("--lambda")?);
@@ -174,7 +183,8 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         None
     };
     let threads = args.usize_or("threads", 1)?;
-    let qm = quantize_model(spec, weights, calib_ref, method, &cfg, threads)?;
+    let opts = QuantizeOptions::new().with_threads(threads);
+    let qm = quantize(spec, weights, calib_ref, method, &cfg, &opts)?;
     println!(
         "{} {} quantized in {:.2}s: total SSE {:.4}, {:.2} bits/weight",
         model,
@@ -212,7 +222,8 @@ fn cmd_pack(args: &Args) -> Result<()> {
         None
     };
     let threads = args.usize_or("threads", 1)?;
-    let qm = quantize_model(spec, weights, calib_ref, method, &cfg, threads)?;
+    let opts = QuantizeOptions::new().with_threads(threads);
+    let qm = quantize(spec, weights, calib_ref, method, &cfg, &opts)?;
     let payload = qm.export_packed()?;
     let out = args
         .get("out")
@@ -397,6 +408,112 @@ fn cmd_gemv_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Fused CPU forward token scoring on a synthetic transformer — the
+/// XLA-free end of the pipeline. Quantizes seeded weights to a packed
+/// payload, runs the full forward with every projection computed
+/// straight off the codes, and refuses to print numbers unless the
+/// logits match the f32 twin (same layer graph over the decoded
+/// weights) within 1e-4 relative.
+fn cmd_score(args: &Args) -> Result<()> {
+    use msb_quant::eval::{perplexity, LogProbs};
+    use msb_quant::forward::{synth, ForwardSpec};
+    use msb_quant::runtime::BackendBuilder;
+
+    let fs = ForwardSpec::new(
+        args.usize_or("vocab", 256)?,
+        args.usize_or("d", 64)?,
+        args.usize_or("layers", 2)?,
+        args.usize_or("heads", 4)?,
+        args.usize_or("ff", 128)?,
+        args.usize_or("seq", 32)?,
+        args.usize_or("rows", 4)?,
+    )?;
+    let method = Method::parse(args.str_or("method", "wgm"))?;
+    anyhow::ensure!(
+        !method.needs_calibration(),
+        "msb score is calibration-free; {} needs calibration activations",
+        method.name()
+    );
+    let cfg = parse_cfg(args)?.with_packed();
+    let threads = args.usize_or("threads", 1)?.max(1);
+    let seed = args.usize_or("seed", 7)? as u64;
+
+    let spec = synth::model_spec(&fs, "score");
+    let weights = synth::synth_weights(&fs, seed);
+    let t0 = Instant::now();
+    let opts = QuantizeOptions::new().with_threads(threads);
+    let qm = quantize(&spec, weights, None, method, &cfg, &opts)?;
+    let payload = qm.export_packed()?;
+    let t_quant = t0.elapsed().as_secs_f64();
+
+    let builder = BackendBuilder::new().threads(threads);
+    let model = builder.forward(fs.clone(), &payload)?.into_forward()?;
+    let twin = builder
+        .forward_dense(fs.clone(), &decode_packed_model(&payload, threads)?)?
+        .into_forward()?;
+
+    let toks = synth::synth_tokens(&fs, fs.seq, seed ^ 0x5EED);
+    let t1 = Instant::now();
+    let fused = model.logits(&toks)?;
+    let t_fwd = t1.elapsed().as_secs_f64();
+    let t2 = Instant::now();
+    let dense = twin.logits(&toks)?;
+    let t_twin = t2.elapsed().as_secs_f64();
+
+    // acceptance gate: codes-path logits vs the f32 twin on the decoded map
+    let mut max_rel = 0.0f64;
+    for (&a, &b) in fused.iter().zip(&dense) {
+        let scale = (a.abs().max(b.abs()) as f64).max(1e-3);
+        max_rel = max_rel.max(((a - b).abs() as f64) / scale);
+    }
+    anyhow::ensure!(
+        max_rel <= 1e-4,
+        "fused logits diverged from the f32 twin: max rel {max_rel:.3e} > 1e-4"
+    );
+
+    let ppl_q = perplexity(&model, &toks)?;
+    let ppl_f = perplexity(&twin, &toks)?;
+    let lp = LogProbs::new(&fused[..fs.seq * fs.vocab], fs.vocab);
+    let scored = fs.seq.saturating_sub(1).max(1);
+    let mean_lp: f64 = (0..fs.seq - 1)
+        .map(|p| lp.logp(p, toks[p + 1] as usize))
+        .sum::<f64>()
+        / scored as f64;
+
+    println!(
+        "score: {} L={} d={} heads={} ff={} seq={} rows={} ({} kernel, {threads} thread(s))",
+        method.name(),
+        fs.layers,
+        fs.d,
+        fs.heads,
+        fs.ff,
+        fs.seq,
+        fs.batch,
+        msb_quant::kernels::Kernel::detect().name()
+    );
+    println!(
+        "  payload {} bytes ({:.3}x of the f32 projections), quantized in {:.2}s",
+        model.payload_bytes(),
+        model.payload_bytes() as f64 / model.f32_bytes() as f64,
+        t_quant
+    );
+    println!(
+        "  fused forward {} logits in {:.3}s | f32 twin {:.3}s | max rel diff {:.2e} (gate 1e-4)",
+        fused.len(),
+        t_fwd,
+        t_twin,
+        max_rel
+    );
+    println!("  stream ppl: fused {ppl_q:.4} vs twin {ppl_f:.4}");
+    println!("  row 0 mean next-token logprob {mean_lp:.4}");
+
+    if let Some(out) = args.get("out") {
+        msbt::write_file(out, &payload)?;
+        println!("wrote {out} (serve it: serve_eval --backend forward --payload {out})");
+    }
+    Ok(())
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
     let arts = Artifacts::load()?;
     let model = args.str_or("model", "small");
@@ -440,7 +557,7 @@ fn cmd_kernel() -> Result<()> {
 
     // ABI: tokens, non-quant params (spec order), then (codes, scales) pairs
     let block = arts.manifest.msb_block;
-    let cfg = QuantConfig::block_wise(4, block).no_bf16();
+    let cfg = QuantConfig::block_wise(4, block).unwrap().no_bf16();
     let q = MsbQuantizer::wgm();
     let mut bufs = Vec::new();
     let toks: Vec<i32> = (0..k.batch * spec.seq).map(|i| (i % 90) as i32 + 1).collect();

@@ -265,7 +265,7 @@ fn reconstruct_packed(
     // scale table. pack_spec only consults cfg.bits, so any granularity
     // works to reconstruct the expectation.
     let expect = decoder
-        .pack_spec(&QuantConfig::per_tensor(code_bits))
+        .pack_spec(&QuantConfig::per_tensor(code_bits)?)
         .with_context(|| format!("{name}: '{method}' cannot decode {code_bits}-bit codes"))?;
     ensure!(
         expect.scheme == scheme && expect.scales_per_block == scales_per_block,
@@ -355,15 +355,79 @@ fn reconstruct_packed(
     })
 }
 
+/// Everything [`quantize`] takes beyond "which method, which config":
+/// scheduler threads, packed-payload emission, and an optional per-layer
+/// method assignment. One struct instead of the historical
+/// `quantize_model` / `quantize_model_mixed` pair of positional tails.
+#[derive(Clone, Debug, Default)]
+pub struct QuantizeOptions {
+    /// Worker threads for the model-global scheduler (`0` behaves as `1`:
+    /// the serial reference path).
+    pub threads: usize,
+    /// Emit deployable packed payloads alongside the simulated dequant
+    /// (ORed with `cfg.emit_packed`; never changes the dequant output).
+    pub packed: bool,
+    /// Heterogeneous per-layer assignment: layers named here use their
+    /// assigned method, everything else the default passed to [`quantize`].
+    pub overrides: BTreeMap<String, Method>,
+}
+
+impl QuantizeOptions {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_packed(mut self) -> Self {
+        self.packed = true;
+        self
+    }
+
+    pub fn with_override(mut self, name: impl Into<String>, method: Method) -> Self {
+        self.overrides.insert(name.into(), method);
+        self
+    }
+
+    pub fn with_overrides(mut self, overrides: BTreeMap<String, Method>) -> Self {
+        self.overrides.extend(overrides);
+        self
+    }
+}
+
 /// Quantize every quantizable matrix of `spec` with `method` under `cfg`
-/// using `threads` workers via the model-global [`scheduler`]: all layers'
-/// block tiles and whole-matrix jobs share one pool, and the only barrier
-/// is end-of-model. Non-quantizable parameters (norms, embeddings) pass
-/// through untouched — the paper's weight-only protocol.
+/// via the model-global [`scheduler`]: all layers' block tiles and
+/// whole-matrix jobs share one pool sized by `opts.threads`, and the only
+/// barrier is end-of-model. Non-quantizable parameters (norms, embeddings)
+/// pass through untouched — the paper's weight-only protocol.
+///
+/// Layers named in `opts.overrides` use their assigned method instead of
+/// `method`; tiled layers (block-wise calibration-free methods) and
+/// whole-matrix layers (GPTQ, per-tensor configs, `Method::Fp`
+/// pass-through) mix freely on the one global pool, bit-identical to the
+/// serial path for every assignment (asserted by tests). The returned
+/// [`QuantizedModel::method`] records `method`.
 ///
 /// `weights` is taken by value: quantized tensors are *moved* into their
 /// layer solves and replaced in place, and pass-through tensors are never
 /// copied.
+pub fn quantize(
+    spec: &ModelSpec,
+    weights: TensorMap,
+    calib: Option<&TensorMap>,
+    method: Method,
+    cfg: &QuantConfig,
+    opts: &QuantizeOptions,
+) -> Result<QuantizedModel> {
+    let mut cfg = cfg.clone();
+    cfg.emit_packed |= opts.packed;
+    quantize_impl(spec, weights, calib, method, &opts.overrides, &cfg, opts.threads)
+}
+
+#[deprecated(note = "use pipeline::quantize with QuantizeOptions")]
 pub fn quantize_model(
     spec: &ModelSpec,
     weights: TensorMap,
@@ -372,17 +436,23 @@ pub fn quantize_model(
     cfg: &QuantConfig,
     threads: usize,
 ) -> Result<QuantizedModel> {
-    quantize_model_mixed(spec, weights, calib, method, &BTreeMap::new(), cfg, threads)
+    quantize_impl(spec, weights, calib, method, &BTreeMap::new(), cfg, threads)
 }
 
-/// [`quantize_model`] with a heterogeneous per-layer method assignment:
-/// layers named in `overrides` use their assigned method, everything else
-/// uses `default`. Tiled layers (block-wise calibration-free methods) and
-/// whole-matrix layers (GPTQ, per-tensor configs, `Method::Fp`
-/// pass-through) mix freely on the one global pool; results are
-/// bit-identical to the serial path for every assignment (asserted by
-/// tests). The returned [`QuantizedModel::method`] records `default`.
+#[deprecated(note = "use pipeline::quantize with QuantizeOptions")]
 pub fn quantize_model_mixed(
+    spec: &ModelSpec,
+    weights: TensorMap,
+    calib: Option<&TensorMap>,
+    default: Method,
+    overrides: &BTreeMap<String, Method>,
+    cfg: &QuantConfig,
+    threads: usize,
+) -> Result<QuantizedModel> {
+    quantize_impl(spec, weights, calib, default, overrides, cfg, threads)
+}
+
+fn quantize_impl(
     spec: &ModelSpec,
     mut weights: TensorMap,
     calib: Option<&TensorMap>,
@@ -493,14 +563,42 @@ mod tests {
         m
     }
 
+    /// [`quantize`] with the historical positional-threads shape the tests
+    /// below were written against.
+    fn quantize_t(
+        spec: &ModelSpec,
+        weights: TensorMap,
+        calib: Option<&TensorMap>,
+        method: Method,
+        cfg: &QuantConfig,
+        threads: usize,
+    ) -> Result<QuantizedModel> {
+        quantize(spec, weights, calib, method, cfg, &QuantizeOptions::new().with_threads(threads))
+    }
+
+    /// [`quantize_t`] with a per-layer override map.
+    fn quantize_mixed_t(
+        spec: &ModelSpec,
+        weights: TensorMap,
+        calib: Option<&TensorMap>,
+        default: Method,
+        overrides: &BTreeMap<String, Method>,
+        cfg: &QuantConfig,
+        threads: usize,
+    ) -> Result<QuantizedModel> {
+        let opts =
+            QuantizeOptions::new().with_threads(threads).with_overrides(overrides.clone());
+        quantize(spec, weights, calib, default, cfg, &opts)
+    }
+
     #[test]
     fn fp_is_identity() {
-        let qm = quantize_model(
+        let qm = quantize_t(
             &tiny_spec(),
             tiny_weights(1),
             None,
             Method::Fp,
-            &QuantConfig::block_wise(4, 64),
+            &QuantConfig::block_wise(4, 64).unwrap(),
             2,
         )
         .unwrap();
@@ -512,12 +610,12 @@ mod tests {
     #[test]
     fn quantizes_only_quantizable() {
         let w = tiny_weights(2);
-        let qm = quantize_model(
+        let qm = quantize_t(
             &tiny_spec(),
             w.clone(),
             None,
             Method::Wgm,
-            &QuantConfig::block_wise(4, 64),
+            &QuantConfig::block_wise(4, 64).unwrap(),
             2,
         )
         .unwrap();
@@ -540,12 +638,12 @@ mod tests {
 
     #[test]
     fn gptq_without_calib_errors() {
-        let r = quantize_model(
+        let r = quantize_t(
             &tiny_spec(),
             tiny_weights(3),
             None,
             Method::Gptq,
-            &QuantConfig::block_wise(4, 64),
+            &QuantConfig::block_wise(4, 64).unwrap(),
             1,
         );
         assert!(r.is_err());
@@ -562,12 +660,12 @@ mod tests {
             }
             calib.insert(name.into(), Tensor::f32(vec![64, 64], h));
         }
-        let qm = quantize_model(
+        let qm = quantize_t(
             &tiny_spec(),
             tiny_weights(4),
             Some(&calib),
             Method::Gptq,
-            &QuantConfig::block_wise(4, 64),
+            &QuantConfig::block_wise(4, 64).unwrap(),
             2,
         )
         .unwrap();
@@ -580,9 +678,9 @@ mod tests {
     #[test]
     fn wgm_dq_has_lower_bits_higher_err() {
         let w = tiny_weights(5);
-        let cfg = QuantConfig::block_wise(4, 64);
-        let a = quantize_model(&tiny_spec(), w.clone(), None, Method::Wgm, &cfg, 1).unwrap();
-        let b = quantize_model(&tiny_spec(), w, None, Method::WgmDq, &cfg, 1).unwrap();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
+        let a = quantize_t(&tiny_spec(), w.clone(), None, Method::Wgm, &cfg, 1).unwrap();
+        let b = quantize_t(&tiny_spec(), w, None, Method::WgmDq, &cfg, 1).unwrap();
         assert!(b.mean_effective_bits() < a.mean_effective_bits());
         assert!(b.total_sse() >= a.total_sse() * 0.999);
     }
@@ -590,9 +688,9 @@ mod tests {
     #[test]
     fn thread_count_does_not_change_result() {
         let w = tiny_weights(6);
-        let cfg = QuantConfig::block_wise(4, 64);
-        let a = quantize_model(&tiny_spec(), w.clone(), None, Method::Wgm, &cfg, 1).unwrap();
-        let b = quantize_model(&tiny_spec(), w, None, Method::Wgm, &cfg, 4).unwrap();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
+        let a = quantize_t(&tiny_spec(), w.clone(), None, Method::Wgm, &cfg, 1).unwrap();
+        let b = quantize_t(&tiny_spec(), w, None, Method::Wgm, &cfg, 4).unwrap();
         assert_eq!(a.weights, b.weights);
     }
 
@@ -603,8 +701,8 @@ mod tests {
     fn method_grid_thread_determinism() {
         let w = tiny_weights(7);
         let spec = tiny_spec();
-        let bw = QuantConfig::block_wise(4, 64);
-        let pt = QuantConfig::per_tensor(4).with_window(16);
+        let bw = QuantConfig::block_wise(4, 64).unwrap();
+        let pt = QuantConfig::per_tensor(4).unwrap().with_window(16).unwrap();
         let grid: Vec<(Method, &QuantConfig)> = vec![
             (Method::Rtn, &bw),
             (Method::Bnb, &bw),
@@ -622,8 +720,8 @@ mod tests {
             (Method::BlockedXnor, &pt),
         ];
         for (method, cfg) in grid {
-            let a = quantize_model(&spec, w.clone(), None, method, cfg, 1).unwrap();
-            let b = quantize_model(&spec, w.clone(), None, method, cfg, 4).unwrap();
+            let a = quantize_t(&spec, w.clone(), None, method, cfg, 1).unwrap();
+            let b = quantize_t(&spec, w.clone(), None, method, cfg, 4).unwrap();
             assert_eq!(
                 a.weights,
                 b.weights,
@@ -641,8 +739,8 @@ mod tests {
         let mut spec = tiny_spec();
         spec.params.retain(|p| !p.quant || p.name == "layer0.wq");
         let w = tiny_weights(8);
-        let cfg = QuantConfig::block_wise(4, 64);
-        let qm = quantize_model(&spec, w, None, Method::Wgm, &cfg, 4).unwrap();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
+        let qm = quantize_t(&spec, w, None, Method::Wgm, &cfg, 4).unwrap();
         assert_eq!(qm.layers.len(), 1);
         let (submitted, completed) = qm.pool_stats.expect("pool path must engage");
         assert!(submitted > 1, "expected block-tile fan-out, got {submitted} job(s)");
@@ -665,14 +763,14 @@ mod tests {
         calib.insert("layer0.wq".into(), Tensor::f32(vec![64, 64], h));
         let mut overrides = BTreeMap::new();
         overrides.insert("layer0.wq".to_string(), Method::Gptq);
-        let cfg = QuantConfig::block_wise(4, 64);
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
 
         let serial =
-            quantize_model_mixed(&spec, w.clone(), Some(&calib), Method::Wgm, &overrides, &cfg, 1)
+            quantize_mixed_t(&spec, w.clone(), Some(&calib), Method::Wgm, &overrides, &cfg, 1)
                 .unwrap();
         assert!(serial.pool_stats.is_none(), "threads=1 is the serial reference");
         for threads in [2usize, 4] {
-            let global = quantize_model_mixed(
+            let global = quantize_mixed_t(
                 &spec,
                 w.clone(),
                 Some(&calib),
@@ -688,10 +786,10 @@ mod tests {
         }
 
         // each layer == its homogeneous-model counterpart
-        let gptq_only = quantize_model(&spec, w.clone(), Some(&calib), Method::Gptq, &cfg, 1);
+        let gptq_only = quantize_t(&spec, w.clone(), Some(&calib), Method::Gptq, &cfg, 1);
         // (gptq needs a Hessian for BOTH layers in a homogeneous run)
         assert!(gptq_only.is_err());
-        let wgm_only = quantize_model(&spec, w.clone(), None, Method::Wgm, &cfg, 1).unwrap();
+        let wgm_only = quantize_t(&spec, w.clone(), None, Method::Wgm, &cfg, 1).unwrap();
         assert_eq!(serial.weights.get("layer0.wv"), wgm_only.weights.get("layer0.wv"));
         assert_ne!(serial.weights.get("layer0.wq"), wgm_only.weights.get("layer0.wq"));
     }
@@ -705,13 +803,13 @@ mod tests {
         let w = tiny_weights(21);
         let mut overrides = BTreeMap::new();
         overrides.insert("layer0.wq".to_string(), Method::Xnor);
-        let cfg = QuantConfig::block_wise(4, 64);
-        let qm = quantize_model_mixed(&spec, w.clone(), None, Method::Wgm, &overrides, &cfg, 4)
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
+        let qm = quantize_mixed_t(&spec, w.clone(), None, Method::Wgm, &overrides, &cfg, 4)
             .unwrap();
         // layer0.wv: 32x64 = 2048 elems / 64 = 32 blocks; tile_size(32, 4)
         // = 2 blocks/tile => 16 tiles; plus 1 whole-matrix xnor job
         assert_eq!(qm.pool_stats, Some((17, 17)));
-        let serial = quantize_model_mixed(&spec, w, None, Method::Wgm, &overrides, &cfg, 1)
+        let serial = quantize_mixed_t(&spec, w, None, Method::Wgm, &overrides, &cfg, 1)
             .unwrap();
         assert_eq!(serial.weights, qm.weights);
     }
@@ -724,8 +822,8 @@ mod tests {
         let w = tiny_weights(22);
         let mut overrides = BTreeMap::new();
         overrides.insert("layer0.wv".to_string(), Method::Fp);
-        let cfg = QuantConfig::block_wise(4, 64);
-        let qm = quantize_model_mixed(&spec, w.clone(), None, Method::Wgm, &overrides, &cfg, 2)
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
+        let qm = quantize_mixed_t(&spec, w.clone(), None, Method::Wgm, &overrides, &cfg, 2)
             .unwrap();
         assert_eq!(qm.weights.get("layer0.wv"), w.get("layer0.wv"));
         assert_ne!(qm.weights.get("layer0.wq"), w.get("layer0.wq"));
@@ -740,10 +838,10 @@ mod tests {
     fn mixed_guards_reject_bad_assignments() {
         let spec = tiny_spec();
         let w = tiny_weights(24);
-        let cfg = QuantConfig::block_wise(4, 64);
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
         let mut typo = BTreeMap::new();
         typo.insert("layer0.Wq".to_string(), Method::Rtn); // wrong case
-        let err = quantize_model_mixed(&spec, w.clone(), None, Method::Wgm, &typo, &cfg, 1)
+        let err = quantize_mixed_t(&spec, w.clone(), None, Method::Wgm, &typo, &cfg, 1)
             .unwrap_err();
         assert!(format!("{err:#}").contains("layer0.Wq"), "{err:#}");
 
@@ -751,11 +849,11 @@ mod tests {
         mixed.insert("layer0.wq".to_string(), Method::BlockedXnor);
         let packed_cfg = cfg.clone().with_packed();
         let err =
-            quantize_model_mixed(&spec, w.clone(), None, Method::Wgm, &mixed, &packed_cfg, 1)
+            quantize_mixed_t(&spec, w.clone(), None, Method::Wgm, &mixed, &packed_cfg, 1)
                 .unwrap_err();
         assert!(format!("{err:#}").contains("mixed packable methods"), "{err:#}");
         // without emission the same assignment is fine
-        assert!(quantize_model_mixed(&spec, w, None, Method::Wgm, &mixed, &cfg, 1).is_ok());
+        assert!(quantize_mixed_t(&spec, w, None, Method::Wgm, &mixed, &cfg, 1).is_ok());
     }
 
     /// Packed export → decode round-trips bit-identically through the
@@ -770,9 +868,9 @@ mod tests {
             v[3] = 0.0;
             v[100] = 0.0;
         }
-        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().with_packed();
         for method in [Method::Wgm, Method::Rtn, Method::Bnb, Method::Hqq] {
-            let qm = quantize_model(&spec, w.clone(), None, method, &cfg, 2).unwrap();
+            let qm = quantize_t(&spec, w.clone(), None, method, &cfg, 2).unwrap();
             assert_eq!(qm.packed.len(), 2, "{method:?}");
             let map = qm.export_packed().unwrap();
             assert!(is_packed_map(&map));
@@ -783,7 +881,7 @@ mod tests {
                 let decoded = decode_packed_model(&map, threads).unwrap();
                 assert_eq!(decoded, qm.weights, "{method:?} threads={threads}");
             }
-            let qm4 = quantize_model(&spec, w.clone(), None, method, &cfg, 4).unwrap();
+            let qm4 = quantize_t(&spec, w.clone(), None, method, &cfg, 4).unwrap();
             assert_eq!(qm.packed, qm4.packed, "{method:?} payload thread determinism");
         }
     }
@@ -796,8 +894,8 @@ mod tests {
         let spec = tiny_spec();
         let w = tiny_weights(23);
         for (method, bits) in [(Method::BlockedXnor, 1u32), (Method::Wgm, 2)] {
-            let cfg = QuantConfig::block_wise(bits, 64).with_packed();
-            let qm = quantize_model(&spec, w.clone(), None, method, &cfg, 2).unwrap();
+            let cfg = QuantConfig::block_wise(bits, 64).unwrap().with_packed();
+            let qm = quantize_t(&spec, w.clone(), None, method, &cfg, 2).unwrap();
             let map = qm.export_packed().unwrap();
             let codes = map.get("layer0.wq.codes").unwrap();
             match bits {
@@ -814,16 +912,16 @@ mod tests {
     #[test]
     fn packed_accounting_at_paper_point() {
         // MSB 4-bit t=64 over the tiny model: 6.00 bits/weight measured
-        let cfg = QuantConfig::block_wise(4, 64).with_packed();
-        let qm = quantize_model(&tiny_spec(), tiny_weights(10), None, Method::Wgm, &cfg, 1)
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().with_packed();
+        let qm = quantize_t(&tiny_spec(), tiny_weights(10), None, Method::Wgm, &cfg, 1)
             .unwrap();
         crate::testing::assert_close(qm.packed_effective_bits(), 6.0, 1e-12, 0.0);
     }
 
     #[test]
     fn export_without_emission_errors() {
-        let cfg = QuantConfig::block_wise(4, 64);
-        let qm = quantize_model(&tiny_spec(), tiny_weights(11), None, Method::Wgm, &cfg, 1)
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
+        let qm = quantize_t(&tiny_spec(), tiny_weights(11), None, Method::Wgm, &cfg, 1)
             .unwrap();
         assert!(qm.export_packed().is_err());
     }
@@ -831,16 +929,16 @@ mod tests {
     #[test]
     fn wgm_dq_drops_packed_payload() {
         // the double-quantized scale table invalidates the base payload
-        let cfg = QuantConfig::block_wise(4, 64).with_packed();
-        let qm = quantize_model(&tiny_spec(), tiny_weights(12), None, Method::WgmDq, &cfg, 1)
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().with_packed();
+        let qm = quantize_t(&tiny_spec(), tiny_weights(12), None, Method::WgmDq, &cfg, 1)
             .unwrap();
         assert!(qm.packed.is_empty());
     }
 
     #[test]
     fn decode_rejects_corrupt_layout() {
-        let cfg = QuantConfig::block_wise(4, 64).with_packed();
-        let qm = quantize_model(&tiny_spec(), tiny_weights(13), None, Method::Wgm, &cfg, 1)
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().with_packed();
+        let qm = quantize_t(&tiny_spec(), tiny_weights(13), None, Method::Wgm, &cfg, 1)
             .unwrap();
         let map = qm.export_packed().unwrap();
         // not a packed map at all
@@ -860,6 +958,48 @@ mod tests {
             Tensor::i8(vec![4], b"nope".iter().map(|&b| b as i8).collect()),
         );
         assert!(decode_packed_model(&bad, 1).is_err());
+    }
+
+    /// The deprecated positional entry points must stay bit-identical to
+    /// [`quantize`] while downstream callers migrate.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_delegate_to_quantize() {
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
+        let via_new = quantize(
+            &tiny_spec(),
+            tiny_weights(14),
+            None,
+            Method::Wgm,
+            &cfg,
+            &QuantizeOptions::new().with_threads(2),
+        )
+        .unwrap();
+        let via_old =
+            quantize_model(&tiny_spec(), tiny_weights(14), None, Method::Wgm, &cfg, 2).unwrap();
+        assert_eq!(via_new.weights, via_old.weights);
+        let overrides: BTreeMap<String, Method> =
+            [("layer0.wq".to_string(), Method::Rtn)].into();
+        let via_mixed = quantize_model_mixed(
+            &tiny_spec(),
+            tiny_weights(14),
+            None,
+            Method::Wgm,
+            &overrides,
+            &cfg,
+            1,
+        )
+        .unwrap();
+        let via_opts = quantize(
+            &tiny_spec(),
+            tiny_weights(14),
+            None,
+            Method::Wgm,
+            &cfg,
+            &QuantizeOptions::new().with_override("layer0.wq", Method::Rtn),
+        )
+        .unwrap();
+        assert_eq!(via_mixed.weights, via_opts.weights);
     }
 
     // Method::parse round-tripping is covered in quant::registry::tests,

@@ -110,7 +110,7 @@ mod tests {
     fn setup() -> (Matrix, QuantizedTensor, QuantConfig) {
         let mut rng = Rng::new(1);
         let w = Matrix::randn(32, 256, &mut rng);
-        let cfg = QuantConfig::block_wise(4, 64);
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
         let q = MsbQuantizer::wgm().quantize(&w, &cfg);
         (w, q, cfg)
     }

@@ -591,9 +591,9 @@ mod tests {
 
     #[test]
     fn plan_from_config_follows_granularity() {
-        let cfg = QuantConfig::block_wise(4, 64);
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
         assert_eq!(BlockPlan::from_config(8, 256, &cfg), BlockPlan::block_wise(8, 256, 64));
-        let cfg = QuantConfig::per_tensor(6);
+        let cfg = QuantConfig::per_tensor(6).unwrap();
         assert_eq!(BlockPlan::from_config(8, 256, &cfg), BlockPlan::per_tensor(8, 256));
     }
 
@@ -603,7 +603,7 @@ mod tests {
         let p = BlockPlan::flat(4, 5, 8);
         assert_eq!((p.block, p.n_blocks), (8, 3)); // 8, 8, 4 elements
         let w = weight(4, 5, 15);
-        let cfg = QuantConfig::block_wise(4, 8).no_bf16();
+        let cfg = QuantConfig::block_wise(4, 8).unwrap().no_bf16();
         let q = XnorQuantizer::blocked();
         let serial = q.quantize(&w, &cfg);
         assert!(serial.dequant.data.iter().all(|v| v.is_finite()));
@@ -664,9 +664,9 @@ mod tests {
     fn configs_for(name: &str) -> Vec<QuantConfig> {
         if name.starts_with("bnb") {
             // fixed 4-bit codebook
-            vec![QuantConfig::block_wise(4, 64), QuantConfig::per_tensor(4)]
+            vec![QuantConfig::block_wise(4, 64).unwrap(), QuantConfig::per_tensor(4).unwrap()]
         } else {
-            vec![QuantConfig::block_wise(4, 64), QuantConfig::per_tensor(4).with_window(16)]
+            vec![QuantConfig::block_wise(4, 64).unwrap(), QuantConfig::per_tensor(4).unwrap().with_window(16).unwrap()]
         }
     }
 
@@ -726,7 +726,7 @@ mod tests {
     fn pooled_uses_multiple_jobs() {
         let w = weight(8, 256, 13);
         let mut pool = ThreadPool::new(4, 16);
-        let cfg = QuantConfig::block_wise(4, 64);
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
         let _ = RtnQuantizer::symmetric().quantize_with_pool(&w, &cfg, &pool);
         pool.shutdown();
         let (submitted, completed) = pool.stats();
@@ -739,7 +739,7 @@ mod tests {
     fn pooled_propagates_worker_panics() {
         let w = weight(4, 256, 14);
         let pool = ThreadPool::new(2, 8);
-        let cfg = QuantConfig::block_wise(3, 64);
+        let cfg = QuantConfig::block_wise(3, 64).unwrap();
         let _ = Nf4Quantizer::nf4().quantize_with_pool(&w, &cfg, &pool);
     }
 
@@ -831,7 +831,7 @@ mod tests {
                 *v = 0.5; // exact zeros would add exception-list bytes
             }
         }
-        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().with_packed();
         for q in packable_arcs() {
             let name = BlockQuantizer::name(&*q);
             let qt = quantize_serial(&*q, &w, &cfg);
@@ -853,7 +853,7 @@ mod tests {
     fn sub_nibble_packed_roundtrip() {
         let mut w = weight(8, 256, 25);
         w.data[17] = 0.0; // exception-list coverage at 1-bit width
-        let cfg = QuantConfig::block_wise(2, 64).with_window(1).with_packed();
+        let cfg = QuantConfig::block_wise(2, 64).unwrap().with_window(1).unwrap().with_packed();
         let cases: Vec<(Arc<dyn BlockQuantizer>, f64)> = vec![
             // MSB at b=2: L=2 scales/block → 2 + 2·16/64 = 2.5 bits/wt
             (Arc::new(MsbQuantizer::wgm()), 2.5),
@@ -902,7 +902,7 @@ mod tests {
                     1 => Arc::new(RtnQuantizer::symmetric()),
                     _ => Arc::new(HqqQuantizer::default()),
                 };
-                let cfg = QuantConfig::block_wise(4, 64).with_packed();
+                let cfg = QuantConfig::block_wise(4, 64).unwrap().with_packed();
                 let serial = quantize_serial(&*q, w, &cfg);
                 let pt = serial.packed.expect("payload");
                 let pooled = quantize_pooled(Arc::clone(&q), w, &cfg, &pool);
@@ -919,7 +919,7 @@ mod tests {
     fn decode_scratch_reuse_is_bit_identical() {
         let mut w = weight(8, 256, 26);
         w.data[5] = 0.0;
-        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().with_packed();
         let q: Arc<dyn BlockQuantizer> = Arc::new(MsbQuantizer::wgm());
         let qt = quantize_serial(&*q, &w, &cfg);
         let pt = qt.packed.unwrap();
@@ -937,7 +937,7 @@ mod tests {
 
     #[test]
     fn zero_dummy_has_no_pack_spec() {
-        let cfg = QuantConfig::block_wise(4, 64).with_packed();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().with_packed();
         assert!(ZeroQuantizer.pack_spec(&cfg).is_none());
         let w = weight(4, 64, 24);
         assert!(quantize_serial(&ZeroQuantizer, &w, &cfg).packed.is_none());

@@ -196,7 +196,7 @@ mod tests {
         let w = Matrix::randn(16, 64, &mut rng);
         let h = gram(64, 256, 2);
         let hf: Vec<f32> = h.a.iter().map(|&x| x as f32).collect();
-        let cfg = QuantConfig::block_wise(3, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(3, 64).unwrap().no_bf16();
         let gptq = GptqQuantizer::new().with_hessian(&hf, 64).quantize(&w, &cfg);
         let rtn = RtnQuantizer::symmetric().quantize(&w, &cfg);
         let lg = hessian_loss(&w, &gptq.dequant, &h);
@@ -210,7 +210,7 @@ mod tests {
         // each group equals RTN exactly; overall error stays comparable
         let mut rng = Rng::new(3);
         let w = Matrix::randn(8, 64, &mut rng);
-        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().no_bf16();
         let gptq = GptqQuantizer::new().quantize(&w, &cfg);
         let rtn = RtnQuantizer::symmetric().quantize(&w, &cfg);
         assert!(gptq.mse(&w) <= rtn.mse(&w) * 1.5);
@@ -234,8 +234,8 @@ mod tests {
         };
         // blockwise group refresh isolates the first block's grid from the
         // inflated second block; per-tensor grouping smears it
-        let bw = GptqQuantizer::new().quantize(&w, &QuantConfig::block_wise(4, 64).no_bf16());
-        let pt = GptqQuantizer::new().quantize(&w, &QuantConfig::per_tensor(4).no_bf16());
+        let bw = GptqQuantizer::new().quantize(&w, &QuantConfig::block_wise(4, 64).unwrap().no_bf16());
+        let pt = GptqQuantizer::new().quantize(&w, &QuantConfig::per_tensor(4).unwrap().no_bf16());
         assert!(err_on(&bw) < err_on(&pt), "{} !< {}", err_on(&bw), err_on(&pt));
     }
 
@@ -251,7 +251,7 @@ mod tests {
         let w = Matrix::randn(4, 32, &mut rng);
         let q = GptqQuantizer::new()
             .with_hessian(&hf, 32)
-            .quantize(&w, &QuantConfig::block_wise(4, 32).no_bf16());
+            .quantize(&w, &QuantConfig::block_wise(4, 32).unwrap().no_bf16());
         assert!(q.dequant.data.iter().all(|v| v.is_finite()));
     }
 

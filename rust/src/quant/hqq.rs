@@ -157,7 +157,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let mut w = Matrix::zeros(16, 256);
         rng.fill_weightlike(&mut w.data, 0.05, 0.01);
-        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().no_bf16();
         let hqq = HqqQuantizer::default().quantize(&w, &cfg);
         let rtn = RtnQuantizer::asymmetric().quantize(&w, &cfg);
         // robust lp fitting should not be (much) worse; typically better
@@ -178,7 +178,7 @@ mod tests {
     #[test]
     fn constant_block_exact() {
         let w = Matrix::from_vec(1, 64, vec![3.25; 64]);
-        let q = HqqQuantizer::default().quantize(&w, &QuantConfig::block_wise(4, 64).no_bf16());
+        let q = HqqQuantizer::default().quantize(&w, &QuantConfig::block_wise(4, 64).unwrap().no_bf16());
         assert!(q.mse(&w) < 1e-9);
     }
 
@@ -189,7 +189,7 @@ mod tests {
         let mut last = f64::INFINITY;
         for bits in [2u32, 3, 4, 6] {
             let q = HqqQuantizer::default()
-                .quantize(&w, &QuantConfig::block_wise(bits, 64).no_bf16());
+                .quantize(&w, &QuantConfig::block_wise(bits, 64).unwrap().no_bf16());
             let e = q.mse(&w);
             assert!(e < last, "bits {bits}");
             last = e;
@@ -200,7 +200,7 @@ mod tests {
     fn deterministic() {
         let mut rng = Rng::new(3);
         let w = Matrix::randn(4, 128, &mut rng);
-        let cfg = QuantConfig::block_wise(4, 64);
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
         let a = HqqQuantizer::default().quantize(&w, &cfg);
         let b = HqqQuantizer::default().quantize(&w, &cfg);
         assert_eq!(a.dequant.data, b.dequant.data);

@@ -36,7 +36,17 @@ fn solve_run(
     let mut out = Vec::with_capacity(data.len());
     let mut effs = Vec::with_capacity(bits.len());
     for (i, &b) in bits.iter().enumerate() {
-        let bcfg = QuantConfig::block_wise(b, t).with_window(window).with_lambda(lambda).no_bf16();
+        // Built literally: hot blocks run at base+1 bits, which may step
+        // outside the deployable 1..=8 range the validated constructors
+        // enforce (e.g. an 8-bit base promotes to 9).
+        let bcfg = QuantConfig {
+            bits: b,
+            granularity: Granularity::BlockWise { t },
+            window,
+            lambda,
+            bf16: false,
+            emit_packed: false,
+        };
         let bm = Matrix::from_vec(1, t, data[i * t..(i + 1) * t].to_vec());
         let q = inner.quantize(&bm, &bcfg);
         out.extend(q.dequant.data);
@@ -209,7 +219,7 @@ mod tests {
     #[test]
     fn budget_is_preserved() {
         let w = hetero(16, 256, 1);
-        let cfg = QuantConfig::block_wise(4, 64);
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
         let q = MixedMsbQuantizer::new(0.2).quantize(&w, &cfg);
         let uniform = MsbQuantizer::wgm().quantize(&w, &cfg);
         crate::testing::assert_close(q.effective_bits, uniform.effective_bits, 0.02, 0.0);
@@ -220,7 +230,7 @@ mod tests {
         // mixed precision reallocates bits toward high-energy blocks, which
         // dominate the weighted (and here even the plain) SSE
         let w = hetero(32, 512, 2);
-        let cfg = QuantConfig::block_wise(3, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(3, 64).unwrap().no_bf16();
         let mixed = MixedMsbQuantizer::new(0.15).quantize(&w, &cfg);
         let uniform = MsbQuantizer::wgm().quantize(&w, &cfg);
         assert!(
@@ -234,7 +244,7 @@ mod tests {
     #[test]
     fn zero_hot_frac_equals_uniform() {
         let w = hetero(8, 128, 3);
-        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().no_bf16();
         let mixed = MixedMsbQuantizer::new(0.0).quantize(&w, &cfg);
         let uniform = MsbQuantizer::wgm().quantize(&w, &cfg);
         assert_eq!(mixed.dequant.data, uniform.dequant.data);
@@ -243,14 +253,14 @@ mod tests {
     #[test]
     fn per_tensor_falls_back() {
         let w = hetero(8, 128, 4);
-        let q = MixedMsbQuantizer::new(0.2).quantize(&w, &QuantConfig::per_tensor(6));
+        let q = MixedMsbQuantizer::new(0.2).quantize(&w, &QuantConfig::per_tensor(6).unwrap());
         assert!(q.dequant.data.iter().all(|v| v.is_finite()));
     }
 
     #[test]
     fn diag_h_changes_allocation() {
         let w = hetero(8, 128, 5);
-        let cfg = QuantConfig::block_wise(3, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(3, 64).unwrap().no_bf16();
         let a = MixedMsbQuantizer::new(0.2).quantize(&w, &cfg);
         let mut d = vec![1.0f32; 128];
         for x in d.iter_mut().skip(64) {

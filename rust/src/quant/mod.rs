@@ -26,6 +26,8 @@ pub mod xnor;
 
 pub use registry::calibration_free_zoo;
 
+use anyhow::{ensure, Result};
+
 use crate::pool::ThreadPool;
 use crate::tensor::Matrix;
 
@@ -61,26 +63,36 @@ pub struct QuantConfig {
 }
 
 impl QuantConfig {
-    pub fn per_tensor(bits: u32) -> Self {
-        QuantConfig {
+    /// Deployable bit-widths. Research sweeps beyond this (the g=256/512
+    /// oracle settings of Tables 5/7) construct the struct literally.
+    fn check_bits(bits: u32) -> Result<()> {
+        ensure!((1..=8).contains(&bits), "bit-width {bits} outside deployable range 1..=8");
+        Ok(())
+    }
+
+    pub fn per_tensor(bits: u32) -> Result<Self> {
+        Self::check_bits(bits)?;
+        Ok(QuantConfig {
             bits,
             granularity: Granularity::PerTensor,
             window: 64,
             lambda: 0.75,
             bf16: true,
             emit_packed: false,
-        }
+        })
     }
 
-    pub fn block_wise(bits: u32, t: usize) -> Self {
-        QuantConfig {
+    pub fn block_wise(bits: u32, t: usize) -> Result<Self> {
+        Self::check_bits(bits)?;
+        ensure!(t > 0, "block size t must be positive");
+        Ok(QuantConfig {
             bits,
             granularity: Granularity::BlockWise { t },
             window: 1,
             lambda: 0.75,
             bf16: true,
             emit_packed: false,
-        }
+        })
     }
 
     /// Request packed-payload emission (see [`QuantConfig::emit_packed`]).
@@ -89,9 +101,10 @@ impl QuantConfig {
         self
     }
 
-    pub fn with_window(mut self, w: usize) -> Self {
+    pub fn with_window(mut self, w: usize) -> Result<Self> {
+        ensure!(w > 0, "solver window must be positive");
         self.window = w;
-        self
+        Ok(self)
     }
 
     pub fn with_lambda(mut self, l: f64) -> Self {
@@ -208,14 +221,27 @@ mod tests {
 
     #[test]
     fn config_levels() {
-        assert_eq!(QuantConfig::block_wise(4, 64).levels(), 8);
-        assert_eq!(QuantConfig::per_tensor(6).levels(), 32);
-        assert_eq!(QuantConfig::per_tensor(1).levels(), 1);
+        assert_eq!(QuantConfig::block_wise(4, 64).unwrap().levels(), 8);
+        assert_eq!(QuantConfig::per_tensor(6).unwrap().levels(), 32);
+        assert_eq!(QuantConfig::per_tensor(1).unwrap().levels(), 1);
     }
 
     #[test]
     fn block_elems() {
-        assert_eq!(QuantConfig::per_tensor(4).block_elems(4, 512), 2048);
-        assert_eq!(QuantConfig::block_wise(4, 64).block_elems(4, 512), 64);
+        assert_eq!(QuantConfig::per_tensor(4).unwrap().block_elems(4, 512), 2048);
+        assert_eq!(QuantConfig::block_wise(4, 64).unwrap().block_elems(4, 512), 64);
+    }
+
+    #[test]
+    fn constructors_reject_degenerate_settings() {
+        assert!(QuantConfig::per_tensor(0).is_err());
+        assert!(QuantConfig::per_tensor(9).is_err());
+        assert!(QuantConfig::block_wise(0, 64).is_err());
+        assert!(QuantConfig::block_wise(9, 64).is_err());
+        assert!(QuantConfig::block_wise(4, 0).is_err());
+        assert!(QuantConfig::block_wise(4, 64).unwrap().with_window(0).is_err());
+        // The happy path still composes.
+        let cfg = QuantConfig::per_tensor(6).unwrap().with_window(16).unwrap();
+        assert_eq!((cfg.bits, cfg.window), (6, 16));
     }
 }

@@ -168,7 +168,7 @@ mod tests {
     fn absmax_element_survives() {
         let mut rng = Rng::new(1);
         let w = Matrix::randn(4, 64, &mut rng);
-        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().no_bf16();
         let q = Nf4Quantizer::nf4().quantize(&w, &cfg);
         for (blk, dq) in w.row_blocks(64).zip(q.dequant.row_blocks(64)) {
             let (mi, _) = blk
@@ -185,7 +185,7 @@ mod tests {
         // the entire point of NF4: better grid for normal data
         let mut rng = Rng::new(2);
         let w = Matrix::randn(32, 256, &mut rng);
-        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().no_bf16();
         let nf4 = Nf4Quantizer::nf4().quantize(&w, &cfg);
         let rtn = RtnQuantizer::symmetric().quantize(&w, &cfg);
         assert!(nf4.mse(&w) < rtn.mse(&w));
@@ -195,7 +195,7 @@ mod tests {
     fn fp4_differs_from_nf4() {
         let mut rng = Rng::new(3);
         let w = Matrix::randn(8, 64, &mut rng);
-        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().no_bf16();
         let a = Nf4Quantizer::nf4().quantize(&w, &cfg);
         let b = Nf4Quantizer::fp4().quantize(&w, &cfg);
         assert_ne!(a.dequant.data, b.dequant.data);
@@ -205,14 +205,14 @@ mod tests {
     #[should_panic(expected = "fixed 4-bit")]
     fn rejects_other_bit_widths() {
         let w = Matrix::zeros(2, 64);
-        Nf4Quantizer::nf4().quantize(&w, &QuantConfig::block_wise(3, 64));
+        Nf4Quantizer::nf4().quantize(&w, &QuantConfig::block_wise(3, 64).unwrap());
     }
 
     #[test]
     fn effective_bits() {
         let mut rng = Rng::new(4);
         let w = Matrix::randn(2, 64, &mut rng);
-        let q = Nf4Quantizer::nf4().quantize(&w, &QuantConfig::block_wise(4, 64));
+        let q = Nf4Quantizer::nf4().quantize(&w, &QuantConfig::block_wise(4, 64).unwrap());
         crate::testing::assert_close(q.effective_bits, 4.5, 1e-12, 0.0);
     }
 }

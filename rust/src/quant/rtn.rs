@@ -192,7 +192,7 @@ mod tests {
     fn exact_on_grid_points() {
         // values already on the symmetric 3-bit grid survive exactly
         let w = Matrix::from_vec(1, 4, vec![-3.0, -1.0, 0.0, 3.0]);
-        let cfg = QuantConfig::per_tensor(3).no_bf16();
+        let cfg = QuantConfig::per_tensor(3).unwrap().no_bf16();
         let q = RtnQuantizer::symmetric().quantize(&w, &cfg);
         assert_eq!(q.dequant.data, vec![-3.0, -1.0, 0.0, 3.0]);
     }
@@ -201,7 +201,7 @@ mod tests {
     fn error_bounded_by_half_step() {
         let mut rng = Rng::new(1);
         let w = Matrix::randn(16, 64, &mut rng);
-        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().no_bf16();
         let q = RtnQuantizer::symmetric().quantize(&w, &cfg);
         for (blk, dq) in w.row_blocks(64).zip(q.dequant.row_blocks(64)) {
             let absmax = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
@@ -219,7 +219,7 @@ mod tests {
         let mut last = f64::INFINITY;
         for bits in [2u32, 3, 4, 6, 8] {
             let q = RtnQuantizer::symmetric()
-                .quantize(&w, &QuantConfig::block_wise(bits, 64).no_bf16());
+                .quantize(&w, &QuantConfig::block_wise(bits, 64).unwrap().no_bf16());
             let e = q.mse(&w);
             assert!(e < last);
             last = e;
@@ -234,9 +234,9 @@ mod tests {
         for (i, v) in w.data.iter_mut().enumerate() {
             *v *= 1.0 + (i / 64) as f32; // growing magnitude per block
         }
-        let pt = RtnQuantizer::symmetric().quantize(&w, &QuantConfig::per_tensor(4).no_bf16());
+        let pt = RtnQuantizer::symmetric().quantize(&w, &QuantConfig::per_tensor(4).unwrap().no_bf16());
         let bw = RtnQuantizer::symmetric()
-            .quantize(&w, &QuantConfig::block_wise(4, 64).no_bf16());
+            .quantize(&w, &QuantConfig::block_wise(4, 64).unwrap().no_bf16());
         assert!(bw.mse(&w) < pt.mse(&w));
     }
 
@@ -247,7 +247,7 @@ mod tests {
         for v in &mut w.data {
             *v += 10.0; // all-positive shifted distribution
         }
-        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().no_bf16();
         let sym = RtnQuantizer::symmetric().quantize(&w, &cfg);
         let asym = RtnQuantizer::asymmetric().quantize(&w, &cfg);
         assert!(asym.mse(&w) < sym.mse(&w));
@@ -256,14 +256,14 @@ mod tests {
     #[test]
     fn zero_block() {
         let w = Matrix::zeros(2, 64);
-        let q = RtnQuantizer::symmetric().quantize(&w, &QuantConfig::block_wise(4, 64));
+        let q = RtnQuantizer::symmetric().quantize(&w, &QuantConfig::block_wise(4, 64).unwrap());
         assert_eq!(q.mse(&w), 0.0);
     }
 
     #[test]
     fn constant_block_asym_exact() {
         let w = Matrix::from_vec(1, 64, vec![2.5; 64]);
-        let q = RtnQuantizer::asymmetric().quantize(&w, &QuantConfig::block_wise(4, 64).no_bf16());
+        let q = RtnQuantizer::asymmetric().quantize(&w, &QuantConfig::block_wise(4, 64).unwrap().no_bf16());
         assert_eq!(q.mse(&w), 0.0);
     }
 }

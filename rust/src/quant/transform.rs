@@ -190,7 +190,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let w = Matrix::randn(64, 128, &mut rng);
         let diag = skewed_diag(128, 3);
-        let cfg = QuantConfig::block_wise(3, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(3, 64).unwrap().no_bf16();
         let plain = RtnQuantizer::symmetric().quantize(&w, &cfg);
         let scaled = ScaledQuantizer::new(
             RtnQuantizer::symmetric(),
@@ -210,7 +210,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let w = Matrix::randn(32, 128, &mut rng);
         let diag = skewed_diag(128, 5);
-        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().no_bf16();
         let q = ScaledQuantizer::new(
             MsbQuantizer::wgm(),
             ScalePolicy::ActivationAware { diag_h: diag.clone(), alpha: 0.5 },
@@ -241,7 +241,7 @@ mod tests {
     fn identity_scales_change_nothing() {
         let mut rng = Rng::new(6);
         let w = Matrix::randn(16, 64, &mut rng);
-        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().no_bf16();
         let scaled = ScaledQuantizer::new(
             RtnQuantizer::symmetric(),
             ScalePolicy::ActivationAware { diag_h: vec![2.0; 64], alpha: 0.5 },

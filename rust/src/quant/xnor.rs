@@ -143,7 +143,7 @@ mod tests {
     #[test]
     fn closed_form_alpha() {
         let w = Matrix::from_vec(1, 4, vec![1.0, -2.0, 3.0, -4.0]);
-        let q = XnorQuantizer::whole().quantize(&w, &QuantConfig::per_tensor(1).no_bf16());
+        let q = XnorQuantizer::whole().quantize(&w, &QuantConfig::per_tensor(1).unwrap().no_bf16());
         assert_eq!(q.dequant.data, vec![2.5, -2.5, 2.5, -2.5]);
     }
 
@@ -157,7 +157,7 @@ mod tests {
                 *v = 0.1;
             }
         }
-        let q = XnorQuantizer::whole().quantize(&w, &QuantConfig::per_tensor(1).no_bf16());
+        let q = XnorQuantizer::whole().quantize(&w, &QuantConfig::per_tensor(1).unwrap().no_bf16());
         let n = w.len() as f64;
         let l1: f64 = w.data.iter().map(|&v| v.abs() as f64).sum();
         let l2: f64 = w.data.iter().map(|&v| (v as f64) * (v as f64)).sum();
@@ -171,7 +171,7 @@ mod tests {
         for (i, v) in w.data.iter_mut().enumerate() {
             *v *= 1.0 + (i / 256) as f32;
         }
-        let cfg = QuantConfig::block_wise(1, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(1, 64).unwrap().no_bf16();
         let whole = XnorQuantizer::whole().quantize(&w, &cfg);
         let blocked = XnorQuantizer::blocked().quantize(&w, &cfg);
         assert!(blocked.mse(&w) <= whole.mse(&w));
@@ -183,7 +183,7 @@ mod tests {
         // paper builds on
         let mut rng = Rng::new(3);
         let w = Matrix::randn(4, 32, &mut rng);
-        let xnor = XnorQuantizer::whole().quantize(&w, &QuantConfig::per_tensor(1).no_bf16());
+        let xnor = XnorQuantizer::whole().quantize(&w, &QuantConfig::per_tensor(1).unwrap().no_bf16());
         let code = Solver::new(Algo::Gg).quantize(&w.data, 1);
         let msb = code.dequantize();
         for (a, b) in xnor.dequant.data.iter().zip(&msb) {
@@ -195,7 +195,7 @@ mod tests {
     fn zero_dummy_is_worst() {
         let mut rng = Rng::new(4);
         let w = Matrix::randn(8, 64, &mut rng);
-        let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap().no_bf16();
         let zero = ZeroQuantizer.quantize(&w, &cfg);
         let xnor = XnorQuantizer::whole().quantize(&w, &cfg);
         assert!(zero.mse(&w) > xnor.mse(&w));

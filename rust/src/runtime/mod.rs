@@ -91,6 +91,9 @@ pub struct ModelRunner {
     /// ABI order of weight names (for targeted updates).
     names: Vec<String>,
     shapes: Vec<Vec<usize>>,
+    /// Workers for decoding packed payload maps on weight swap-in;
+    /// `None` = one per available core. Set via [`BackendBuilder`].
+    decode_threads: Option<usize>,
 }
 
 impl ModelRunner {
@@ -121,19 +124,30 @@ impl ModelRunner {
             vocab: manifest.vocab,
             names,
             shapes,
+            decode_threads: None,
         })
+    }
+
+    /// Pin the worker count used to decode packed payload maps on
+    /// swap-in (default: one per available core).
+    pub fn set_decode_threads(&mut self, threads: usize) {
+        self.decode_threads = (threads > 0).then_some(threads);
     }
 
     /// Replace a subset of weights (by name) — used to swap in each
     /// quantized variant without recompiling or re-uploading the rest.
     /// Packed payload maps ([`crate::pipeline::QuantizedModel::export_packed`])
-    /// are detected and decoded transparently on one worker per available
-    /// core; use [`ModelRunner::update_weights_packed`] to pick the decode
-    /// pool size explicitly.
+    /// are detected and decoded transparently on the configured decode
+    /// pool ([`ModelRunner::set_decode_threads`] /
+    /// [`BackendBuilder::threads`]; default one worker per core).
     pub fn update_weights(&mut self, updates: &TensorMap) -> Result<usize> {
         if crate::pipeline::is_packed_map(updates) {
-            let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-            return self.update_weights_packed(updates, threads);
+            let threads = self.decode_threads.unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+            // the decoded map is plain f32 (no payload keys): no recursion
+            let decoded = crate::pipeline::decode_packed_model(updates, threads)?;
+            return self.update_weights(&decoded);
         }
         let mut n = 0;
         for (i, name) in self.names.iter().enumerate() {
@@ -146,11 +160,13 @@ impl ModelRunner {
         Ok(n)
     }
 
-    /// Decode a packed payload map (u4/i8 codes + scale tables, `.msbt`
-    /// v2) on `threads` workers and swap the reconstructed weights in —
-    /// the serving path for booting straight from a packed artifact.
+    /// Decode a packed payload map on `threads` workers and swap the
+    /// reconstructed weights in.
+    #[deprecated(
+        note = "use update_weights (packed payloads are auto-detected; pick the \
+                decode pool via set_decode_threads or runtime::BackendBuilder)"
+    )]
     pub fn update_weights_packed(&mut self, packed: &TensorMap, threads: usize) -> Result<usize> {
-        // the decoded map is plain f32 (no payload keys): no recursion
         let decoded = crate::pipeline::decode_packed_model(packed, threads)?;
         self.update_weights(&decoded)
     }
@@ -286,6 +302,143 @@ impl LogitsFn for ModelRunner {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Backend: one handle over the three serving constructions.
+// ---------------------------------------------------------------------------
+
+/// The three ways this crate serves a model, behind one enum so drivers
+/// (`examples/serve_eval.rs`, `msb score`) pick a backend by name instead
+/// of growing mutually exclusive flags:
+///
+/// * [`Backend::Runner`] — the PJRT-compiled HLO executable (XLA forward)
+///   over f32 weight buffers; packed payloads decode on swap-in.
+/// * [`Backend::Fused`] — per-layer [`crate::kernels::PackedLinear`]
+///   handles answering matvec/matmul requests straight off the codes
+///   (behind [`crate::server::GemvServer`]); never decodes.
+/// * [`Backend::Forward`] — the fused CPU transformer forward
+///   ([`crate::forward::ForwardModel`]): full token scoring straight off
+///   the codes, no XLA anywhere.
+///
+/// Build one with [`BackendBuilder`].
+pub enum Backend {
+    Runner(ModelRunner),
+    Fused(FusedModel),
+    Forward(crate::forward::ForwardModel),
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Runner(_) => "runner",
+            Backend::Fused(_) => "fused",
+            Backend::Forward(_) => "forward",
+        }
+    }
+
+    /// Token-scoring view, when this backend has one (`runner` and
+    /// `forward` do; `fused` serves per-layer products instead).
+    pub fn logits_fn(&self) -> Option<&dyn LogitsFn> {
+        match self {
+            Backend::Runner(r) => Some(r),
+            Backend::Forward(f) => Some(f),
+            Backend::Fused(_) => None,
+        }
+    }
+
+    pub fn into_runner(self) -> Result<ModelRunner> {
+        match self {
+            Backend::Runner(r) => Ok(r),
+            other => anyhow::bail!("backend '{}' is not a PJRT runner", other.name()),
+        }
+    }
+
+    pub fn into_fused(self) -> Result<FusedModel> {
+        match self {
+            Backend::Fused(f) => Ok(f),
+            other => anyhow::bail!("backend '{}' is not a fused gemv model", other.name()),
+        }
+    }
+
+    pub fn into_forward(self) -> Result<crate::forward::ForwardModel> {
+        match self {
+            Backend::Forward(f) => Ok(f),
+            other => anyhow::bail!("backend '{}' is not a CPU forward model", other.name()),
+        }
+    }
+}
+
+/// Carries the knobs every serving construction shares (worker threads
+/// today) and hands back a [`Backend`] — the single entry point that
+/// replaced the `ModelRunner::new` + `update_weights_packed` /
+/// `FusedModel::from_packed_map` / `ForwardModel::from_packed_map` trio
+/// drivers used to wire by hand.
+#[derive(Clone, Debug, Default)]
+pub struct BackendBuilder {
+    threads: usize,
+}
+
+impl BackendBuilder {
+    pub fn new() -> BackendBuilder {
+        BackendBuilder { threads: 0 }
+    }
+
+    /// Worker threads: payload decode for `runner`, pooled kernels for
+    /// `forward`. `0` (the default) means one per available core.
+    pub fn threads(mut self, threads: usize) -> BackendBuilder {
+        self.threads = threads;
+        self
+    }
+
+    fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+
+    /// PJRT runner over `spec`'s compiled HLO; quantized variants (packed
+    /// or plain) swap in later via [`ModelRunner::update_weights`].
+    pub fn runner(
+        &self,
+        manifest: &Manifest,
+        spec: &ModelSpec,
+        weights: &TensorMap,
+    ) -> Result<Backend> {
+        let mut r = ModelRunner::new(manifest, spec, weights)?;
+        r.set_decode_threads(self.resolved_threads());
+        Ok(Backend::Runner(r))
+    }
+
+    /// Fused per-layer serving handles from an `export_packed` artifact.
+    pub fn fused(&self, map: &TensorMap) -> Result<Backend> {
+        Ok(Backend::Fused(FusedModel::from_packed_map(map)?))
+    }
+
+    /// Fused CPU transformer forward from an `export_packed` artifact.
+    pub fn forward(
+        &self,
+        spec: crate::forward::ForwardSpec,
+        map: &TensorMap,
+    ) -> Result<Backend> {
+        let m = crate::forward::ForwardModel::from_packed_map(spec, map)?
+            .with_threads(self.resolved_threads());
+        Ok(Backend::Forward(m))
+    }
+
+    /// The f32-reference twin of [`BackendBuilder::forward`]: same layer
+    /// graph over a dense weight map.
+    pub fn forward_dense(
+        &self,
+        spec: crate::forward::ForwardSpec,
+        map: &TensorMap,
+    ) -> Result<Backend> {
+        let m = crate::forward::ForwardModel::from_dense(spec, map)?
+            .with_threads(self.resolved_threads());
+        Ok(Backend::Forward(m))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -315,7 +468,7 @@ mod tests {
     fn packed_fixture() -> (crate::pipeline::QuantizedModel, TensorMap) {
         use crate::io::manifest::{ModelSpec, ParamSpec};
         use crate::io::msbt::Tensor;
-        use crate::pipeline::{quantize_model, Method};
+        use crate::pipeline::{quantize, Method, QuantizeOptions};
         use crate::quant::QuantConfig;
         let spec = ModelSpec {
             name: "f".into(),
@@ -341,8 +494,9 @@ mod tests {
             m.data[7] = 0.0; // exception-list coverage
             weights.insert(name.into(), Tensor::f32(vec![r, c], m.data));
         }
-        let cfg = QuantConfig::block_wise(4, 64).with_packed();
-        let qm = quantize_model(&spec, weights, None, Method::Wgm, &cfg, 2).unwrap();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
+        let opts = QuantizeOptions::new().with_threads(2).with_packed();
+        let qm = quantize(&spec, weights, None, Method::Wgm, &cfg, &opts).unwrap();
         let map = qm.export_packed().unwrap();
         (qm, map)
     }
@@ -375,5 +529,42 @@ mod tests {
             assert_eq!(&ys[l.rows()..], &y[..]);
         }
         assert!(fm.gemv("nope", &[]).is_err());
+    }
+
+    /// One builder constructs every backend; the token-scoring view is
+    /// present exactly where a full forward pass exists.
+    #[test]
+    fn backend_builder_unifies_serving_constructions() {
+        use crate::forward::{synth, ForwardSpec};
+        use crate::pipeline::{quantize, Method, QuantizeOptions};
+        use crate::quant::QuantConfig;
+
+        let fs = ForwardSpec::new(40, 32, 1, 4, 48, 8, 2).unwrap();
+        let spec = synth::model_spec(&fs, "b");
+        let weights = synth::synth_weights(&fs, 5);
+        let cfg = QuantConfig::block_wise(4, 16).unwrap();
+        let opts = QuantizeOptions::new().with_packed();
+        let qm = quantize(&spec, weights, None, Method::Wgm, &cfg, &opts).unwrap();
+        let map = qm.export_packed().unwrap();
+
+        let b = BackendBuilder::new().threads(2);
+        let fused = b.fused(&map).unwrap();
+        assert_eq!(fused.name(), "fused");
+        assert!(fused.logits_fn().is_none(), "fused serves matvecs, not tokens");
+        assert!(fused.into_forward().is_err(), "wrong converter must refuse");
+
+        let fwd = b.forward(fs.clone(), &map).unwrap();
+        assert_eq!(fwd.name(), "forward");
+        let toks = synth::synth_tokens(&fs, fs.seq, 1);
+        let y = fwd.logits_fn().unwrap().logits(&toks).unwrap();
+        assert_eq!(y.len(), fs.batch * fs.seq * fs.vocab);
+
+        // the dense twin rides the same builder and scores the same shape
+        let decoded = crate::pipeline::decode_packed_model(&map, 1).unwrap();
+        let twin = b.forward_dense(fs.clone(), &decoded).unwrap();
+        let yt = twin.logits_fn().unwrap().logits(&toks).unwrap();
+        assert_eq!(yt.len(), y.len());
+        let model = fwd.into_forward().unwrap();
+        assert!(model.payload_bytes() * 2 < model.f32_bytes());
     }
 }

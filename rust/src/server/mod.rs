@@ -416,7 +416,7 @@ mod tests {
     fn fused_model() -> FusedModel {
         use crate::io::manifest::{ModelSpec, ParamSpec};
         use crate::io::msbt::{Tensor, TensorMap};
-        use crate::pipeline::{quantize_model, Method};
+        use crate::pipeline::{quantize, Method, QuantizeOptions};
         use crate::quant::QuantConfig;
         let spec = ModelSpec {
             name: "g".into(),
@@ -439,8 +439,9 @@ mod tests {
             let m = crate::tensor::Matrix::randn(r, c, &mut rng);
             weights.insert(name.into(), Tensor::f32(vec![r, c], m.data));
         }
-        let cfg = QuantConfig::block_wise(4, 64).with_packed();
-        let qm = quantize_model(&spec, weights, None, Method::Wgm, &cfg, 1).unwrap();
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
+        let opts = QuantizeOptions::new().with_packed();
+        let qm = quantize(&spec, weights, None, Method::Wgm, &cfg, &opts).unwrap();
         FusedModel::from_packed_map(&qm.export_packed().unwrap()).unwrap()
     }
 

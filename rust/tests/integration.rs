@@ -4,7 +4,7 @@
 use msb_quant::harness::Artifacts;
 use msb_quant::io::msbt;
 use msb_quant::msb::{Algo, Solver};
-use msb_quant::pipeline::{quantize_model, Method};
+use msb_quant::pipeline::{quantize, Method, QuantizeOptions};
 use msb_quant::quant::{msb::MsbQuantizer, QuantConfig, Quantizer};
 use msb_quant::runtime::{LogitsFn, ModelRunner};
 use msb_quant::stats::Rng;
@@ -28,7 +28,7 @@ fn solver_codebook_kernel_layout_roundtrip() {
     // same math the Pallas kernel implements (gather + sign).
     let mut rng = Rng::new(5);
     let w = Matrix::randn(16, 128, &mut rng);
-    let cfg = QuantConfig::block_wise(4, 64).no_bf16();
+    let cfg = QuantConfig::block_wise(4, 64).unwrap().no_bf16();
     let q = MsbQuantizer::wgm().quantize(&w, &cfg);
     let p = q.msb.as_ref().unwrap();
     let codes = p.codes.as_ref().unwrap();
@@ -57,7 +57,7 @@ fn solver_codebook_kernel_layout_roundtrip() {
 fn all_methods_produce_finite_bounded_output() {
     let mut rng = Rng::new(6);
     let w = Matrix::weightlike(32, 256, &mut rng);
-    let cfg = QuantConfig::block_wise(4, 64);
+    let cfg = QuantConfig::block_wise(4, 64).unwrap();
     for method in [
         Method::Rtn,
         Method::Bnb,
@@ -84,7 +84,9 @@ fn all_methods_produce_finite_bounded_output() {
         };
         let mut weights = TensorMap::new();
         weights.insert("w".into(), Tensor::f32(vec![32, 256], w.data.clone()));
-        let qm = quantize_model(&spec, weights, None, method, &cfg, 2).unwrap();
+        let qm = quantize(&spec, weights, None, method, &cfg,
+            &QuantizeOptions::new().with_threads(2))
+        .unwrap();
         let out = qm.weights.get("w").unwrap().as_f32().unwrap();
         assert!(out.iter().all(|v| v.is_finite()), "{method:?}");
         let absmax_in = w.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
@@ -127,8 +129,9 @@ fn packed_msbt_v2_roundtrip_size_and_bits() {
         weights.insert(name.into(), Tensor::f32(vec![r, c], m.data));
     }
 
-    let cfg = QuantConfig::block_wise(4, 64).with_packed();
-    let qm = quantize_model(&spec, weights, None, Method::Wgm, &cfg, 2).unwrap();
+    let cfg = QuantConfig::block_wise(4, 64).unwrap();
+    let opts = QuantizeOptions::new().with_threads(2).with_packed();
+    let qm = quantize(&spec, weights, None, Method::Wgm, &cfg, &opts).unwrap();
 
     let dir = std::env::temp_dir().join(format!("msbt_pack_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
@@ -193,8 +196,9 @@ fn fused_gemv_serves_packed_file_end_to_end() {
         m.data[11] = 0.0; // exception-list coverage through the file format
         weights.insert(name.into(), Tensor::f32(vec![r, c], m.data));
     }
-    let cfg = QuantConfig::block_wise(4, 64).with_packed();
-    let qm = quantize_model(&spec, weights, None, Method::Wgm, &cfg, 2).unwrap();
+    let cfg = QuantConfig::block_wise(4, 64).unwrap();
+    let opts = QuantizeOptions::new().with_threads(2).with_packed();
+    let qm = quantize(&spec, weights, None, Method::Wgm, &cfg, &opts).unwrap();
 
     let dir = std::env::temp_dir().join(format!("msbt_fused_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
@@ -279,13 +283,13 @@ fn runtime_weight_swap_changes_logits() {
     let tokens: Vec<i32> =
         (0..runner.batch() * runner.seq()).map(|i| (i % 90) as i32 + 1).collect();
     let before = runner.logits(&tokens).unwrap();
-    let qm = quantize_model(
+    let qm = quantize(
         spec,
         weights.clone(),
         None,
         Method::Wgm,
-        &QuantConfig::block_wise(2, 64), // 2-bit: large, visible distortion
-        1,
+        &QuantConfig::block_wise(2, 64).unwrap(), // 2-bit: large, visible distortion
+        &QuantizeOptions::new(),
     )
     .unwrap();
     // QuantizedModel.weights carries the full parameter set (pass-through
@@ -310,12 +314,12 @@ fn quantized_ppl_ordering_fp_best() {
     let short = &stream[..(96 * 16).min(stream.len())];
 
     let fp = msb_quant::eval::perplexity(&runner, short).unwrap();
-    let qm2 = quantize_model(spec, weights.clone(), None, Method::Wgm,
-        &QuantConfig::block_wise(2, 64), 1).unwrap();
+    let qm2 = quantize(spec, weights.clone(), None, Method::Wgm,
+        &QuantConfig::block_wise(2, 64).unwrap(), &QuantizeOptions::new()).unwrap();
     runner.update_weights(&qm2.weights).unwrap();
     let q2 = msb_quant::eval::perplexity(&runner, short).unwrap();
-    let qm4 = quantize_model(spec, weights.clone(), None, Method::Wgm,
-        &QuantConfig::block_wise(4, 64), 1).unwrap();
+    let qm4 = quantize(spec, weights.clone(), None, Method::Wgm,
+        &QuantConfig::block_wise(4, 64).unwrap(), &QuantizeOptions::new()).unwrap();
     runner.update_weights(&qm4.weights).unwrap();
     let q4 = msb_quant::eval::perplexity(&runner, short).unwrap();
 
@@ -333,7 +337,7 @@ fn native_msb_kernel_executable_runs_and_tracks_simulated_path() {
     let exe = rt.load_hlo(arts.manifest.path(&k.hlo)).unwrap();
 
     let block = arts.manifest.msb_block;
-    let cfg = QuantConfig::block_wise(4, block).no_bf16();
+    let cfg = QuantConfig::block_wise(4, block).unwrap().no_bf16();
     let q = MsbQuantizer::wgm();
     let toks: Vec<i32> = (0..k.batch * spec.seq).map(|i| (i % 90) as i32 + 1).collect();
     let mut bufs = vec![rt.upload_i32(&toks, &[k.batch, spec.seq]).unwrap()];
@@ -400,7 +404,7 @@ fn harness_report_row_formats() {
         &mut runner,
         &weights,
         Method::Rtn,
-        &QuantConfig::block_wise(4, 64),
+        &QuantConfig::block_wise(4, 64).unwrap(),
         1,
     )
     .unwrap();

@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench-smoke bench-perf bench-pack bench-gemv bench-forward lint fmt artifacts clean
+.PHONY: build test bench-smoke bench-perf bench-pack bench-gemv bench-forward bench-all lint fmt artifacts clean
 
 ## Release build of the library, `msb` CLI, all benches and all examples.
 build:
@@ -35,10 +35,11 @@ bench-perf:
 bench-pack:
 	$(CARGO) bench --bench perf_pack
 
-## Fused packed-weight GEMV vs decode-then-matmul ablation (gemv-* keys
-## merged into the same BENCH_perf.json as bench-perf). Self-asserting:
-## fused must match the reference, beat the decode baseline, and allocate
-## no f32 weight buffer (peak-allocation gate).
+## Fused packed-weight GEMV vs decode-then-matmul ablation (gemv-* and
+## int8-* keys merged into the same BENCH_perf.json as bench-perf).
+## Self-asserting: fused must match the reference, beat the decode
+## baseline, allocate no f32 weight buffer (peak-allocation gate), and
+## the int8 MAC arm must beat the f32 fused path at equal threads.
 bench-gemv:
 	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_gemv
 
@@ -49,6 +50,16 @@ bench-gemv:
 ## cache must beat per-position full recompute.
 bench-forward:
 	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_forward
+
+## Every BENCH_perf.json producer in one pass (plus the pack pipeline's
+## BENCH_pack.json). Each binary stamps its keys with a `sources` entry,
+## so a full refresh leaves an attributable provenance map behind.
+bench-all:
+	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_hotpath
+	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench table3_quant_time
+	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_gemv
+	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_forward
+	$(CARGO) bench --bench perf_pack
 
 ## Style gate: rustfmt + clippy with warnings denied.
 lint:

@@ -5,11 +5,15 @@
 //!   cargo run --release --example serve_eval -- [--backend runner|fused|forward]
 //!       [--payload payload.msbt] [--requests 64] [--clients 8]
 //!       [--threads N] [--model small] [--method wgm] [--batch B]
+//!       [--mac f32|int8|auto]
 //!       [--vocab V --d D --layers L --heads H --ff F --seq S --rows R]
 //!
 //! One `--backend` flag selects the serving construction; every backend
 //! is built through `runtime::BackendBuilder`, which carries the shared
-//! knobs (`--threads`, 0 = one per core):
+//! knobs (`--threads`, 0 = one per core; `--mac` picks the fused MAC
+//! path for the `fused`/`forward` backends — `int8` runs the integer
+//! multiply-accumulate on affine-decode methods, `auto` falls back to
+//! f32 per layer where no affine decode exists):
 //!
 //! * `runner` — the PJRT-compiled XLA forward (needs `artifacts/`).
 //!   With `--payload`, boots straight from a packed `.msbt` artifact
@@ -57,7 +61,8 @@ fn main() -> Result<()> {
         payload = Some(p.to_string());
     }
     let threads = args.usize_or("threads", args.usize_or("decode-threads", 0)?)?;
-    let builder = BackendBuilder::new().threads(threads);
+    let mac = msb_quant::kernels::MacMode::parse(args.str_or("mac", "f32"))?;
+    let builder = BackendBuilder::new().threads(threads).mac(mac);
     match backend.as_str() {
         "runner" => serve_runner(&args, &builder, payload),
         "fused" => {
@@ -196,11 +201,12 @@ fn serve_fused(args: &Args, builder: &BackendBuilder, payload: &str) -> Result<(
     let (pb, fb) = (model.payload_bytes(), model.f32_bytes());
     println!(
         "serving {} fused {} layers from {payload} in {:.2}s \
-         ({pb} payload bytes = {:.3}x of the {fb}-byte f32 set; no decode)",
+         ({pb} payload bytes = {:.3}x of the {fb}-byte f32 set; no decode; mac={})",
         model.method(),
         model.linears().len(),
         t0.elapsed().as_secs_f64(),
         pb as f64 / fb as f64,
+        model.mac().name(),
     );
 
     // reference answers computed serially BEFORE the model moves into the

@@ -152,7 +152,7 @@ fn main() {
     results.insert("forward-kv-speedup".to_string(), t_full / t_incr);
     results.insert("forward-max-rel".to_string(), rel);
 
-    match benchlib::merge_bench_json("perf", &results) {
+    match benchlib::merge_bench_json("perf", "perf_forward", &results) {
         Ok(path) => println!("\nmerged {} keys into {}", results.len(), path.display()),
         Err(e) => eprintln!("\nBENCH_perf.json not written: {e}"),
     }

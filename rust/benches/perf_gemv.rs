@@ -13,10 +13,18 @@
 //! * the fused call's **peak heap allocation** stays under `n` bytes —
 //!   a quarter of the `4n`-byte f32 weight buffer the baseline must
 //!   materialize (tracked by a counting global allocator; the baseline is
-//!   also measured and must exceed `4n`, proving the counter sees it).
+//!   also measured and must exceed `4n`, proving the counter sees it);
+//! * both MAC paths issue a **bounded number of heap allocations** per
+//!   call (the per-tile scratch is a stack `TileScratch`, hoisted out of
+//!   the row loop — the count must not scale with rows);
+//! * the **int8 MAC arm** (rtn-u4, always 512-dim): int8 gemv beats the
+//!   f32 fused path at 1 and 4 threads, scalar/SIMD/pooled int8 are
+//!   bit-identical, and a 1-layer synthetic forward under `mac=int8`
+//!   lands within 1e-2 L2-relative of its f32-MAC twin (ppl drift
+//!   reported via `eval::perplexity`).
 //!
-//! Results merge into `BENCH_perf.json` (`gemv-*` keys) next to the
-//! engine/scheduler numbers via `benchlib::merge_bench_json`.
+//! Results merge into `BENCH_perf.json` (`gemv-*` / `int8-*` keys) next
+//! to the engine/scheduler numbers via `benchlib::merge_bench_json`.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeMap;
@@ -41,6 +49,7 @@ struct CountingAlloc;
 
 static LIVE: AtomicUsize = AtomicUsize::new(0);
 static PEAK: AtomicUsize = AtomicUsize::new(0);
+static COUNT: AtomicUsize = AtomicUsize::new(0);
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
@@ -48,6 +57,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
         if !p.is_null() {
             let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
             PEAK.fetch_max(live, Ordering::Relaxed);
+            COUNT.fetch_add(1, Ordering::Relaxed);
         }
         p
     }
@@ -62,6 +72,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
         if !p.is_null() {
             let live = LIVE.fetch_add(new_size, Ordering::Relaxed) + new_size;
             PEAK.fetch_max(live, Ordering::Relaxed);
+            COUNT.fetch_add(1, Ordering::Relaxed);
             LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
         }
         p
@@ -80,6 +91,14 @@ fn peak_alloc_of<R>(f: impl FnOnce() -> R) -> (R, usize) {
     let r = f();
     let peak = PEAK.load(Ordering::Relaxed);
     (r, peak.saturating_sub(base))
+}
+
+/// Run `f` and return how many heap allocations it issued. Same
+/// single-threaded caveat as [`peak_alloc_of`].
+fn alloc_count_of<R>(f: impl FnOnce() -> R) -> (R, usize) {
+    let base = COUNT.load(Ordering::Relaxed);
+    let r = f();
+    (r, COUNT.load(Ordering::Relaxed) - base)
 }
 
 fn activation(cols: usize, seed: u64) -> Vec<f32> {
@@ -242,7 +261,128 @@ fn main() {
     results.insert("gemv-pooled-bps".to_string(), n_blocks / t_pooled);
     results.insert("gemv-gemm8-bps".to_string(), n_blocks * batch as f64 / t_gemm);
 
-    match benchlib::merge_bench_json("perf", &results) {
+    // --- integer MAC arm: rtn-u4, fixed 512-dim so the comparison is
+    // meaningful even under MSB_BENCH_FAST ------------------------------
+    {
+        use msb_quant::eval::perplexity;
+        use msb_quant::forward::{synth, ForwardSpec};
+        use msb_quant::kernels::MacMode;
+        use msb_quant::pipeline::{quantize, QuantizeOptions};
+        use msb_quant::quant::registry::Method;
+        use msb_quant::runtime::BackendBuilder;
+
+        let dim8 = 512usize;
+        let reps8 = reps.max(5);
+        let q8: Arc<dyn BlockQuantizer> = Arc::new(RtnQuantizer::symmetric());
+        let cfg8 = QuantConfig::block_wise(4, 64).unwrap().with_packed();
+        let mut w = benchlib::proxy_matrix(dim8, dim8);
+        for i in (0..w.len()).step_by(397) {
+            w.data[i] = 0.0; // exceptions must ride the int8 epilogue too
+        }
+        let pt = quantize_serial(&*q8, &w, &cfg8).packed.expect("packed payload");
+        let n_blocks8 = pt.n_blocks() as f64;
+        let pl = PackedLinear::new(pt).expect("fused handle");
+        assert!(pl.int8_eligible(), "rtn-u4 must be int8-eligible");
+        let pl8 = pl.clone().with_mac(MacMode::Int8).expect("int8 handle");
+        let x = activation(dim8, 0xBEAA);
+        let decoded = decode_packed(Arc::clone(&q8), pl.packed(), None);
+
+        // correctness + determinism gates
+        let y8 = pl8.gemv(&x);
+        assert_matvec_close(&decoded, &x, &y8, 2.5e-2);
+        let scalar8 = pl8.clone().with_kernel(Kernel::Scalar);
+        assert_eq!(scalar8.gemv(&x), y8, "int8 SIMD != scalar");
+
+        // scratch-hoist gate: allocations per call are a small constant
+        // (output + activation codes/scales), never a per-row scratch
+        let (_, f32_allocs) = alloc_count_of(|| pl.gemv(&x));
+        let (_, int8_allocs) = alloc_count_of(|| pl8.gemv(&x));
+        assert!(
+            f32_allocs <= 8,
+            "f32 gemv issued {f32_allocs} allocations (scratch not hoisted?)"
+        );
+        assert!(
+            int8_allocs <= 8,
+            "int8 gemv issued {int8_allocs} allocations (scratch not hoisted?)"
+        );
+
+        // int8 beats the f32 fused path at equal threads: serial (1) ...
+        let tf1 = time_median(reps8, || pl.gemv(&x));
+        let t81 = time_median(reps8, || pl8.gemv(&x));
+        assert!(
+            t81 < tf1,
+            "int8 gemv must beat fused f32 at 1 thread: {t81:.6}s vs {tf1:.6}s"
+        );
+        // ... and pooled (4), bit-identical to serial while it's at it
+        let mut pool4 = ThreadPool::new(4, 16);
+        assert_eq!(pl8.gemv_pooled(&x, &pool4), y8, "int8 pooled != serial");
+        let tf4 = time_median(reps8, || pl.gemv_pooled(&x, &pool4));
+        let t84 = time_median(reps8, || pl8.gemv_pooled(&x, &pool4));
+        pool4.shutdown();
+        assert!(
+            t84 < tf4,
+            "int8 gemv must beat fused f32 at 4 threads: {t84:.6}s vs {tf4:.6}s"
+        );
+
+        // end-to-end budget: 1-layer synthetic forward, int8 vs f32 MAC
+        let fs = ForwardSpec::new(128, 64, 1, 4, 128, 16, 1).expect("forward spec");
+        let spec = synth::model_spec(&fs, "int8-bench");
+        let weights = synth::synth_weights(&fs, 0xBEAB);
+        let opts = QuantizeOptions::new().with_threads(1);
+        let payload = quantize(&spec, weights, None, Method::Rtn, &cfg8, &opts)
+            .expect("quantize forward payload")
+            .export_packed()
+            .expect("export payload");
+        let m8 = BackendBuilder::new()
+            .threads(1)
+            .mac(MacMode::Int8)
+            .forward(fs.clone(), &payload)
+            .expect("int8 forward backend")
+            .into_forward()
+            .expect("int8 forward model");
+        let mf = BackendBuilder::new()
+            .threads(1)
+            .forward(fs.clone(), &payload)
+            .expect("f32 forward backend")
+            .into_forward()
+            .expect("f32 forward model");
+        let toks = synth::synth_tokens(&fs, fs.seq, 0xBEAC);
+        let l8 = m8.logits(&toks).expect("int8 logits");
+        let lf = mf.logits(&toks).expect("f32 logits");
+        let (mut d2, mut b2) = (0.0f64, 0.0f64);
+        for (&a, &b) in l8.iter().zip(&lf) {
+            d2 += ((a - b) as f64).powi(2);
+            b2 += (b as f64).powi(2);
+        }
+        let relerr = (d2 / b2.max(1e-30)).sqrt();
+        assert!(relerr <= 1e-2, "int8 forward logits rel err {relerr:.3e} > 1e-2");
+        let ppl8 = perplexity(&m8, &toks).expect("int8 ppl");
+        let pplf = perplexity(&mf, &toks).expect("f32 ppl");
+
+        benchlib::header("integer MAC arm (rtn-u4, 512x512)");
+        println!(
+            "  int8 serial {t81:>9.5}s ({:>11.0} blk/s)   f32 serial {tf1:>9.5}s ({:.2}x)",
+            n_blocks8 / t81,
+            tf1 / t81
+        );
+        println!(
+            "  int8 pooled {t84:>9.5}s ({:>11.0} blk/s)   f32 pooled {tf4:>9.5}s ({:.2}x)",
+            n_blocks8 / t84,
+            tf4 / t84
+        );
+        println!(
+            "  forward twin: logit L2 rel {relerr:.2e} (gate 1e-2), \
+             ppl int8 {ppl8:.4} vs f32 {pplf:.4} (drift {:.2e})",
+            (ppl8 - pplf).abs()
+        );
+        results.insert("int8-gemv-bps".to_string(), n_blocks8 / t81);
+        results.insert("int8-speedup-t1".to_string(), tf1 / t81);
+        results.insert("int8-speedup-t4".to_string(), tf4 / t84);
+        results.insert("int8-logit-relerr".to_string(), relerr);
+        results.insert("int8-ppl-drift".to_string(), (ppl8 - pplf).abs());
+    }
+
+    match benchlib::merge_bench_json("perf", "perf_gemv", &results) {
         Ok(path) => println!("\nmerged {} keys into {}", results.len(), path.display()),
         Err(e) => eprintln!("\nBENCH_perf.json not written: {e}"),
     }

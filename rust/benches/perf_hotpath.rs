@@ -203,7 +203,7 @@ fn main() {
 
     // --- machine-readable output -----------------------------------------
     // merge (not overwrite): the table3 scheduler arm shares this file
-    match benchlib::merge_bench_json("perf", &results) {
+    match benchlib::merge_bench_json("perf", "perf_hotpath", &results) {
         Ok(path) => println!("\nwrote {} ({} keys)", path.display(), results.len()),
         Err(e) => eprintln!("\nBENCH_perf.json not written: {e}"),
     }

@@ -164,7 +164,7 @@ fn main() {
     results.insert("sched-sequential-bps".to_string(), bps_seq);
     results.insert("sched-global-bps".to_string(), bps_global);
     results.insert("sched-speedup".to_string(), t_seq / t_global);
-    match benchlib::merge_bench_json("perf", &results) {
+    match benchlib::merge_bench_json("perf", "table3_quant_time", &results) {
         Ok(path) => println!("\nmerged {} ({} sched keys)", path.display(), results.len()),
         Err(e) => eprintln!("\nBENCH_perf.json not merged: {e}"),
     }

@@ -76,13 +76,15 @@ pub fn bench_json_path(name: &str) -> std::path::PathBuf {
 
 /// Env-independent core of [`write_bench_json`]: serialize
 /// `{schema, fast, results: {key: num}}` (plus an optional provenance
-/// `note`) to an explicit path.
+/// `note` and a per-key `sources` map naming the bench binary that
+/// produced each result) to an explicit path.
 fn write_bench_json_full(
     path: &std::path::Path,
     name: &str,
     results: &BTreeMap<String, f64>,
     fast: bool,
     note: Option<&str>,
+    sources: &BTreeMap<String, String>,
 ) -> std::io::Result<()> {
     let mut obj = BTreeMap::new();
     obj.insert("schema".to_string(), Value::Str(format!("msb-bench/{name}/v1")));
@@ -94,6 +96,12 @@ fn write_bench_json_full(
         "results".to_string(),
         Value::Obj(results.iter().map(|(k, &v)| (k.clone(), Value::Num(v))).collect()),
     );
+    if !sources.is_empty() {
+        obj.insert(
+            "sources".to_string(),
+            Value::Obj(sources.iter().map(|(k, v)| (k.clone(), Value::Str(v.clone()))).collect()),
+        );
+    }
     std::fs::write(path, crate::io::json::to_string(&Value::Obj(obj)))
 }
 
@@ -103,7 +111,7 @@ pub fn write_bench_json_to(
     name: &str,
     results: &BTreeMap<String, f64>,
 ) -> std::io::Result<()> {
-    write_bench_json_full(path, name, results, fast_mode(), None)
+    write_bench_json_full(path, name, results, fast_mode(), None, &BTreeMap::new())
 }
 
 /// Persist a bench's results as JSON so the repo's perf trajectory
@@ -122,15 +130,21 @@ pub fn write_bench_json(
 /// keys already at `path` (fresh `results` win on conflict), then write.
 /// Provenance survives the union: the `fast` flag is the OR of this run
 /// and the file's prior flag (any smoke-mode contribution taints the
-/// merged numbers), and a prior `note` field is carried forward.
+/// merged numbers), a prior `note` field is carried forward, and every
+/// key this run contributes is stamped with `source` (the producing bench
+/// binary) in the `sources` map — prior stamps survive for keys this run
+/// does not touch.
 pub fn merge_bench_json_to(
     path: &std::path::Path,
     name: &str,
+    source: &str,
     results: &BTreeMap<String, f64>,
 ) -> std::io::Result<()> {
     let mut merged = results.clone();
     let mut fast = fast_mode();
     let mut note = None;
+    let mut sources: BTreeMap<String, String> =
+        results.keys().map(|k| (k.clone(), source.to_string())).collect();
     if let Ok(text) = std::fs::read_to_string(path) {
         if let Ok(v) = crate::io::json::parse(&text) {
             if let Some(Value::Obj(old)) = v.get("results") {
@@ -140,27 +154,40 @@ pub fn merge_bench_json_to(
                     }
                 }
             }
+            if let Some(Value::Obj(old)) = v.get("sources") {
+                for (k, val) in old {
+                    if let Some(s) = val.as_str() {
+                        sources.entry(k.clone()).or_insert_with(|| s.to_string());
+                    }
+                }
+            }
             fast |= v.get("fast").and_then(Value::as_bool).unwrap_or(false);
             note = v.get("note").and_then(Value::as_str).map(String::from);
         }
     }
-    write_bench_json_full(path, name, &merged, fast, note.as_deref())
+    // stamps for keys that no longer have a result are dropped: the
+    // sources map describes exactly the merged result set
+    sources.retain(|k, _| merged.contains_key(k));
+    write_bench_json_full(path, name, &merged, fast, note.as_deref(), &sources)
 }
 
 /// Like [`write_bench_json`], but union with any keys already in the
 /// file (fresh `results` win on conflict). Lets several bench binaries
 /// contribute to one trajectory file — `perf_hotpath` and the
-/// `table3_quant_time` scheduler arm both land in `BENCH_perf.json`.
+/// `table3_quant_time` scheduler arm both land in `BENCH_perf.json` — and
+/// `source` names the contributing binary so each merged key stays
+/// attributable (`sources` map in the file).
 /// The `fast` taint is sticky by design: a merged file may still carry
 /// smoke-contributed keys you cannot distinguish, so the only way to
 /// certify a clean full-mode trajectory is to delete the file and rerun
-/// `make bench-perf` without `MSB_BENCH_FAST`.
+/// `make bench-all` without `MSB_BENCH_FAST`.
 pub fn merge_bench_json(
     name: &str,
+    source: &str,
     results: &BTreeMap<String, f64>,
 ) -> std::io::Result<std::path::PathBuf> {
     let path = bench_json_path(name);
-    merge_bench_json_to(&path, name, results)?;
+    merge_bench_json_to(&path, name, source, results)?;
     Ok(path)
 }
 
@@ -211,7 +238,7 @@ mod tests {
         let mut second = BTreeMap::new();
         second.insert("sched-global-bps".to_string(), 7.0);
         second.insert("shared".to_string(), 2.0); // fresh value wins
-        merge_bench_json_to(&path, "perf", &second).unwrap();
+        merge_bench_json_to(&path, "perf", "table3_quant_time", &second).unwrap();
         let v = crate::io::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         let r = v.req("results").unwrap();
         assert_eq!(r.get("msb-wgm").and_then(Value::as_f64), Some(100.0));
@@ -219,17 +246,49 @@ mod tests {
         assert_eq!(r.get("shared").and_then(Value::as_f64), Some(2.0));
         // merging onto a missing file is a plain write
         let fresh = dir.join("fresh.json");
-        merge_bench_json_to(&fresh, "perf", &second).unwrap();
+        merge_bench_json_to(&fresh, "perf", "table3_quant_time", &second).unwrap();
         let v = crate::io::json::parse(&std::fs::read_to_string(&fresh).unwrap()).unwrap();
         assert_eq!(v.req_str("schema").unwrap(), "msb-bench/perf/v1");
         // provenance survives the union: a prior fast-mode flag taints the
         // merged file and a note field is carried forward
         let prov = dir.join("prov.json");
-        write_bench_json_full(&prov, "perf", &first, true, Some("seed note")).unwrap();
-        merge_bench_json_to(&prov, "perf", &second).unwrap();
+        write_bench_json_full(&prov, "perf", &first, true, Some("seed note"), &BTreeMap::new())
+            .unwrap();
+        merge_bench_json_to(&prov, "perf", "table3_quant_time", &second).unwrap();
         let v = crate::io::json::parse(&std::fs::read_to_string(&prov).unwrap()).unwrap();
         assert_eq!(v.get("fast").and_then(Value::as_bool), Some(true));
         assert_eq!(v.get("note").and_then(Value::as_str), Some("seed note"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_bench_json_stamps_key_provenance() {
+        let dir = std::env::temp_dir().join(format!("msb_bench_src_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sources.json");
+        let mut first = BTreeMap::new();
+        first.insert("gemv-fused-bps".to_string(), 10.0);
+        first.insert("shared".to_string(), 1.0);
+        merge_bench_json_to(&path, "perf", "perf_gemv", &first).unwrap();
+        let mut second = BTreeMap::new();
+        second.insert("forward-logits-bps".to_string(), 3.0);
+        second.insert("shared".to_string(), 2.0);
+        merge_bench_json_to(&path, "perf", "perf_forward", &second).unwrap();
+        let v = crate::io::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let s = v.req("sources").unwrap();
+        // untouched keys keep their original stamp; refreshed keys are
+        // re-attributed to the binary that produced the fresh value
+        assert_eq!(s.get("gemv-fused-bps").and_then(Value::as_str), Some("perf_gemv"));
+        assert_eq!(s.get("forward-logits-bps").and_then(Value::as_str), Some("perf_forward"));
+        assert_eq!(s.get("shared").and_then(Value::as_str), Some("perf_forward"));
+        // every merged result key is stamped
+        if let Some(Value::Obj(r)) = v.get("results") {
+            for k in r.keys() {
+                assert!(s.get(k).is_some(), "unstamped result key {k}");
+            }
+        } else {
+            panic!("results object missing");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

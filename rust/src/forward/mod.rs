@@ -34,7 +34,7 @@ pub mod synth;
 use anyhow::{ensure, Context, Result};
 
 use crate::io::msbt::TensorMap;
-use crate::kernels::{dense_gemv, Kernel, PackedLinear};
+use crate::kernels::{dense_gemv, Kernel, MacMode, PackedLinear};
 use crate::pool::{scoped_map, ThreadPool};
 use crate::quant::packing::PackedTensor;
 use crate::runtime::LogitsFn;
@@ -229,11 +229,35 @@ pub struct ForwardModel {
     pool: Option<ThreadPool>,
 }
 
+/// Rename real-checkpoint parameter keys onto the [`synth`] naming
+/// contract ([`synth::canonical_param_name`]); contract-named keys pass
+/// through untouched. A rename that lands on an already-present key is an
+/// error — the map would silently drop a tensor otherwise.
+fn canonicalize_names<V>(
+    map: std::collections::BTreeMap<String, V>,
+) -> Result<std::collections::BTreeMap<String, V>> {
+    let mut out = std::collections::BTreeMap::new();
+    for (name, v) in map {
+        let canon = match synth::canonical_param_name(&name) {
+            Some(c) => c,
+            None => name,
+        };
+        ensure!(
+            !out.contains_key(&canon),
+            "parameter '{canon}' appears twice after checkpoint-name canonicalization"
+        );
+        out.insert(canon, v);
+    }
+    Ok(out)
+}
+
 /// Parameter source shared by the two constructors: packed payloads win,
 /// anything else is looked up as a dense f32 tensor.
 struct Params<'a> {
     packed: std::collections::BTreeMap<String, PackedTensor>,
     dense: &'a TensorMap,
+    /// Multiply-accumulate mode applied to every packed projection.
+    mac: MacMode,
 }
 
 impl Params<'_> {
@@ -245,8 +269,13 @@ impl Params<'_> {
                 pt.rows,
                 pt.cols
             );
-            let pl =
-                PackedLinear::new(pt).with_context(|| format!("fused handle for '{name}'"))?;
+            let pl = PackedLinear::new(pt)
+                .with_context(|| format!("fused handle for '{name}'"))?
+                .with_mac(self.mac)
+                .with_context(|| format!("mac mode for '{name}'"))?;
+            if self.mac == MacMode::Auto && !pl.int8_eligible() {
+                eprintln!("mac=auto: projection '{name}' has no affine decode; f32 MAC");
+            }
             return Ok(Linear::Packed(pl));
         }
         Ok(Linear::Dense(self.matrix(name, rows, cols)?))
@@ -273,11 +302,28 @@ impl ForwardModel {
     /// Boot from an `export_packed` artifact: quantized projections stay
     /// packed ([`PackedLinear`] handles computing straight off the codes),
     /// pass-through tensors (norms, embeddings, exception-listed layers)
-    /// load dense. No full f32 weight set is ever materialized.
+    /// load dense. No full f32 weight set is ever materialized. Parameter
+    /// names follow the [`synth`] contract; real-checkpoint conventions
+    /// (HF `model.layers.N.self_attn.q_proj.weight` style) are renamed
+    /// onto it via [`synth::canonical_param_name`] before lookup.
     pub fn from_packed_map(spec: ForwardSpec, map: &TensorMap) -> Result<ForwardModel> {
+        Self::from_packed_map_with(spec, map, MacMode::F32)
+    }
+
+    /// [`ForwardModel::from_packed_map`] with a multiply-accumulate mode
+    /// applied to every packed projection. `MacMode::Int8` fails if the
+    /// payload's method has no affine decode; `MacMode::Auto` keeps such
+    /// projections on the f32 path, logging each fallback once.
+    pub fn from_packed_map_with(
+        spec: ForwardSpec,
+        map: &TensorMap,
+        mac: MacMode,
+    ) -> Result<ForwardModel> {
         spec.validate()?;
         let (_method, packed, passthrough) = crate::pipeline::packed_tensors(map)?;
-        Self::build(spec, Params { packed, dense: &passthrough })
+        let packed = canonicalize_names(packed)?;
+        let passthrough = canonicalize_names(passthrough)?;
+        Self::build(spec, Params { packed, dense: &passthrough, mac })
     }
 
     /// The f32-reference twin: every projection dense, same layer graph.
@@ -286,7 +332,7 @@ impl ForwardModel {
     /// fused kernels from the quantization error itself.
     pub fn from_dense(spec: ForwardSpec, map: &TensorMap) -> Result<ForwardModel> {
         spec.validate()?;
-        Self::build(spec, Params { packed: Default::default(), dense: map })
+        Self::build(spec, Params { packed: Default::default(), dense: map, mac: MacMode::F32 })
     }
 
     fn build(spec: ForwardSpec, mut params: Params<'_>) -> Result<ForwardModel> {
@@ -713,6 +759,87 @@ mod tests {
         let twin = ForwardModel::from_dense(fs, &decoded).unwrap();
         let ppl_twin = crate::eval::perplexity(&twin, &stream).unwrap();
         assert!((ppl - ppl_twin).abs() / ppl < 1e-3, "{ppl} vs {ppl_twin}");
+    }
+
+    /// Satellite: a payload quantized under the HF checkpoint naming
+    /// convention boots through `from_packed_map` unchanged — the alias
+    /// table renames every parameter onto the contract — and scores
+    /// bit-identically to the contract-named boot of the same weights.
+    #[test]
+    fn boots_from_checkpoint_named_payload() {
+        let fs = tiny();
+        let mut spec = synth::model_spec(&fs, "hf-named");
+        let weights = synth::synth_weights(&fs, 21);
+        // rename spec + weights to the HF convention before quantizing,
+        // so the packed artifact carries checkpoint-style keys throughout
+        let mut hf_weights = TensorMap::new();
+        for p in &mut spec.params {
+            let hf = synth::checkpoint_param_name(&p.name)
+                .unwrap_or_else(|| panic!("no checkpoint alias for {}", p.name));
+            hf_weights.insert(hf.clone(), weights.get(&p.name).unwrap().clone());
+            p.name = hf;
+        }
+        let cfg = QuantConfig::block_wise(4, 16).unwrap();
+        let opts = QuantizeOptions::new().with_threads(2).with_packed();
+        let qm = quantize(&spec, hf_weights, None, Method::Wgm, &cfg, &opts).unwrap();
+        let hf_packed = qm.export_packed().unwrap();
+        assert!(
+            hf_packed.keys().any(|k| k.starts_with("model.layers.0.self_attn")),
+            "fixture should actually carry checkpoint-style keys"
+        );
+        let model = ForwardModel::from_packed_map(fs.clone(), &hf_packed).unwrap();
+
+        // contract-named boot of the same weights, same quantization
+        let (packed, _, _) = fixture(&fs);
+        let contract = ForwardModel::from_packed_map(fs.clone(), &packed).unwrap();
+        let toks = synth::synth_tokens(&fs, fs.seq, 4);
+        assert_eq!(
+            model.logits(&toks).unwrap(),
+            contract.logits(&toks).unwrap(),
+            "checkpoint-named boot != contract-named boot"
+        );
+    }
+
+    /// MAC-mode plumbing: `Auto` over a wgm payload (non-affine) falls
+    /// back per projection and scores bit-identically to the f32 boot;
+    /// an explicit `Int8` request on it refuses.
+    #[test]
+    fn mac_mode_threads_through_projections() {
+        use crate::kernels::MacMode;
+        let fs = tiny();
+        let (packed, _, _) = fixture(&fs);
+        assert!(ForwardModel::from_packed_map_with(fs.clone(), &packed, MacMode::Int8).is_err());
+        let auto =
+            ForwardModel::from_packed_map_with(fs.clone(), &packed, MacMode::Auto).unwrap();
+        let f32m = ForwardModel::from_packed_map(fs.clone(), &packed).unwrap();
+        let toks = synth::synth_tokens(&fs, fs.seq, 9);
+        assert_eq!(auto.logits(&toks).unwrap(), f32m.logits(&toks).unwrap());
+
+        // an rtn payload under Int8 runs end-to-end and lands near the
+        // f32 twin (activation-quant noise only)
+        let spec = synth::model_spec(&fs, "fwd-int8");
+        let weights = synth::synth_weights(&fs, 21);
+        let cfg = QuantConfig::block_wise(4, 16).unwrap();
+        let opts = QuantizeOptions::new().with_threads(2).with_packed();
+        let qm = quantize(&spec, weights, None, Method::Rtn, &cfg, &opts).unwrap();
+        let rmap = qm.export_packed().unwrap();
+        let int8 =
+            ForwardModel::from_packed_map_with(fs.clone(), &rmap, MacMode::Int8).unwrap();
+        let twin = ForwardModel::from_packed_map(fs.clone(), &rmap).unwrap();
+        let yi = int8.logits(&toks).unwrap();
+        let yf = twin.logits(&toks).unwrap();
+        assert!(yi.iter().all(|v| v.is_finite()));
+        // L2-relative drift of the whole logit slab stays well under the
+        // serving budget the perf_gemv bench gates at 1e-2
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for (&a, &b) in yi.iter().zip(&yf) {
+            num += (a as f64 - b as f64).powi(2);
+            den += (b as f64).powi(2);
+        }
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel <= 2.5e-2, "int8 forward drifted {rel:.3e} from the f32 MAC");
+        // threads don't change the integer path's bits either
+        assert_eq!(yi, int8.with_threads(3).logits(&toks).unwrap());
     }
 
     #[test]

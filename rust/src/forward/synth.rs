@@ -91,6 +91,73 @@ pub fn synth_tokens(fs: &ForwardSpec, len: usize, seed: u64) -> Vec<i32> {
     (0..fs.batch * len).map(|_| rng.below(fs.vocab) as i32).collect()
 }
 
+/// Map a real-checkpoint parameter name (the HF Llama-style convention)
+/// onto this module's naming contract, or `None` when the name is not a
+/// recognized alias (contract-native names return `None` too — they need
+/// no renaming). The table:
+///
+/// | checkpoint name                                   | contract name      |
+/// |---------------------------------------------------|--------------------|
+/// | `model.embed_tokens.weight`                       | `tok_emb`          |
+/// | `model.layers.{l}.input_layernorm.weight`         | `layer{l}.attn_norm` |
+/// | `model.layers.{l}.self_attn.{q,k,v,o}_proj.weight`| `layer{l}.w{q,k,v,o}` |
+/// | `model.layers.{l}.post_attention_layernorm.weight`| `layer{l}.mlp_norm` |
+/// | `model.layers.{l}.mlp.{gate,up,down}_proj.weight` | `layer{l}.w_{gate,up,down}` |
+/// | `model.norm.weight`                               | `final_norm`       |
+/// | `lm_head.weight`                                  | `lm_head`          |
+pub fn canonical_param_name(name: &str) -> Option<String> {
+    match name {
+        "model.embed_tokens.weight" => return Some("tok_emb".into()),
+        "model.norm.weight" => return Some("final_norm".into()),
+        "lm_head.weight" => return Some("lm_head".into()),
+        _ => {}
+    }
+    let rest = name.strip_prefix("model.layers.")?;
+    let dot = rest.find('.')?;
+    let l: usize = rest[..dot].parse().ok()?;
+    let suffix = match &rest[dot + 1..] {
+        "input_layernorm.weight" => "attn_norm",
+        "self_attn.q_proj.weight" => "wq",
+        "self_attn.k_proj.weight" => "wk",
+        "self_attn.v_proj.weight" => "wv",
+        "self_attn.o_proj.weight" => "wo",
+        "post_attention_layernorm.weight" => "mlp_norm",
+        "mlp.gate_proj.weight" => "w_gate",
+        "mlp.up_proj.weight" => "w_up",
+        "mlp.down_proj.weight" => "w_down",
+        _ => return None,
+    };
+    Some(format!("layer{l}.{suffix}"))
+}
+
+/// The checkpoint-convention alias of a contract parameter name, when one
+/// exists ([`canonical_param_name`]'s inverse; tests rename synthetic
+/// payloads through it).
+pub fn checkpoint_param_name(name: &str) -> Option<String> {
+    match name {
+        "tok_emb" => return Some("model.embed_tokens.weight".into()),
+        "final_norm" => return Some("model.norm.weight".into()),
+        "lm_head" => return Some("lm_head.weight".into()),
+        _ => {}
+    }
+    let rest = name.strip_prefix("layer")?;
+    let dot = rest.find('.')?;
+    let l: usize = rest[..dot].parse().ok()?;
+    let suffix = match &rest[dot + 1..] {
+        "attn_norm" => "input_layernorm.weight",
+        "wq" => "self_attn.q_proj.weight",
+        "wk" => "self_attn.k_proj.weight",
+        "wv" => "self_attn.v_proj.weight",
+        "wo" => "self_attn.o_proj.weight",
+        "mlp_norm" => "post_attention_layernorm.weight",
+        "w_gate" => "mlp.gate_proj.weight",
+        "w_up" => "mlp.up_proj.weight",
+        "w_down" => "mlp.down_proj.weight",
+        _ => return None,
+    };
+    Some(format!("model.layers.{l}.{suffix}"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,5 +203,26 @@ mod tests {
         let toks = synth_tokens(&fs, fs.seq, 5);
         assert_eq!(toks.len(), fs.batch * fs.seq);
         assert!(toks.iter().all(|&t| t >= 0 && (t as usize) < fs.vocab));
+    }
+
+    /// Every contract name round-trips through the checkpoint alias table,
+    /// and unrecognized names map to nothing.
+    #[test]
+    fn checkpoint_aliases_round_trip() {
+        let fs = tiny();
+        for p in param_specs(&fs) {
+            let ckpt = checkpoint_param_name(&p.name)
+                .unwrap_or_else(|| panic!("no checkpoint alias for {}", p.name));
+            assert_eq!(canonical_param_name(&ckpt).as_deref(), Some(p.name.as_str()));
+            // contract-native names need no renaming
+            assert_eq!(canonical_param_name(&p.name), None);
+        }
+        assert_eq!(
+            canonical_param_name("model.layers.11.self_attn.k_proj.weight").as_deref(),
+            Some("layer11.wk")
+        );
+        assert_eq!(canonical_param_name("model.layers.x.self_attn.k_proj.weight"), None);
+        assert_eq!(canonical_param_name("optimizer.step"), None);
+        assert_eq!(checkpoint_param_name("layer0.bogus"), None);
     }
 }

@@ -1,0 +1,317 @@
+//! Integer-MAC fast path: on-the-fly i8 activation quantization and the
+//! i8·i8→i32 block kernels behind [`MacMode::Int8`](super::MacMode).
+//!
+//! The f32 fused path decodes every weight code to f32 before the
+//! multiply. For methods whose decode is a pure affine map of the code —
+//! `w = a·c + b` with per-block `(a, b)` derived from the stored scale
+//! table (RTN sym/asym, HQQ, XNOR) — the multiply can stay integer:
+//! quantize the activation to i8 with per-[`QBLOCK`]-element symmetric
+//! scales at call time (calibration-free by construction: the scale is
+//! `max|x|/127` of the live input block, never from held-out data),
+//! accumulate `Σ c·x̂` (and `Σ x̂` when `b ≠ 0`) in i32 per
+//! (weight-block × activation-block) pair, and apply
+//! `(a·Σc·x̂ + b·Σx̂)·x_scale` once per pair into the f32 chunk-partial
+//! chain the f32 path already uses.
+//!
+//! Determinism is inherited for free: i32 accumulation is exactly
+//! associative, so the scalar loop, the AVX2 widening multiply-add
+//! (`_mm256_madd_epi16` on sign-extended lanes — the `maddubs` shape
+//! without its u8×i8 saturation hazard), and any row striping produce the
+//! same integers; the f32 epilogue then executes one fixed expression per
+//! block pair in chunk order. Scalar/AVX2/threads are bit-identical by
+//! construction, not by tolerance.
+//!
+//! Accuracy: the path is approximate where the f32 path is exact — the
+//! activation is rounded to 8 bits per block, and when the payload's
+//! `bf16` flag is set the f32 path rounds each decoded *product*
+//! `bf16(s·c)` while this path folds only the (already bf16-stored)
+//! scales. Both effects are bounded by the documented relative-error
+//! budget (`perf_gemv` gates the synthetic forward at ≤1e-2 of the f32
+//! twin). Methods whose decode is a codebook or per-level gather (NF4,
+//! MSB) have no affine form; [`affine_plan`] returns `None` and
+//! `MacMode::Auto` keeps them on the f32 path per layer.
+
+use super::Kernel;
+use crate::quant::packing::PackedTensor;
+
+/// Activation quantization block: matches the weight-tile [`CHUNK`]
+/// (one paper block, t=64) so a weight sub-chunk never spans more than
+/// two activation blocks and the splitter stays trivial.
+///
+/// [`CHUNK`]: super::CHUNK
+pub const QBLOCK: usize = super::CHUNK;
+
+/// Per-block affine decode coefficients: block `bi` reconstructs as
+/// `w = a[bi]·code + b[bi]`. Built once at [`PackedLinear::new`] from the
+/// stored (bf16-rounded) scale table, alongside the f32 reconstruction
+/// LUT.
+///
+/// [`PackedLinear::new`]: super::PackedLinear::new
+pub(crate) struct Int8Plan {
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// Derive the per-block `(a, b)` affine coefficients for `pt`, or `None`
+/// when the method's decode is not a pure scale×code affine map (NF4's
+/// codebook gather, MSB's per-level scale gather) — the eligibility rule
+/// `MacMode::Auto` dispatches on. The mapping mirrors each method's
+/// `decode_block` exactly:
+///
+/// * `rtn`:           `w = s·c`            → `a = s,  b = 0`
+/// * `rtn-asym`:      `w = s·c + z`        → `a = s,  b = z`
+/// * `hqq`:           `w = s·(c − z)`      → `a = s,  b = −s·z`
+/// * `xnor` variants: `w = α·c`, c∈{−1,0,1} → `a = α, b = 0`
+pub(crate) fn affine_plan(pt: &PackedTensor, scales: &[f32]) -> Option<Int8Plan> {
+    let nb = pt.n_blocks();
+    let spb = pt.scales_per_block;
+    let mut a = Vec::with_capacity(nb);
+    let mut b = Vec::with_capacity(nb);
+    match pt.method.as_str() {
+        "rtn" | "xnor" | "blocked-xnor" if spb >= 1 => {
+            for bi in 0..nb {
+                a.push(scales[bi * spb]);
+                b.push(0.0);
+            }
+        }
+        "rtn-asym" if spb >= 2 => {
+            for bi in 0..nb {
+                a.push(scales[bi * spb]);
+                b.push(scales[bi * spb + 1]);
+            }
+        }
+        "hqq" if spb >= 2 => {
+            for bi in 0..nb {
+                let s = scales[bi * spb];
+                a.push(s);
+                b.push(-s * scales[bi * spb + 1]);
+            }
+        }
+        _ => return None,
+    }
+    Some(Int8Plan { a, b })
+}
+
+/// An activation vector (or small-batch matrix) quantized to i8 with
+/// per-[`QBLOCK`]-element symmetric scales, computed on the fly at call
+/// time. Row `b`'s element `i` reconstructs as
+/// `codes[b·cols + i] · scales[b·n_qblocks + i/QBLOCK]`; an all-zero (or
+/// non-finite-max) block stores scale 0 and zero codes, so it contributes
+/// exactly nothing.
+pub struct QuantizedVec {
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+    cols: usize,
+    batch: usize,
+    n_qblocks: usize,
+}
+
+impl QuantizedVec {
+    /// Quantize a row-major `[batch, cols]` activation buffer. Symmetric
+    /// round-to-nearest per block: `scale = max|x|/127`,
+    /// `x̂ = round(x/scale)` clamped to ±127. Deterministic — no state,
+    /// no data-dependent ordering.
+    pub fn quantize(xs: &[f32], batch: usize, cols: usize) -> QuantizedVec {
+        assert_eq!(xs.len(), batch * cols, "activation shape != [batch, cols]");
+        let n_qblocks = cols.div_ceil(QBLOCK);
+        let mut codes = vec![0i8; batch * cols];
+        let mut scales = vec![0.0f32; batch * n_qblocks];
+        for bt in 0..batch {
+            let x = &xs[bt * cols..(bt + 1) * cols];
+            let qrow = &mut codes[bt * cols..(bt + 1) * cols];
+            for qi in 0..n_qblocks {
+                let start = qi * QBLOCK;
+                let end = (start + QBLOCK).min(cols);
+                let m = x[start..end].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                if m == 0.0 || !m.is_finite() {
+                    continue; // scale 0, codes 0: the block drops out exactly
+                }
+                let inv = 127.0 / m;
+                for (o, &v) in qrow[start..end].iter_mut().zip(&x[start..end]) {
+                    // in range by the clamp; rounding may hit ±127.000…1
+                    #[allow(clippy::cast_possible_truncation)]
+                    {
+                        *o = (v * inv).round().clamp(-127.0, 127.0) as i8;
+                    }
+                }
+                scales[bt * n_qblocks + qi] = m / 127.0;
+            }
+        }
+        QuantizedVec { codes, scales, cols, batch, n_qblocks }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Batch row `b`'s i8 codes (`cols` entries).
+    pub fn codes(&self, b: usize) -> &[i8] {
+        &self.codes[b * self.cols..(b + 1) * self.cols]
+    }
+
+    /// Batch row `b`'s scale for activation block `qi`.
+    pub fn scale(&self, b: usize, qi: usize) -> f32 {
+        self.scales[b * self.n_qblocks + qi]
+    }
+}
+
+/// `Σ c[i]·x[i]` in i32. Exact for any i8 inputs (|c·x| ≤ 127², tile
+/// lengths ≤ [`QBLOCK`] keep the sum far from i32 range), so every
+/// accumulation order is identical — the dispatch below needs no lane
+/// discipline to stay bit-identical.
+pub(crate) fn dot_i8(kernel: Kernel, c: &[i8], x: &[i8]) -> i32 {
+    match kernel {
+        Kernel::Scalar => dot_i8_scalar(c, x),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the same availability contract as `Kernel::dot` — every
+        // entry point asserts `available()` before the hot loop.
+        Kernel::Avx2 => unsafe { dot_i8_avx2(c, x) },
+    }
+}
+
+/// `Σ x[i]` in i32 — the `b·Σx̂` epilogue term for zero-point schemes.
+pub(crate) fn sum_i8(kernel: Kernel, x: &[i8]) -> i32 {
+    match kernel {
+        Kernel::Scalar => sum_i8_scalar(x),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as for `dot_i8`.
+        Kernel::Avx2 => unsafe { sum_i8_avx2(x) },
+    }
+}
+
+fn dot_i8_scalar(c: &[i8], x: &[i8]) -> i32 {
+    debug_assert_eq!(c.len(), x.len());
+    let mut acc = 0i32;
+    for (&a, &b) in c.iter().zip(x) {
+        acc += a as i32 * b as i32;
+    }
+    acc
+}
+
+fn sum_i8_scalar(x: &[i8]) -> i32 {
+    x.iter().map(|&v| v as i32).sum()
+}
+
+/// AVX2 widening multiply-add: 16 i8 lanes sign-extend to i16
+/// (`_mm256_cvtepi8_epi16`), `_mm256_madd_epi16` multiplies and pair-sums
+/// into i32 — exact, unlike `_mm256_maddubs_epi16` whose u8×i8 i16
+/// accumulation saturates. The horizontal i32 reduction needs no fixed
+/// tree: integer addition is associative, so any shape equals the scalar
+/// loop bit-for-bit.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2(c: &[i8], x: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(c.len(), x.len());
+    let n = c.len();
+    let m = n - n % 16;
+    let mut acc = _mm256_setzero_si256();
+    let mut k = 0;
+    while k < m {
+        let a = _mm256_cvtepi8_epi16(_mm_loadu_si128(c.as_ptr().add(k) as *const __m128i));
+        let b = _mm256_cvtepi8_epi16(_mm_loadu_si128(x.as_ptr().add(k) as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a, b));
+        k += 16;
+    }
+    let mut sum = hsum_i32(acc);
+    for i in m..n {
+        sum += c[i] as i32 * x[i] as i32;
+    }
+    sum
+}
+
+/// AVX2 lane sum via `madd` against a ones vector (same exactness
+/// argument as [`dot_i8_avx2`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sum_i8_avx2(x: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let m = n - n % 16;
+    let ones = _mm256_set1_epi16(1);
+    let mut acc = _mm256_setzero_si256();
+    let mut k = 0;
+    while k < m {
+        let a = _mm256_cvtepi8_epi16(_mm_loadu_si128(x.as_ptr().add(k) as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a, ones));
+        k += 16;
+    }
+    let mut sum = hsum_i32(acc);
+    for i in m..n {
+        sum += x[i] as i32;
+    }
+    sum
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_i32(acc: std::arch::x86_64::__m256i) -> i32 {
+    use std::arch::x86_64::*;
+    let q = _mm_add_epi32(_mm256_castsi256_si128(acc), _mm256_extracti128_si256(acc, 1));
+    let q = _mm_add_epi32(q, _mm_shuffle_epi32(q, 0b0100_1110));
+    let q = _mm_add_epi32(q, _mm_shuffle_epi32(q, 0b1011_0001));
+    _mm_cvtsi128_si32(q)
+}
+
+#[cfg(test)]
+// test data generation casts freely (values constructed in range by hand)
+#[allow(clippy::cast_possible_truncation)]
+mod tests {
+    use super::*;
+    use crate::stats::Rng;
+
+    #[test]
+    fn quantized_vec_reconstructs_within_half_step() {
+        let cols = 150; // ragged: 3 blocks, last one 22 wide
+        let mut xs = vec![0.0f32; 2 * cols];
+        Rng::new(71).fill_normal(&mut xs, 1.0);
+        // an exactly-zero block must drop out with scale 0
+        for v in &mut xs[QBLOCK..2 * QBLOCK] {
+            *v = 0.0;
+        }
+        let q = QuantizedVec::quantize(&xs, 2, cols);
+        assert_eq!(q.batch(), 2);
+        assert_eq!(q.cols(), cols);
+        assert_eq!(q.scale(0, 1), 0.0);
+        for b in 0..2 {
+            let x = &xs[b * cols..(b + 1) * cols];
+            let codes = q.codes(b);
+            for (i, (&v, &c)) in x.iter().zip(codes).enumerate() {
+                let s = q.scale(b, i / QBLOCK);
+                let back = c as f32 * s;
+                let tol = 0.5 * s + 1e-12;
+                assert!(
+                    (back - v).abs() <= tol,
+                    "row {b} elem {i}: {v} -> code {c} (scale {s}) off by {}",
+                    (back - v).abs()
+                );
+                assert!(c >= -127, "code range");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_dot_simd_matches_scalar_exactly() {
+        let Some(simd) = Kernel::detect_simd() else {
+            eprintln!("skipping: no SIMD kernel on this CPU");
+            return;
+        };
+        let mut rng = Rng::new(72);
+        for len in [1usize, 7, 15, 16, 17, 31, 32, 48, 63, 64] {
+            let c: Vec<i8> = (0..len).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+            let x: Vec<i8> = (0..len).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+            assert_eq!(dot_i8(simd, &c, &x), dot_i8(Kernel::Scalar, &c, &x), "dot len {len}");
+            assert_eq!(sum_i8(simd, &x), sum_i8(Kernel::Scalar, &x), "sum len {len}");
+        }
+        // extremes: ±127 everywhere — the maddubs saturation trap this
+        // kernel must not have
+        let c = vec![-127i8; 64];
+        let x = vec![127i8; 64];
+        assert_eq!(dot_i8(simd, &c, &x), -127 * 127 * 64);
+        assert_eq!(dot_i8(Kernel::Scalar, &c, &x), -127 * 127 * 64);
+    }
+}

@@ -37,6 +37,26 @@
 //! per-block reconstruction table once at construction; the hot loop is a
 //! plain table gather, with no rounding pass per tile. Bit-identity with
 //! the historical decode-per-tile path is asserted by the kernel grid test.
+//!
+//! **Integer MAC path** ([`MacMode`], [`int8`]): methods whose decode is a
+//! pure affine map of the code (`w = a·c + b` per block — RTN sym/asym,
+//! HQQ, XNOR) can additionally run an i8·i8→i32 kernel that quantizes the
+//! activation on the fly ([`QuantizedVec`]) and never decodes weights to
+//! f32 at all; [`MacMode::Auto`] picks it per layer, falling back to the
+//! f32 path for codebook/per-level methods (NF4, MSB). The integer
+//! accumulation is exactly associative, so that path's scalar/AVX2/thread
+//! bit-identity holds by construction rather than by lane discipline; its
+//! f32 epilogue applies `(a·Σc·x̂ + b·Σx̂)·x_scale` once per
+//! (weight-block × activation-block) pair in the same chunk-ordered
+//! partial-sum chain as the f32 path. See the [`int8`] module docs for
+//! the accuracy budget.
+
+// The i8/i32 cast surface in this module is audited: every narrowing cast
+// is either provably in range or explicitly allow-listed with its range
+// argument. CI's clippy gate (-D warnings) enforces this deny.
+#![deny(clippy::cast_possible_truncation)]
+
+pub mod int8;
 
 use std::sync::Arc;
 
@@ -53,6 +73,49 @@ use crate::tensor::{bf16, Matrix};
 /// partial-sum structure is anchored at block starts, so the chunking is
 /// deterministic for a given payload regardless of threads or SIMD.
 const CHUNK: usize = 64;
+
+pub use int8::QuantizedVec;
+
+/// Which multiply-accumulate path a [`PackedLinear`] executes.
+///
+/// * `F32` — the exact fused path: codes gather through the per-block
+///   reconstruction table, the MAC runs in f32. Always available.
+/// * `Int8` — the integer MAC path: activations quantize to i8 on the
+///   fly, the MAC runs i8·i8→i32 with one f32 epilogue per block pair.
+///   Only meaningful for affine-decodable methods;
+///   [`PackedLinear::with_mac`] rejects it otherwise.
+/// * `Auto` — `Int8` where the layer's method is affine-decodable, `F32`
+///   otherwise, resolved per layer at construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MacMode {
+    /// Exact f32 fused MAC (the default).
+    #[default]
+    F32,
+    /// Integer MAC; construction fails for non-affine methods.
+    Int8,
+    /// Per-layer automatic choice with f32 fallback.
+    Auto,
+}
+
+impl MacMode {
+    /// Parse a `--mac` CLI value.
+    pub fn parse(s: &str) -> Result<MacMode> {
+        match s {
+            "f32" => Ok(MacMode::F32),
+            "int8" => Ok(MacMode::Int8),
+            "auto" => Ok(MacMode::Auto),
+            other => anyhow::bail!("bad mac mode '{other}' (expected f32|int8|auto)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MacMode::F32 => "f32",
+            MacMode::Int8 => "int8",
+            MacMode::Auto => "auto",
+        }
+    }
+}
 
 // ---------------------------------------------------------------------------
 // The dot-product micro-kernel: scalar reference + runtime-dispatched AVX2.
@@ -197,6 +260,26 @@ struct Shared {
     code_min: i16,
     /// Table entries per block.
     lut_len: usize,
+    /// Per-block affine decode coefficients when the method is
+    /// int8-eligible (`w = a·c + b`), else `None` — the [`MacMode::Auto`]
+    /// eligibility fact, resolved once at construction.
+    int8: Option<int8::Int8Plan>,
+}
+
+/// Reusable per-invocation tile scratch shared by the f32 and int8 row
+/// kernels: the unpacked i8 code tile plus the f32 weight tile the f32
+/// path gathers into. Stack-resident and created once per `run_rows*`
+/// call (one per pool job), never per block — the `perf_gemv`
+/// allocation-count gate pins that the hot loops allocate nothing.
+struct TileScratch {
+    codes: [i8; CHUNK],
+    w: [f32; CHUNK],
+}
+
+impl TileScratch {
+    fn new() -> TileScratch {
+        TileScratch { codes: [0; CHUNK], w: [0.0; CHUNK] }
+    }
 }
 
 /// A linear layer held *as its packed payload*: codes + scale table +
@@ -213,6 +296,7 @@ struct Shared {
 pub struct PackedLinear {
     inner: Arc<Shared>,
     kernel: Kernel,
+    mac: MacMode,
 }
 
 impl PackedLinear {
@@ -252,6 +336,9 @@ impl PackedLinear {
             PackedCodes::I8(v) => v
                 .iter()
                 .fold((0i16, 0i16), |(lo, hi), &c| (lo.min(c as i16), hi.max(c as i16))),
+            // in range: sub-byte storage means code_bits ≤ 4, so every
+            // enumerated symbol fits u8
+            #[allow(clippy::cast_possible_truncation)]
             PackedCodes::U1(_) | PackedCodes::U2(_) | PackedCodes::U4(_) => (0u16
                 ..1u16 << pt.code_bits)
                 .map(|s| pt.scheme.decode(s as u8, pt.code_bits) as i16)
@@ -269,6 +356,10 @@ impl PackedLinear {
             );
         }
         let lut_len = (code_max - code_min) as usize + 1;
+        // in range: code_min..=code_max is the decodable code span, which
+        // fits i8 by construction (I8 storage scans i8 values; sub-byte
+        // symbols decode through the scheme's i8 output)
+        #[allow(clippy::cast_possible_truncation)]
         let codes_enum: Vec<i8> = (code_min..=code_max).map(|c| c as i8).collect();
         let spb = pt.scales_per_block;
         let mut recon = vec![0.0f32; pt.n_blocks() * lut_len];
@@ -280,10 +371,50 @@ impl PackedLinear {
                 *v = bf16::round(*v);
             }
         }
+        let int8 = int8::affine_plan(&pt, &scales);
         Ok(PackedLinear {
-            inner: Arc::new(Shared { pt, zeros, recon, code_min, lut_len }),
+            inner: Arc::new(Shared { pt, zeros, recon, code_min, lut_len, int8 }),
             kernel: Kernel::detect(),
+            mac: MacMode::F32,
         })
+    }
+
+    /// Select the multiply-accumulate path. `F32` and `Auto` always
+    /// succeed (`Auto` resolves per layer against the method's
+    /// affine-decode eligibility); an explicit `Int8` request fails for
+    /// methods whose decode is not an affine scale×code map — use `Auto`
+    /// to fall back per layer instead.
+    pub fn with_mac(mut self, mac: MacMode) -> Result<PackedLinear> {
+        ensure!(
+            mac != MacMode::Int8 || self.inner.int8.is_some(),
+            "method '{}' decode is not an affine scale×code map — \
+             no int8 MAC path (use mac=auto to fall back per layer)",
+            self.inner.pt.method
+        );
+        self.mac = mac;
+        Ok(self)
+    }
+
+    /// The requested MAC mode (see [`PackedLinear::int8_active`] for the
+    /// per-layer resolution of `Auto`).
+    pub fn mac(&self) -> MacMode {
+        self.mac
+    }
+
+    /// Whether this layer's method decodes as a pure affine scale×code
+    /// map, i.e. whether the int8 MAC path exists for it.
+    pub fn int8_eligible(&self) -> bool {
+        self.inner.int8.is_some()
+    }
+
+    /// Whether calls on this handle execute the int8 MAC path (`Int8`
+    /// always, `Auto` when eligible, `F32` never).
+    pub fn int8_active(&self) -> bool {
+        match self.mac {
+            MacMode::F32 => false,
+            MacMode::Int8 => true,
+            MacMode::Auto => self.int8_eligible(),
+        }
     }
 
     /// Force a specific micro-kernel (tests and the SIMD-vs-scalar bench
@@ -318,7 +449,8 @@ impl PackedLinear {
     }
 
     /// Fused matrix-vector product `y = W·x` (`x.len() == cols`,
-    /// `y.len() == rows`), serial reference order.
+    /// `y.len() == rows`), serial reference order. Routes through the
+    /// int8 MAC path when [`PackedLinear::int8_active`].
     pub fn gemv(&self, x: &[f32]) -> Vec<f32> {
         self.gemm(x, 1)
     }
@@ -327,11 +459,51 @@ impl PackedLinear {
     /// result row-major `[batch, rows]`. Each block tile is decoded once
     /// and multiplied against every batch row — the decode cost amortizes
     /// across the batch, which is where fused serving wins hardest.
+    /// Routes through the int8 MAC path when
+    /// [`PackedLinear::int8_active`].
     pub fn gemm(&self, xs: &[f32], batch: usize) -> Vec<f32> {
+        if self.int8_active() {
+            return self.gemm_int8(xs, batch);
+        }
         let (rows, cols) = (self.rows(), self.cols());
         assert_eq!(xs.len(), batch * cols, "activation shape != [batch, cols]");
         let mut out = vec![0.0f32; batch * rows];
-        run_rows(&self.inner, self.kernel, 0, rows, xs, batch, &mut out);
+        let mut scratch = TileScratch::new();
+        run_rows(&self.inner, self.kernel, 0, rows, xs, batch, &mut out, &mut scratch);
+        out
+    }
+
+    /// Integer-MAC matrix-vector product: quantize `x` to i8 per
+    /// 64-element block on the fly, run the i8·i8→i32 kernel. Panics
+    /// unless the method is [`PackedLinear::int8_eligible`]. Approximate
+    /// (see the [`int8`] module docs for the budget); batch-invariant and
+    /// bit-identical across kernels/threads by construction.
+    pub fn gemv_int8(&self, x: &[f32]) -> Vec<f32> {
+        self.gemm_int8(x, 1)
+    }
+
+    /// Integer-MAC small-batch product (see [`PackedLinear::gemv_int8`]).
+    /// Each batch row quantizes independently, so every output row equals
+    /// the corresponding `gemv_int8` bit-for-bit.
+    pub fn gemm_int8(&self, xs: &[f32], batch: usize) -> Vec<f32> {
+        let cols = self.cols();
+        assert_eq!(xs.len(), batch * cols, "activation shape != [batch, cols]");
+        let qx = QuantizedVec::quantize(xs, batch, cols);
+        self.gemm_int8_quantized(&qx)
+    }
+
+    /// Serial int8 product over a pre-quantized activation buffer.
+    fn gemm_int8_quantized(&self, qx: &QuantizedVec) -> Vec<f32> {
+        assert!(
+            self.int8_eligible(),
+            "method '{}' has no int8 MAC path (decode is not affine)",
+            self.inner.pt.method
+        );
+        let rows = self.rows();
+        assert_eq!(qx.cols(), self.cols(), "quantized activation cols mismatch");
+        let mut out = vec![0.0f32; qx.batch() * rows];
+        let mut scratch = TileScratch::new();
+        run_rows_int8(&self.inner, self.kernel, 0, rows, qx, &mut out, &mut scratch);
         out
     }
 
@@ -353,7 +525,11 @@ impl PackedLinear {
 
     /// [`PackedLinear::gemm_pooled`] over a caller-owned shared buffer —
     /// no activation copy (the serving loop builds its batch directly
-    /// into the `Arc`).
+    /// into the `Arc`). Routes through the int8 MAC path when
+    /// [`PackedLinear::int8_active`]: the activation quantizes once, the
+    /// row stripes share the result, and every row depends only on
+    /// (payload, quantized activation) — so pooled int8 equals serial
+    /// int8 bit-for-bit, same as the f32 discipline.
     pub fn gemm_shared(&self, xs: Arc<Vec<f32>>, batch: usize, pool: &ThreadPool) -> Vec<f32> {
         let (rows, cols) = (self.rows(), self.cols());
         assert_eq!(xs.len(), batch * cols, "activation shape != [batch, cols]");
@@ -367,20 +543,45 @@ impl PackedLinear {
             return self.gemm(&xs, batch);
         }
         let kernel = self.kernel;
-        let jobs: Vec<_> = (0..n_stripes)
-            .map(|si| {
-                let sh = Arc::clone(&self.inner);
-                let xs = Arc::clone(&xs);
-                move || {
-                    let r0 = si * stripe;
-                    let r1 = ((si + 1) * stripe).min(rows);
-                    let mut out = vec![0.0f32; batch * (r1 - r0)];
-                    run_rows(&sh, kernel, r0, r1, &xs, batch, &mut out);
-                    out
-                }
-            })
-            .collect();
-        let stripes = pool_ordered_map(pool, jobs);
+        let stripes = if self.int8_active() {
+            assert!(
+                self.int8_eligible(),
+                "method '{}' has no int8 MAC path (decode is not affine)",
+                self.inner.pt.method
+            );
+            let qx = Arc::new(QuantizedVec::quantize(&xs, batch, cols));
+            let jobs: Vec<_> = (0..n_stripes)
+                .map(|si| {
+                    let sh = Arc::clone(&self.inner);
+                    let qx = Arc::clone(&qx);
+                    move || {
+                        let r0 = si * stripe;
+                        let r1 = ((si + 1) * stripe).min(rows);
+                        let mut out = vec![0.0f32; batch * (r1 - r0)];
+                        let mut scratch = TileScratch::new();
+                        run_rows_int8(&sh, kernel, r0, r1, &qx, &mut out, &mut scratch);
+                        out
+                    }
+                })
+                .collect();
+            pool_ordered_map(pool, jobs)
+        } else {
+            let jobs: Vec<_> = (0..n_stripes)
+                .map(|si| {
+                    let sh = Arc::clone(&self.inner);
+                    let xs = Arc::clone(&xs);
+                    move || {
+                        let r0 = si * stripe;
+                        let r1 = ((si + 1) * stripe).min(rows);
+                        let mut out = vec![0.0f32; batch * (r1 - r0)];
+                        let mut scratch = TileScratch::new();
+                        run_rows(&sh, kernel, r0, r1, &xs, batch, &mut out, &mut scratch);
+                        out
+                    }
+                })
+                .collect();
+            pool_ordered_map(pool, jobs)
+        };
         let mut y = vec![0.0f32; batch * rows];
         for (si, chunk) in stripes.into_iter().enumerate() {
             let r0 = si * stripe;
@@ -411,14 +612,13 @@ fn run_rows(
     xs: &[f32],
     batch: usize,
     out: &mut [f32],
+    scratch: &mut TileScratch,
 ) {
     let (rows, cols) = (sh.pt.rows, sh.pt.cols);
     let n = rows * cols;
     let block = sh.pt.block.max(1);
     let (lut_len, code_min) = (sh.lut_len, sh.code_min);
     let out_rows = r1 - r0;
-    let mut ctile = [0i8; CHUNK];
-    let mut wtile = [0.0f32; CHUNK];
     for r in r0..r1 {
         let row_start = r * cols;
         let row_end = row_start + cols;
@@ -432,9 +632,9 @@ fn run_rows(
             while c < seg_end {
                 let end = (c + CHUNK).min(seg_end);
                 let len = end - c;
-                sh.pt.codes_range_into(c, &mut ctile[..len]);
-                let w = &mut wtile[..len];
-                for (o, &cd) in w.iter_mut().zip(&ctile[..len]) {
+                sh.pt.codes_range_into(c, &mut scratch.codes[..len]);
+                let w = &mut scratch.w[..len];
+                for (o, &cd) in w.iter_mut().zip(&scratch.codes[..len]) {
                     *o = lut[(cd as i16 - code_min) as usize];
                 }
                 if !sh.zeros.is_empty() {
@@ -448,6 +648,92 @@ fn run_rows(
                 for b in 0..batch {
                     let xb = &xs[b * cols + x_off..b * cols + x_off + len];
                     out[b * out_rows + (r - r0)] += kernel.dot(w, xb);
+                }
+                c = end;
+            }
+            g = seg_end;
+        }
+    }
+}
+
+/// The int8 row kernel: rows `[r0, r1)` of `y ≈ W·x` against a
+/// pre-quantized activation. Walks the same (row ∩ block) segments as
+/// [`run_rows`], additionally splitting each ≤[`CHUNK`] sub-chunk at
+/// activation-block boundaries so exactly one
+/// (weight-block × activation-block) pair owns every tile. Per tile:
+/// unpack codes (exception-listed positions zeroed *in the code tile* —
+/// their `a·c` term vanishes; their `b` term is removed by subtracting
+/// their `x̂` from the block sum), accumulate `Σ c·x̂` (and `Σ x̂` when the
+/// block's `b ≠ 0`) in exact i32, then apply the one f32 epilogue
+/// `(a·Σc·x̂ + b·Σx̂)·x_scale` into the chunk-ordered partial chain.
+/// Integer accumulation is associative, so scalar/AVX2/striping are
+/// bit-identical with no further discipline.
+fn run_rows_int8(
+    sh: &Shared,
+    kernel: Kernel,
+    r0: usize,
+    r1: usize,
+    qx: &QuantizedVec,
+    out: &mut [f32],
+    scratch: &mut TileScratch,
+) {
+    let plan = sh.int8.as_ref().expect("int8 plan missing for int8 run");
+    let (rows, cols) = (sh.pt.rows, sh.pt.cols);
+    let n = rows * cols;
+    let block = sh.pt.block.max(1);
+    let batch = qx.batch();
+    let out_rows = r1 - r0;
+    const QB: usize = int8::QBLOCK;
+    for r in r0..r1 {
+        let row_start = r * cols;
+        let row_end = row_start + cols;
+        let mut g = row_start;
+        while g < row_end {
+            let bi = g / block;
+            let seg_end = row_end.min(((bi + 1) * block).min(n));
+            let (a, bc) = (plan.a[bi], plan.b[bi]);
+            let mut c = g;
+            while c < seg_end {
+                let x_off = c - row_start;
+                let qi = x_off / QB;
+                // flat plans can start a tile mid-activation-block; split
+                // at the next x-block boundary so (a, b, x_scale) are all
+                // constant across the tile
+                let end = (c + CHUNK).min(seg_end).min(row_start + (qi + 1) * QB);
+                let len = end - c;
+                let ct = &mut scratch.codes[..len];
+                sh.pt.codes_range_into(c, ct);
+                let (z0, z1) = if sh.zeros.is_empty() {
+                    (0, 0)
+                } else {
+                    (
+                        sh.zeros.partition_point(|&z| (z as usize) < c),
+                        sh.zeros.partition_point(|&z| (z as usize) < end),
+                    )
+                };
+                for &z in &sh.zeros[z0..z1] {
+                    ct[z as usize - c] = 0;
+                }
+                for b in 0..batch {
+                    let sx = qx.scale(b, qi);
+                    if sx == 0.0 {
+                        continue; // all-zero activation block: exact no-op
+                    }
+                    let xq = &qx.codes(b)[x_off..x_off + len];
+                    let dot = int8::dot_i8(kernel, ct, xq);
+                    // the b·Σx̂ term only exists for zero-point schemes;
+                    // both kernels branch on the same block coefficient,
+                    // so the skip cannot split scalar/SIMD behaviour
+                    let xsum = if bc != 0.0 {
+                        let mut s = int8::sum_i8(kernel, xq);
+                        for &z in &sh.zeros[z0..z1] {
+                            s -= xq[z as usize - c] as i32;
+                        }
+                        s
+                    } else {
+                        0
+                    };
+                    out[b * out_rows + (r - r0)] += (a * dot as f32 + bc * xsum as f32) * sx;
                 }
                 c = end;
             }
@@ -796,5 +1082,152 @@ mod tests {
             panic!("6-bit per-tensor payload should store i8 codes");
         }
         assert!(PackedLinear::new(bad).is_err());
+    }
+
+    #[test]
+    fn mac_mode_parses() {
+        assert_eq!(MacMode::parse("f32").unwrap(), MacMode::F32);
+        assert_eq!(MacMode::parse("int8").unwrap(), MacMode::Int8);
+        assert_eq!(MacMode::parse("auto").unwrap(), MacMode::Auto);
+        assert!(MacMode::parse("i4").is_err());
+    }
+
+    /// Int8 MAC: run the integer path against the decoded f64 reference
+    /// within the activation-quantization budget, and require
+    /// bit-identity across scalar/SIMD/pooled — integer accumulation is
+    /// associative, so the i8 path gets determinism for free.
+    fn check_int8(q: Arc<dyn BlockQuantizer>, w: &Matrix, cfg: &QuantConfig, label: &str) {
+        let cfg = cfg.clone().with_packed();
+        let qt = quantize_serial(&*q, w, &cfg);
+        let pt = qt.packed.unwrap_or_else(|| panic!("{label}: no payload"));
+        let decoded = decode_packed(Arc::clone(&q), &pt, None);
+        let pl = PackedLinear::new(pt).unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert!(pl.int8_eligible(), "{label}: expected an affine decode");
+        let pl = pl.with_mac(MacMode::Int8).unwrap_or_else(|e| panic!("{label}: {e}"));
+        let x = activation(w.cols, 0xB10C);
+
+        let scalar = pl.clone().with_kernel(Kernel::Scalar);
+        let y = scalar.gemv(&x);
+        // per-block i8 activation rounding costs ~0.5% relative per dot;
+        // 2.5e-2 under the L1-mass scale leaves slack for cancellation
+        assert_matvec_close(&decoded, &x, &y, 2.5e-2);
+
+        if Kernel::detect_simd().is_some() {
+            let ys = pl.clone().with_kernel(Kernel::detect()).gemv(&x);
+            assert_eq!(y, ys, "{label}: int8 SIMD != scalar");
+        }
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads, threads * 4);
+            assert_eq!(y, scalar.gemv_pooled(&x, &pool), "{label}: int8 pooled t={threads}");
+        }
+        let batch = 2;
+        let mut xs = vec![0.0f32; batch * w.cols];
+        Rng::new(0x1B).fill_normal(&mut xs, 1.0);
+        let ys = scalar.gemm(&xs, batch);
+        for b in 0..batch {
+            let yb = scalar.gemv(&xs[b * w.cols..(b + 1) * w.cols]);
+            assert_eq!(&ys[b * w.rows..(b + 1) * w.rows], &yb[..], "{label}: int8 batch {b}");
+        }
+    }
+
+    /// Tentpole grid: every affine-eligible method × both granularities,
+    /// plus ragged columns (`96 % 64 != 0`, so weight sub-chunks cross
+    /// activation-block edges) and a flat plan whose blocks cross rows.
+    #[test]
+    fn int8_grid_matches_reference() {
+        let w = weight_with_zeros(16, 256, 71);
+        let bw = QuantConfig::block_wise(4, 64).unwrap();
+        let pt_cfg = QuantConfig::per_tensor(4).unwrap().with_window(16).unwrap();
+        let grid: Vec<(Arc<dyn BlockQuantizer>, &QuantConfig, &str)> = vec![
+            (Arc::new(RtnQuantizer::symmetric()), &bw, "rtn/bw"),
+            (Arc::new(RtnQuantizer::asymmetric()), &bw, "rtn-asym/bw"),
+            (Arc::new(HqqQuantizer::default()), &bw, "hqq/bw"),
+            (Arc::new(XnorQuantizer::whole()), &bw, "xnor/bw"),
+            (Arc::new(XnorQuantizer::blocked()), &bw, "blocked-xnor/bw"),
+            (Arc::new(RtnQuantizer::symmetric()), &pt_cfg, "rtn/pt"),
+            (Arc::new(HqqQuantizer::default()), &pt_cfg, "hqq/pt"),
+            (Arc::new(XnorQuantizer::whole()), &pt_cfg, "xnor/pt"),
+        ];
+        for (q, cfg, label) in grid {
+            check_int8(q, &w, cfg, label);
+        }
+        let ragged = weight_with_zeros(9, 96, 72);
+        let t32 = QuantConfig::block_wise(4, 32).unwrap();
+        check_int8(Arc::new(RtnQuantizer::symmetric()), &ragged, &t32, "rtn/t=32,cols=96");
+        check_int8(Arc::new(RtnQuantizer::asymmetric()), &ragged, &t32, "rtn-asym/t=32,cols=96");
+        let tiny = Matrix::randn(5, 7, &mut Rng::new(73));
+        let flat = QuantConfig::block_wise(4, 8).unwrap();
+        check_int8(Arc::new(XnorQuantizer::blocked()), &tiny, &flat, "blocked-xnor/flat5x7");
+    }
+
+    /// Non-affine decodes (NF4 codebook lookup, MSB sign·level table) must
+    /// refuse `MacMode::Int8` and fall back bit-exactly under `Auto`;
+    /// affine methods under `Auto` must actually take the integer path.
+    #[test]
+    fn int8_eligibility_and_auto_fallback() {
+        let w = weight_with_zeros(8, 128, 74);
+        let bw = QuantConfig::block_wise(4, 64).unwrap().with_packed();
+        let ineligible: Vec<(Arc<dyn BlockQuantizer>, &str)> = vec![
+            (Arc::new(Nf4Quantizer::nf4()), "nf4"),
+            (Arc::new(MsbQuantizer::wgm()), "msb-wgm"),
+        ];
+        for (q, label) in ineligible {
+            let pt = quantize_serial(&*q, &w, &bw).packed.unwrap();
+            let pl = PackedLinear::new(pt).unwrap();
+            assert!(!pl.int8_eligible(), "{label}: codebook decode must not be affine");
+            assert!(pl.clone().with_mac(MacMode::Int8).is_err(), "{label}: Int8 must refuse");
+            let auto = pl.clone().with_mac(MacMode::Auto).unwrap();
+            assert!(!auto.int8_active(), "{label}: Auto must fall back");
+            let x = activation(w.cols, 75);
+            assert_eq!(auto.gemv(&x), pl.gemv(&x), "{label}: Auto fallback != f32 path");
+        }
+        let q: Arc<dyn BlockQuantizer> = Arc::new(RtnQuantizer::symmetric());
+        let pt = quantize_serial(&*q, &w, &bw).packed.unwrap();
+        let auto = PackedLinear::new(pt).unwrap().with_mac(MacMode::Auto).unwrap();
+        assert!(auto.int8_active(), "rtn under Auto must engage the integer MAC");
+        let x = activation(w.cols, 76);
+        assert_eq!(auto.gemv(&x), auto.gemv_int8(&x), "Auto(eligible) must route to int8");
+    }
+
+    /// Randomized property: random eligible method / shape / zero
+    /// sprinkling — the integer MAC stays inside the activation-quant
+    /// budget of the decoded reference and pooled equals serial bitwise.
+    #[test]
+    fn int8_gemv_property() {
+        crate::testing::check(
+            "int8 gemv within budget of reference",
+            8,
+            |rng| {
+                let rows = 1 + rng.below(10);
+                let cols = 32 * (1 + rng.below(6));
+                let mut w = Matrix::randn(rows, cols, rng);
+                for v in &mut w.data {
+                    if rng.uniform() < 0.02 {
+                        *v = 0.0;
+                    }
+                }
+                (w, rng.below(3))
+            },
+            |(w, pick)| {
+                let q: Arc<dyn BlockQuantizer> = match *pick {
+                    0 => Arc::new(RtnQuantizer::symmetric()),
+                    1 => Arc::new(RtnQuantizer::asymmetric()),
+                    _ => Arc::new(HqqQuantizer::default()),
+                };
+                let cfg = QuantConfig::block_wise(4, 32).unwrap().with_packed();
+                let qt = quantize_serial(&*q, w, &cfg);
+                let decoded = decode_packed(Arc::clone(&q), qt.packed.as_ref().unwrap(), None);
+                let pl = PackedLinear::new(qt.packed.unwrap())
+                    .unwrap()
+                    .with_mac(MacMode::Int8)
+                    .unwrap();
+                let x = activation(w.cols, 0xD07);
+                let y = pl.gemv(&x);
+                assert_matvec_close(&decoded, &x, &y, 2.5e-2);
+                let pool = ThreadPool::new(2, 8);
+                assert_eq!(y, pl.gemv_pooled(&x, &pool), "int8 pooled != serial");
+                true
+            },
+        );
     }
 }

@@ -78,13 +78,17 @@ commands:
              --in <packed.msbt> [--layer L] | --rows R --cols C
              [--method wgm --bits 4 --block 64 --granularity block]
              [--threads N] [--batch B] [--reps K]
+             [--mac f32|int8|auto]  (int8: integer MAC arm for
+             affine-decode methods — rtn, rtn-asym, hqq, xnor)
   score      fused CPU transformer forward token scoring on a synthetic
              model (no artifacts/, no XLA): quantize to a packed payload,
              run every projection straight off the codes, gate against
-             the f32 twin at 1e-4 relative, report ppl + logprobs
+             the f32 twin at 1e-4 relative (int8 MAC: 1e-2 L2-relative),
+             report ppl + logprobs
              [--method wgm --bits 4 --block 64] [--vocab V --d D
              --layers L --heads H --ff F --seq S --rows R]
-             [--threads N] [--seed K] [--out payload.msbt]
+             [--threads N] [--seed K] [--mac f32|int8|auto]
+             [--out payload.msbt]
   kernel     execute the native Pallas-MSB HLO for the small model
 ";
 
@@ -308,7 +312,9 @@ fn cmd_decode(args: &Args) -> Result<()> {
 /// codes ([`msb_quant::kernels::PackedLinear`]) vs the old
 /// decode-to-f32-then-matmul path, on a real packed artifact (`--in`) or
 /// a synthetic proxy layer. Self-checking: the fused result must match
-/// the f64 reference to 1e-5 relative before any number is printed.
+/// the f64 reference to 1e-5 relative before any number is printed, and
+/// the `--mac int8` arm must match it to 2.5e-2 (activation rounding)
+/// with pooled bit-identical to serial.
 fn cmd_gemv_bench(args: &Args) -> Result<()> {
     use msb_quant::benchlib;
     use msb_quant::kernels::{dense_gemv, PackedLinear};
@@ -319,6 +325,7 @@ fn cmd_gemv_bench(args: &Args) -> Result<()> {
     let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let threads = args.usize_or("threads", default_threads)?.max(1);
     let batch = args.usize_or("batch", 8)?.max(1);
+    let mac = msb_quant::kernels::MacMode::parse(args.str_or("mac", "f32"))?;
 
     let (label, pt) = if let Some(path) = args.get("in") {
         let map = msbt::read_file(path)?;
@@ -350,6 +357,8 @@ fn cmd_gemv_bench(args: &Args) -> Result<()> {
     let n = pt.n_elems() as f64;
     let decoder = registry::block_decoder(&pt.method)?;
     let pl = PackedLinear::new(pt)?;
+    // errors up front for `--mac int8` on methods without an affine decode
+    let pl8 = pl.clone().with_mac(mac)?;
     let mut x = vec![0.0f32; pl.cols()];
     Rng::new(0xF00D).fill_normal(&mut x, 1.0);
 
@@ -370,9 +379,26 @@ fn cmd_gemv_bench(args: &Args) -> Result<()> {
     let mut xs = vec![0.0f32; batch * pl.cols()];
     Rng::new(0xF00E).fill_normal(&mut xs, 1.0);
     let t_gemm = benchlib::time_median(reps, || pl.gemm_pooled(&xs, batch, &pool));
+    // integer MAC arm: activations quantized to i8 per 64-block, i32
+    // accumulation, one f32 epilogue per block pair (2.5e-2 budget)
+    let int8 = if pl8.int8_active() {
+        let y8 = pl8.gemv(&x);
+        msb_quant::kernels::assert_matvec_close(&decoded, &x, &y8, 2.5e-2);
+        let y8_pooled = pl8.gemv_pooled(&x, &pool);
+        anyhow::ensure!(y8 == y8_pooled, "pooled int8 gemv diverged from serial");
+        let t8 = benchlib::time_median(reps, || pl8.gemv(&x));
+        let t8_pooled = benchlib::time_median(reps, || pl8.gemv_pooled(&x, &pool));
+        Some((t8, t8_pooled))
+    } else {
+        None
+    };
     pool.shutdown();
 
-    println!("fused GEMV ablation: {label} ({} kernel, {threads} threads)", pl.kernel().name());
+    println!(
+        "fused GEMV ablation: {label} ({} kernel, {threads} threads, mac={})",
+        pl.kernel().name(),
+        mac.name()
+    );
     println!(
         "  payload {} bytes ({:.3}x of f32); {} zero exceptions",
         pl.payload_bytes(),
@@ -405,6 +431,24 @@ fn cmd_gemv_bench(args: &Args) -> Result<()> {
         n_blocks * batch as f64 / t_gemm,
         gflops(t_gemm, n * batch as f64)
     );
+    if let Some((t8, t8_pooled)) = int8 {
+        println!(
+            "  int8 serial    {:>9.4}s  {:>10.0} blk/s  {:>6.2} GFLOP/s  ({:.2}x vs fused f32)",
+            t8,
+            n_blocks / t8,
+            gflops(t8, n),
+            t_fused / t8
+        );
+        println!(
+            "  int8 pooled    {:>9.4}s  {:>10.0} blk/s  {:>6.2} GFLOP/s  ({:.2}x vs fused f32)",
+            t8_pooled,
+            n_blocks / t8_pooled,
+            gflops(t8_pooled, n),
+            t_pooled / t8_pooled
+        );
+    } else if mac != msb_quant::kernels::MacMode::F32 {
+        println!("  int8 MAC       (no affine decode for this method; f32 fallback)");
+    }
     Ok(())
 }
 
@@ -413,7 +457,8 @@ fn cmd_gemv_bench(args: &Args) -> Result<()> {
 /// payload, runs the full forward with every projection computed
 /// straight off the codes, and refuses to print numbers unless the
 /// logits match the f32 twin (same layer graph over the decoded
-/// weights) within 1e-4 relative.
+/// weights) within 1e-4 relative — or, when `--mac` engages the integer
+/// MAC, within 1e-2 L2-relative (the activation-rounding budget).
 fn cmd_score(args: &Args) -> Result<()> {
     use msb_quant::eval::{perplexity, LogProbs};
     use msb_quant::forward::{synth, ForwardSpec};
@@ -437,6 +482,7 @@ fn cmd_score(args: &Args) -> Result<()> {
     let cfg = parse_cfg(args)?.with_packed();
     let threads = args.usize_or("threads", 1)?.max(1);
     let seed = args.usize_or("seed", 7)? as u64;
+    let mac = msb_quant::kernels::MacMode::parse(args.str_or("mac", "f32"))?;
 
     let spec = synth::model_spec(&fs, "score");
     let weights = synth::synth_weights(&fs, seed);
@@ -446,7 +492,17 @@ fn cmd_score(args: &Args) -> Result<()> {
     let payload = qm.export_packed()?;
     let t_quant = t0.elapsed().as_secs_f64();
 
-    let builder = BackendBuilder::new().threads(threads);
+    // every projection shares one method, so a single probe resolves
+    // whether mac=auto/int8 actually engages the integer path
+    let int8_engaged = mac != msb_quant::kernels::MacMode::F32 && {
+        let (_, packed, _) = msb_quant::pipeline::packed_tensors(&payload)?;
+        match packed.into_values().next() {
+            Some(pt) => msb_quant::kernels::PackedLinear::new(pt)?.int8_eligible(),
+            None => false,
+        }
+    };
+
+    let builder = BackendBuilder::new().threads(threads).mac(mac);
     let model = builder.forward(fs.clone(), &payload)?.into_forward()?;
     let twin = builder
         .forward_dense(fs.clone(), &decode_packed_model(&payload, threads)?)?
@@ -460,16 +516,29 @@ fn cmd_score(args: &Args) -> Result<()> {
     let dense = twin.logits(&toks)?;
     let t_twin = t2.elapsed().as_secs_f64();
 
-    // acceptance gate: codes-path logits vs the f32 twin on the decoded map
+    // acceptance gate: codes-path logits vs the f32 twin on the decoded
+    // map. The f32 MAC is near-exact (1e-4 max-rel); the int8 MAC trades
+    // a bounded activation-rounding error for speed (1e-2 L2-relative).
     let mut max_rel = 0.0f64;
+    let (mut d2, mut b2) = (0.0f64, 0.0f64);
     for (&a, &b) in fused.iter().zip(&dense) {
         let scale = (a.abs().max(b.abs()) as f64).max(1e-3);
         max_rel = max_rel.max(((a - b).abs() as f64) / scale);
+        d2 += ((a - b) as f64).powi(2);
+        b2 += (b as f64).powi(2);
     }
-    anyhow::ensure!(
-        max_rel <= 1e-4,
-        "fused logits diverged from the f32 twin: max rel {max_rel:.3e} > 1e-4"
-    );
+    let l2_rel = (d2 / b2.max(1e-30)).sqrt();
+    if int8_engaged {
+        anyhow::ensure!(
+            l2_rel <= 1e-2,
+            "int8-MAC logits diverged from the f32 twin: L2 rel {l2_rel:.3e} > 1e-2"
+        );
+    } else {
+        anyhow::ensure!(
+            max_rel <= 1e-4,
+            "fused logits diverged from the f32 twin: max rel {max_rel:.3e} > 1e-4"
+        );
+    }
 
     let ppl_q = perplexity(&model, &toks)?;
     let ppl_f = perplexity(&twin, &toks)?;
@@ -481,7 +550,8 @@ fn cmd_score(args: &Args) -> Result<()> {
         / scored as f64;
 
     println!(
-        "score: {} L={} d={} heads={} ff={} seq={} rows={} ({} kernel, {threads} thread(s))",
+        "score: {} L={} d={} heads={} ff={} seq={} rows={} \
+         ({} kernel, {threads} thread(s), mac={}{})",
         method.name(),
         fs.layers,
         fs.d,
@@ -489,7 +559,9 @@ fn cmd_score(args: &Args) -> Result<()> {
         fs.ff,
         fs.seq,
         fs.batch,
-        msb_quant::kernels::Kernel::detect().name()
+        msb_quant::kernels::Kernel::detect().name(),
+        mac.name(),
+        if int8_engaged { " [int8 active]" } else { "" }
     );
     println!(
         "  payload {} bytes ({:.3}x of the f32 projections), quantized in {:.2}s",
@@ -498,11 +570,14 @@ fn cmd_score(args: &Args) -> Result<()> {
         t_quant
     );
     println!(
-        "  fused forward {} logits in {:.3}s | f32 twin {:.3}s | max rel diff {:.2e} (gate 1e-4)",
+        "  fused forward {} logits in {:.3}s | f32 twin {:.3}s | \
+         max rel {:.2e} | L2 rel {:.2e} ({})",
         fused.len(),
         t_fwd,
         t_twin,
-        max_rel
+        max_rel,
+        l2_rel,
+        if int8_engaged { "gate 1e-2 L2, int8 MAC" } else { "gate 1e-4 max-rel" }
     );
     println!("  stream ppl: fused {ppl_q:.4} vs twin {ppl_f:.4}");
     println!("  row 0 mean next-token logprob {mean_lp:.4}");

@@ -202,26 +202,52 @@ pub struct FusedModel {
     method: String,
     linears: std::collections::BTreeMap<String, crate::kernels::PackedLinear>,
     passthrough: TensorMap,
+    mac: crate::kernels::MacMode,
 }
 
 impl FusedModel {
     /// Build fused handles from an `export_packed` artifact (typically a
     /// `.msbt` file written by `msb pack`). No f32 weight buffer is
-    /// materialized at any point.
+    /// materialized at any point. Layers run the exact f32 MAC; use
+    /// [`FusedModel::from_packed_map_with`] to request the integer path.
     pub fn from_packed_map(map: &TensorMap) -> Result<FusedModel> {
+        FusedModel::from_packed_map_with(map, crate::kernels::MacMode::F32)
+    }
+
+    /// [`FusedModel::from_packed_map`] with a multiply-accumulate mode
+    /// applied to every layer. `MacMode::Int8` fails if any layer's method
+    /// has no affine decode; `MacMode::Auto` keeps such layers on the f32
+    /// path and logs the per-layer fallback once at construction.
+    pub fn from_packed_map_with(
+        map: &TensorMap,
+        mac: crate::kernels::MacMode,
+    ) -> Result<FusedModel> {
         let (method, packed, passthrough) = crate::pipeline::packed_tensors(map)?;
         let mut linears = std::collections::BTreeMap::new();
         for (name, pt) in packed {
             let pl = crate::kernels::PackedLinear::new(pt)
-                .with_context(|| format!("fused handle for layer '{name}'"))?;
+                .with_context(|| format!("fused handle for layer '{name}'"))?
+                .with_mac(mac)
+                .with_context(|| format!("mac mode for layer '{name}'"))?;
+            if mac == crate::kernels::MacMode::Auto && !pl.int8_eligible() {
+                eprintln!(
+                    "mac=auto: layer '{name}' ({method}) has no affine decode; \
+                     staying on the f32 MAC"
+                );
+            }
             linears.insert(name, pl);
         }
-        Ok(FusedModel { method, linears, passthrough })
+        Ok(FusedModel { method, linears, passthrough, mac })
     }
 
     /// The quantization method the payloads were emitted by.
     pub fn method(&self) -> &str {
         &self.method
+    }
+
+    /// The multiply-accumulate mode every layer handle was built with.
+    pub fn mac(&self) -> crate::kernels::MacMode {
+        self.mac
     }
 
     /// Layer name → fused handle map (iteration order = BTreeMap order).
@@ -375,17 +401,28 @@ impl Backend {
 #[derive(Clone, Debug, Default)]
 pub struct BackendBuilder {
     threads: usize,
+    mac: crate::kernels::MacMode,
 }
 
 impl BackendBuilder {
     pub fn new() -> BackendBuilder {
-        BackendBuilder { threads: 0 }
+        BackendBuilder { threads: 0, mac: crate::kernels::MacMode::F32 }
     }
 
     /// Worker threads: payload decode for `runner`, pooled kernels for
     /// `forward`. `0` (the default) means one per available core.
     pub fn threads(mut self, threads: usize) -> BackendBuilder {
         self.threads = threads;
+        self
+    }
+
+    /// Multiply-accumulate mode for the packed backends (`fused`,
+    /// `forward`): `f32` (default, exact), `int8` (integer MAC, fails on
+    /// non-affine methods), or `auto` (int8 per eligible layer, f32
+    /// fallback otherwise). The `runner` backend decodes to f32 buffers
+    /// and ignores this.
+    pub fn mac(mut self, mac: crate::kernels::MacMode) -> BackendBuilder {
+        self.mac = mac;
         self
     }
 
@@ -412,7 +449,7 @@ impl BackendBuilder {
 
     /// Fused per-layer serving handles from an `export_packed` artifact.
     pub fn fused(&self, map: &TensorMap) -> Result<Backend> {
-        Ok(Backend::Fused(FusedModel::from_packed_map(map)?))
+        Ok(Backend::Fused(FusedModel::from_packed_map_with(map, self.mac)?))
     }
 
     /// Fused CPU transformer forward from an `export_packed` artifact.
@@ -421,7 +458,7 @@ impl BackendBuilder {
         spec: crate::forward::ForwardSpec,
         map: &TensorMap,
     ) -> Result<Backend> {
-        let m = crate::forward::ForwardModel::from_packed_map(spec, map)?
+        let m = crate::forward::ForwardModel::from_packed_map_with(spec, map, self.mac)?
             .with_threads(self.resolved_threads());
         Ok(Backend::Forward(m))
     }
@@ -566,5 +603,58 @@ mod tests {
         assert_eq!(yt.len(), y.len());
         let model = fwd.into_forward().unwrap();
         assert!(model.payload_bytes() * 2 < model.f32_bytes());
+    }
+
+    /// MAC-mode plumbing: `Auto` on a non-affine payload (msb-wgm) falls
+    /// back to the f32 path bit-exactly; an explicit `Int8` request on it
+    /// fails construction; `Int8` on an affine payload (rtn) engages the
+    /// integer path on every layer.
+    #[test]
+    fn fused_model_mac_modes() {
+        use crate::kernels::MacMode;
+        let (_, map) = packed_fixture(); // msb-wgm: no affine decode
+        assert!(FusedModel::from_packed_map_with(&map, MacMode::Int8).is_err());
+        let auto = FusedModel::from_packed_map_with(&map, MacMode::Auto).unwrap();
+        assert_eq!(auto.mac(), MacMode::Auto);
+        let f32m = FusedModel::from_packed_map(&map).unwrap();
+        for (name, l) in auto.linears() {
+            assert!(!l.int8_active(), "{name}: wgm must fall back");
+            let mut x = vec![0.0f32; l.cols()];
+            crate::stats::Rng::new(73).fill_normal(&mut x, 1.0);
+            assert_eq!(
+                auto.gemv(name, &x).unwrap(),
+                f32m.gemv(name, &x).unwrap(),
+                "{name}: Auto fallback != f32"
+            );
+        }
+
+        // rtn payload: every layer affine, Int8 engages
+        use crate::io::manifest::{ModelSpec, ParamSpec};
+        use crate::io::msbt::Tensor;
+        use crate::pipeline::{quantize, Method, QuantizeOptions};
+        use crate::quant::QuantConfig;
+        let spec = ModelSpec {
+            name: "r".into(),
+            d: 32,
+            layers: 1,
+            heads: 2,
+            ff: 64,
+            seq: 16,
+            params: vec![ParamSpec { name: "layer0.wq".into(), shape: vec![16, 64], quant: true }],
+            weights_file: String::new(),
+            calib_file: String::new(),
+            fwd_hlo: String::new(),
+        };
+        let mut weights = crate::io::msbt::TensorMap::new();
+        let m = crate::tensor::Matrix::randn(16, 64, &mut crate::stats::Rng::new(74));
+        weights.insert("layer0.wq".into(), Tensor::f32(vec![16, 64], m.data));
+        let cfg = QuantConfig::block_wise(4, 64).unwrap();
+        let opts = QuantizeOptions::new().with_threads(1).with_packed();
+        let qm = quantize(&spec, weights, None, Method::Rtn, &cfg, &opts).unwrap();
+        let rmap = qm.export_packed().unwrap();
+        let int8 = FusedModel::from_packed_map_with(&rmap, MacMode::Int8).unwrap();
+        for (name, l) in int8.linears() {
+            assert!(l.int8_active(), "{name}: rtn must take the integer MAC");
+        }
     }
 }

@@ -413,10 +413,13 @@ mod tests {
     // fused packed-weight serving
     // -----------------------------------------------------------------------
 
-    fn fused_model() -> FusedModel {
+    fn fused_model_with(
+        method: crate::pipeline::Method,
+        mac: crate::kernels::MacMode,
+    ) -> FusedModel {
         use crate::io::manifest::{ModelSpec, ParamSpec};
         use crate::io::msbt::{Tensor, TensorMap};
-        use crate::pipeline::{quantize, Method, QuantizeOptions};
+        use crate::pipeline::{quantize, QuantizeOptions};
         use crate::quant::QuantConfig;
         let spec = ModelSpec {
             name: "g".into(),
@@ -441,8 +444,12 @@ mod tests {
         }
         let cfg = QuantConfig::block_wise(4, 64).unwrap();
         let opts = QuantizeOptions::new().with_packed();
-        let qm = quantize(&spec, weights, None, Method::Wgm, &cfg, &opts).unwrap();
-        FusedModel::from_packed_map(&qm.export_packed().unwrap()).unwrap()
+        let qm = quantize(&spec, weights, None, method, &cfg, &opts).unwrap();
+        FusedModel::from_packed_map_with(&qm.export_packed().unwrap(), mac).unwrap()
+    }
+
+    fn fused_model() -> FusedModel {
+        fused_model_with(crate::pipeline::Method::Wgm, crate::kernels::MacMode::F32)
     }
 
     fn probe(cols: usize, seed: u64) -> Vec<f32> {
@@ -495,6 +502,68 @@ mod tests {
         assert_eq!(stats.requests, 4);
         assert!(stats.batches < 4, "same-layer requests must coalesce: {stats:?}");
         assert!(stats.max_batch_fill >= 2);
+    }
+
+    /// Batching fairness: requests interleaved across two layers — a
+    /// majority layer and a minority one — all complete (the per-drain
+    /// layer grouping serves every group, so the minority layer cannot
+    /// starve behind the busy one), coalescing still happens, and every
+    /// response is bit-identical to the unbatched `gemv` of the same
+    /// handle. Runs in both f32 and int8 MAC modes.
+    #[test]
+    fn gemv_server_interleaved_layers_fair_and_bit_identical() {
+        use crate::kernels::MacMode;
+        for mac in [MacMode::F32, MacMode::Int8] {
+            // rtn: affine decode, so the same fixture serves both modes
+            let fm = fused_model_with(crate::pipeline::Method::Rtn, mac);
+            let plan: Vec<(&str, u64)> = vec![
+                ("wq", 200),
+                ("wv", 201),
+                ("wq", 202),
+                ("wq", 203),
+                ("wv", 204),
+                ("wq", 205),
+                ("wq", 206),
+                ("wq", 207),
+            ];
+            let expect: Vec<Vec<f32>> = plan
+                .iter()
+                .map(|(layer, seed)| {
+                    let l = fm.linear(layer).unwrap();
+                    l.gemv(&probe(l.cols(), *seed))
+                })
+                .collect();
+            let cols: BTreeMap<&str, usize> =
+                [("wq", fm.linear("wq").unwrap().cols()), ("wv", fm.linear("wv").unwrap().cols())]
+                    .into();
+            let (server, client) = GemvServer::spawn(fm, 2, 8, Duration::from_millis(50));
+            let mut handles = Vec::new();
+            for (layer, seed) in &plan {
+                let c = client.clone();
+                let x = probe(cols[layer], *seed);
+                let layer = *layer;
+                handles.push(std::thread::spawn(move || c.infer(layer, x).unwrap()));
+            }
+            for (i, h) in handles.into_iter().enumerate() {
+                // a successful join IS the no-starvation check: the
+                // minority layer's requests came back too
+                assert_eq!(
+                    h.join().unwrap(),
+                    expect[i],
+                    "request {i} (mac={}): served != unbatched gemv",
+                    mac.name()
+                );
+            }
+            drop(client);
+            let stats = server.shutdown();
+            assert_eq!(stats.requests, 8, "mac={}", mac.name());
+            assert!(
+                stats.batches < 8,
+                "interleaved requests must coalesce (mac={}): {stats:?}",
+                mac.name()
+            );
+            assert!(stats.max_batch_fill >= 2, "mac={}", mac.name());
+        }
     }
 
     #[test]

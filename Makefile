@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench-smoke bench-perf bench-pack bench-gemv bench-forward bench-all lint fmt artifacts clean
+.PHONY: build test bench-smoke bench-perf bench-pack bench-gemv bench-forward bench-serve bench-all lint fmt artifacts clean
 
 ## Release build of the library, `msb` CLI, all benches and all examples.
 build:
@@ -51,6 +51,15 @@ bench-gemv:
 bench-forward:
 	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_forward
 
+## Continuous-batching decode over the paged KV arena (serve-* keys
+## merged into BENCH_perf.json). Self-asserting: batched logits must be
+## bit-identical to solo across MAC/kernel/thread grid, batched decode
+## must strictly beat solo sequential at >=2 streams, and the arena's
+## peak footprint must stay within the naive per-request caches with
+## pages provably recycled across waves.
+bench-serve:
+	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_serve
+
 ## Every BENCH_perf.json producer in one pass (plus the pack pipeline's
 ## BENCH_pack.json). Each binary stamps its keys with a `sources` entry,
 ## so a full refresh leaves an attributable provenance map behind.
@@ -59,6 +68,7 @@ bench-all:
 	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench table3_quant_time
 	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_gemv
 	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_forward
+	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_serve
 	$(CARGO) bench --bench perf_pack
 
 ## Style gate: rustfmt + clippy with warnings denied.

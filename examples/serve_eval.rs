@@ -5,7 +5,7 @@
 //!   cargo run --release --example serve_eval -- [--backend runner|fused|forward]
 //!       [--payload payload.msbt] [--requests 64] [--clients 8]
 //!       [--threads N] [--model small] [--method wgm] [--batch B]
-//!       [--mac f32|int8|auto]
+//!       [--mac f32|int8|auto] [--streams N] [--page-tokens P] [--chunk C]
 //!       [--vocab V --d D --layers L --heads H --ff F --seq S --rows R]
 //!
 //! One `--backend` flag selects the serving construction; every backend
@@ -26,10 +26,11 @@
 //!   full token scoring straight off the codes behind the same
 //!   `EvalServer` the runner uses — no `artifacts/`, no XLA. The
 //!   architecture flags must match the payload (shapes are validated
-//!   at load; `msb score` emits compatible payloads).
-//!
-//! The old `--packed file` / `--fused file` spellings still work but are
-//! deprecated aliases for `--backend runner|fused --payload file`.
+//!   at load; `msb score` emits compatible payloads). With `--streams N`
+//!   the forward backend switches to the continuous-batching scheduler
+//!   (`EvalServer::spawn_batched`): every active stream rides one fused
+//!   `step_batch` per decode step over the paged KV arena, and every
+//!   served response is checked bit-identical to solo scoring.
 
 use std::time::{Duration, Instant};
 
@@ -47,22 +48,15 @@ use msb_quant::stats::Rng;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    // unified interface, with the legacy mutually exclusive flags mapped on
-    let mut backend = args.str_or("backend", "runner").to_string();
-    let mut payload = args.get("payload").map(String::from);
-    if let Some(p) = args.get("fused") {
-        eprintln!("note: --fused is deprecated; use --backend fused --payload <file>");
-        backend = "fused".into();
-        payload = Some(p.to_string());
-    }
-    if let Some(p) = args.get("packed") {
-        eprintln!("note: --packed is deprecated; use --backend runner --payload <file>");
-        backend = "runner".into();
-        payload = Some(p.to_string());
-    }
+    let backend = args.str_or("backend", "runner").to_string();
+    let payload = args.get("payload").map(String::from);
     let threads = args.usize_or("threads", args.usize_or("decode-threads", 0)?)?;
     let mac = msb_quant::kernels::MacMode::parse(args.str_or("mac", "f32"))?;
-    let builder = BackendBuilder::new().threads(threads).mac(mac);
+    let builder = BackendBuilder::new()
+        .threads(threads)
+        .mac(mac)
+        .max_streams(args.usize_or("streams", 0)?.max(1))
+        .kv_page_tokens(args.usize_or("page-tokens", 16)?);
     match backend.as_str() {
         "runner" => serve_runner(&args, &builder, payload),
         "fused" => {
@@ -228,6 +222,7 @@ fn serve_fused(args: &Args, builder: &BackendBuilder, payload: &str) -> Result<(
         })
         .collect();
 
+    let fallbacks = model.mac_fallbacks();
     let (server, client) = GemvServer::spawn(model, threads, batch_cap, Duration::from_millis(5));
     for (name, x, want) in &references {
         let got = client.infer(name, x.clone())?;
@@ -271,6 +266,9 @@ fn serve_fused(args: &Args, builder: &BackendBuilder, payload: &str) -> Result<(
     let (reqs, batches) =
         (stats.requests.saturating_sub(warmup), stats.batches.saturating_sub(warmup));
     report(&mut all_lat, reqs, batches, stats.max_batch_fill, n_clients, wall);
+    if fallbacks > 0 {
+        println!("mac fallbacks: {fallbacks} layer(s) fell back to the f32 MAC");
+    }
     Ok(())
 }
 
@@ -279,6 +277,10 @@ fn serve_fused(args: &Args, builder: &BackendBuilder, payload: &str) -> Result<(
 /// KV-cached incremental decode is checked bit-identical against the
 /// full-sequence recompute (the forward pass determinism contract).
 fn serve_forward(args: &Args, builder: &BackendBuilder, payload: &str) -> Result<()> {
+    let streams = args.usize_or("streams", 0)?;
+    if streams > 0 {
+        return serve_forward_batched(args, builder, payload);
+    }
     let n_requests = args.usize_or("requests", 64)?;
     let n_clients = args.usize_or("clients", 8)?.max(1);
     let fs = ForwardSpec::new(
@@ -322,6 +324,7 @@ fn serve_forward(args: &Args, builder: &BackendBuilder, payload: &str) -> Result
     println!("self-check OK: KV-cached decode bit-identical to full recompute");
 
     let (vocab, seq) = (fs.vocab, fs.seq);
+    let fallbacks = model.mac_fallbacks();
     let (server, client) = EvalServer::spawn(model, Duration::from_millis(5));
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -356,6 +359,117 @@ fn serve_forward(args: &Args, builder: &BackendBuilder, payload: &str) -> Result
     let stats = server.shutdown();
     report(&mut all_lat, stats.requests, stats.batches, stats.max_batch_fill, n_clients, wall);
     println!("random-stream ppl≈{:.2} (uniform tokens ⇒ ≈vocab {})", mean_nll.exp(), vocab);
+    if fallbacks > 0 {
+        println!("mac fallbacks: {fallbacks} projection(s) fell back to the f32 MAC");
+    }
+    Ok(())
+}
+
+/// Continuous-batching forward serving (`--streams N`): requests are
+/// admitted into stream slots between decode steps, every active stream
+/// rides one fused `step_batch` over the paged KV arena, and pages are
+/// recycled the moment a stream retires. Every served response is
+/// checked bit-identical to solo scoring before the run reports.
+fn serve_forward_batched(args: &Args, builder: &BackendBuilder, payload: &str) -> Result<()> {
+    use msb_quant::eval::LogProbs;
+    use msb_quant::server::BatchConfig;
+
+    let n_requests = args.usize_or("requests", 64)?.max(1);
+    let n_clients = args.usize_or("clients", 8)?.max(1);
+    let fs = ForwardSpec::new(
+        args.usize_or("vocab", 256)?,
+        args.usize_or("d", 64)?,
+        args.usize_or("layers", 2)?,
+        args.usize_or("heads", 4)?,
+        args.usize_or("ff", 128)?,
+        args.usize_or("seq", 32)?,
+        1, // streams are the batch here; the arena holds one slot each
+    )?;
+    let t0 = Instant::now();
+    let map = msbt::read_file(payload)?;
+    let model = builder.forward(fs.clone(), &map)?.into_forward()?;
+    let fallbacks = model.mac_fallbacks();
+    let (pb, fb) = (model.payload_bytes(), model.f32_bytes());
+    println!(
+        "serving continuous-batched CPU forward ({} layers, d={}, vocab={}) from {payload} \
+         in {:.2}s ({pb} payload bytes = {:.3}x of the {fb}-byte f32 projections; \
+         {} stream slots, {}-token pages)",
+        fs.layers,
+        fs.d,
+        fs.vocab,
+        t0.elapsed().as_secs_f64(),
+        builder.get_max_streams(),
+        builder.get_kv_page_tokens(),
+    );
+
+    // prompt mix sweeps half to full context so prefill chunking and
+    // retirement interleave; solo references are the bit-identity ground
+    // truth, computed before the model moves into the server thread
+    let prompts: Vec<Vec<i32>> = (0..n_requests)
+        .map(|i| {
+            let len = (fs.seq / 2 + (i * 3) % (fs.seq / 2 + 1)).max(1).min(fs.seq);
+            synth::synth_tokens(&fs, len, 0xA11CE ^ i as u64)
+        })
+        .collect();
+    let reference: Vec<Vec<f64>> = prompts
+        .iter()
+        .map(|t| -> Result<Vec<f64>> {
+            let mut kv = model.kv_state();
+            let out = model.step(&mut kv, t)?;
+            let lp = LogProbs::new(&out, fs.vocab);
+            Ok((1..t.len()).map(|p| lp.logp(p - 1, t[p] as usize)).collect())
+        })
+        .collect::<Result<_>>()?;
+
+    let bc = BatchConfig {
+        max_streams: builder.get_max_streams(),
+        kv_page_tokens: builder.get_kv_page_tokens(),
+        prefill_chunk: args.usize_or("chunk", 8)?.max(1),
+        ..BatchConfig::default()
+    };
+    let (server, client) = EvalServer::spawn_batched(model, bc)?;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let client = client.clone();
+        let prompts = prompts.clone();
+        let reference = reference.clone();
+        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+            let mut lat = Vec::new();
+            let mut i = c;
+            while i < prompts.len() {
+                let t = Instant::now();
+                let resp = client.score(prompts[i].clone())?;
+                lat.push(t.elapsed().as_secs_f64() * 1e3);
+                anyhow::ensure!(
+                    resp.logprobs == reference[i],
+                    "request {i}: batched logprobs diverged from solo scoring"
+                );
+                i += n_clients;
+            }
+            Ok(lat)
+        }));
+    }
+    let mut all_lat = Vec::new();
+    for h in handles {
+        all_lat.extend(h.join().expect("client thread")?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(client);
+    let stats = server.shutdown();
+    println!("self-check OK: all {n_requests} batched responses bit-identical to solo scoring");
+    report(&mut all_lat, stats.requests, stats.batches, stats.max_batch_fill, n_clients, wall);
+    println!(
+        "scheduler: {} admitted, {} retired, max queue wait {} steps",
+        stats.admitted, stats.retired, stats.max_wait_steps
+    );
+    println!(
+        "kv arena: peak {} of {} pages ({} bytes at peak)",
+        stats.peak_pages, stats.total_pages, stats.peak_page_bytes
+    );
+    if fallbacks > 0 {
+        println!("mac fallbacks: {fallbacks} projection(s) fell back to the f32 MAC");
+    }
     Ok(())
 }
 

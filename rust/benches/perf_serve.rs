@@ -1,0 +1,261 @@
+//! §Perf — continuous-batching decode over the paged KV arena
+//! (`forward::KvArena` + `ForwardModel::step_batch`).
+//!
+//! The claims under test:
+//!
+//! * batched decode is *bit-identical* to solo scoring: feeding N
+//!   streams through staggered `step_batch` chunks reproduces each
+//!   stream's solo `step` logits exactly, across MAC modes (f32, int8),
+//!   dot kernels (scalar, detected SIMD), and thread counts (1, 4) —
+//!   per-column independence of the fused GEMM plus activation-anchored
+//!   chunking make coalescing a pure layout change;
+//! * batched decode throughput strictly beats solo sequential decode at
+//!   ≥2 streams — one N-row GEMM per projection per step instead of N
+//!   separate GEMV passes;
+//! * the page arena's peak footprint never exceeds the sum of naive
+//!   per-request caches, pages are recycled the moment a stream
+//!   retires, and a second wave of streams re-uses them (the peak
+//!   high-water mark does not move).
+//!
+//! All three are hard asserts: no number is reported from a run that
+//! fails them. Results merge into `BENCH_perf.json` (`serve-*` keys)
+//! next to the engine/scheduler/gemv/forward numbers.
+
+use std::collections::BTreeMap;
+
+use msb_quant::benchlib::{self, time_median};
+use msb_quant::forward::{synth, ForwardModel, ForwardSpec, KvArena, StreamSlot};
+use msb_quant::kernels::{Kernel, MacMode};
+use msb_quant::pipeline::{quantize, QuantizeOptions};
+use msb_quant::quant::registry::Method;
+use msb_quant::quant::QuantConfig;
+
+/// One full-chunk solo pass: the ground truth `step_batch` must match.
+fn solo_logits(model: &ForwardModel, toks: &[i32]) -> Vec<f32> {
+    let mut kv = model.kv_state();
+    model.step(&mut kv, toks).expect("solo step")
+}
+
+/// Drive every prompt through a *staggered* `step_batch` schedule on the
+/// given arena — stream i advances `1 + (i + round) % 3` tokens per
+/// round, so chunk boundaries differ per stream and streams retire at
+/// different steps. Each stream's pages are freed the moment its last
+/// token is fed (the scheduler's recycling discipline). Returns each
+/// stream's concatenated logit rows.
+fn run_wave(model: &ForwardModel, arena: &mut KvArena, prompts: &[Vec<i32>]) -> Vec<Vec<f32>> {
+    let vocab = model.spec().vocab;
+    let ids: Vec<_> = prompts.iter().map(|_| arena.alloc_stream()).collect();
+    let mut fed = vec![0usize; prompts.len()];
+    let mut out: Vec<Vec<f32>> = vec![Vec::new(); prompts.len()];
+    for round in 0.. {
+        let mut widths = Vec::new();
+        let mut slots = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            let left = p.len() - fed[i];
+            if left == 0 {
+                continue;
+            }
+            let w = left.min(1 + (i + round) % 3);
+            slots.push(StreamSlot { id: ids[i], tokens: &p[fed[i]..fed[i] + w] });
+            widths.push((i, w));
+        }
+        if slots.is_empty() {
+            break;
+        }
+        let res = model.step_batch(arena, &slots).expect("step_batch");
+        for ((i, w), rows) in widths.into_iter().zip(res) {
+            assert_eq!(rows.len(), w * vocab, "stream {i}: wrong logit row count");
+            out[i].extend(rows);
+            fed[i] += w;
+            if fed[i] == prompts[i].len() {
+                arena.free_stream(ids[i]);
+            }
+        }
+    }
+    out
+}
+
+/// Sequential solo decode: each stream token-by-token through its own
+/// KV state, one stream after another — the no-batching baseline.
+fn solo_decode(model: &ForwardModel, prompts: &[Vec<i32>]) {
+    for p in prompts {
+        let mut kv = model.kv_state();
+        for t in 0..p.len() {
+            model.step(&mut kv, &p[t..t + 1]).expect("solo decode step");
+        }
+    }
+}
+
+/// Coalesced decode: all streams advance one token per `step_batch`.
+fn batched_decode(model: &ForwardModel, arena: &mut KvArena, prompts: &[Vec<i32>]) {
+    let ids: Vec<_> = prompts.iter().map(|_| arena.alloc_stream()).collect();
+    let steps = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
+    for t in 0..steps {
+        let slots: Vec<StreamSlot> = prompts
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| t < p.len())
+            .map(|(i, p)| StreamSlot { id: ids[i], tokens: &p[t..t + 1] })
+            .collect();
+        model.step_batch(arena, &slots).expect("batched decode step");
+    }
+    for id in ids {
+        arena.free_stream(id);
+    }
+}
+
+fn main() {
+    let fast = benchlib::fast_mode();
+    let mut results: BTreeMap<String, f64> = BTreeMap::new();
+    let reps = if fast { 3 } else { 5 };
+    let fs = if fast {
+        ForwardSpec::new(64, 32, 2, 4, 48, 16, 1)
+    } else {
+        ForwardSpec::new(256, 64, 2, 4, 128, 32, 1)
+    }
+    .expect("bench spec");
+    let block = if fast { 16 } else { 64 };
+    let page_tokens = if fast { 4 } else { 8 };
+    let seq = fs.seq;
+
+    // rtn: calibration-free AND affine-decode, so the int8 MAC arm of
+    // the bit-identity grid engages for real
+    let spec = synth::model_spec(&fs, "perf_serve");
+    let weights = synth::synth_weights(&fs, 0x5E21_u64);
+    let cfg = QuantConfig::block_wise(4, block).expect("cfg").with_packed();
+    let opts = QuantizeOptions::new().with_threads(2);
+    let qm = quantize(&spec, weights, None, Method::Rtn, &cfg, &opts).expect("quantize");
+    let payload = qm.export_packed().expect("packed payload");
+
+    // --- gate (a): batched bit-identical to solo across the grid -----------
+    let lens = [seq, seq / 2 + 1, seq - 3, 5];
+    let prompts: Vec<Vec<i32>> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| synth::synth_tokens(&fs, l.max(1), 0xBEE5 + i as u64))
+        .collect();
+    let mut kernels = vec![Kernel::Scalar];
+    if let Some(k) = Kernel::detect_simd() {
+        kernels.push(k);
+    }
+    let mut grid = 0usize;
+    for &mac in &[MacMode::F32, MacMode::Int8] {
+        for &kernel in &kernels {
+            for &threads in &[1usize, 4] {
+                let m = ForwardModel::from_packed_map_with(fs.clone(), &payload, mac)
+                    .expect("packed model")
+                    .with_kernel(kernel)
+                    .with_threads(threads);
+                let solo: Vec<Vec<f32>> = prompts.iter().map(|p| solo_logits(&m, p)).collect();
+                let mut arena = m.kv_arena(prompts.len(), page_tokens).expect("arena");
+                let batched = run_wave(&m, &mut arena, &prompts);
+                for (i, (got, want)) in batched.iter().zip(&solo).enumerate() {
+                    assert_eq!(
+                        got,
+                        want,
+                        "stream {i} diverged from solo ({} MAC, {} kernel, {threads} threads)",
+                        mac.name(),
+                        kernel.name()
+                    );
+                }
+                grid += 1;
+            }
+        }
+    }
+
+    // --- gate (c): arena footprint + page recycling -------------------------
+    let model = ForwardModel::from_packed_map_with(fs.clone(), &payload, MacMode::F32)
+        .expect("packed model");
+    let mut arena = model.kv_arena(prompts.len(), page_tokens).expect("arena");
+    let wave1 = run_wave(&model, &mut arena, &prompts);
+    assert_eq!(arena.pages_in_use(), 0, "pages must all return to the free list");
+    assert!(arena.live_streams() == 0, "all streams must retire");
+    let peak1 = arena.peak_pages();
+    assert!(peak1 > 0, "wave must have touched pages");
+    let wave2 = run_wave(&model, &mut arena, &prompts);
+    assert_eq!(wave1, wave2, "recycled pages changed the math");
+    assert_eq!(
+        arena.peak_pages(),
+        peak1,
+        "second wave grew the high-water mark: pages were not recycled"
+    );
+    let naive_bytes = prompts.len() * arena.naive_stream_bytes();
+    assert!(
+        arena.peak_bytes() <= naive_bytes,
+        "arena peak {} B exceeds {} B of naive per-request caches",
+        arena.peak_bytes(),
+        naive_bytes
+    );
+
+    // --- gate (b) + throughput: solo sequential vs coalesced decode --------
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let pooled = ForwardModel::from_packed_map_with(fs.clone(), &payload, MacMode::F32)
+        .expect("packed model")
+        .with_threads(threads);
+    let stream_counts: &[usize] = if fast { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let mut rows = Vec::new();
+    for &n in stream_counts {
+        let ps: Vec<Vec<i32>> =
+            (0..n).map(|i| synth::synth_tokens(&fs, seq, 0xDECD + i as u64)).collect();
+        let tokens = (n * seq) as f64;
+        let t_solo = time_median(reps, || solo_decode(&pooled, &ps));
+        let t_batch = time_median(reps, || {
+            let mut a = pooled.kv_arena(n, page_tokens).expect("arena");
+            batched_decode(&pooled, &mut a, &ps);
+        });
+        let (solo_tps, batch_tps) = (tokens / t_solo, tokens / t_batch);
+        if n >= 2 {
+            assert!(
+                batch_tps > solo_tps,
+                "{n} streams: batched decode ({batch_tps:.1} tok/s) must strictly beat \
+                 solo sequential ({solo_tps:.1} tok/s)"
+            );
+        }
+        if n == 1 {
+            results.insert("serve-solo-tps".to_string(), solo_tps);
+        }
+        results.insert(format!("serve-batched-s{n}-tps"), batch_tps);
+        results.insert(format!("serve-speedup-s{n}"), t_solo / t_batch);
+        rows.push((n, t_solo, t_batch, solo_tps, batch_tps));
+    }
+
+    benchlib::header(&format!(
+        "continuous-batching decode: vocab {} d {} L{} seq {seq} ({} kernel, {threads} \
+         threads, {page_tokens}-token pages)",
+        fs.vocab,
+        fs.d,
+        fs.layers,
+        Kernel::detect().name()
+    ));
+    println!(
+        "  bit-identity: batched == solo on {grid} grid points \
+         (mac x kernel x threads), {} streams each",
+        prompts.len()
+    );
+    println!(
+        "  arena: peak {} of {} pages = {} B vs {} B naive ({:.2}x), recycled across waves",
+        peak1,
+        arena.total_pages(),
+        arena.peak_bytes(),
+        naive_bytes,
+        naive_bytes as f64 / arena.peak_bytes().max(1) as f64
+    );
+    for (n, t_solo, t_batch, solo_tps, batch_tps) in rows {
+        println!(
+            "  {n} stream(s): solo {t_solo:>8.4}s ({solo_tps:>8.1} tok/s)   batched \
+             {t_batch:>8.4}s ({batch_tps:>8.1} tok/s)   {:.2}x",
+            t_solo / t_batch
+        );
+    }
+
+    let simd = u64::from(Kernel::detect() != Kernel::Scalar) as f64;
+    results.insert("serve-simd".to_string(), simd);
+    results.insert("serve-arena-peak-bytes".to_string(), arena.peak_bytes() as f64);
+    results.insert("serve-naive-bytes".to_string(), naive_bytes as f64);
+    results.insert("serve-grid-points".to_string(), grid as f64);
+
+    match benchlib::merge_bench_json("perf", "perf_serve", &results) {
+        Ok(path) => println!("\nmerged {} keys into {}", results.len(), path.display()),
+        Err(e) => eprintln!("\nBENCH_perf.json not written: {e}"),
+    }
+}

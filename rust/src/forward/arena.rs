@@ -1,0 +1,378 @@
+//! Paged KV-cache arena for multi-stream decode.
+//!
+//! [`KvArena`] replaces the one-[`KvState`](super::KvState)-per-request
+//! model for serving: instead of every stream owning a private
+//! `[seq, d]` slab per layer (heap-grown up front to the full context
+//! window), the arena holds **one slab of fixed-size pages per layer**
+//! and hands pages to streams on demand through a free-list allocator.
+//! Each stream carries a page table (`position / page_tokens → page id`);
+//! retiring a stream returns its pages to the free list immediately, so
+//! a mix of short and long requests shares the same bounded memory.
+//!
+//! The page id is layer-agnostic: page `p` addresses the same slot in
+//! every layer's slab, so one table per stream covers the whole stack.
+//!
+//! Determinism: page *placement* never touches the math. Attention reads
+//! positions in ascending order through the table
+//! ([`super::ops::attend_paged`]), and the per-position f64 accumulation
+//! is identical to the contiguous [`super::ops::attend`] — which page a
+//! position happens to live in only changes addresses, never values or
+//! operation order. `ForwardModel::step_batch` outputs are therefore
+//! bit-identical to per-stream solo `step` runs regardless of allocation
+//! history.
+
+use anyhow::{ensure, Result};
+
+/// Handle to one stream's cache inside a [`KvArena`]. Obtained from
+/// [`KvArena::alloc_stream`]; invalidated by [`KvArena::free_stream`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamId(usize);
+
+/// Per-stream bookkeeping: the page table and the decode position.
+struct StreamEntry {
+    /// Page ids in position order: position `t` lives in
+    /// `pages[t / page_tokens]` at in-page offset `t % page_tokens`.
+    pages: Vec<usize>,
+    /// Positions already decoded into the cache.
+    len: usize,
+}
+
+/// One slab of fixed-size KV pages per layer plus a free-list allocator
+/// and per-stream page tables. See the module docs.
+pub struct KvArena {
+    /// `[layers][total_pages * page_tokens * d]` key / value slabs.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Free page ids (LIFO: a retired stream's pages are reused first).
+    free: Vec<usize>,
+    /// Slot map of live streams; `None` slots are reusable.
+    streams: Vec<Option<StreamEntry>>,
+    layers: usize,
+    d: usize,
+    page_tokens: usize,
+    /// Per-stream position cap (the model's context window).
+    seq: usize,
+    total_pages: usize,
+    /// High-water mark of simultaneously allocated pages.
+    peak_pages: usize,
+}
+
+impl KvArena {
+    /// An arena of `total_pages` pages of `page_tokens` positions each,
+    /// shared by any number of concurrent streams (each capped at `seq`
+    /// positions). Sizing rule of thumb:
+    /// `total_pages = max_streams * seq.div_ceil(page_tokens)` guarantees
+    /// `max_streams` full-context streams never starve —
+    /// [`super::ForwardModel::kv_arena`] applies it.
+    pub fn new(
+        layers: usize,
+        d: usize,
+        seq: usize,
+        page_tokens: usize,
+        total_pages: usize,
+    ) -> Result<KvArena> {
+        ensure!(layers > 0 && d > 0 && seq > 0, "degenerate arena shape");
+        ensure!(page_tokens > 0, "page_tokens must be positive");
+        ensure!(total_pages > 0, "total_pages must be positive");
+        let slab = total_pages * page_tokens * d;
+        Ok(KvArena {
+            k: (0..layers).map(|_| vec![0.0; slab]).collect(),
+            v: (0..layers).map(|_| vec![0.0; slab]).collect(),
+            // LIFO free list: ids pushed in reverse so the first alloc
+            // takes page 0 (cosmetic; placement never affects the math)
+            free: (0..total_pages).rev().collect(),
+            streams: Vec::new(),
+            layers,
+            d,
+            page_tokens,
+            seq,
+            total_pages,
+            peak_pages: 0,
+        })
+    }
+
+    /// Admit a new stream (empty cache, no pages yet). Stream ids are
+    /// cheap slot-map handles; the page allocator in
+    /// [`KvArena::reserve`] is the real capacity bound.
+    pub fn alloc_stream(&mut self) -> StreamId {
+        let entry = StreamEntry { pages: Vec::new(), len: 0 };
+        for (i, slot) in self.streams.iter_mut().enumerate() {
+            if slot.is_none() {
+                *slot = Some(entry);
+                return StreamId(i);
+            }
+        }
+        self.streams.push(Some(entry));
+        StreamId(self.streams.len() - 1)
+    }
+
+    /// Retire a stream: its pages return to the free list immediately and
+    /// are reused by the next allocation. The id becomes invalid.
+    pub fn free_stream(&mut self, id: StreamId) {
+        if let Some(entry) = self.streams.get_mut(id.0).and_then(|slot| slot.take()) {
+            self.free.extend(entry.pages);
+        }
+    }
+
+    fn entry(&self, id: StreamId) -> Result<&StreamEntry> {
+        self.streams
+            .get(id.0)
+            .and_then(Option::as_ref)
+            .ok_or_else(|| anyhow::anyhow!("stream {} is not live", id.0))
+    }
+
+    /// Positions already decoded for `id`.
+    pub fn len(&self, id: StreamId) -> Result<usize> {
+        Ok(self.entry(id)?.len)
+    }
+
+    /// Whether `id` has decoded any positions yet.
+    pub fn is_empty(&self, id: StreamId) -> Result<bool> {
+        Ok(self.entry(id)?.len == 0)
+    }
+
+    /// Grow `id`'s page table to cover positions `0..new_len`, taking
+    /// pages from the free list. Fails (leaving the stream unchanged) if
+    /// the arena is out of pages or `new_len` exceeds the context window.
+    pub fn reserve(&mut self, id: StreamId, new_len: usize) -> Result<()> {
+        ensure!(new_len <= self.seq, "stream overflow: {new_len} > seq {}", self.seq);
+        let have = self.entry(id)?.pages.len();
+        let need = new_len.div_ceil(self.page_tokens);
+        if need <= have {
+            return Ok(());
+        }
+        ensure!(
+            self.free.len() >= need - have,
+            "KV arena out of pages: need {} more, {} free of {}",
+            need - have,
+            self.free.len(),
+            self.total_pages
+        );
+        for _ in have..need {
+            let page = self.free.pop().expect("free list checked above");
+            self.streams[id.0].as_mut().expect("entry checked above").pages.push(page);
+        }
+        self.peak_pages = self.peak_pages.max(self.pages_in_use());
+        Ok(())
+    }
+
+    /// Write a chunk of roped keys/values (`[t_new, d]` row-major) for
+    /// stream `id` into layer `li` at positions `t0..t0 + t_new`, and (on
+    /// the final layer) advance the stream's length. The pages must have
+    /// been reserved ([`KvArena::reserve`]) beforehand.
+    pub(super) fn append(
+        &mut self,
+        li: usize,
+        id: StreamId,
+        t0: usize,
+        k: &[f32],
+        v: &[f32],
+        t_new: usize,
+    ) {
+        let (d, pt) = (self.d, self.page_tokens);
+        let entry = self.streams[id.0].as_ref().expect("append to dead stream");
+        debug_assert!(entry.pages.len() * pt >= t0 + t_new, "append past reservation");
+        for i in 0..t_new {
+            let pos = t0 + i;
+            let base = (entry.pages[pos / pt] * pt + pos % pt) * d;
+            self.k[li][base..base + d].copy_from_slice(&k[i * d..(i + 1) * d]);
+            self.v[li][base..base + d].copy_from_slice(&v[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// Record that `t_new` positions were appended to `id` (after the
+    /// last layer's [`KvArena::append`]).
+    pub(super) fn advance(&mut self, id: StreamId, t_new: usize) {
+        let entry = self.streams[id.0].as_mut().expect("advance on dead stream");
+        entry.len += t_new;
+    }
+
+    /// Layer `li`'s key/value slabs (read-side of the attention jobs).
+    pub(super) fn layer(&self, li: usize) -> (&[f32], &[f32]) {
+        (&self.k[li], &self.v[li])
+    }
+
+    /// Stream `id`'s page table (read-side of the attention jobs).
+    pub(super) fn pages(&self, id: StreamId) -> &[usize] {
+        &self.streams[id.0].as_ref().expect("pages of dead stream").pages
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    /// Pages currently held by live streams.
+    pub fn pages_in_use(&self) -> usize {
+        self.total_pages - self.free.len()
+    }
+
+    /// High-water mark of [`KvArena::pages_in_use`] over the arena's
+    /// lifetime — the honest memory cost of the workload served so far.
+    pub fn peak_pages(&self) -> usize {
+        self.peak_pages
+    }
+
+    /// Live streams right now.
+    pub fn live_streams(&self) -> usize {
+        self.streams.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Bytes of K+V storage one page covers across every layer.
+    pub fn page_bytes(&self) -> usize {
+        2 * self.layers * self.page_tokens * self.d * std::mem::size_of::<f32>()
+    }
+
+    /// Peak bytes actually committed to live streams
+    /// (`peak_pages * page_bytes`) — the number the `perf_serve` bench
+    /// holds against the sum of naive per-request `[seq, d]` caches.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_pages * self.page_bytes()
+    }
+
+    /// What one naive per-request cache costs at full context: a
+    /// `[seq, d]` K+V slab per layer ([`super::KvState`] with batch 1).
+    pub fn naive_stream_bytes(&self) -> usize {
+        2 * self.layers * self.seq * self.d * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena() -> KvArena {
+        // 2 layers, d=4, seq=10, 4-token pages, 8 pages total
+        KvArena::new(2, 4, 10, 4, 8).unwrap()
+    }
+
+    #[test]
+    fn rejects_degenerate_shapes() {
+        assert!(KvArena::new(0, 4, 8, 4, 4).is_err());
+        assert!(KvArena::new(1, 4, 8, 0, 4).is_err());
+        assert!(KvArena::new(1, 4, 8, 4, 0).is_err());
+    }
+
+    #[test]
+    fn reserve_allocates_on_page_boundaries() {
+        let mut a = arena();
+        let s = a.alloc_stream();
+        assert_eq!(a.len(s).unwrap(), 0);
+        a.reserve(s, 3).unwrap(); // fits one 4-token page
+        assert_eq!(a.pages_in_use(), 1);
+        a.reserve(s, 4).unwrap(); // still one page
+        assert_eq!(a.pages_in_use(), 1);
+        a.reserve(s, 5).unwrap(); // crosses into a second page
+        assert_eq!(a.pages_in_use(), 2);
+        // overflow past the context window is refused
+        assert!(a.reserve(s, 11).is_err());
+    }
+
+    #[test]
+    fn free_list_recycles_pages() {
+        let mut a = arena();
+        let s1 = a.alloc_stream();
+        let s2 = a.alloc_stream();
+        a.reserve(s1, 8).unwrap(); // 2 pages
+        a.reserve(s2, 8).unwrap(); // 2 pages
+        assert_eq!(a.pages_in_use(), 4);
+        assert_eq!(a.peak_pages(), 4);
+        a.free_stream(s1);
+        assert_eq!(a.pages_in_use(), 2, "retirement returns pages immediately");
+        // a new stream reuses the freed pages: peak does not grow
+        let s3 = a.alloc_stream();
+        a.reserve(s3, 8).unwrap();
+        assert_eq!(a.pages_in_use(), 4);
+        assert_eq!(a.peak_pages(), 4, "recycled pages must not raise the peak");
+        // operations on the dead id fail; the live ones still work
+        assert!(a.len(s1).is_err());
+        assert_eq!(a.len(s2).unwrap(), 0);
+    }
+
+    #[test]
+    fn out_of_pages_is_an_error_not_a_corruption() {
+        let mut a = arena();
+        let s1 = a.alloc_stream();
+        let s2 = a.alloc_stream();
+        let s3 = a.alloc_stream();
+        a.reserve(s1, 10).unwrap(); // 3 pages
+        a.reserve(s2, 10).unwrap(); // 3 pages
+        a.reserve(s3, 8).unwrap(); // 2 pages -> all 8 gone
+        assert_eq!(a.pages_in_use(), 8);
+        let s4 = a.alloc_stream();
+        assert!(a.reserve(s4, 1).is_err(), "arena must refuse, not corrupt");
+        // freeing one stream unblocks the waiter
+        a.free_stream(s1);
+        a.reserve(s4, 1).unwrap();
+        assert!(a.pages_in_use() <= 8);
+    }
+
+    #[test]
+    fn append_round_trips_through_the_page_table() {
+        let mut a = arena();
+        let s = a.alloc_stream();
+        a.reserve(s, 6).unwrap();
+        let d = 4;
+        // write positions 0..6 in two chunks with distinct values
+        let mk = |t0: usize, t_new: usize, tag: f32| -> (Vec<f32>, Vec<f32>) {
+            let mut k = vec![0.0f32; t_new * d];
+            let mut v = vec![0.0f32; t_new * d];
+            for i in 0..t_new {
+                for c in 0..d {
+                    k[i * d + c] = tag + (t0 + i) as f32 * 10.0 + c as f32;
+                    v[i * d + c] = -(tag + (t0 + i) as f32 * 10.0 + c as f32);
+                }
+            }
+            (k, v)
+        };
+        for li in 0..2 {
+            let (k, v) = mk(0, 4, (li * 1000) as f32);
+            a.append(li, s, 0, &k, &v, 4);
+        }
+        a.advance(s, 4);
+        for li in 0..2 {
+            let (k, v) = mk(4, 2, (li * 1000) as f32);
+            a.append(li, s, 4, &k, &v, 2);
+        }
+        a.advance(s, 2);
+        assert_eq!(a.len(s).unwrap(), 6);
+        // read back through the table: every position, both layers
+        let pt = a.page_tokens();
+        for li in 0..2 {
+            let (ks, vs) = a.layer(li);
+            let pages = a.pages(s);
+            for pos in 0..6 {
+                let base = (pages[pos / pt] * pt + pos % pt) * d;
+                for c in 0..d {
+                    let want = (li * 1000) as f32 + pos as f32 * 10.0 + c as f32;
+                    assert_eq!(ks[base + c], want, "k layer {li} pos {pos} col {c}");
+                    assert_eq!(vs[base + c], -want, "v layer {li} pos {pos} col {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let a = arena();
+        // one page: 2 layers * K+V * 4 tokens * d=4 * 4 bytes
+        assert_eq!(a.page_bytes(), 2 * 2 * 4 * 4 * 4);
+        assert_eq!(a.naive_stream_bytes(), 2 * 2 * 10 * 4 * 4);
+        assert_eq!(a.peak_bytes(), 0, "nothing reserved yet");
+    }
+}

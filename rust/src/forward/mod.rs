@@ -23,13 +23,22 @@
 //!   keeps input order);
 //! * [`ForwardModel::logits`] and incremental [`ForwardModel::step`]
 //!   share one forward chunk path, so a KV-cached decode reproduces the
-//!   full-sequence recompute bit for bit.
+//!   full-sequence recompute bit for bit;
+//! * multi-stream [`ForwardModel::step_batch`] coalesces every stream's
+//!   activation rows into the same projection `gemm` calls — per-row
+//!   independence of the fixed chunk order keeps each stream's rows
+//!   bit-identical to its solo batch-1 [`ForwardModel::step`], and the
+//!   paged attention ([`ops::attend_paged`] over a [`KvArena`]) shares
+//!   the contiguous path's f64 operation sequence exactly.
 //!
 //! [`PackedLinear`]: crate::kernels::PackedLinear
 //! [`dense_gemv`]: crate::kernels::dense_gemv
 
+pub mod arena;
 pub mod ops;
 pub mod synth;
+
+pub use arena::{KvArena, StreamId};
 
 use anyhow::{ensure, Context, Result};
 
@@ -216,6 +225,15 @@ impl KvState {
     }
 }
 
+/// One stream's contribution to a [`ForwardModel::step_batch`] call: the
+/// arena stream to append into and the token chunk to decode (any length
+/// ≥ 1 that fits the context window — a prefill chunk and a single
+/// decode token are the same thing here).
+pub struct StreamSlot<'a> {
+    pub id: StreamId,
+    pub tokens: &'a [i32],
+}
+
 /// The fused CPU forward model. See the module docs for the determinism
 /// contract; see [`synth`] for the parameter naming the constructors load.
 pub struct ForwardModel {
@@ -227,6 +245,7 @@ pub struct ForwardModel {
     kernel: Kernel,
     threads: usize,
     pool: Option<ThreadPool>,
+    mac_fallbacks: usize,
 }
 
 /// Rename real-checkpoint parameter keys onto the [`synth`] naming
@@ -258,6 +277,9 @@ struct Params<'a> {
     dense: &'a TensorMap,
     /// Multiply-accumulate mode applied to every packed projection.
     mac: MacMode,
+    /// Projections that asked for `Auto` int8 but lack an affine decode
+    /// and stayed on the f32 MAC ([`ForwardModel::mac_fallbacks`]).
+    fallbacks: usize,
 }
 
 impl Params<'_> {
@@ -274,7 +296,7 @@ impl Params<'_> {
                 .with_mac(self.mac)
                 .with_context(|| format!("mac mode for '{name}'"))?;
             if self.mac == MacMode::Auto && !pl.int8_eligible() {
-                eprintln!("mac=auto: projection '{name}' has no affine decode; f32 MAC");
+                self.fallbacks += 1;
             }
             return Ok(Linear::Packed(pl));
         }
@@ -313,7 +335,8 @@ impl ForwardModel {
     /// [`ForwardModel::from_packed_map`] with a multiply-accumulate mode
     /// applied to every packed projection. `MacMode::Int8` fails if the
     /// payload's method has no affine decode; `MacMode::Auto` keeps such
-    /// projections on the f32 path, logging each fallback once.
+    /// projections on the f32 path, counting each fallback
+    /// ([`ForwardModel::mac_fallbacks`]).
     pub fn from_packed_map_with(
         spec: ForwardSpec,
         map: &TensorMap,
@@ -323,7 +346,7 @@ impl ForwardModel {
         let (_method, packed, passthrough) = crate::pipeline::packed_tensors(map)?;
         let packed = canonicalize_names(packed)?;
         let passthrough = canonicalize_names(passthrough)?;
-        Self::build(spec, Params { packed, dense: &passthrough, mac })
+        Self::build(spec, Params { packed, dense: &passthrough, mac, fallbacks: 0 })
     }
 
     /// The f32-reference twin: every projection dense, same layer graph.
@@ -332,7 +355,10 @@ impl ForwardModel {
     /// fused kernels from the quantization error itself.
     pub fn from_dense(spec: ForwardSpec, map: &TensorMap) -> Result<ForwardModel> {
         spec.validate()?;
-        Self::build(spec, Params { packed: Default::default(), dense: map, mac: MacMode::F32 })
+        Self::build(
+            spec,
+            Params { packed: Default::default(), dense: map, mac: MacMode::F32, fallbacks: 0 },
+        )
     }
 
     fn build(spec: ForwardSpec, mut params: Params<'_>) -> Result<ForwardModel> {
@@ -369,6 +395,7 @@ impl ForwardModel {
             kernel: Kernel::detect(),
             threads: 1,
             pool: None,
+            mac_fallbacks: params.fallbacks,
         })
     }
 
@@ -401,6 +428,13 @@ impl ForwardModel {
         &self.spec
     }
 
+    /// How many packed projections requested `MacMode::Auto` int8 but
+    /// have no affine decode and stayed on the f32 MAC. Zero under an
+    /// explicit mode, or when every projection engaged the integer path.
+    pub fn mac_fallbacks(&self) -> usize {
+        self.mac_fallbacks
+    }
+
     /// Projection payload bytes actually resident (packed layers count
     /// their codes + scales, dense layers f32).
     pub fn payload_bytes(&self) -> usize {
@@ -417,6 +451,23 @@ impl ForwardModel {
     pub fn f32_bytes(&self) -> usize {
         let per_layer = 4 * self.spec.d * self.spec.d + 3 * self.spec.ff * self.spec.d;
         (per_layer * self.spec.layers + self.spec.vocab * self.spec.d) * 4
+    }
+
+    /// A fresh paged KV arena sized so `max_streams` concurrent streams
+    /// can each reach the full context window:
+    /// `total_pages = max_streams * ceil(seq / page_tokens)`. Feed to
+    /// [`ForwardModel::step_batch`].
+    pub fn kv_arena(&self, max_streams: usize, page_tokens: usize) -> Result<KvArena> {
+        ensure!(max_streams > 0, "max_streams must be positive");
+        ensure!(page_tokens > 0, "kv_page_tokens must be positive");
+        let per_stream = self.spec.seq.div_ceil(page_tokens);
+        KvArena::new(
+            self.spec.layers,
+            self.spec.d,
+            self.spec.seq,
+            page_tokens,
+            max_streams * per_stream,
+        )
     }
 
     /// A fresh (empty) KV cache sized for this model.
@@ -553,6 +604,158 @@ impl ForwardModel {
         let logits = self.lm_head.gemm(&nrm, n, kernel, pool, threads);
         kv.len = t0 + t_new;
         Ok(logits)
+    }
+
+    /// One coalesced decode step for many independent streams at
+    /// possibly different sequence positions. Each slot appends its
+    /// `tokens` chunk to its stream's paged cache and gets back that
+    /// chunk's `[t_new, vocab]` logits (`out[i]` belongs to `slots[i]`).
+    ///
+    /// Every projection runs as ONE `gemm` over the slot-concatenated
+    /// activation rows, so weight-tile unpacking (and the int8
+    /// activation quantization under [`MacMode::Int8`]) amortizes across
+    /// all streams; attention runs one `(stream, head)` job per worker
+    /// through the page table. Per-row independence of the fixed chunk
+    /// order makes each stream's logits bit-identical to a solo
+    /// [`ForwardModel::step`] of the same chunks on a batch-1 spec —
+    /// `spec.batch` is ignored here, each stream is one sequence.
+    pub fn step_batch(
+        &self,
+        arena: &mut KvArena,
+        slots: &[StreamSlot<'_>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let ForwardSpec { d, heads, seq, vocab, rope_base, .. } = self.spec;
+        ensure!(
+            arena.layers() == self.layers.len() && arena.d() == d && arena.seq() == seq,
+            "KV arena shape does not match this model"
+        );
+        ensure!(!slots.is_empty(), "step_batch with no streams");
+        for (i, s) in slots.iter().enumerate() {
+            ensure!(!s.tokens.is_empty(), "stream slot {i} has an empty chunk");
+            ensure!(
+                !slots[..i].iter().any(|t| t.id == s.id),
+                "stream id appears twice in one step_batch call"
+            );
+        }
+
+        // Starting position + page reservation per slot, and the row
+        // layout: slot si owns rows row_off[si]..row_off[si + 1].
+        let mut t0s = Vec::with_capacity(slots.len());
+        let mut row_off = Vec::with_capacity(slots.len() + 1);
+        let mut n = 0usize;
+        for s in slots {
+            let t0 = arena.len(s.id)?;
+            arena.reserve(s.id, t0 + s.tokens.len())?;
+            t0s.push(t0);
+            row_off.push(n);
+            n += s.tokens.len();
+        }
+        row_off.push(n);
+        let hd = self.spec.head_dim();
+        let (kernel, pool, threads) = (self.kernel, self.pool.as_ref(), self.threads);
+
+        // Embedding lookup over the slot-concatenated rows.
+        let mut x = vec![0.0f32; n * d];
+        let mut r = 0usize;
+        for s in slots {
+            for &tok in s.tokens {
+                ensure!(
+                    tok >= 0 && (tok as usize) < vocab,
+                    "token {tok} outside vocab 0..{vocab}"
+                );
+                x[r * d..(r + 1) * d].copy_from_slice(self.tok_emb.row(tok as usize));
+                r += 1;
+            }
+        }
+
+        let mut nrm = vec![0.0f32; n * d];
+        for (li, layer) in self.layers.iter().enumerate() {
+            // attention block
+            for (xs, os) in x.chunks_exact(d).zip(nrm.chunks_exact_mut(d)) {
+                ops::rmsnorm(xs, &layer.attn_norm, os);
+            }
+            let mut q = layer.wq.gemm(&nrm, n, kernel, pool, threads);
+            let mut k = layer.wk.gemm(&nrm, n, kernel, pool, threads);
+            let v = layer.wv.gemm(&nrm, n, kernel, pool, threads);
+            for (si, s) in slots.iter().enumerate() {
+                for i in 0..s.tokens.len() {
+                    let row = (row_off[si] + i) * d;
+                    ops::rope_in_place(&mut q[row..row + d], heads, t0s[si] + i, rope_base);
+                    ops::rope_in_place(&mut k[row..row + d], heads, t0s[si] + i, rope_base);
+                }
+            }
+            for (si, s) in slots.iter().enumerate() {
+                let (r0, r1) = (row_off[si] * d, row_off[si + 1] * d);
+                arena.append(li, s.id, t0s[si], &k[r0..r1], &v[r0..r1], s.tokens.len());
+            }
+
+            // one job per (stream, head), reading through the page table
+            let (kb_all, vb_all) = arena.layer(li);
+            let pt = arena.page_tokens();
+            let tables: Vec<&[usize]> = slots.iter().map(|s| arena.pages(s.id)).collect();
+            let jobs: Vec<(usize, usize)> =
+                (0..slots.len()).flat_map(|si| (0..heads).map(move |h| (si, h))).collect();
+            let head_outs = scoped_map(jobs, threads, |(si, h)| {
+                let h0 = h * hd;
+                let t_new = slots[si].tokens.len();
+                let (mut scores, mut acc) = (Vec::new(), Vec::new());
+                let mut out = vec![0.0f32; t_new * hd];
+                for i in 0..t_new {
+                    let row = (row_off[si] + i) * d;
+                    ops::attend_paged(
+                        &q[row + h0..row + h0 + hd],
+                        kb_all,
+                        vb_all,
+                        tables[si],
+                        pt,
+                        d,
+                        h0,
+                        t0s[si] + i,
+                        &mut scores,
+                        &mut acc,
+                        &mut out[i * hd..(i + 1) * hd],
+                    );
+                }
+                out
+            });
+            let mut att = vec![0.0f32; n * d];
+            for (idx, ho) in head_outs.iter().enumerate() {
+                let (si, h) = (idx / heads, idx % heads);
+                for i in 0..slots[si].tokens.len() {
+                    let dst = (row_off[si] + i) * d + h * hd;
+                    att[dst..dst + hd].copy_from_slice(&ho[i * hd..(i + 1) * hd]);
+                }
+            }
+            let o = layer.wo.gemm(&att, n, kernel, pool, threads);
+            for (xv, &ov) in x.iter_mut().zip(&o) {
+                *xv += ov;
+            }
+
+            // SwiGLU MLP block
+            for (xs, os) in x.chunks_exact(d).zip(nrm.chunks_exact_mut(d)) {
+                ops::rmsnorm(xs, &layer.mlp_norm, os);
+            }
+            let mut g = layer.w_gate.gemm(&nrm, n, kernel, pool, threads);
+            let u = layer.w_up.gemm(&nrm, n, kernel, pool, threads);
+            for (gv, &uv) in g.iter_mut().zip(&u) {
+                *gv = ops::silu(*gv) * uv;
+            }
+            let down = layer.w_down.gemm(&g, n, kernel, pool, threads);
+            for (xv, &dv) in x.iter_mut().zip(&down) {
+                *xv += dv;
+            }
+        }
+
+        for (xs, os) in x.chunks_exact(d).zip(nrm.chunks_exact_mut(d)) {
+            ops::rmsnorm(xs, &self.final_norm, os);
+        }
+        let logits = self.lm_head.gemm(&nrm, n, kernel, pool, threads);
+        let mut out = Vec::with_capacity(slots.len());
+        for (si, s) in slots.iter().enumerate() {
+            out.push(logits[row_off[si] * vocab..row_off[si + 1] * vocab].to_vec());
+            arena.advance(s.id, s.tokens.len());
+        }
+        Ok(out)
     }
 
     /// Score the next token after a prefix: run positions `0..p` of each
@@ -840,6 +1043,160 @@ mod tests {
         assert!(rel <= 2.5e-2, "int8 forward drifted {rel:.3e} from the f32 MAC");
         // threads don't change the integer path's bits either
         assert_eq!(yi, int8.with_threads(3).logits(&toks).unwrap());
+    }
+
+    /// An rtn payload (affine decode, so both MAC paths exist) packed for
+    /// a batch-1 spec — the shape solo-vs-batched comparisons want.
+    fn rtn_fixture(fs: &ForwardSpec) -> TensorMap {
+        let spec = synth::model_spec(fs, "fwd-batch");
+        let weights = synth::synth_weights(fs, 21);
+        let cfg = QuantConfig::block_wise(4, 16).unwrap();
+        let opts = QuantizeOptions::new().with_threads(2).with_packed();
+        quantize(&spec, weights, None, Method::Rtn, &cfg, &opts).unwrap().export_packed().unwrap()
+    }
+
+    /// Tentpole: a staggered multi-stream schedule through `step_batch`
+    /// (streams admitted and retired at different steps, chunked prefill
+    /// mixed with single-token decodes, partial last pages) reproduces
+    /// every stream's solo `step` bit for bit, at threads {1,4} and both
+    /// MAC modes — and retired pages provably recycle.
+    #[test]
+    fn step_batch_bit_identical_to_solo_streams() {
+        use crate::kernels::MacMode;
+        let fs = ForwardSpec::new(40, 32, 2, 4, 48, 8, 1).unwrap();
+        let packed = rtn_fixture(&fs);
+        let v = fs.vocab;
+        // stream token sets of uneven lengths (C fills the full window)
+        let toks: Vec<Vec<i32>> = [6usize, 5, 8]
+            .iter()
+            .enumerate()
+            .map(|(s, &len)| synth::synth_tokens(&fs, len, 30 + s as u64))
+            .collect();
+        for mac in [MacMode::F32, MacMode::Int8] {
+            for threads in [1usize, 4] {
+                let model = ForwardModel::from_packed_map_with(fs.clone(), &packed, mac)
+                    .unwrap()
+                    .with_threads(threads);
+                // solo references: one full-chunk step per stream
+                let solo: Vec<Vec<f32>> = toks
+                    .iter()
+                    .map(|t| model.step(&mut model.kv_state(), t).unwrap())
+                    .collect();
+
+                // page_tokens 3 does not divide seq 8: partial pages
+                let mut arena = model.kv_arena(3, 3).unwrap();
+                let ids: Vec<StreamId> =
+                    (0..3).map(|_| arena.alloc_stream()).collect();
+                let (a, b, c) = (ids[0], ids[1], ids[2]);
+                let mut got: Vec<Vec<f32>> = vec![Vec::new(); 3];
+                // (stream index, token range) per coalesced step — streams
+                // join late (C), advance unevenly, and finish early (A)
+                let schedule: [&[(usize, std::ops::Range<usize>)]; 4] = [
+                    &[(0, 0..3), (1, 0..2)],
+                    &[(0, 3..4), (2, 0..4)],
+                    &[(1, 2..4), (2, 4..6), (0, 4..6)],
+                    &[(1, 4..5), (2, 6..8)],
+                ];
+                for step in schedule {
+                    let slots: Vec<StreamSlot> = step
+                        .iter()
+                        .map(|(s, r)| StreamSlot { id: ids[*s], tokens: &toks[*s][r.clone()] })
+                        .collect();
+                    let outs = model.step_batch(&mut arena, &slots).unwrap();
+                    for ((s, _), o) in step.iter().zip(outs) {
+                        got[*s].extend_from_slice(&o);
+                    }
+                }
+                for (s, (g, want)) in got.iter().zip(&solo).enumerate() {
+                    assert_eq!(
+                        g, want,
+                        "stream {s}: batched != solo (mac {mac:?}, threads {threads})"
+                    );
+                    assert_eq!(g.len(), toks[s].len() * v);
+                }
+
+                // retirement recycles pages: a second wave reuses them
+                // without raising the peak, and correctness holds on the
+                // recycled storage
+                let peak = arena.peak_pages();
+                assert_eq!(arena.pages_in_use(), 2 + 2 + 3, "2+2+3 pages live");
+                for id in [a, b, c] {
+                    arena.free_stream(id);
+                }
+                assert_eq!(arena.pages_in_use(), 0, "retirement frees every page");
+                let d_toks = synth::synth_tokens(&fs, 4, 77);
+                let d_id = arena.alloc_stream();
+                let mut d_got = Vec::new();
+                for r in [0..3usize, 3..4] {
+                    let slot = StreamSlot { id: d_id, tokens: &d_toks[r] };
+                    d_got.extend_from_slice(&model.step_batch(&mut arena, &[slot]).unwrap()[0]);
+                }
+                assert_eq!(
+                    d_got,
+                    model.step(&mut model.kv_state(), &d_toks).unwrap(),
+                    "recycled pages corrupted a later stream"
+                );
+                assert_eq!(arena.peak_pages(), peak, "recycling must not grow the peak");
+            }
+        }
+    }
+
+    #[test]
+    fn step_batch_rejects_bad_batches() {
+        let fs = ForwardSpec::new(40, 32, 2, 4, 48, 8, 1).unwrap();
+        let packed = rtn_fixture(&fs);
+        let model = ForwardModel::from_packed_map(fs.clone(), &packed).unwrap();
+        let mut arena = model.kv_arena(2, 4).unwrap();
+        let s = arena.alloc_stream();
+        let toks = [1i32, 2, 3];
+        assert!(model.step_batch(&mut arena, &[]).is_err(), "empty batch");
+        assert!(
+            model
+                .step_batch(
+                    &mut arena,
+                    &[
+                        StreamSlot { id: s, tokens: &toks },
+                        StreamSlot { id: s, tokens: &toks },
+                    ],
+                )
+                .is_err(),
+            "duplicate stream id"
+        );
+        // arena from a different shape is refused
+        let other = ForwardSpec::new(40, 32, 1, 4, 48, 8, 1).unwrap();
+        let mut wrong = KvArena::new(other.layers, other.d, other.seq, 4, 4).unwrap();
+        let ws = wrong.alloc_stream();
+        assert!(
+            model.step_batch(&mut wrong, &[StreamSlot { id: ws, tokens: &toks }]).is_err(),
+            "layer-count mismatch"
+        );
+        // overflowing the context window is refused, stream intact
+        let long = synth::synth_tokens(&fs, 8, 5);
+        model.step_batch(&mut arena, &[StreamSlot { id: s, tokens: &long }]).unwrap();
+        assert!(
+            model.step_batch(&mut arena, &[StreamSlot { id: s, tokens: &toks }]).is_err(),
+            "past seq"
+        );
+        assert_eq!(arena.len(s).unwrap(), 8);
+    }
+
+    /// Satellite: `Auto` fallbacks are counted, not printed — a wgm
+    /// payload (no affine decode) falls back on every packed projection,
+    /// while rtn under `Auto` and any explicit mode report zero.
+    #[test]
+    fn mac_fallbacks_are_counted() {
+        use crate::kernels::MacMode;
+        let fs = tiny();
+        let (wgm, _, _) = fixture(&fs);
+        let auto = ForwardModel::from_packed_map_with(fs.clone(), &wgm, MacMode::Auto).unwrap();
+        assert!(auto.mac_fallbacks() > 0, "wgm under Auto must fall back somewhere");
+        let f32m = ForwardModel::from_packed_map(fs.clone(), &wgm).unwrap();
+        assert_eq!(f32m.mac_fallbacks(), 0, "explicit F32 is not a fallback");
+        let fs1 = ForwardSpec::new(40, 32, 2, 4, 48, 8, 1).unwrap();
+        let rtn = rtn_fixture(&fs1);
+        let rtn_auto =
+            ForwardModel::from_packed_map_with(fs1.clone(), &rtn, MacMode::Auto).unwrap();
+        assert_eq!(rtn_auto.mac_fallbacks(), 0, "rtn is affine: int8 engages everywhere");
     }
 
     #[test]

@@ -69,13 +69,58 @@ pub fn attend(
     acc: &mut Vec<f64>,
     out: &mut [f32],
 ) {
+    attend_core(q, kb, vb, |j| j * d, h0, p, scores, acc, out);
+}
+
+/// [`attend`] reading the cache through a page table instead of a
+/// contiguous `[seq, d]` slab: position `j` lives in slab row
+/// `pages[j / page_tokens] * page_tokens + j % page_tokens`.
+///
+/// The f64 operation sequence is shared with [`attend`] — only the row
+/// *address* differs — so paged and contiguous caches holding the same
+/// values produce bit-identical outputs.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_paged(
+    q: &[f32],
+    kb: &[f32],
+    vb: &[f32],
+    pages: &[usize],
+    page_tokens: usize,
+    d: usize,
+    h0: usize,
+    p: usize,
+    scores: &mut Vec<f32>,
+    acc: &mut Vec<f64>,
+    out: &mut [f32],
+) {
+    let base = |j: usize| (pages[j / page_tokens] * page_tokens + j % page_tokens) * d;
+    attend_core(q, kb, vb, base, h0, p, scores, acc, out);
+}
+
+/// The shared attention body: ascending-position f64 dot products scaled
+/// by `1/sqrt(hd)`, max-subtracted softmax, f64 weighted value sum.
+/// `row_base(j)` maps a logical position to its element offset in the
+/// key/value slabs; every arithmetic op is independent of that mapping.
+#[allow(clippy::too_many_arguments)]
+fn attend_core(
+    q: &[f32],
+    kb: &[f32],
+    vb: &[f32],
+    row_base: impl Fn(usize) -> usize,
+    h0: usize,
+    p: usize,
+    scores: &mut Vec<f32>,
+    acc: &mut Vec<f64>,
+    out: &mut [f32],
+) {
     let hd = q.len();
     debug_assert_eq!(out.len(), hd);
     let scale = 1.0 / (hd as f64).sqrt();
     scores.clear();
     let mut max = f32::NEG_INFINITY;
     for j in 0..=p {
-        let krow = &kb[j * d + h0..j * d + h0 + hd];
+        let b = row_base(j) + h0;
+        let krow = &kb[b..b + hd];
         let dot: f64 = q.iter().zip(krow).map(|(&a, &b)| a as f64 * b as f64).sum();
         let s = (dot * scale) as f32;
         if s > max {
@@ -92,7 +137,8 @@ pub fn attend(
     acc.clear();
     acc.resize(hd, 0.0);
     for (j, &w) in scores.iter().enumerate() {
-        let vrow = &vb[j * d + h0..j * d + h0 + hd];
+        let b = row_base(j) + h0;
+        let vrow = &vb[b..b + hd];
         for (a, &v) in acc.iter_mut().zip(vrow) {
             *a += w as f64 * v as f64;
         }
@@ -187,6 +233,44 @@ mod tests {
         for c in 0..d {
             let want = (vb[c] + vb[d + c] + vb[2 * d + c]) / 3.0;
             assert!((out[c] - want).abs() < 1e-5, "col {c}: {} vs {want}", out[c]);
+        }
+    }
+
+    #[test]
+    fn attend_paged_matches_contiguous_bits() {
+        let mut rng = crate::stats::Rng::new(41);
+        let d = 8;
+        let hd = 4;
+        let positions = 7; // spans 3 pages of 3 tokens, last page partial
+        let page_tokens = 3;
+        let mut kb = vec![0.0f32; positions * d];
+        let mut vb = vec![0.0f32; positions * d];
+        let mut q = vec![0.0f32; hd];
+        rng.fill_normal(&mut kb, 1.0);
+        rng.fill_normal(&mut vb, 1.0);
+        rng.fill_normal(&mut q, 1.0);
+        // scatter the contiguous rows into a paged slab with a
+        // deliberately non-monotonic page table
+        let pages = [2usize, 0, 3];
+        let slab_rows = 4 * page_tokens;
+        let mut kp = vec![0.0f32; slab_rows * d];
+        let mut vp = vec![0.0f32; slab_rows * d];
+        for j in 0..positions {
+            let b = (pages[j / page_tokens] * page_tokens + j % page_tokens) * d;
+            kp[b..b + d].copy_from_slice(&kb[j * d..(j + 1) * d]);
+            vp[b..b + d].copy_from_slice(&vb[j * d..(j + 1) * d]);
+        }
+        let (mut scores, mut acc) = (Vec::new(), Vec::new());
+        for h0 in [0, hd] {
+            for p in 0..positions {
+                let mut a = vec![0.0f32; hd];
+                let mut b = vec![0.0f32; hd];
+                attend(&q, &kb, &vb, d, h0, p, &mut scores, &mut acc, &mut a);
+                attend_paged(
+                    &q, &kp, &vp, &pages, page_tokens, d, h0, p, &mut scores, &mut acc, &mut b,
+                );
+                assert_eq!(a, b, "h0 {h0} p {p}: paged attention must be bit-identical");
+            }
         }
     }
 

@@ -8,6 +8,7 @@
 //! msb pack    --model base --method wgm  write a packed .msbt v2 payload
 //! msb decode  --in base_wgm_packed.msbt  reconstruct f32 weights
 //! msb score   --method wgm --bits 4      fused CPU forward token scoring
+//! msb serve-bench --streams 4            continuous-batching decode bench
 //! msb kernel  run the Pallas-MSB native executable (small model)
 //! ```
 
@@ -41,6 +42,7 @@ fn main() {
         "decode" => cmd_decode(&args),
         "gemv-bench" => cmd_gemv_bench(&args),
         "score" => cmd_score(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "kernel" => cmd_kernel(),
         "" | "help" | "--help" => {
             print!("{}", HELP);
@@ -89,6 +91,16 @@ commands:
              --layers L --heads H --ff F --seq S --rows R]
              [--threads N] [--seed K] [--mac f32|int8|auto]
              [--out payload.msbt]
+  serve-bench continuous-batching decode over the paged KV arena on a
+             synthetic model: concurrent client streams drive the
+             EvalServer scheduler (chunked prefill, page recycling),
+             self-checked bit-identical to solo scoring before any
+             number prints; reports solo vs batched tokens/sec, step
+             width histogram, and page occupancy
+             [--streams N] [--requests R] [--page-tokens P] [--chunk C]
+             [--method rtn --bits 4 --block 64] [--vocab V --d D
+             --layers L --heads H --ff F --seq S]
+             [--threads N] [--seed K] [--mac f32|int8|auto]
   kernel     execute the native Pallas-MSB HLO for the small model
 ";
 
@@ -492,18 +504,11 @@ fn cmd_score(args: &Args) -> Result<()> {
     let payload = qm.export_packed()?;
     let t_quant = t0.elapsed().as_secs_f64();
 
-    // every projection shares one method, so a single probe resolves
-    // whether mac=auto/int8 actually engages the integer path
-    let int8_engaged = mac != msb_quant::kernels::MacMode::F32 && {
-        let (_, packed, _) = msb_quant::pipeline::packed_tensors(&payload)?;
-        match packed.into_values().next() {
-            Some(pt) => msb_quant::kernels::PackedLinear::new(pt)?.int8_eligible(),
-            None => false,
-        }
-    };
-
     let builder = BackendBuilder::new().threads(threads).mac(mac);
     let model = builder.forward(fs.clone(), &payload)?.into_forward()?;
+    // every projection shares one method, so int8 engages all-or-none:
+    // any counted fallback means the method lacks an affine decode
+    let int8_engaged = mac != msb_quant::kernels::MacMode::F32 && model.mac_fallbacks() == 0;
     let twin = builder
         .forward_dense(fs.clone(), &decode_packed_model(&payload, threads)?)?
         .into_forward()?;
@@ -581,10 +586,175 @@ fn cmd_score(args: &Args) -> Result<()> {
     );
     println!("  stream ppl: fused {ppl_q:.4} vs twin {ppl_f:.4}");
     println!("  row 0 mean next-token logprob {mean_lp:.4}");
+    if model.mac_fallbacks() > 0 {
+        println!(
+            "  mac fallbacks: {} projection(s) fell back to the f32 MAC (no affine decode)",
+            model.mac_fallbacks()
+        );
+    }
 
     if let Some(out) = args.get("out") {
         msbt::write_file(out, &payload)?;
         println!("wrote {out} (serve it: serve_eval --backend forward --payload {out})");
+    }
+    Ok(())
+}
+
+/// Continuous-batching decode benchmark on a synthetic model: concurrent
+/// client streams score through the [`msb_quant::server::EvalServer`]
+/// scheduler over the paged KV arena. Self-checking: every batched
+/// result must be bit-identical to solo scoring (one stream at a time
+/// through `ForwardModel::step`) before any number is printed.
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    use msb_quant::eval::LogProbs;
+    use msb_quant::forward::{synth, ForwardSpec};
+    use msb_quant::runtime::BackendBuilder;
+    use msb_quant::server::{BatchConfig, EvalServer, Response};
+
+    let fs = ForwardSpec::new(
+        args.usize_or("vocab", 256)?,
+        args.usize_or("d", 64)?,
+        args.usize_or("layers", 2)?,
+        args.usize_or("heads", 4)?,
+        args.usize_or("ff", 128)?,
+        args.usize_or("seq", 32)?,
+        1,
+    )?;
+    let method = Method::parse(args.str_or("method", "rtn"))?;
+    anyhow::ensure!(
+        !method.needs_calibration(),
+        "msb serve-bench is calibration-free; {} needs calibration activations",
+        method.name()
+    );
+    let cfg = parse_cfg(args)?.with_packed();
+    let threads = args.usize_or("threads", 1)?.max(1);
+    let seed = args.usize_or("seed", 7)? as u64;
+    let mac = msb_quant::kernels::MacMode::parse(args.str_or("mac", "f32"))?;
+    let streams = args.usize_or("streams", 4)?.max(1);
+    let requests = args.usize_or("requests", streams * 2)?.max(1);
+    let page_tokens = args.usize_or("page-tokens", 16)?.max(1);
+    let chunk = args.usize_or("chunk", 8)?.max(1);
+
+    let spec = synth::model_spec(&fs, "serve-bench");
+    let weights = synth::synth_weights(&fs, seed);
+    let opts = QuantizeOptions::new().with_threads(threads);
+    let qm = quantize(&spec, weights, None, method, &cfg, &opts)?;
+    let payload = qm.export_packed()?;
+
+    let builder = BackendBuilder::new()
+        .threads(threads)
+        .mac(mac)
+        .max_streams(streams)
+        .kv_page_tokens(page_tokens);
+    let model = builder.forward(fs.clone(), &payload)?.into_forward()?;
+    let fallbacks = model.mac_fallbacks();
+
+    // request mix: prompt lengths sweep from half context to (almost)
+    // full context so prefill chunking and retirement actually interleave
+    let prompts: Vec<Vec<i32>> = (0..requests)
+        .map(|i| {
+            let len = (fs.seq / 2 + (i * 3) % (fs.seq / 2 + 1)).max(1).min(fs.seq);
+            synth::synth_tokens(&fs, len, seed ^ (0x51ED + i as u64))
+        })
+        .collect();
+    let total_tokens: usize = prompts.iter().map(|t| t.len()).sum();
+
+    // solo reference + sequential baseline: same model, one stream at a
+    // time. `step` over the full prompt is the batched path's ground
+    // truth — step_batch is bit-identical per stream by construction.
+    let t0 = Instant::now();
+    let mut reference = Vec::with_capacity(requests);
+    for t in &prompts {
+        let mut kv = model.kv_state();
+        let out = model.step(&mut kv, t)?;
+        let lp = LogProbs::new(&out, fs.vocab);
+        let lps: Vec<f64> = (1..t.len()).map(|p| lp.logp(p - 1, t[p] as usize)).collect();
+        reference.push(lps);
+    }
+    let t_solo = t0.elapsed().as_secs_f64();
+
+    let bc = BatchConfig {
+        max_streams: builder.get_max_streams(),
+        kv_page_tokens: builder.get_kv_page_tokens(),
+        prefill_chunk: chunk,
+        max_waiting_steps: 32,
+        linger: std::time::Duration::from_millis(5),
+    };
+    let (server, client) = EvalServer::spawn_batched(model, bc)?;
+    let t1 = Instant::now();
+    let handles: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let c = client.clone();
+            let t = t.clone();
+            std::thread::spawn(move || (i, c.score(t)))
+        })
+        .collect();
+    let mut results: Vec<Option<Response>> = vec![None; requests];
+    for h in handles {
+        let (i, r) = h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))?;
+        results[i] = Some(r?);
+    }
+    let t_batched = t1.elapsed().as_secs_f64();
+    drop(client);
+    let stats = server.shutdown();
+
+    // acceptance gate: batched logprobs bit-identical to solo, per stream
+    for (i, r) in results.iter().enumerate() {
+        let r = r.as_ref().expect("all slots filled above");
+        anyhow::ensure!(
+            r.logprobs == reference[i],
+            "stream {i}: batched logprobs diverged from solo scoring"
+        );
+    }
+
+    println!(
+        "serve-bench: {} L={} d={} heads={} ff={} seq={} | {} streams, {} requests, \
+         {} tokens ({} kernel, {threads} thread(s), mac={})",
+        method.name(),
+        fs.layers,
+        fs.d,
+        fs.heads,
+        fs.ff,
+        fs.seq,
+        streams,
+        requests,
+        total_tokens,
+        msb_quant::kernels::Kernel::detect().name(),
+        mac.name()
+    );
+    println!("  bit-identity: batched == solo on all {requests} request(s)");
+    println!(
+        "  solo sequential {:.3}s ({:.0} tok/s) | batched {:.3}s ({:.0} tok/s) | {:.2}x",
+        t_solo,
+        total_tokens as f64 / t_solo,
+        t_batched,
+        total_tokens as f64 / t_batched,
+        t_solo / t_batched
+    );
+    println!(
+        "  scheduler: {} admitted, {} retired, {} coalesced steps, max fill {}, \
+         max queue wait {} steps",
+        stats.admitted, stats.retired, stats.batches, stats.max_batch_fill, stats.max_wait_steps
+    );
+    let hist: Vec<String> = stats
+        .step_width_hist
+        .iter()
+        .enumerate()
+        .filter(|(_, &n)| n > 0)
+        .map(|(w, &n)| format!("{}x{n}", w + 1))
+        .collect();
+    println!("  step width histogram (width x steps): {}", hist.join(" "));
+    println!(
+        "  kv arena: peak {} of {} pages ({} bytes at peak, {}-token pages)",
+        stats.peak_pages, stats.total_pages, stats.peak_page_bytes, page_tokens
+    );
+    if fallbacks > 0 {
+        println!(
+            "  mac fallbacks: {fallbacks} projection(s) fell back to the f32 MAC \
+             (no affine decode)"
+        );
     }
     Ok(())
 }

@@ -427,31 +427,6 @@ pub fn quantize(
     quantize_impl(spec, weights, calib, method, &opts.overrides, &cfg, opts.threads)
 }
 
-#[deprecated(note = "use pipeline::quantize with QuantizeOptions")]
-pub fn quantize_model(
-    spec: &ModelSpec,
-    weights: TensorMap,
-    calib: Option<&TensorMap>,
-    method: Method,
-    cfg: &QuantConfig,
-    threads: usize,
-) -> Result<QuantizedModel> {
-    quantize_impl(spec, weights, calib, method, &BTreeMap::new(), cfg, threads)
-}
-
-#[deprecated(note = "use pipeline::quantize with QuantizeOptions")]
-pub fn quantize_model_mixed(
-    spec: &ModelSpec,
-    weights: TensorMap,
-    calib: Option<&TensorMap>,
-    default: Method,
-    overrides: &BTreeMap<String, Method>,
-    cfg: &QuantConfig,
-    threads: usize,
-) -> Result<QuantizedModel> {
-    quantize_impl(spec, weights, calib, default, overrides, cfg, threads)
-}
-
 fn quantize_impl(
     spec: &ModelSpec,
     mut weights: TensorMap,
@@ -958,48 +933,6 @@ mod tests {
             Tensor::i8(vec![4], b"nope".iter().map(|&b| b as i8).collect()),
         );
         assert!(decode_packed_model(&bad, 1).is_err());
-    }
-
-    /// The deprecated positional entry points must stay bit-identical to
-    /// [`quantize`] while downstream callers migrate.
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_wrappers_delegate_to_quantize() {
-        let cfg = QuantConfig::block_wise(4, 64).unwrap();
-        let via_new = quantize(
-            &tiny_spec(),
-            tiny_weights(14),
-            None,
-            Method::Wgm,
-            &cfg,
-            &QuantizeOptions::new().with_threads(2),
-        )
-        .unwrap();
-        let via_old =
-            quantize_model(&tiny_spec(), tiny_weights(14), None, Method::Wgm, &cfg, 2).unwrap();
-        assert_eq!(via_new.weights, via_old.weights);
-        let overrides: BTreeMap<String, Method> =
-            [("layer0.wq".to_string(), Method::Rtn)].into();
-        let via_mixed = quantize_model_mixed(
-            &tiny_spec(),
-            tiny_weights(14),
-            None,
-            Method::Wgm,
-            &overrides,
-            &cfg,
-            1,
-        )
-        .unwrap();
-        let via_opts = quantize(
-            &tiny_spec(),
-            tiny_weights(14),
-            None,
-            Method::Wgm,
-            &cfg,
-            &QuantizeOptions::new().with_override("layer0.wq", Method::Rtn),
-        )
-        .unwrap();
-        assert_eq!(via_mixed.weights, via_opts.weights);
     }
 
     // Method::parse round-tripping is covered in quant::registry::tests,

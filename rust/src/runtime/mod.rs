@@ -160,17 +160,6 @@ impl ModelRunner {
         Ok(n)
     }
 
-    /// Decode a packed payload map on `threads` workers and swap the
-    /// reconstructed weights in.
-    #[deprecated(
-        note = "use update_weights (packed payloads are auto-detected; pick the \
-                decode pool via set_decode_threads or runtime::BackendBuilder)"
-    )]
-    pub fn update_weights_packed(&mut self, packed: &TensorMap, threads: usize) -> Result<usize> {
-        let decoded = crate::pipeline::decode_packed_model(packed, threads)?;
-        self.update_weights(&decoded)
-    }
-
     /// Forward pass: `tokens` is a row-major [batch, seq] i32 buffer;
     /// returns logits [batch, seq, vocab].
     pub fn logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
@@ -192,17 +181,19 @@ impl ModelRunner {
 /// A model held *entirely in the packed domain*: one
 /// [`PackedLinear`](crate::kernels::PackedLinear) handle per quantized
 /// layer plus the pass-through tensors — never the decoded f32 weight
-/// set. Where [`ModelRunner::update_weights_packed`] pays an O(model)
-/// unpack-to-f32 before PJRT upload, a `FusedModel` keeps the 4–6×
-/// storage win at serve time and answers matvec/batched-matmul requests
-/// straight off the codes (`kernels::PackedLinear::gemv`/`gemm`).
-/// `server::GemvServer` wraps one of these behind a dynamic-batching
-/// request loop; `serve_eval --fused` is the end-to-end driver.
+/// set. Where the `runner` backend ([`ModelRunner::update_weights`])
+/// pays an O(model) unpack-to-f32 before PJRT upload, a `FusedModel`
+/// keeps the 4–6× storage win at serve time and answers
+/// matvec/batched-matmul requests straight off the codes
+/// (`kernels::PackedLinear::gemv`/`gemm`). `server::GemvServer` wraps
+/// one of these behind a dynamic-batching request loop; `serve_eval
+/// fused` is the end-to-end driver.
 pub struct FusedModel {
     method: String,
     linears: std::collections::BTreeMap<String, crate::kernels::PackedLinear>,
     passthrough: TensorMap,
     mac: crate::kernels::MacMode,
+    mac_fallbacks: usize,
 }
 
 impl FusedModel {
@@ -217,27 +208,25 @@ impl FusedModel {
     /// [`FusedModel::from_packed_map`] with a multiply-accumulate mode
     /// applied to every layer. `MacMode::Int8` fails if any layer's method
     /// has no affine decode; `MacMode::Auto` keeps such layers on the f32
-    /// path and logs the per-layer fallback once at construction.
+    /// path, counting each fallback ([`FusedModel::mac_fallbacks`]).
     pub fn from_packed_map_with(
         map: &TensorMap,
         mac: crate::kernels::MacMode,
     ) -> Result<FusedModel> {
         let (method, packed, passthrough) = crate::pipeline::packed_tensors(map)?;
         let mut linears = std::collections::BTreeMap::new();
+        let mut mac_fallbacks = 0;
         for (name, pt) in packed {
             let pl = crate::kernels::PackedLinear::new(pt)
                 .with_context(|| format!("fused handle for layer '{name}'"))?
                 .with_mac(mac)
                 .with_context(|| format!("mac mode for layer '{name}'"))?;
             if mac == crate::kernels::MacMode::Auto && !pl.int8_eligible() {
-                eprintln!(
-                    "mac=auto: layer '{name}' ({method}) has no affine decode; \
-                     staying on the f32 MAC"
-                );
+                mac_fallbacks += 1;
             }
             linears.insert(name, pl);
         }
-        Ok(FusedModel { method, linears, passthrough, mac })
+        Ok(FusedModel { method, linears, passthrough, mac, mac_fallbacks })
     }
 
     /// The quantization method the payloads were emitted by.
@@ -248,6 +237,12 @@ impl FusedModel {
     /// The multiply-accumulate mode every layer handle was built with.
     pub fn mac(&self) -> crate::kernels::MacMode {
         self.mac
+    }
+
+    /// How many layers requested `MacMode::Auto` int8 but have no affine
+    /// decode and stayed on the f32 MAC (zero under an explicit mode).
+    pub fn mac_fallbacks(&self) -> usize {
+        self.mac_fallbacks
     }
 
     /// Layer name → fused handle map (iteration order = BTreeMap order).
@@ -393,20 +388,32 @@ impl Backend {
     }
 }
 
-/// Carries the knobs every serving construction shares (worker threads
-/// today) and hands back a [`Backend`] — the single entry point that
-/// replaced the `ModelRunner::new` + `update_weights_packed` /
-/// `FusedModel::from_packed_map` / `ForwardModel::from_packed_map` trio
-/// drivers used to wire by hand.
-#[derive(Clone, Debug, Default)]
+/// Carries the knobs every serving construction shares (worker threads,
+/// MAC mode, batching limits) and hands back a [`Backend`] — the single
+/// entry point that replaced the `ModelRunner` / `FusedModel` /
+/// `ForwardModel` constructor trio drivers used to wire by hand.
+#[derive(Clone, Debug)]
 pub struct BackendBuilder {
     threads: usize,
     mac: crate::kernels::MacMode,
+    max_streams: usize,
+    kv_page_tokens: usize,
+}
+
+impl Default for BackendBuilder {
+    fn default() -> BackendBuilder {
+        BackendBuilder::new()
+    }
 }
 
 impl BackendBuilder {
     pub fn new() -> BackendBuilder {
-        BackendBuilder { threads: 0, mac: crate::kernels::MacMode::F32 }
+        BackendBuilder {
+            threads: 0,
+            mac: crate::kernels::MacMode::F32,
+            max_streams: 4,
+            kv_page_tokens: 16,
+        }
     }
 
     /// Worker threads: payload decode for `runner`, pooled kernels for
@@ -414,6 +421,30 @@ impl BackendBuilder {
     pub fn threads(mut self, threads: usize) -> BackendBuilder {
         self.threads = threads;
         self
+    }
+
+    /// Concurrent decode streams the continuous-batching scheduler admits
+    /// (`forward` backend; sizes the [`crate::forward::KvArena`]).
+    /// Default 4.
+    pub fn max_streams(mut self, max_streams: usize) -> BackendBuilder {
+        self.max_streams = max_streams.max(1);
+        self
+    }
+
+    /// Positions per KV page in the paged arena. Small pages waste less
+    /// memory on short requests; large pages mean fewer table hops.
+    /// Default 16.
+    pub fn kv_page_tokens(mut self, kv_page_tokens: usize) -> BackendBuilder {
+        self.kv_page_tokens = kv_page_tokens.max(1);
+        self
+    }
+
+    pub fn get_max_streams(&self) -> usize {
+        self.max_streams
+    }
+
+    pub fn get_kv_page_tokens(&self) -> usize {
+        self.kv_page_tokens
     }
 
     /// Multiply-accumulate mode for the packed backends (`fused`,

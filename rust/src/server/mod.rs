@@ -1,23 +1,33 @@
 //! Batched serving: long-lived server threads that own the model and
 //! drain a request channel with dynamic batching.
 //!
-//! * [`EvalServer`] — the PJRT scoring loop (device buffers are not
-//!   Sync), coalescing up to `batch` sequences per forward pass;
-//!   exercised by `examples/serve_eval.rs`.
+//! * [`EvalServer`] — token scoring. [`EvalServer::spawn`] is the static
+//!   batcher (one full forward per drain, padded to the model's `batch`;
+//!   required for PJRT-backed models whose device buffers are not Sync).
+//!   [`EvalServer::spawn_batched`] is the continuous-batching decode
+//!   scheduler over a [`crate::forward::ForwardModel`]: requests become
+//!   *streams* in a paged [`crate::forward::KvArena`], every coalesced
+//!   [`step_batch`](crate::forward::ForwardModel::step_batch) advances
+//!   all live streams at once (chunked prefill, so a long prompt never
+//!   stalls running decodes), finished streams retire and their pages
+//!   recycle immediately, and FIFO admission with a max-waiting-steps
+//!   fairness bound fills freed slots between steps. Each stream's
+//!   logprobs are bit-identical to its solo unbatched run.
 //! * [`GemvServer`] — the fused packed-weight loop: holds a
 //!   [`FusedModel`] (codes + scale tables, never decoded f32 buffers) and
 //!   coalesces same-layer matvec requests into one
 //!   `PackedLinear::gemm_pooled` call, so each block tile is decoded once
 //!   per batch instead of once per request; exercised by
-//!   `serve_eval --fused`.
+//!   `serve_eval fused`.
 
-use std::collections::BTreeMap;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::forward::{ForwardModel, KvArena, StreamSlot};
 use crate::pool::ThreadPool;
 use crate::runtime::{FusedModel, LogitsFn};
 
@@ -43,11 +53,25 @@ pub struct Response {
     pub batch_id: u64,
 }
 
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     pub requests: u64,
+    /// Forward dispatches (static batches, or coalesced decode steps).
     pub batches: u64,
     pub max_batch_fill: usize,
+    // -- continuous batching ([`EvalServer::spawn_batched`]) only --
+    /// Requests admitted into a stream slot.
+    pub admitted: u64,
+    /// Streams that finished and returned their pages.
+    pub retired: u64,
+    /// `step_width_hist[w - 1]` = coalesced steps that ran `w` streams.
+    pub step_width_hist: Vec<u64>,
+    /// Longest admission queue wait observed, in coalesced steps.
+    pub max_wait_steps: u64,
+    /// KV arena high-water mark, in pages / bytes, against its capacity.
+    pub peak_pages: usize,
+    pub total_pages: usize,
+    pub peak_page_bytes: usize,
 }
 
 /// Client handle: cloneable, thread-safe.
@@ -64,6 +88,42 @@ impl EvalClient {
             .send(Msg::Score(Request { tokens, resp: tx }))
             .map_err(|_| anyhow::anyhow!("server gone"))?;
         Ok(rx.recv()?)
+    }
+}
+
+/// Knobs of the continuous-batching scheduler
+/// ([`EvalServer::spawn_batched`]).
+#[derive(Clone, Debug)]
+pub struct BatchConfig {
+    /// Concurrent streams (slots); also sizes the KV page arena so every
+    /// slot can reach the full context window.
+    pub max_streams: usize,
+    /// Positions per KV page ([`crate::forward::KvArena`]).
+    pub kv_page_tokens: usize,
+    /// Most tokens fed per stream per coalesced step. Chunked prefill: a
+    /// long prompt advances `prefill_chunk` tokens at a time, so streams
+    /// already decoding keep producing a token every step instead of
+    /// stalling behind one full-prompt pass.
+    pub prefill_chunk: usize,
+    /// Fairness bound: once the oldest waiting request has queued this
+    /// many steps, the chunk cap is lifted for running streams so they
+    /// drain (and free slots) as fast as possible. The tradeoff is
+    /// explicit — brief extra per-step latency for bounded queue wait.
+    pub max_waiting_steps: u64,
+    /// How long an idle server waits for more arrivals before stepping a
+    /// partial batch (same role as the static batcher's linger).
+    pub linger: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> BatchConfig {
+        BatchConfig {
+            max_streams: 4,
+            kv_page_tokens: 16,
+            prefill_chunk: 8,
+            max_waiting_steps: 32,
+            linger: Duration::from_millis(1),
+        }
     }
 }
 
@@ -97,6 +157,28 @@ impl EvalServer {
             .spawn(move || serve(factory(), rx, linger))
             .expect("spawn server");
         (EvalServer { handle: Some(handle), tx: Some(tx) }, client)
+    }
+
+    /// Spawn the continuous-batching decode scheduler over a fused CPU
+    /// forward model. Same [`EvalClient`] protocol as
+    /// [`EvalServer::spawn`] — a request is a token sequence, the
+    /// response its per-position logprobs — but requests are served as
+    /// concurrent *streams* sharing every projection `gemm` through
+    /// [`ForwardModel::step_batch`] and a paged KV arena, instead of
+    /// padded rows of one fixed-shape forward. Each response is
+    /// bit-identical to the same request scored alone.
+    pub fn spawn_batched(
+        model: ForwardModel,
+        cfg: BatchConfig,
+    ) -> Result<(EvalServer, EvalClient)> {
+        let arena = model.kv_arena(cfg.max_streams.max(1), cfg.kv_page_tokens.max(1))?;
+        let (tx, rx) = channel::<Msg>();
+        let client = EvalClient { tx: tx.clone() };
+        let handle = std::thread::Builder::new()
+            .name("msb-batch-server".into())
+            .spawn(move || serve_batched(model, arena, rx, cfg))
+            .expect("spawn batch server");
+        Ok((EvalServer { handle: Some(handle), tx: Some(tx) }, client))
     }
 
     /// Stop the server and collect telemetry. Safe to call with client
@@ -177,6 +259,188 @@ fn serve<M: LogitsFn>(model: M, rx: Receiver<Msg>, linger: Duration) -> ServerSt
             return stats;
         }
     }
+}
+
+/// One live stream of the continuous batcher: the request it came from,
+/// how far it has decoded, and the running logprob assembly.
+struct Active {
+    id: crate::forward::StreamId,
+    tokens: Vec<i32>,
+    /// Positions already fed through `step_batch`.
+    fed: usize,
+    logprobs: Vec<f64>,
+    /// Logits row of position `fed - 1` — scores the next chunk's first
+    /// token, exactly as the full-slab `LogProbs` indexing would.
+    last_row: Option<Vec<f32>>,
+    resp: Sender<Response>,
+}
+
+fn serve_batched(
+    model: ForwardModel,
+    mut arena: KvArena,
+    rx: Receiver<Msg>,
+    cfg: BatchConfig,
+) -> ServerStats {
+    let (seq, vocab) = (model.spec().seq, model.spec().vocab);
+    let max_streams = cfg.max_streams.max(1);
+    let prefill_chunk = cfg.prefill_chunk.max(1);
+    let mut stats = ServerStats::default();
+    let mut waiting: VecDeque<(Request, u64)> = VecDeque::new();
+    let mut active: Vec<Active> = Vec::new();
+    let mut step_idx = 0u64;
+    let mut stop = false;
+    loop {
+        // Ingest: block (with linger) only when there is nothing to run;
+        // otherwise drain whatever has arrived between steps.
+        if !stop {
+            if active.is_empty() && waiting.is_empty() {
+                match rx.recv() {
+                    Ok(Msg::Score(r)) => waiting.push_back((r, step_idx)),
+                    Ok(Msg::Stop) | Err(_) => break,
+                }
+                let deadline = Instant::now() + cfg.linger;
+                while waiting.len() < max_streams {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(Msg::Score(r)) => waiting.push_back((r, step_idx)),
+                        Ok(Msg::Stop) => {
+                            stop = true;
+                            break;
+                        }
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            stop = true;
+                            break;
+                        }
+                    }
+                }
+            } else {
+                loop {
+                    match rx.try_recv() {
+                        Ok(Msg::Score(r)) => waiting.push_back((r, step_idx)),
+                        Ok(Msg::Stop) | Err(TryRecvError::Disconnected) => {
+                            stop = true;
+                            break;
+                        }
+                        Err(TryRecvError::Empty) => break,
+                    }
+                }
+            }
+        }
+
+        // FIFO admission into open slots. Requests already queued when
+        // the stop arrived still run; only the channel closes.
+        while active.len() < max_streams {
+            let Some((req, enqueued)) = waiting.pop_front() else { break };
+            stats.max_wait_steps = stats.max_wait_steps.max(step_idx - enqueued);
+            let mut tokens = req.tokens;
+            tokens.truncate(seq);
+            if tokens.is_empty() {
+                // same contract as the static batcher: no predictions
+                stats.requests += 1;
+                let _ = req.resp.send(Response { logprobs: Vec::new(), batch_id: step_idx });
+                continue;
+            }
+            if tokens.iter().any(|&t| t < 0 || t as usize >= vocab) {
+                // reject at admission (sender drops; client sees a closed
+                // channel) instead of poisoning a whole coalesced step
+                stats.requests += 1;
+                continue;
+            }
+            stats.admitted += 1;
+            active.push(Active {
+                id: arena.alloc_stream(),
+                tokens,
+                fed: 0,
+                logprobs: Vec::new(),
+                last_row: None,
+                resp: req.resp,
+            });
+        }
+        if active.is_empty() {
+            if stop {
+                break;
+            }
+            continue;
+        }
+
+        // Fairness: a starved waiter lifts the chunk cap so running
+        // streams drain (and free their slots) as fast as possible.
+        let oldest_wait = waiting.front().map_or(0, |(_, e)| step_idx - e);
+        let chunk = if oldest_wait >= cfg.max_waiting_steps { seq } else { prefill_chunk };
+
+        // One coalesced step: every live stream contributes a chunk.
+        let slots: Vec<StreamSlot<'_>> = active
+            .iter()
+            .map(|a| {
+                let w = chunk.min(a.tokens.len() - a.fed);
+                StreamSlot { id: a.id, tokens: &a.tokens[a.fed..a.fed + w] }
+            })
+            .collect();
+        let outs = match model.step_batch(&mut arena, &slots) {
+            Ok(o) => o,
+            Err(_) => {
+                // defensive: tokens are pre-validated and the arena is
+                // sized for max_streams full-context streams, so this is
+                // unreachable in normal operation — fail the affected
+                // streams, keep serving
+                for a in active.drain(..) {
+                    arena.free_stream(a.id);
+                }
+                continue;
+            }
+        };
+        step_idx += 1;
+        stats.batches += 1;
+        let width = active.len();
+        stats.max_batch_fill = stats.max_batch_fill.max(width);
+        if stats.step_width_hist.len() < width {
+            stats.step_width_hist.resize(width, 0);
+        }
+        stats.step_width_hist[width - 1] += 1;
+
+        // Logprob assembly per stream: the chunk's first token is scored
+        // by the previous chunk's last row, the rest by this chunk's rows
+        // — identical f64 math to the one-slab unbatched path.
+        let mut done = Vec::new();
+        for (ai, out) in outs.into_iter().enumerate() {
+            let a = &mut active[ai];
+            let w = out.len() / vocab;
+            if a.fed > 0 {
+                let last = a.last_row.as_ref().expect("fed > 0 keeps a last row");
+                let lp = crate::eval::LogProbs::new(last, vocab);
+                a.logprobs.push(lp.logp(0, a.tokens[a.fed] as usize));
+            }
+            let lp = crate::eval::LogProbs::new(&out, vocab);
+            for i in 1..w {
+                a.logprobs.push(lp.logp(i - 1, a.tokens[a.fed + i] as usize));
+            }
+            a.last_row = Some(out[(w - 1) * vocab..w * vocab].to_vec());
+            a.fed += w;
+            if a.fed == a.tokens.len() {
+                done.push(ai);
+            }
+        }
+        // Retire finished streams; their pages recycle immediately, and
+        // the freed slots admit waiters on the next loop turn.
+        for ai in done.into_iter().rev() {
+            let a = active.swap_remove(ai);
+            arena.free_stream(a.id);
+            stats.requests += 1;
+            stats.retired += 1;
+            let _ = a.resp.send(Response { logprobs: a.logprobs, batch_id: step_idx });
+        }
+        if stop && active.is_empty() && waiting.is_empty() {
+            break;
+        }
+    }
+    stats.peak_pages = arena.peak_pages();
+    stats.total_pages = arena.total_pages();
+    stats.peak_page_bytes = arena.peak_bytes();
+    stats
 }
 
 // ---------------------------------------------------------------------------
@@ -407,6 +671,119 @@ mod tests {
         let (server, client) = EvalServer::spawn(model(), Duration::from_millis(1));
         drop(client);
         drop(server); // must not hang
+    }
+
+    // -----------------------------------------------------------------------
+    // continuous batching over the forward backend
+    // -----------------------------------------------------------------------
+
+    /// An rtn-packed artifact for a batch-1 forward spec (affine decode,
+    /// so the same payload serves both MAC modes).
+    fn forward_payload() -> (crate::forward::ForwardSpec, crate::io::msbt::TensorMap) {
+        use crate::forward::synth;
+        use crate::pipeline::{quantize, Method, QuantizeOptions};
+        use crate::quant::QuantConfig;
+        let fs = crate::forward::ForwardSpec::new(40, 32, 2, 4, 48, 8, 1).unwrap();
+        let spec = synth::model_spec(&fs, "srv-batch");
+        let weights = synth::synth_weights(&fs, 21);
+        let cfg = QuantConfig::block_wise(4, 16).unwrap();
+        let opts = QuantizeOptions::new().with_threads(2).with_packed();
+        let qm = quantize(&spec, weights, None, Method::Rtn, &cfg, &opts).unwrap();
+        (fs, qm.export_packed().unwrap())
+    }
+
+    /// Satellite: interleaved multi-stream requests through the
+    /// continuous batcher return bit-identical logprobs to unbatched solo
+    /// runs, at threads {1,4} and MacMode {F32, Int8}, with more requests
+    /// than stream slots so admission queuing and retirement both fire.
+    #[test]
+    fn batched_eval_server_bit_identical_to_solo() {
+        use crate::forward::{synth, ForwardModel};
+        use crate::kernels::MacMode;
+        let (fs, map) = forward_payload();
+        // uneven lengths; one overlong request exercises truncation
+        let reqs: Vec<Vec<i32>> = [5usize, 8, 3, 6, 10, 4]
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| synth::synth_tokens(&fs, len, 50 + i as u64))
+            .collect();
+        for mac in [MacMode::F32, MacMode::Int8] {
+            for threads in [1usize, 4] {
+                let build = || {
+                    ForwardModel::from_packed_map_with(fs.clone(), &map, mac)
+                        .unwrap()
+                        .with_threads(threads)
+                };
+                // solo references through the unbatched server (batch=1
+                // spec: every request rides alone)
+                let (solo_srv, solo_cli) =
+                    EvalServer::spawn(build(), Duration::from_millis(1));
+                let solo: Vec<Vec<f64>> = reqs
+                    .iter()
+                    .map(|t| solo_cli.score(t.clone()).unwrap().logprobs)
+                    .collect();
+                drop(solo_cli);
+                solo_srv.shutdown();
+
+                // 3 slots for 6 requests: admission queue + retirement
+                // churn; page_tokens 3 leaves partial pages; chunk 2
+                // forces multi-step prefill
+                let bcfg = BatchConfig {
+                    max_streams: 3,
+                    kv_page_tokens: 3,
+                    prefill_chunk: 2,
+                    max_waiting_steps: 4,
+                    linger: Duration::from_millis(40),
+                };
+                let (srv, cli) = EvalServer::spawn_batched(build(), bcfg).unwrap();
+                let mut handles = Vec::new();
+                for t in &reqs {
+                    let c = cli.clone();
+                    let t = t.clone();
+                    handles.push(std::thread::spawn(move || c.score(t).unwrap()));
+                }
+                let got: Vec<Response> =
+                    handles.into_iter().map(|h| h.join().unwrap()).collect();
+                for (i, r) in got.iter().enumerate() {
+                    assert_eq!(
+                        r.logprobs, solo[i],
+                        "request {i}: batched != solo (mac {mac:?}, threads {threads})"
+                    );
+                }
+                drop(cli);
+                let stats = srv.shutdown();
+                assert_eq!(stats.admitted, 6, "{stats:?}");
+                assert_eq!(stats.retired, 6, "every stream must retire: {stats:?}");
+                assert_eq!(stats.requests, 6);
+                assert!(stats.max_batch_fill >= 2, "streams must coalesce: {stats:?}");
+                assert!(
+                    stats.step_width_hist.iter().skip(1).sum::<u64>() > 0,
+                    "some step must run >1 stream: {stats:?}"
+                );
+                assert!(stats.peak_pages > 0 && stats.peak_pages <= stats.total_pages);
+                assert!(stats.peak_page_bytes > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_server_edge_requests() {
+        use crate::forward::ForwardModel;
+        let (fs, map) = forward_payload();
+        let model = ForwardModel::from_packed_map(fs, &map).unwrap();
+        let (srv, cli) =
+            EvalServer::spawn_batched(model, BatchConfig::default()).unwrap();
+        // empty request: empty logprobs, same as the static batcher
+        assert!(cli.score(vec![]).unwrap().logprobs.is_empty());
+        // out-of-vocab tokens are rejected (closed channel), and the
+        // server keeps serving afterwards
+        assert!(cli.score(vec![1, 999]).is_err());
+        let ok = cli.score(vec![1, 2, 3]).unwrap();
+        assert_eq!(ok.logprobs.len(), 2);
+        drop(cli);
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.admitted, 1, "only the valid non-empty request ran: {stats:?}");
     }
 
     // -----------------------------------------------------------------------

@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench-smoke bench-perf bench-pack bench-gemv bench-forward bench-serve bench-all lint fmt artifacts clean
+.PHONY: build test bench-smoke bench-perf bench-pack bench-gemv bench-forward bench-serve bench-spec bench-all lint fmt artifacts clean
 
 ## Release build of the library, `msb` CLI, all benches and all examples.
 build:
@@ -60,6 +60,15 @@ bench-forward:
 bench-serve:
 	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_serve
 
+## Self-speculative greedy decode: draft-verify chunks through step_batch
+## with page-level KV rollback (spec-* keys merged into BENCH_perf.json).
+## Self-asserting: speculative generation must be bit-identical to plain
+## and solo greedy decode across the MAC/kernel/thread grid, take strictly
+## fewer step_batch calls on a provably-accepting workload, and keep the
+## arena peak within ceil(draft_len/page_tokens) pages of the plain peak.
+bench-spec:
+	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_spec
+
 ## Every BENCH_perf.json producer in one pass (plus the pack pipeline's
 ## BENCH_pack.json). Each binary stamps its keys with a `sources` entry,
 ## so a full refresh leaves an attributable provenance map behind.
@@ -69,6 +78,7 @@ bench-all:
 	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_gemv
 	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_forward
 	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_serve
+	MSB_BENCH_JSON=$(CURDIR)/BENCH_perf.json $(CARGO) bench --bench perf_spec
 	$(CARGO) bench --bench perf_pack
 
 ## Style gate: rustfmt + clippy with warnings denied.

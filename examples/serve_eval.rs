@@ -6,6 +6,7 @@
 //!       [--payload payload.msbt] [--requests 64] [--clients 8]
 //!       [--threads N] [--model small] [--method wgm] [--batch B]
 //!       [--mac f32|int8|auto] [--streams N] [--page-tokens P] [--chunk C]
+//!       [--spec] [--draft-len K] [--max-new N]
 //!       [--vocab V --d D --layers L --heads H --ff F --seq S --rows R]
 //!
 //! One `--backend` flag selects the serving construction; every backend
@@ -30,7 +31,11 @@
 //!   the forward backend switches to the continuous-batching scheduler
 //!   (`EvalServer::spawn_batched`): every active stream rides one fused
 //!   `step_batch` per decode step over the paged KV arena, and every
-//!   served response is checked bit-identical to solo scoring.
+//!   served response is checked bit-identical to solo scoring. Adding
+//!   `--spec` tacks on a greedy-generation arm that decodes the same
+//!   prompt mix plain and self-speculatively (`--draft-len` caps the
+//!   drafter), asserts the outputs bit-identical, and reports the step
+//!   savings and draft accept rate.
 
 use std::time::{Duration, Instant};
 
@@ -56,7 +61,9 @@ fn main() -> Result<()> {
         .threads(threads)
         .mac(mac)
         .max_streams(args.usize_or("streams", 0)?.max(1))
-        .kv_page_tokens(args.usize_or("page-tokens", 16)?);
+        .kv_page_tokens(args.usize_or("page-tokens", 16)?)
+        .speculative(args.has("spec"))
+        .draft_len(args.usize_or("draft-len", 4)?);
     match backend.as_str() {
         "runner" => serve_runner(&args, &builder, payload),
         "fused" => {
@@ -422,10 +429,8 @@ fn serve_forward_batched(args: &Args, builder: &BackendBuilder, payload: &str) -
         .collect::<Result<_>>()?;
 
     let bc = BatchConfig {
-        max_streams: builder.get_max_streams(),
-        kv_page_tokens: builder.get_kv_page_tokens(),
         prefill_chunk: args.usize_or("chunk", 8)?.max(1),
-        ..BatchConfig::default()
+        ..builder.batch_config()
     };
     let (server, client) = EvalServer::spawn_batched(model, bc)?;
     let t0 = Instant::now();
@@ -463,12 +468,99 @@ fn serve_forward_batched(args: &Args, builder: &BackendBuilder, payload: &str) -
         "scheduler: {} admitted, {} retired, max queue wait {} steps",
         stats.admitted, stats.retired, stats.max_wait_steps
     );
+    let hist: Vec<String> = stats
+        .step_width_hist
+        .iter()
+        .enumerate()
+        .filter(|(_, &n)| n > 0)
+        .map(|(w, &n)| format!("{}x{n}", w + 1))
+        .collect();
+    println!("step width histogram (width x steps): {}", hist.join(" "));
     println!(
         "kv arena: peak {} of {} pages ({} bytes at peak)",
         stats.peak_pages, stats.total_pages, stats.peak_page_bytes
     );
     if fallbacks > 0 {
         println!("mac fallbacks: {fallbacks} projection(s) fell back to the f32 MAC");
+    }
+
+    if builder.get_speculative() {
+        serve_forward_generate(args, builder, payload, &fs, &prompts)?;
+    }
+    Ok(())
+}
+
+/// `--spec` generation arm: greedy-decode the same prompt mix twice —
+/// plain chunked decode, then self-speculative draft-verify — assert the
+/// outputs bit-identical, and report the step savings and accept rate.
+fn serve_forward_generate(
+    args: &Args,
+    builder: &BackendBuilder,
+    payload: &str,
+    fs: &ForwardSpec,
+    prompts: &[Vec<i32>],
+) -> Result<()> {
+    use msb_quant::server::{BatchConfig, ServerStats};
+
+    let draft_len = args.usize_or("draft-len", 4)?.max(1);
+    let max_new = args.usize_or("max-new", (fs.seq / 2).max(1))?.max(1);
+    // leave generation headroom inside the context window
+    let keep = (fs.seq / 2).max(1);
+    let gen_prompts: Vec<Vec<i32>> =
+        prompts.iter().map(|p| p[..p.len().min(keep)].to_vec()).collect();
+
+    let run = |speculative: bool| -> Result<(Vec<Vec<i32>>, ServerStats, f64)> {
+        let map = msbt::read_file(payload)?;
+        let model = builder.forward(fs.clone(), &map)?.into_forward()?;
+        let bc = BatchConfig {
+            prefill_chunk: args.usize_or("chunk", 8)?.max(1),
+            ..builder.clone().speculative(speculative).batch_config()
+        };
+        let (server, client) = EvalServer::spawn_batched(model, bc)?;
+        let t = Instant::now();
+        let handles: Vec<_> = gen_prompts
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(i, p)| {
+                let client = client.clone();
+                std::thread::spawn(move || (i, client.generate(p, max_new)))
+            })
+            .collect();
+        let mut outs = vec![Vec::new(); gen_prompts.len()];
+        for h in handles {
+            let (i, resp) = h.join().expect("generate client thread");
+            outs[i] = resp?.tokens;
+        }
+        let dt = t.elapsed().as_secs_f64();
+        drop(client);
+        Ok((outs, server.shutdown(), dt))
+    };
+    let (plain, pstats, t_plain) = run(false)?;
+    let (spec, sstats, t_spec) = run(true)?;
+    anyhow::ensure!(spec == plain, "speculative generation diverged from plain greedy decode");
+    let new_tokens: usize = plain.iter().map(|t| t.len()).sum();
+    println!(
+        "spec decode: bit-identity spec == plain on all {} generation(s), {new_tokens} new tokens",
+        plain.len()
+    );
+    println!(
+        "  plain {t_plain:.3}s ({:.0} tok/s, {} steps) | spec {t_spec:.3}s ({:.0} tok/s, \
+         {} steps) | {:.2}x",
+        new_tokens as f64 / t_plain,
+        pstats.batches,
+        new_tokens as f64 / t_spec,
+        sstats.batches,
+        t_plain / t_spec
+    );
+    match sstats.accept_rate() {
+        Some(r) => println!(
+            "  drafter: {} drafted, {} accepted ({:.0}% accept rate, draft cap {draft_len})",
+            sstats.drafted,
+            sstats.accepted,
+            100.0 * r
+        ),
+        None => println!("  drafter: never proposed (no recurring suffixes in this workload)"),
     }
     Ok(())
 }

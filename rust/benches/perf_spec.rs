@@ -1,0 +1,304 @@
+//! §Perf — self-speculative greedy decode (`server::draft` prompt-lookup
+//! drafter + multi-token verify chunks through `ForwardModel::step_batch`
+//! with page-level KV rollback).
+//!
+//! The claims under test:
+//!
+//! * speculative generation is *bit-identical* to plain chunked greedy
+//!   decode and to solo token-by-token greedy decode, across MAC modes
+//!   (f32, int8), dot kernels (scalar, detected SIMD), and thread counts
+//!   (1, 4) — verification accepts exactly the prefix whose argmax chain
+//!   matches, so a rejected draft can never leak into the output;
+//! * on a workload with recurring suffixes the drafter provably accepts
+//!   (checked by an exact scheduler mirror), speculative decode takes
+//!   *strictly fewer* `step_batch` calls than plain decode — every
+//!   accepted token is a whole forward step saved;
+//! * the KV arena's speculative high-water mark stays within
+//!   `ceil(draft_len / page_tokens)` pages per stream of the plain peak:
+//!   rejected tails are truncated back and their pages recycled.
+//!
+//! All three are hard asserts: no number is reported from a run that
+//! fails them. Results merge into `BENCH_perf.json` (`spec-*` keys)
+//! next to the engine/scheduler/gemv/forward/serve numbers.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use msb_quant::benchlib::{self, time_median};
+use msb_quant::forward::{argmax_row, synth, ForwardModel, ForwardSpec};
+use msb_quant::kernels::{Kernel, MacMode};
+use msb_quant::pipeline::{quantize, QuantizeOptions};
+use msb_quant::quant::registry::Method;
+use msb_quant::quant::QuantConfig;
+use msb_quant::server::draft::{Drafter, DEFAULT_NGRAM};
+use msb_quant::server::{BatchConfig, EvalServer, ServerStats};
+
+/// Ground-truth greedy decode: solo `step` calls, one token at a time,
+/// sharing the scheduler's argmax and budget-clamping rules.
+fn solo_greedy(model: &ForwardModel, prompt: &[i32], max_new: usize) -> Vec<i32> {
+    let (seq, vocab) = (model.spec().seq, model.spec().vocab);
+    let mut toks = prompt.to_vec();
+    toks.truncate(seq);
+    assert!(!toks.is_empty() && max_new > 0);
+    let eff = max_new.min(seq - toks.len() + 1);
+    let mut kv = model.kv_state();
+    let mut row = model.step(&mut kv, &toks).expect("prefill");
+    let mut out = Vec::with_capacity(eff);
+    loop {
+        let next = argmax_row(&row[row.len() - vocab..]) as i32;
+        out.push(next);
+        if out.len() == eff {
+            return out;
+        }
+        row = model.step(&mut kv, &[next]).expect("decode step");
+    }
+}
+
+/// Exact mirror of the single-stream speculative schedule: given the
+/// known greedy continuation `gen`, replay the scheduler's drafter state,
+/// chunk caps and adaptive draft length to predict its `step_batch`
+/// count and drafted/accepted totals. Valid for any single-job run (the
+/// stream never shares a step, so no chunk lift occurs).
+fn simulate_single_stream(
+    prompt: &[i32],
+    gen: &[i32],
+    seq: usize,
+    chunk: usize,
+    draft_cap: usize,
+) -> (u64, u64, u64) {
+    let mut d = Drafter::new(DEFAULT_NGRAM);
+    d.extend(prompt);
+    let eff = gen.len();
+    let mut fed = prompt.len();
+    let mut steps = prompt.len().div_ceil(chunk) as u64;
+    let mut c = 0usize;
+    let mut draft_len = draft_cap;
+    let (mut drafted, mut accepted) = (0u64, 0u64);
+    loop {
+        d.extend(&gen[c..=c]);
+        c += 1;
+        if c >= eff {
+            return (steps, drafted, accepted);
+        }
+        let cap = draft_len.min(chunk.saturating_sub(1)).min(eff - c).min(seq - fed - 1);
+        let prop = d.propose(cap);
+        let k = prop.len();
+        let j = prop.iter().zip(&gen[c..]).take_while(|(a, b)| a == b).count();
+        drafted += k as u64;
+        accepted += j as u64;
+        d.extend(&gen[c..c + j]);
+        c += j;
+        if k > 0 {
+            draft_len =
+                if j == k { (draft_len + 1).min(draft_cap) } else { (draft_len / 2).max(1) };
+        }
+        fed += 1 + j;
+        steps += 1;
+        if c >= eff {
+            return (steps, drafted, accepted);
+        }
+    }
+}
+
+/// Scan deterministic candidate prompts until the exact simulation
+/// predicts at least one accepted draft token under this model — a
+/// repetitive-suffix workload where speculation provably wins. The panic
+/// is a loud fixture failure, never a flake (everything is deterministic).
+fn find_accepting_workload(
+    model: &ForwardModel,
+    chunk: usize,
+    draft_cap: usize,
+    max_new: usize,
+) -> (Vec<i32>, Vec<i32>, (u64, u64, u64)) {
+    let fs = model.spec();
+    for seed in 0..32u64 {
+        let plen = 4 + (seed as usize % 5);
+        let mut prompt = synth::synth_tokens(fs, plen, 17 + seed);
+        if seed % 2 == 1 {
+            let copy = prompt.clone();
+            prompt.extend_from_slice(&copy);
+        }
+        let gen = solo_greedy(model, &prompt, max_new);
+        let sim = simulate_single_stream(&prompt, &gen, fs.seq, chunk, draft_cap);
+        if sim.2 >= 1 {
+            return (prompt, gen, sim);
+        }
+    }
+    panic!("no candidate prompt produced an accepted draft — widen the scan");
+}
+
+/// Run one generation job through the continuous batcher and return the
+/// served tokens plus the scheduler's stats.
+fn run_generate(
+    model: ForwardModel,
+    cfg: BatchConfig,
+    prompt: &[i32],
+    max_new: usize,
+) -> (Vec<i32>, ServerStats) {
+    let (srv, cli) = EvalServer::spawn_batched(model, cfg).expect("spawn batched server");
+    let out = cli.generate(prompt.to_vec(), max_new).expect("generate").tokens;
+    drop(cli);
+    (out, srv.shutdown())
+}
+
+fn main() {
+    let fast = benchlib::fast_mode();
+    let mut results: BTreeMap<String, f64> = BTreeMap::new();
+    let reps = if fast { 3 } else { 5 };
+    let fs = if fast {
+        ForwardSpec::new(64, 32, 2, 4, 48, 32, 1)
+    } else {
+        ForwardSpec::new(256, 64, 2, 4, 128, 48, 1)
+    }
+    .expect("bench spec");
+    let block = if fast { 16 } else { 64 };
+    let page_tokens = if fast { 4 } else { 8 };
+    let (chunk, draft_cap) = (4usize, 4usize);
+    let max_new = fs.seq / 2;
+
+    // rtn: calibration-free AND affine-decode, so the int8 MAC arm of
+    // the bit-identity grid engages for real
+    let spec = synth::model_spec(&fs, "perf_spec");
+    let weights = synth::synth_weights(&fs, 0x5DEC_u64);
+    let qcfg = QuantConfig::block_wise(4, block).expect("cfg").with_packed();
+    let opts = QuantizeOptions::new().with_threads(2);
+    let qm = quantize(&spec, weights, None, Method::Rtn, &qcfg, &opts).expect("quantize");
+    let payload = qm.export_packed().expect("packed payload");
+
+    let mk_model = |mac: MacMode, kernel: Kernel, threads: usize| {
+        ForwardModel::from_packed_map_with(fs.clone(), &payload, mac)
+            .expect("packed model")
+            .with_kernel(kernel)
+            .with_threads(threads)
+    };
+    let base_cfg = BatchConfig {
+        max_streams: 2,
+        kv_page_tokens: page_tokens,
+        prefill_chunk: chunk,
+        linger: Duration::from_millis(5),
+        ..BatchConfig::default()
+    };
+    let spec_cfg = BatchConfig { speculative: true, draft_len: draft_cap, ..base_cfg.clone() };
+
+    // --- gates (a)+(b)+(c): bit-identity, step savings, page bound ---------
+    let mut kernels = vec![Kernel::Scalar];
+    if let Some(k) = Kernel::detect_simd() {
+        kernels.push(k);
+    }
+    let page_slack = draft_cap.div_ceil(page_tokens);
+    let mut grid = 0usize;
+    for &mac in &[MacMode::F32, MacMode::Int8] {
+        for &kernel in &kernels {
+            for &threads in &[1usize, 4] {
+                // the greedy continuation depends on the MAC path, so the
+                // accepting workload is re-derived per grid point
+                let m = mk_model(mac, kernel, threads);
+                let (prompt, gen, (steps_sim, drafted_sim, accepted_sim)) =
+                    find_accepting_workload(&m, chunk, draft_cap, max_new);
+                let (plain, pstats) = run_generate(
+                    mk_model(mac, kernel, threads),
+                    base_cfg.clone(),
+                    &prompt,
+                    max_new,
+                );
+                let (specd, sstats) = run_generate(
+                    mk_model(mac, kernel, threads),
+                    spec_cfg.clone(),
+                    &prompt,
+                    max_new,
+                );
+                let tag =
+                    format!("{} MAC, {} kernel, {threads} threads", mac.name(), kernel.name());
+                assert_eq!(plain, gen, "plain generation diverged from solo greedy ({tag})");
+                assert_eq!(specd, gen, "speculative generation diverged from solo greedy ({tag})");
+                let plain_steps = (prompt.len().div_ceil(chunk) + gen.len() - 1) as u64;
+                assert_eq!(pstats.batches, plain_steps, "plain step count off ({tag})");
+                assert_eq!(pstats.drafted, 0, "plain run must never draft ({tag})");
+                assert_eq!(sstats.batches, steps_sim, "scheduler diverged from mirror ({tag})");
+                assert_eq!(sstats.drafted, drafted_sim, "drafted count off ({tag})");
+                assert_eq!(sstats.accepted, accepted_sim, "accepted count off ({tag})");
+                assert!(
+                    sstats.batches < pstats.batches,
+                    "speculative decode must take strictly fewer step_batch calls \
+                     ({} vs {}, {tag})",
+                    sstats.batches,
+                    pstats.batches
+                );
+                assert!(
+                    sstats.peak_pages <= pstats.peak_pages + page_slack,
+                    "speculative peak {} pages exceeds plain peak {} + {page_slack} ({tag})",
+                    sstats.peak_pages,
+                    pstats.peak_pages
+                );
+                assert_eq!(sstats.leaked_pages, 0, "pages leaked after rollback ({tag})");
+                grid += 1;
+            }
+        }
+    }
+
+    // --- throughput: plain vs speculative wall time on the same workload ---
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let kernel = Kernel::detect();
+    let timed = mk_model(MacMode::F32, kernel, threads);
+    let (prompt, gen, (steps_sim, drafted_sim, accepted_sim)) =
+        find_accepting_workload(&timed, chunk, draft_cap, max_new);
+    let new_tokens = gen.len() as f64;
+    let time_arm = |cfg: &BatchConfig| -> f64 {
+        let (srv, cli) =
+            EvalServer::spawn_batched(mk_model(MacMode::F32, kernel, threads), cfg.clone())
+                .expect("spawn batched server");
+        let t = time_median(reps, || {
+            let out = cli.generate(prompt.clone(), max_new).expect("generate").tokens;
+            assert_eq!(out, gen, "timed arm diverged from solo greedy");
+        });
+        drop(cli);
+        srv.shutdown();
+        t
+    };
+    let t_plain = time_arm(&base_cfg);
+    let t_spec = time_arm(&spec_cfg);
+    let plain_steps = (prompt.len().div_ceil(chunk) + gen.len() - 1) as u64;
+    let accept = accepted_sim as f64 / drafted_sim.max(1) as f64;
+
+    benchlib::header(&format!(
+        "self-speculative greedy decode: vocab {} d {} L{} seq {} ({} kernel, {threads} \
+         threads, chunk {chunk}, draft cap {draft_cap}, {page_tokens}-token pages)",
+        fs.vocab,
+        fs.d,
+        fs.layers,
+        fs.seq,
+        kernel.name()
+    ));
+    println!(
+        "  bit-identity: spec == plain == solo greedy on {grid} grid points \
+         (mac x kernel x threads), scheduler == exact mirror on each"
+    );
+    println!(
+        "  steps: plain {plain_steps} -> spec {steps_sim} on the timed workload \
+         ({drafted_sim} drafted, {accepted_sim} accepted, {:.0}% accept rate)",
+        100.0 * accept
+    );
+    println!(
+        "  wall: plain {t_plain:.4}s ({:.1} tok/s)   spec {t_spec:.4}s ({:.1} tok/s)   {:.2}x",
+        new_tokens / t_plain,
+        new_tokens / t_spec,
+        t_plain / t_spec
+    );
+
+    results.insert("spec-steps-base".to_string(), plain_steps as f64);
+    results.insert("spec-steps-spec".to_string(), steps_sim as f64);
+    results.insert("spec-accept-rate".to_string(), accept);
+    results.insert("spec-speedup".to_string(), t_plain / t_spec);
+    results.insert("spec-tps-base".to_string(), new_tokens / t_plain);
+    results.insert("spec-tps-spec".to_string(), new_tokens / t_spec);
+    results.insert("spec-grid-points".to_string(), grid as f64);
+    results.insert(
+        "spec-simd".to_string(),
+        u64::from(Kernel::detect() != Kernel::Scalar) as f64,
+    );
+
+    match benchlib::merge_bench_json("perf", "perf_spec", &results) {
+        Ok(path) => println!("\nmerged {} keys into {}", results.len(), path.display()),
+        Err(e) => eprintln!("\nBENCH_perf.json not written: {e}"),
+    }
+}

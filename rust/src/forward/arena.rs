@@ -95,15 +95,21 @@ impl KvArena {
     /// cheap slot-map handles; the page allocator in
     /// [`KvArena::reserve`] is the real capacity bound.
     pub fn alloc_stream(&mut self) -> StreamId {
-        let entry = StreamEntry { pages: Vec::new(), len: 0 };
+        let mut entry = Some(StreamEntry { pages: Vec::new(), len: 0 });
+        let mut id = None;
         for (i, slot) in self.streams.iter_mut().enumerate() {
             if slot.is_none() {
-                *slot = Some(entry);
-                return StreamId(i);
+                *slot = entry.take();
+                id = Some(StreamId(i));
+                break;
             }
         }
-        self.streams.push(Some(entry));
-        StreamId(self.streams.len() - 1)
+        let id = id.unwrap_or_else(|| {
+            self.streams.push(entry);
+            StreamId(self.streams.len() - 1)
+        });
+        self.debug_check_balance();
+        id
     }
 
     /// Retire a stream: its pages return to the free list immediately and
@@ -112,6 +118,7 @@ impl KvArena {
         if let Some(entry) = self.streams.get_mut(id.0).and_then(|slot| slot.take()) {
             self.free.extend(entry.pages);
         }
+        self.debug_check_balance();
     }
 
     fn entry(&self, id: StreamId) -> Result<&StreamEntry> {
@@ -153,7 +160,48 @@ impl KvArena {
             self.streams[id.0].as_mut().expect("entry checked above").pages.push(page);
         }
         self.peak_pages = self.peak_pages.max(self.pages_in_use());
+        self.debug_check_balance();
         Ok(())
+    }
+
+    /// Roll a stream back to `new_len` decoded positions — the reject
+    /// path of speculative decode. Whole pages past
+    /// `ceil(new_len / page_tokens)` return to the LIFO free list and are
+    /// reused by the next reservation; a partially covered tail page
+    /// stays (its stale positions are simply overwritten by the next
+    /// [`KvArena::append`], and attention never reads positions `>= len`,
+    /// so stale data is unreachable). `peak_pages` is a lifetime
+    /// high-water mark and deliberately does not move. Fails (leaving the
+    /// stream unchanged) if the stream is dead or `new_len` exceeds its
+    /// current length — truncate never grows.
+    pub fn truncate_stream(&mut self, id: StreamId, new_len: usize) -> Result<()> {
+        let len = self.entry(id)?.len;
+        ensure!(
+            new_len <= len,
+            "truncate_stream cannot grow stream {}: {new_len} > len {len}",
+            id.0
+        );
+        let keep = new_len.div_ceil(self.page_tokens);
+        let entry = self.streams[id.0].as_mut().expect("entry checked above");
+        while entry.pages.len() > keep {
+            let page = entry.pages.pop().expect("len checked by loop condition");
+            self.free.push(page);
+        }
+        entry.len = new_len;
+        self.debug_check_balance();
+        Ok(())
+    }
+
+    /// Page-conservation invariant: every page is either held by exactly
+    /// one live stream's table or on the free list. Checked (debug builds
+    /// only) after every operation that moves pages or streams —
+    /// alloc/free/reserve/truncate.
+    fn debug_check_balance(&self) {
+        debug_assert_eq!(
+            self.streams.iter().flatten().map(|e| e.pages.len()).sum::<usize>() + self.free.len(),
+            self.total_pages,
+            "KV arena page balance violated: pages_in_tables + free != total"
+        );
     }
 
     /// Write a chunk of roped keys/values (`[t_new, d]` row-major) for
@@ -365,6 +413,131 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn truncate_returns_whole_page_tails_and_recycles_them() {
+        let mut a = arena(); // 4-token pages, 8 pages
+        let s = a.alloc_stream();
+        a.reserve(s, 10).unwrap(); // 3 pages
+        a.advance(s, 10);
+        let before = a.pages(s).to_vec();
+        assert_eq!(before.len(), 3);
+        let peak = a.peak_pages();
+        // roll back to 5 positions: the page covering 8..10 returns, the
+        // page covering 4..8 stays (position 5 is mid-page)
+        a.truncate_stream(s, 5).unwrap();
+        assert_eq!(a.len(s).unwrap(), 5);
+        assert_eq!(a.pages(s), &before[..2]);
+        assert_eq!(a.pages_in_use(), 2);
+        assert_eq!(a.peak_pages(), peak, "truncate must not move the high-water mark");
+        assert_eq!(a.peak_bytes(), peak * a.page_bytes(), "peak_bytes tracks the same mark");
+        // the freed tail page is reused first (LIFO): re-reserving hands
+        // the identical id back
+        a.reserve(s, 10).unwrap();
+        assert_eq!(a.pages(s), &before[..], "freed tail page must recycle LIFO");
+        assert_eq!(a.peak_pages(), peak, "recycled page must not raise the peak");
+        a.advance(s, 5);
+        // page-exact truncate keeps exactly ceil(8/4) = 2 pages
+        a.truncate_stream(s, 8).unwrap();
+        assert_eq!(a.pages(s), &before[..2]);
+        // truncate to 0 returns everything
+        a.truncate_stream(s, 0).unwrap();
+        assert_eq!(a.pages(s).len(), 0);
+        assert_eq!(a.pages_in_use(), 0);
+        // growing via truncate is refused; dead streams are refused
+        assert!(a.truncate_stream(s, 1).is_err());
+        a.free_stream(s);
+        assert!(a.truncate_stream(s, 0).is_err());
+    }
+
+    /// Randomized accept/reject schedules against a *scripted* greedy
+    /// model (next token a pure function of the last token and the
+    /// position — no network needed to pin the scheduler algebra). Each
+    /// wave drafts random lookahead tokens, feeds `1 + k` positions,
+    /// accepts the longest prefix matching the script, and rolls the
+    /// arena back with `truncate_stream`. Asserts the speculative
+    /// committed stream is bit-equal to plain decode, page balance is
+    /// restored after every wave, and the peak never grows once the
+    /// first wave set it.
+    #[test]
+    fn fuzz_random_draft_rollback_against_scripted_model() {
+        use crate::stats::Rng;
+        let vocab = 23i64;
+        let script = |last: i32, pos: usize| -> i32 {
+            ((last as i64 * 7 + pos as i64 * 3 + 1).rem_euclid(vocab)) as i32
+        };
+        let seq = 48;
+        let max_draft = 3usize;
+        let mut a = KvArena::new(2, 4, seq, 3, 64).unwrap();
+        let mut rng = Rng::new(0xD12A);
+        let mut peak_after_first_wave = 0usize;
+        for wave in 0..8 {
+            let plen = 3 + rng.below(5);
+            let prompt: Vec<i32> = (0..plen).map(|i| ((wave * 5 + i) % 23) as i32).collect();
+            let max_new = 8 + rng.below(20);
+            // plain greedy reference: one committed token per step
+            let mut plain = prompt.clone();
+            let goal = (plen + max_new).min(seq);
+            while plain.len() < goal {
+                plain.push(script(*plain.last().unwrap(), plain.len()));
+            }
+            // speculative run over the real arena
+            let s = a.alloc_stream();
+            let mut committed = prompt.clone();
+            a.reserve(s, committed.len()).unwrap();
+            a.advance(s, committed.len());
+            while committed.len() < plain.len() {
+                let fed0 = a.len(s).unwrap();
+                let next = plain[committed.len()];
+                committed.push(next);
+                // random drafts, biased toward correct so accepts happen
+                let want = rng.below(1 + max_draft);
+                let k = want.min(seq - fed0 - 1);
+                let drafts: Vec<i32> = (0..k)
+                    .map(|i| {
+                        let pos = committed.len() + i;
+                        if pos < plain.len() && rng.below(2) == 0 {
+                            plain[pos]
+                        } else {
+                            rng.below(23) as i32
+                        }
+                    })
+                    .collect();
+                // feed [next, drafts..]: reserve + advance like step_batch
+                a.reserve(s, fed0 + 1 + k).unwrap();
+                a.advance(s, 1 + k);
+                // scripted verification: accept the longest matching prefix
+                let mut j = 0;
+                while j < k && committed.len() < plain.len() && drafts[j] == plain[committed.len()]
+                {
+                    committed.push(drafts[j]);
+                    j += 1;
+                }
+                a.truncate_stream(s, fed0 + 1 + j).unwrap();
+                assert_eq!(a.len(s).unwrap(), fed0 + 1 + j, "rollback length");
+                assert_eq!(
+                    a.pages(s).len(),
+                    (fed0 + 1 + j).div_ceil(a.page_tokens()),
+                    "rollback page count"
+                );
+            }
+            assert_eq!(committed, plain, "wave {wave}: speculative stream diverged from plain");
+            a.free_stream(s);
+            assert_eq!(a.pages_in_use(), 0, "wave {wave} leaked pages");
+            if wave == 0 {
+                peak_after_first_wave = a.peak_pages();
+                assert!(peak_after_first_wave > 0);
+            }
+        }
+        // every wave recycled through the same free list; one wave's
+        // worth of pages (plus draft overshoot) bounds the peak
+        let bound = seq.div_ceil(a.page_tokens()) + max_draft.div_ceil(a.page_tokens());
+        assert!(
+            a.peak_pages() <= bound,
+            "peak {} pages exceeds one stream + draft overshoot bound {bound}",
+            a.peak_pages()
+        );
     }
 
     #[test]

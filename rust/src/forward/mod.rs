@@ -782,6 +782,33 @@ impl ForwardModel {
     }
 }
 
+/// Greedy token choice for one logits row: the index of the largest
+/// value, **lowest index on ties** and NaNs never winning (NaN compares
+/// false under `>`). Every greedy-decode surface — the batched
+/// scheduler's commit step, speculative verification, solo references in
+/// tests and benches — shares this one definition, so tie-breaking can
+/// never make "bit-identical logits" and "identical tokens" diverge.
+pub fn argmax_row(row: &[f32]) -> usize {
+    let mut best = f32::NEG_INFINITY;
+    let mut idx = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > best {
+            best = v;
+            idx = i;
+        }
+    }
+    idx
+}
+
+/// Row-wise [`argmax_row`] over a `[rows, vocab]` logits slab — the
+/// multi-position verification surface for speculative decode: one
+/// [`ForwardModel::step_batch`] chunk's every position greedy-decoded in
+/// a single call.
+pub fn argmax_rows(logits: &[f32], vocab: usize) -> Vec<usize> {
+    assert!(vocab > 0 && logits.len() % vocab == 0, "logits are not [rows, vocab={vocab}]");
+    logits.chunks_exact(vocab).map(argmax_row).collect()
+}
+
 impl LogitsFn for ForwardModel {
     fn batch(&self) -> usize {
         self.spec.batch
@@ -1216,5 +1243,30 @@ mod tests {
         let mut toks = synth::synth_tokens(&fs, fs.seq, 2);
         toks[3] = fs.vocab as i32;
         assert!(model.logits(&toks).is_err());
+    }
+
+    #[test]
+    fn argmax_ties_break_low_and_nans_never_win() {
+        assert_eq!(argmax_row(&[1.0, 3.0, 2.0]), 1);
+        // tie: the lowest index wins
+        assert_eq!(argmax_row(&[5.0, 2.0, 5.0]), 0);
+        // NaN compares false under > in both directions
+        assert_eq!(argmax_row(&[f32::NAN, 1.0, 0.5]), 1);
+        assert_eq!(argmax_row(&[0.5, f32::NAN, 1.0]), 2);
+        // all -inf (or empty): index 0 by convention
+        assert_eq!(argmax_row(&[f32::NEG_INFINITY; 3]), 0);
+        assert_eq!(argmax_row(&[]), 0);
+    }
+
+    #[test]
+    fn argmax_rows_matches_per_row_scan() {
+        let vocab = 4;
+        let logits = [0.1, 0.9, 0.2, 0.3, 7.0, 1.0, 7.0, 2.0, -1.0, -3.0, -2.0, -0.5];
+        let rows = argmax_rows(&logits, vocab);
+        assert_eq!(rows.len(), 3);
+        for (r, &got) in rows.iter().enumerate() {
+            assert_eq!(got, argmax_row(&logits[r * vocab..(r + 1) * vocab]), "row {r}");
+        }
+        assert_eq!(rows, vec![1, 0, 3]);
     }
 }

@@ -170,6 +170,10 @@ pub(crate) fn dot_i8(kernel: Kernel, c: &[i8], x: &[i8]) -> i32 {
         // SAFETY: the same availability contract as `Kernel::dot` — every
         // entry point asserts `available()` before the hot loop.
         Kernel::Avx2 => unsafe { dot_i8_avx2(c, x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is part of the aarch64 baseline ISA, so
+        // `available()` is unconditionally true for this variant.
+        Kernel::Neon => unsafe { dot_i8_neon(c, x) },
     }
 }
 
@@ -180,6 +184,9 @@ pub(crate) fn sum_i8(kernel: Kernel, x: &[i8]) -> i32 {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: as for `dot_i8`.
         Kernel::Avx2 => unsafe { sum_i8_avx2(x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as for `dot_i8`.
+        Kernel::Neon => unsafe { sum_i8_neon(x) },
     }
 }
 
@@ -257,6 +264,84 @@ unsafe fn hsum_i32(acc: std::arch::x86_64::__m256i) -> i32 {
     _mm_cvtsi128_si32(q)
 }
 
+/// Portable reference for the `sdot` accumulation shape the NEON kernel
+/// uses: four i32 lanes, each absorbing one 4-element product group per
+/// 16-element step, reduced as `(l0+l1) + (l2+l3)`, sequential tail.
+/// i32 accumulation is exact for i8·i8 products at these tile lengths, so
+/// this must equal the plain scalar loop *bit-for-bit* on every input —
+/// the contract that lets the aarch64 path skip lane discipline entirely.
+/// Compiled and tested on every arch so the shape cannot rot unseen.
+pub fn dot_i8_sdot_ref(c: &[i8], x: &[i8]) -> i32 {
+    debug_assert_eq!(c.len(), x.len());
+    let n = c.len();
+    let m = n - n % 16;
+    let mut lanes = [0i32; 4];
+    let mut k = 0;
+    while k < m {
+        for (j, l) in lanes.iter_mut().enumerate() {
+            let g = k + 4 * j;
+            for i in g..g + 4 {
+                *l += c[i] as i32 * x[i] as i32;
+            }
+        }
+        k += 16;
+    }
+    let mut sum = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+    for i in m..n {
+        sum += c[i] as i32 * x[i] as i32;
+    }
+    sum
+}
+
+/// NEON i8 dot in the `sdot` accumulation shape, built from baseline
+/// intrinsics (no `dotprod` extension needed): widening multiply to
+/// i16×8 (`vmull_s8`), pairwise-add-accumulate into four i32 lanes
+/// (`vpadalq_s16`), horizontal `vaddvq_s32` finish, sequential tail for
+/// `len % 8`. Bit-identical to [`dot_i8_sdot_ref`] and to the scalar
+/// loop because i32 accumulation is exact — see the module docs.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_i8_neon(c: &[i8], x: &[i8]) -> i32 {
+    use std::arch::aarch64::*;
+    debug_assert_eq!(c.len(), x.len());
+    let n = c.len();
+    let m = n - n % 8;
+    let mut acc = vdupq_n_s32(0);
+    let mut k = 0;
+    while k < m {
+        let a = vld1_s8(c.as_ptr().add(k));
+        let b = vld1_s8(x.as_ptr().add(k));
+        acc = vpadalq_s16(acc, vmull_s8(a, b));
+        k += 8;
+    }
+    let mut sum = vaddvq_s32(acc);
+    for i in m..n {
+        sum += c[i] as i32 * x[i] as i32;
+    }
+    sum
+}
+
+/// NEON lane sum: sign-extend (`vmovl_s8`), pairwise-accumulate, add
+/// across (same exactness argument as [`dot_i8_neon`]).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn sum_i8_neon(x: &[i8]) -> i32 {
+    use std::arch::aarch64::*;
+    let n = x.len();
+    let m = n - n % 8;
+    let mut acc = vdupq_n_s32(0);
+    let mut k = 0;
+    while k < m {
+        acc = vpadalq_s16(acc, vmovl_s8(vld1_s8(x.as_ptr().add(k))));
+        k += 8;
+    }
+    let mut sum = vaddvq_s32(acc);
+    for i in m..n {
+        sum += x[i] as i32;
+    }
+    sum
+}
+
 #[cfg(test)]
 // test data generation casts freely (values constructed in range by hand)
 #[allow(clippy::cast_possible_truncation)]
@@ -313,5 +398,22 @@ mod tests {
         let x = vec![127i8; 64];
         assert_eq!(dot_i8(simd, &c, &x), -127 * 127 * 64);
         assert_eq!(dot_i8(Kernel::Scalar, &c, &x), -127 * 127 * 64);
+    }
+
+    /// The `sdot` accumulation shape must equal the plain scalar loop
+    /// bit-for-bit on any input and any (ragged) length — the contract
+    /// the aarch64 NEON kernel relies on, checked on every arch.
+    #[test]
+    fn sdot_shaped_reference_is_bit_identical_to_scalar() {
+        let mut rng = Rng::new(73);
+        for len in [1usize, 3, 4, 8, 15, 16, 17, 32, 48, 63, 64, 127] {
+            let c: Vec<i8> = (0..len).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+            let x: Vec<i8> = (0..len).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+            assert_eq!(dot_i8_sdot_ref(&c, &x), dot_i8_scalar(&c, &x), "len {len}");
+        }
+        // i16-overflow territory per product group: ±127 everywhere
+        let c = vec![-127i8; 64];
+        let x = vec![127i8; 64];
+        assert_eq!(dot_i8_sdot_ref(&c, &x), -127 * 127 * 64);
     }
 }

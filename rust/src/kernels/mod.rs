@@ -132,6 +132,13 @@ pub enum Kernel {
     /// the module docs).
     #[cfg(target_arch = "x86_64")]
     Avx2,
+    /// NEON path (aarch64 baseline, so always available there). The f32
+    /// dot currently delegates to the scalar lane structure — the win on
+    /// this target is the `sdot`-shaped int8 kernel in [`int8`]; see
+    /// [`int8::dot_i8_sdot_ref`] for the everywhere-tested reference of
+    /// its accumulation shape.
+    #[cfg(target_arch = "aarch64")]
+    Neon,
 }
 
 impl Kernel {
@@ -141,7 +148,14 @@ impl Kernel {
         if is_x86_feature_detected!("avx2") {
             return Kernel::Avx2;
         }
-        Kernel::Scalar
+        #[cfg(target_arch = "aarch64")]
+        {
+            Kernel::Neon
+        }
+        #[cfg(not(target_arch = "aarch64"))]
+        {
+            Kernel::Scalar
+        }
     }
 
     /// The detected SIMD kernel, or `None` when only the scalar fallback
@@ -161,6 +175,9 @@ impl Kernel {
             Kernel::Scalar => true,
             #[cfg(target_arch = "x86_64")]
             Kernel::Avx2 => is_x86_feature_detected!("avx2"),
+            // NEON is part of the aarch64 baseline ISA
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => true,
         }
     }
 
@@ -169,6 +186,8 @@ impl Kernel {
             Kernel::Scalar => "scalar",
             #[cfg(target_arch = "x86_64")]
             Kernel::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => "neon",
         }
     }
 
@@ -182,6 +201,10 @@ impl Kernel {
             // with_kernel, dense_gemv) asserts `available()` before this
             // variant can reach the hot loop, so avx2 is present.
             Kernel::Avx2 => unsafe { dot_chunk_avx2(w, x) },
+            // f32 stub: bit-identity with the scalar lane tree for free;
+            // the integer path below is where NEON actually accelerates
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => dot_chunk_scalar(w, x),
         }
     }
 }

@@ -9,6 +9,7 @@
 //! msb decode  --in base_wgm_packed.msbt  reconstruct f32 weights
 //! msb score   --method wgm --bits 4      fused CPU forward token scoring
 //! msb serve-bench --streams 4            continuous-batching decode bench
+//! msb serve-bench --spec --draft-len 4   + self-speculative decode arm
 //! msb kernel  run the Pallas-MSB native executable (small model)
 //! ```
 
@@ -101,6 +102,10 @@ commands:
              [--method rtn --bits 4 --block 64] [--vocab V --d D
              --layers L --heads H --ff F --seq S]
              [--threads N] [--seed K] [--mac f32|int8|auto]
+             [--spec] [--draft-len K] [--max-new N]  (generation arm:
+             plain vs self-speculative greedy decode — prompt-lookup
+             drafts verified in the same fused step, bit-identical
+             output, fewer steps; reports accept rate)
   kernel     execute the native Pallas-MSB HLO for the small model
 ";
 
@@ -609,7 +614,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     use msb_quant::eval::LogProbs;
     use msb_quant::forward::{synth, ForwardSpec};
     use msb_quant::runtime::BackendBuilder;
-    use msb_quant::server::{BatchConfig, EvalServer, Response};
+    use msb_quant::server::{BatchConfig, EvalServer, Response, ServerStats};
 
     let fs = ForwardSpec::new(
         args.usize_or("vocab", 256)?,
@@ -674,11 +679,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let t_solo = t0.elapsed().as_secs_f64();
 
     let bc = BatchConfig {
-        max_streams: builder.get_max_streams(),
-        kv_page_tokens: builder.get_kv_page_tokens(),
         prefill_chunk: chunk,
         max_waiting_steps: 32,
         linger: std::time::Duration::from_millis(5),
+        ..builder.batch_config()
     };
     let (server, client) = EvalServer::spawn_batched(model, bc)?;
     let t1 = Instant::now();
@@ -755,6 +759,84 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             "  mac fallbacks: {fallbacks} projection(s) fell back to the f32 MAC \
              (no affine decode)"
         );
+    }
+
+    if args.has("spec") {
+        // generation arm: plain vs self-speculative greedy decode over the
+        // same prompt set, bit-identity asserted before any number prints
+        let draft_len = args.usize_or("draft-len", 4)?.max(1);
+        let max_new = args.usize_or("max-new", (fs.seq / 2).max(1))?.max(1);
+        let gen_prompts: Vec<Vec<i32>> = prompts
+            .iter()
+            .map(|p| {
+                let keep = p.len().min((fs.seq / 2).max(1));
+                p[..keep].to_vec()
+            })
+            .collect();
+        let run = |speculative: bool| -> Result<(Vec<Vec<i32>>, ServerStats, f64)> {
+            let model = builder.forward(fs.clone(), &payload)?.into_forward()?;
+            let bc = BatchConfig {
+                prefill_chunk: chunk,
+                max_waiting_steps: 32,
+                linger: std::time::Duration::from_millis(5),
+                ..builder.clone().speculative(speculative).draft_len(draft_len).batch_config()
+            };
+            let (server, client) = EvalServer::spawn_batched(model, bc)?;
+            let t = Instant::now();
+            let handles: Vec<_> = gen_prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let c = client.clone();
+                    let p = p.clone();
+                    std::thread::spawn(move || (i, c.generate(p, max_new)))
+                })
+                .collect();
+            let mut outs: Vec<Vec<i32>> = vec![Vec::new(); gen_prompts.len()];
+            for h in handles {
+                let (i, r) =
+                    h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))?;
+                outs[i] = r?.tokens;
+            }
+            let dt = t.elapsed().as_secs_f64();
+            drop(client);
+            Ok((outs, server.shutdown(), dt))
+        };
+        let (plain, pstats, t_plain) = run(false)?;
+        let (spec, sstats, t_spec) = run(true)?;
+        anyhow::ensure!(
+            spec == plain,
+            "speculative generation diverged from plain greedy decode"
+        );
+        let new_tokens: usize = plain.iter().map(|t| t.len()).sum();
+        println!(
+            "  spec decode: bit-identity spec == plain on all {} generation(s), \
+             {new_tokens} new tokens",
+            plain.len()
+        );
+        println!(
+            "    plain {:.3}s ({:.0} tok/s, {} steps) | spec {:.3}s ({:.0} tok/s, \
+             {} steps) | {:.2}x",
+            t_plain,
+            new_tokens as f64 / t_plain,
+            pstats.batches,
+            t_spec,
+            new_tokens as f64 / t_spec,
+            sstats.batches,
+            t_plain / t_spec
+        );
+        match sstats.accept_rate() {
+            Some(r) => println!(
+                "    drafter: {} drafted, {} accepted ({:.0}% accept rate, \
+                 draft cap {draft_len})",
+                sstats.drafted,
+                sstats.accepted,
+                100.0 * r
+            ),
+            None => println!(
+                "    drafter: never proposed (no recurring suffixes in this workload)"
+            ),
+        }
     }
     Ok(())
 }

@@ -398,6 +398,8 @@ pub struct BackendBuilder {
     mac: crate::kernels::MacMode,
     max_streams: usize,
     kv_page_tokens: usize,
+    speculative: bool,
+    draft_len: usize,
 }
 
 impl Default for BackendBuilder {
@@ -413,6 +415,8 @@ impl BackendBuilder {
             mac: crate::kernels::MacMode::F32,
             max_streams: 4,
             kv_page_tokens: 16,
+            speculative: false,
+            draft_len: 4,
         }
     }
 
@@ -439,12 +443,51 @@ impl BackendBuilder {
         self
     }
 
+    /// Self-speculative greedy decode in the continuous batcher
+    /// (`forward` backend generation): draft tokens from the per-stream
+    /// prompt-lookup index, verify them in the same fused `step_batch`
+    /// pass, roll rejected pages back. Output is bit-identical to plain
+    /// greedy decode — this only changes how many steps it takes.
+    /// Default off.
+    pub fn speculative(mut self, speculative: bool) -> BackendBuilder {
+        self.speculative = speculative;
+        self
+    }
+
+    /// Draft-length cap per stream when [`BackendBuilder::speculative`]
+    /// is on (the adaptive controller moves below this). Default 4.
+    pub fn draft_len(mut self, draft_len: usize) -> BackendBuilder {
+        self.draft_len = draft_len.max(1);
+        self
+    }
+
     pub fn get_max_streams(&self) -> usize {
         self.max_streams
     }
 
     pub fn get_kv_page_tokens(&self) -> usize {
         self.kv_page_tokens
+    }
+
+    pub fn get_speculative(&self) -> bool {
+        self.speculative
+    }
+
+    pub fn get_draft_len(&self) -> usize {
+        self.draft_len
+    }
+
+    /// The continuous-batching scheduler config these knobs describe —
+    /// drivers hand this straight to
+    /// [`crate::server::EvalServer::spawn_batched`].
+    pub fn batch_config(&self) -> crate::server::BatchConfig {
+        crate::server::BatchConfig {
+            max_streams: self.max_streams,
+            kv_page_tokens: self.kv_page_tokens,
+            speculative: self.speculative,
+            draft_len: self.draft_len,
+            ..crate::server::BatchConfig::default()
+        }
     }
 
     /// Multiply-accumulate mode for the packed backends (`fused`,
@@ -634,6 +677,25 @@ mod tests {
         assert_eq!(yt.len(), y.len());
         let model = fwd.into_forward().unwrap();
         assert!(model.payload_bytes() * 2 < model.f32_bytes());
+    }
+
+    #[test]
+    fn builder_speculative_knobs_flow_into_batch_config() {
+        let b = BackendBuilder::new()
+            .speculative(true)
+            .draft_len(0)
+            .max_streams(3)
+            .kv_page_tokens(8);
+        assert!(b.get_speculative());
+        assert_eq!(b.get_draft_len(), 1, "draft_len clamps to >= 1");
+        let cfg = b.batch_config();
+        assert!(cfg.speculative);
+        assert_eq!(cfg.draft_len, 1);
+        assert_eq!(cfg.max_streams, 3);
+        assert_eq!(cfg.kv_page_tokens, 8);
+        let d = BackendBuilder::new().batch_config();
+        assert!(!d.speculative, "speculative decode is opt-in");
+        assert_eq!(d.draft_len, 4);
     }
 
     /// MAC-mode plumbing: `Auto` on a non-affine payload (msb-wgm) falls

@@ -1,0 +1,213 @@
+//! Prompt-lookup drafting for self-speculative greedy decode.
+//!
+//! [`Drafter`] is the calibration-free draft source behind
+//! `EvalServer::spawn_batched`'s speculative mode: **no draft model**,
+//! just an n-gram suffix index over the stream's own committed tokens
+//! (prompt + everything greedy decode has produced so far). When the
+//! current context suffix recurred earlier in the stream, the tokens
+//! that followed it last time become the draft — on repetitive text
+//! (code, templated prose, self-repeating greedy loops) that guess is
+//! often exactly what the model would emit, and each accepted draft
+//! token saves one full `step_batch` decode step.
+//!
+//! Correctness never depends on draft quality. The scheduler feeds
+//! `[next, draft...]` as one multi-token chunk, reads every position's
+//! argmax from the same fused pass, and keeps only the longest prefix
+//! that matches what greedy decode would have chosen anyway
+//! ([`longest_accept`]); a wrong draft costs wasted positions (rolled
+//! back page-wise by `KvArena::truncate_stream`), never a wrong token.
+//!
+//! The index is commit-monotone: draft tokens enter the context only
+//! *after* verification, so the index never needs rollback.
+
+use std::collections::HashMap;
+
+/// Default n-gram order for the scheduler's per-stream drafters: suffix
+/// matches are tried longest-first from this order down to 1.
+pub const DEFAULT_NGRAM: usize = 3;
+
+/// Per-stream prompt-lookup index: for each n-gram order `n`, a map
+/// from (hashed) n-gram to the start of its most recent occurrence
+/// **that has a continuation**. N-grams ending at the context's last
+/// position are not indexed until the following token arrives, so a
+/// lookup hit always has at least one token to replay — and the current
+/// suffix can never match itself.
+pub struct Drafter {
+    max_ngram: usize,
+    /// `maps[n - 1]`: key of an n-gram → start of its latest
+    /// continuation-bearing occurrence.
+    maps: Vec<HashMap<u64, usize>>,
+    /// Committed tokens (prompt + verified generations), append-only.
+    ctx: Vec<i32>,
+}
+
+impl Drafter {
+    pub fn new(max_ngram: usize) -> Drafter {
+        let m = max_ngram.max(1);
+        Drafter { max_ngram: m, maps: (0..m).map(|_| HashMap::new()).collect(), ctx: Vec::new() }
+    }
+
+    /// FNV-1a over the token values. Collisions only cost accept rate
+    /// (a candidate is re-checked against the real tokens before use),
+    /// never correctness, and the fold is deterministic across runs.
+    fn key(gram: &[i32]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &t in gram {
+            h ^= u64::from(t as u32);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+
+    /// Append committed tokens, indexing incrementally: when position
+    /// `p` arrives, every n-gram *ending at `p - 1`* just gained a
+    /// continuation and is (re-)recorded, overwriting older occurrences
+    /// so lookups replay the most recent repetition.
+    pub fn extend(&mut self, toks: &[i32]) {
+        for &t in toks {
+            let p = self.ctx.len();
+            for n in 1..=self.max_ngram.min(p) {
+                let start = p - n;
+                self.maps[n - 1].insert(Self::key(&self.ctx[start..p]), start);
+            }
+            self.ctx.push(t);
+        }
+    }
+
+    /// Propose up to `k` lookahead tokens: find the most recent earlier
+    /// occurrence of the longest matching context suffix (n-gram order
+    /// high → low) and replay what followed it. Returns an empty draft
+    /// when no suffix recurs — drafting never fabricates tokens, so
+    /// every proposed token already passed the scheduler's vocabulary
+    /// checks when it was first committed.
+    pub fn propose(&self, k: usize) -> Vec<i32> {
+        let len = self.ctx.len();
+        if k == 0 || len == 0 {
+            return Vec::new();
+        }
+        for n in (1..=self.max_ngram.min(len)).rev() {
+            let suffix = &self.ctx[len - n..];
+            let Some(&s) = self.maps[n - 1].get(&Self::key(suffix)) else { continue };
+            // hash keys can collide: replay only a verified match
+            if &self.ctx[s..s + n] != suffix {
+                continue;
+            }
+            let cont = &self.ctx[s + n..];
+            debug_assert!(!cont.is_empty(), "indexed n-grams always have a continuation");
+            return cont[..cont.len().min(k)].to_vec();
+        }
+        Vec::new()
+    }
+
+    /// Committed tokens seen so far.
+    pub fn len(&self) -> usize {
+        self.ctx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ctx.is_empty()
+    }
+}
+
+/// The verification rule, shared by the scheduler and the tests: given
+/// the drafted tokens and the model's greedy prediction for each drafted
+/// position (`preds[i]` = argmax after accepting `draft[..i]`), the
+/// number of draft tokens accepted is the longest matching prefix.
+/// Everything after the first mismatch is discarded — those positions
+/// were computed from a wrong prefix, so their logits are meaningless.
+pub fn longest_accept(draft: &[i32], preds: &[i32]) -> usize {
+    draft.iter().zip(preds).take_while(|(d, p)| d == p).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Rng;
+
+    #[test]
+    fn empty_and_unseen_contexts_propose_nothing() {
+        let mut d = Drafter::new(3);
+        assert!(d.is_empty());
+        assert!(d.propose(4).is_empty());
+        d.extend(&[1, 2, 3]);
+        assert_eq!(d.len(), 3);
+        // no suffix has recurred yet
+        assert!(d.propose(4).is_empty());
+        assert!(d.propose(0).is_empty());
+    }
+
+    #[test]
+    fn repeated_suffix_replays_its_continuation() {
+        let mut d = Drafter::new(3);
+        // ... a b c X ... a b c -> should propose X next
+        d.extend(&[9, 1, 2, 3, 7, 8, 1, 2, 3]);
+        assert_eq!(d.propose(1), vec![7]);
+        assert_eq!(d.propose(3), vec![7, 8, 1]);
+        // k caps the replay even when more context follows the match
+        assert_eq!(d.propose(2), vec![7, 8]);
+    }
+
+    #[test]
+    fn longest_ngram_wins_over_shorter_matches() {
+        let mut d = Drafter::new(3);
+        // 1-gram "5" recurs with continuation 100; the 2-gram "4 5"
+        // recurs with continuation 200 — the longer match must win
+        d.extend(&[5, 100, 4, 5, 200, 4, 5]);
+        assert_eq!(d.propose(1), vec![200]);
+    }
+
+    #[test]
+    fn most_recent_occurrence_wins() {
+        let mut d = Drafter::new(1);
+        d.extend(&[5, 10, 5, 20, 5]);
+        // both "5 -> 10" and "5 -> 20" exist; the later one is replayed
+        assert_eq!(d.propose(1), vec![20]);
+    }
+
+    #[test]
+    fn the_current_suffix_never_matches_itself() {
+        let mut d = Drafter::new(2);
+        d.extend(&[1, 2]);
+        // "1 2" exists only as the current (continuation-less) suffix
+        assert!(d.propose(4).is_empty());
+        d.extend(&[3]);
+        // now "2" has continuation 3... but the suffix is "3" which has
+        // no earlier occurrence
+        assert!(d.propose(4).is_empty());
+        d.extend(&[2]);
+        // suffix "2" recurred at position 1 with continuation 3
+        assert_eq!(d.propose(2), vec![3, 2]);
+    }
+
+    /// Property: every proposal is a verbatim replay of a context
+    /// substring whose preceding n-gram equals the current suffix.
+    #[test]
+    fn fuzz_proposals_replay_real_context_substrings() {
+        let mut rng = Rng::new(0x5bec);
+        for trial in 0..50 {
+            let mut d = Drafter::new(1 + rng.below(4));
+            let len = 5 + rng.below(60);
+            let toks: Vec<i32> = (0..len).map(|_| rng.below(6) as i32).collect();
+            d.extend(&toks);
+            let k = 1 + rng.below(6);
+            let prop = d.propose(k);
+            assert!(prop.len() <= k, "trial {trial}: draft longer than requested");
+            if prop.is_empty() {
+                continue;
+            }
+            // the proposal must occur somewhere in toks as a contiguous run
+            let found = toks.windows(prop.len()).any(|w| w == prop.as_slice());
+            assert!(found, "trial {trial}: proposal {prop:?} not a substring of {toks:?}");
+        }
+    }
+
+    #[test]
+    fn longest_accept_is_the_matching_prefix() {
+        assert_eq!(longest_accept(&[], &[]), 0);
+        assert_eq!(longest_accept(&[1, 2, 3], &[1, 2, 3]), 3);
+        assert_eq!(longest_accept(&[1, 2, 3], &[1, 9, 3]), 1);
+        assert_eq!(longest_accept(&[1, 2], &[9, 2]), 0);
+        // preds shorter than the draft: only the covered prefix counts
+        assert_eq!(longest_accept(&[1, 2, 3], &[1, 2]), 2);
+    }
+}

@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench-smoke bench-perf bench-pack bench-gemv bench-forward bench-serve bench-spec bench-all lint fmt artifacts clean
+.PHONY: build test test-faults bench-smoke bench-perf bench-pack bench-gemv bench-forward bench-serve bench-spec bench-all lint fmt artifacts clean
 
 ## Release build of the library, `msb` CLI, all benches and all examples.
 build:
@@ -14,6 +14,13 @@ build:
 ## need artifacts/ skip when it is absent.
 test:
 	$(CARGO) test -q
+
+## Fault-injection grid: scripted step panics / NaN logits / drafter
+## panics / deadline+overload pressure against the serving layer
+## (server::faults). Asserts quarantine-only blast radius, survivor
+## bit-identity, and zero leaked arena pages.
+test-faults:
+	$(CARGO) test -q fault
 
 ## Fast pass over representative paper-table benches (small instances).
 bench-smoke:

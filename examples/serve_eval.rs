@@ -7,6 +7,7 @@
 //!       [--threads N] [--model small] [--method wgm] [--batch B]
 //!       [--mac f32|int8|auto] [--streams N] [--page-tokens P] [--chunk C]
 //!       [--spec] [--draft-len K] [--max-new N]
+//!       [--max-waiting N] [--inject panic@S:N,nan@S:N,draft-panic@S:N,delay@MS]
 //!       [--vocab V --d D --layers L --heads H --ff F --seq S --rows R]
 //!
 //! One `--backend` flag selects the serving construction; every backend
@@ -36,6 +37,16 @@
 //!   prompt mix plain and self-speculatively (`--draft-len` caps the
 //!   drafter), asserts the outputs bit-identical, and reports the step
 //!   savings and draft accept rate.
+//!
+//! Robustness knobs (forward backend with `--streams`): `--max-waiting`
+//! bounds the admission queue (excess requests are load-shed with
+//! `Overloaded`), and `--inject` scripts deterministic faults —
+//! `panic@STEP:STREAM` (panic inside the fused step), `nan@STEP:STREAM`
+//! (NaN logits for one stream), `draft-panic@STEP:STREAM` (drafter
+//! panic, demotes the stream to plain decode), `delay@MILLIS` (per-step
+//! stall). Faulted streams are quarantined and counted; the survivors
+//! stay gated bit-identical to solo scoring, and the run reports the
+//! faulted/shed/deadline-missed/degraded counters.
 
 use std::time::{Duration, Instant};
 
@@ -57,13 +68,19 @@ fn main() -> Result<()> {
     let payload = args.get("payload").map(String::from);
     let threads = args.usize_or("threads", args.usize_or("decode-threads", 0)?)?;
     let mac = msb_quant::kernels::MacMode::parse(args.str_or("mac", "f32"))?;
+    let faults = match args.get("inject") {
+        Some(spec) => msb_quant::server::faults::FaultPlan::parse(spec).context("--inject")?,
+        None => msb_quant::server::faults::FaultPlan::new(),
+    };
     let builder = BackendBuilder::new()
         .threads(threads)
         .mac(mac)
         .max_streams(args.usize_or("streams", 0)?.max(1))
         .kv_page_tokens(args.usize_or("page-tokens", 16)?)
         .speculative(args.has("spec"))
-        .draft_len(args.usize_or("draft-len", 4)?);
+        .draft_len(args.usize_or("draft-len", 4)?)
+        .max_waiting(args.usize_or("max-waiting", 256)?)
+        .faults(faults);
     match backend.as_str() {
         "runner" => serve_runner(&args, &builder, payload),
         "fused" => {
@@ -179,7 +196,7 @@ fn serve_runner(args: &Args, builder: &BackendBuilder, payload: Option<String>) 
     }
     let wall = t0.elapsed().as_secs_f64();
     drop(client);
-    let stats = server.shutdown();
+    let stats = server.shutdown()?;
     report(&mut all_lat, stats.requests, stats.batches, stats.max_batch_fill, n_clients, wall);
     println!("stream ppl≈{:.2}", mean_nll.exp());
     Ok(())
@@ -269,7 +286,7 @@ fn serve_fused(args: &Args, builder: &BackendBuilder, payload: &str) -> Result<(
     }
     let wall = t0.elapsed().as_secs_f64();
     drop(client);
-    let stats = server.shutdown();
+    let stats = server.shutdown()?;
     let (reqs, batches) =
         (stats.requests.saturating_sub(warmup), stats.batches.saturating_sub(warmup));
     report(&mut all_lat, reqs, batches, stats.max_batch_fill, n_clients, wall);
@@ -363,7 +380,7 @@ fn serve_forward(args: &Args, builder: &BackendBuilder, payload: &str) -> Result
     }
     let wall = t0.elapsed().as_secs_f64();
     drop(client);
-    let stats = server.shutdown();
+    let stats = server.shutdown()?;
     report(&mut all_lat, stats.requests, stats.batches, stats.max_batch_fill, n_clients, wall);
     println!("random-stream ppl≈{:.2} (uniform tokens ⇒ ≈vocab {})", mean_nll.exp(), vocab);
     if fallbacks > 0 {
@@ -432,6 +449,10 @@ fn serve_forward_batched(args: &Args, builder: &BackendBuilder, payload: &str) -
         prefill_chunk: args.usize_or("chunk", 8)?.max(1),
         ..builder.batch_config()
     };
+    let inject = !builder.get_faults().is_empty();
+    if inject {
+        println!("fault injection: {}", builder.get_faults().describe());
+    }
     let (server, client) = EvalServer::spawn_batched(model, bc)?;
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -439,34 +460,59 @@ fn serve_forward_batched(args: &Args, builder: &BackendBuilder, payload: &str) -
         let client = client.clone();
         let prompts = prompts.clone();
         let reference = reference.clone();
-        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+        // with an injection plan, quarantined/shed requests reply typed
+        // errors — count them instead of failing the run
+        handles.push(std::thread::spawn(move || -> Result<(Vec<f64>, usize)> {
             let mut lat = Vec::new();
+            let mut faulted = 0usize;
             let mut i = c;
             while i < prompts.len() {
                 let t = Instant::now();
-                let resp = client.score(prompts[i].clone())?;
-                lat.push(t.elapsed().as_secs_f64() * 1e3);
-                anyhow::ensure!(
-                    resp.logprobs == reference[i],
-                    "request {i}: batched logprobs diverged from solo scoring"
-                );
+                match client.score(prompts[i].clone()) {
+                    Ok(resp) => {
+                        lat.push(t.elapsed().as_secs_f64() * 1e3);
+                        anyhow::ensure!(
+                            resp.logprobs == reference[i],
+                            "request {i}: batched logprobs diverged from solo scoring"
+                        );
+                    }
+                    Err(_) if inject => faulted += 1,
+                    Err(e) => anyhow::bail!("request {i}: {e:#}"),
+                }
                 i += n_clients;
             }
-            Ok(lat)
+            Ok((lat, faulted))
         }));
     }
     let mut all_lat = Vec::new();
+    let mut faulted_requests = 0usize;
     for h in handles {
-        all_lat.extend(h.join().expect("client thread")?);
+        let (lat, faulted) = h.join().expect("client thread")?;
+        all_lat.extend(lat);
+        faulted_requests += faulted;
     }
     let wall = t0.elapsed().as_secs_f64();
     drop(client);
-    let stats = server.shutdown();
-    println!("self-check OK: all {n_requests} batched responses bit-identical to solo scoring");
+    let stats = server.shutdown()?;
+    if faulted_requests == 0 {
+        println!(
+            "self-check OK: all {n_requests} batched responses bit-identical to solo scoring"
+        );
+    } else {
+        println!(
+            "self-check OK: {} of {n_requests} batched responses bit-identical to solo \
+             scoring ({faulted_requests} quarantined by injection)",
+            n_requests - faulted_requests
+        );
+    }
     report(&mut all_lat, stats.requests, stats.batches, stats.max_batch_fill, n_clients, wall);
     println!(
         "scheduler: {} admitted, {} retired, max queue wait {} steps",
         stats.admitted, stats.retired, stats.max_wait_steps
+    );
+    println!(
+        "robustness: {} faulted, {} shed, {} deadline-missed, {} degraded, {} rejected",
+        stats.faulted, stats.shed, stats.deadline_missed, stats.degraded, stats.rejected
     );
     let hist: Vec<String> = stats
         .step_width_hist
@@ -509,7 +555,11 @@ fn serve_forward_generate(
     let gen_prompts: Vec<Vec<i32>> =
         prompts.iter().map(|p| p[..p.len().min(keep)].to_vec()).collect();
 
-    let run = |speculative: bool| -> Result<(Vec<Vec<i32>>, ServerStats, f64)> {
+    let inject = !builder.get_faults().is_empty();
+    // per-generation outcome: served tokens, or the typed error a
+    // quarantined/faulted stream replied with
+    type GenOutcomes = Vec<Result<Vec<i32>>>;
+    let run = |speculative: bool| -> Result<(GenOutcomes, ServerStats, f64)> {
         let map = msbt::read_file(payload)?;
         let model = builder.forward(fs.clone(), &map)?.into_forward()?;
         let bc = BatchConfig {
@@ -527,22 +577,46 @@ fn serve_forward_generate(
                 std::thread::spawn(move || (i, client.generate(p, max_new)))
             })
             .collect();
-        let mut outs = vec![Vec::new(); gen_prompts.len()];
+        let mut outs: Vec<Option<Result<Vec<i32>>>> =
+            (0..gen_prompts.len()).map(|_| None).collect();
         for h in handles {
             let (i, resp) = h.join().expect("generate client thread");
-            outs[i] = resp?.tokens;
+            outs[i] = Some(resp.map(|g| g.tokens));
         }
         let dt = t.elapsed().as_secs_f64();
         drop(client);
-        Ok((outs, server.shutdown(), dt))
+        let stats = server.shutdown()?;
+        let outs = outs.into_iter().map(|o| o.expect("all slots filled above")).collect();
+        Ok((outs, stats, dt))
     };
     let (plain, pstats, t_plain) = run(false)?;
     let (spec, sstats, t_spec) = run(true)?;
-    anyhow::ensure!(spec == plain, "speculative generation diverged from plain greedy decode");
-    let new_tokens: usize = plain.iter().map(|t| t.len()).sum();
+    // injected faults land at different rounds under the two schedules,
+    // so gate only generations that survived both runs
+    let mut new_tokens = 0usize;
+    let mut gen_faulted = 0usize;
+    for (i, (p, s)) in plain.iter().zip(&spec).enumerate() {
+        match (p, s) {
+            (Ok(p), Ok(s)) => {
+                anyhow::ensure!(
+                    s == p,
+                    "generation {i}: speculative decode diverged from plain greedy"
+                );
+                new_tokens += p.len();
+            }
+            _ if inject => gen_faulted += 1,
+            (Err(e), _) | (_, Err(e)) => anyhow::bail!("generation {i} failed: {e:#}"),
+        }
+    }
+    let quarantined = if gen_faulted > 0 {
+        format!(" ({gen_faulted} quarantined by injection)")
+    } else {
+        String::new()
+    };
     println!(
-        "spec decode: bit-identity spec == plain on all {} generation(s), {new_tokens} new tokens",
-        plain.len()
+        "spec decode: bit-identity spec == plain on {} generation(s){quarantined}, \
+         {new_tokens} new tokens",
+        plain.len() - gen_faulted
     );
     println!(
         "  plain {t_plain:.3}s ({:.0} tok/s, {} steps) | spec {t_spec:.3}s ({:.0} tok/s, \

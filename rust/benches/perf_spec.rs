@@ -138,7 +138,7 @@ fn run_generate(
     let (srv, cli) = EvalServer::spawn_batched(model, cfg).expect("spawn batched server");
     let out = cli.generate(prompt.to_vec(), max_new).expect("generate").tokens;
     drop(cli);
-    (out, srv.shutdown())
+    (out, srv.shutdown().expect("server shutdown"))
 }
 
 fn main() {
@@ -252,7 +252,7 @@ fn main() {
             assert_eq!(out, gen, "timed arm diverged from solo greedy");
         });
         drop(cli);
-        srv.shutdown();
+        srv.shutdown().expect("server shutdown");
         t
     };
     let t_plain = time_arm(&base_cfg);

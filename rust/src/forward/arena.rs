@@ -193,13 +193,19 @@ impl KvArena {
     }
 
     /// Page-conservation invariant: every page is either held by exactly
-    /// one live stream's table or on the free list. Checked (debug builds
-    /// only) after every operation that moves pages or streams —
-    /// alloc/free/reserve/truncate.
+    /// one live stream's table or on the free list. The serving layer
+    /// asserts this after quarantining a faulted stream; release builds
+    /// can call it too (it is O(streams), not O(pages)).
+    pub fn balanced(&self) -> bool {
+        self.streams.iter().flatten().map(|e| e.pages.len()).sum::<usize>() + self.free.len()
+            == self.total_pages
+    }
+
+    /// Debug-build check of [`KvArena::balanced`] after every operation
+    /// that moves pages or streams — alloc/free/reserve/truncate.
     fn debug_check_balance(&self) {
-        debug_assert_eq!(
-            self.streams.iter().flatten().map(|e| e.pages.len()).sum::<usize>() + self.free.len(),
-            self.total_pages,
+        debug_assert!(
+            self.balanced(),
             "KV arena page balance violated: pages_in_tables + free != total"
         );
     }

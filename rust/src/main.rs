@@ -106,6 +106,12 @@ commands:
              plain vs self-speculative greedy decode — prompt-lookup
              drafts verified in the same fused step, bit-identical
              output, fewer steps; reports accept rate)
+             [--inject panic@S:N,nan@S:N,draft-panic@S:N,delay@MS]
+             (deterministic fault injection: scripted step panics / NaN
+             logits / drafter panics at round S against stream ordinal
+             N, per-step stalls; faulted streams are quarantined, the
+             survivors stay gated bit-identical, robustness counters
+             print: faulted/shed/deadline-missed/degraded)
   kernel     execute the native Pallas-MSB HLO for the small model
 ";
 
@@ -614,6 +620,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     use msb_quant::eval::LogProbs;
     use msb_quant::forward::{synth, ForwardSpec};
     use msb_quant::runtime::BackendBuilder;
+    use msb_quant::server::faults::FaultPlan;
     use msb_quant::server::{BatchConfig, EvalServer, Response, ServerStats};
 
     let fs = ForwardSpec::new(
@@ -639,6 +646,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let requests = args.usize_or("requests", streams * 2)?.max(1);
     let page_tokens = args.usize_or("page-tokens", 16)?.max(1);
     let chunk = args.usize_or("chunk", 8)?.max(1);
+    let faults = match args.get("inject") {
+        Some(spec) => FaultPlan::parse(spec).context("--inject")?,
+        None => FaultPlan::new(),
+    };
 
     let spec = synth::model_spec(&fs, "serve-bench");
     let weights = synth::synth_weights(&fs, seed);
@@ -650,7 +661,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         .threads(threads)
         .mac(mac)
         .max_streams(streams)
-        .kv_page_tokens(page_tokens);
+        .kv_page_tokens(page_tokens)
+        .faults(faults.clone());
     let model = builder.forward(fs.clone(), &payload)?.into_forward()?;
     let fallbacks = model.mac_fallbacks();
 
@@ -695,22 +707,28 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             std::thread::spawn(move || (i, c.score(t)))
         })
         .collect();
-    let mut results: Vec<Option<Response>> = vec![None; requests];
+    let mut results: Vec<Option<Result<Response>>> = (0..requests).map(|_| None).collect();
     for h in handles {
         let (i, r) = h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))?;
-        results[i] = Some(r?);
+        results[i] = Some(r);
     }
     let t_batched = t1.elapsed().as_secs_f64();
     drop(client);
-    let stats = server.shutdown();
+    let stats = server.shutdown()?;
 
-    // acceptance gate: batched logprobs bit-identical to solo, per stream
+    // acceptance gate: batched logprobs bit-identical to solo, per stream.
+    // Streams quarantined by an injected fault are counted, not gated —
+    // any error without an injection plan is still fatal.
+    let mut faulted_streams = 0usize;
     for (i, r) in results.iter().enumerate() {
-        let r = r.as_ref().expect("all slots filled above");
-        anyhow::ensure!(
-            r.logprobs == reference[i],
-            "stream {i}: batched logprobs diverged from solo scoring"
-        );
+        match r.as_ref().expect("all slots filled above") {
+            Ok(r) => anyhow::ensure!(
+                r.logprobs == reference[i],
+                "stream {i}: batched logprobs diverged from solo scoring"
+            ),
+            Err(_) if !faults.is_empty() => faulted_streams += 1,
+            Err(e) => anyhow::bail!("stream {i} failed: {e:#}"),
+        }
     }
 
     println!(
@@ -728,7 +746,18 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         msb_quant::kernels::Kernel::detect().name(),
         mac.name()
     );
-    println!("  bit-identity: batched == solo on all {requests} request(s)");
+    if !faults.is_empty() {
+        println!("  fault injection: {}", faults.describe());
+    }
+    if faulted_streams == 0 {
+        println!("  bit-identity: batched == solo on all {requests} request(s)");
+    } else {
+        println!(
+            "  bit-identity: batched == solo on {} of {requests} request(s) \
+             ({faulted_streams} quarantined by injection)",
+            requests - faulted_streams
+        );
+    }
     println!(
         "  solo sequential {:.3}s ({:.0} tok/s) | batched {:.3}s ({:.0} tok/s) | {:.2}x",
         t_solo,
@@ -754,6 +783,11 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         "  kv arena: peak {} of {} pages ({} bytes at peak, {}-token pages)",
         stats.peak_pages, stats.total_pages, stats.peak_page_bytes, page_tokens
     );
+    println!(
+        "  robustness: {} faulted, {} shed, {} deadline-missed, {} degraded, \
+         {} rejected",
+        stats.faulted, stats.shed, stats.deadline_missed, stats.degraded, stats.rejected
+    );
     if fallbacks > 0 {
         println!(
             "  mac fallbacks: {fallbacks} projection(s) fell back to the f32 MAC \
@@ -773,7 +807,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 p[..keep].to_vec()
             })
             .collect();
-        let run = |speculative: bool| -> Result<(Vec<Vec<i32>>, ServerStats, f64)> {
+        // per-generation outcome: served tokens, or the typed error a
+        // quarantined/faulted stream replied with
+        type GenOutcomes = Vec<Result<Vec<i32>>>;
+        let run = |speculative: bool| -> Result<(GenOutcomes, ServerStats, f64)> {
             let model = builder.forward(fs.clone(), &payload)?.into_forward()?;
             let bc = BatchConfig {
                 prefill_chunk: chunk,
@@ -792,27 +829,47 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                     std::thread::spawn(move || (i, c.generate(p, max_new)))
                 })
                 .collect();
-            let mut outs: Vec<Vec<i32>> = vec![Vec::new(); gen_prompts.len()];
+            let mut outs: Vec<Option<Result<Vec<i32>>>> =
+                (0..gen_prompts.len()).map(|_| None).collect();
             for h in handles {
                 let (i, r) =
                     h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))?;
-                outs[i] = r?.tokens;
+                outs[i] = Some(r.map(|g| g.tokens));
             }
             let dt = t.elapsed().as_secs_f64();
             drop(client);
-            Ok((outs, server.shutdown(), dt))
+            let stats = server.shutdown()?;
+            let outs = outs.into_iter().map(|o| o.expect("all slots filled above")).collect();
+            Ok((outs, stats, dt))
         };
         let (plain, pstats, t_plain) = run(false)?;
         let (spec, sstats, t_spec) = run(true)?;
-        anyhow::ensure!(
-            spec == plain,
-            "speculative generation diverged from plain greedy decode"
-        );
-        let new_tokens: usize = plain.iter().map(|t| t.len()).sum();
+        // injected faults land at different rounds under the two
+        // schedules, so gate only generations that survived both runs
+        let mut new_tokens = 0usize;
+        let mut gen_faulted = 0usize;
+        for (i, (p, s)) in plain.iter().zip(&spec).enumerate() {
+            match (p, s) {
+                (Ok(p), Ok(s)) => {
+                    anyhow::ensure!(
+                        s == p,
+                        "generation {i}: speculative decode diverged from plain greedy"
+                    );
+                    new_tokens += p.len();
+                }
+                _ if !faults.is_empty() => gen_faulted += 1,
+                (Err(e), _) | (_, Err(e)) => anyhow::bail!("generation {i} failed: {e:#}"),
+            }
+        }
+        let quarantined = if gen_faulted > 0 {
+            format!(" ({gen_faulted} quarantined by injection)")
+        } else {
+            String::new()
+        };
         println!(
-            "  spec decode: bit-identity spec == plain on all {} generation(s), \
+            "  spec decode: bit-identity spec == plain on {} generation(s){quarantined}, \
              {new_tokens} new tokens",
-            plain.len()
+            plain.len() - gen_faulted
         );
         println!(
             "    plain {:.3}s ({:.0} tok/s, {} steps) | spec {:.3}s ({:.0} tok/s, \

@@ -45,8 +45,14 @@ struct PoolState {
 }
 
 impl PoolState {
+    // Lock-poison recovery (not propagation): a panicking job poisons
+    // whatever stripe/sleep lock its worker holds, but every protected
+    // value is a plain `VecDeque` (or `()`), consistent at each lock
+    // release — so the poison flag carries no torn state and taking the
+    // guard back is sound. Recovering keeps one bad job from wedging
+    // every later submit/pop on a "poisoned" panic.
     fn lock_sleep(&self) -> MutexGuard<'_, ()> {
-        self.sleep.lock().expect("pool sleep lock poisoned")
+        self.sleep.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Pop one job, trying stripe `home` first then stealing round-robin.
@@ -64,19 +70,20 @@ impl PoolState {
     /// stripe locks are never held simultaneously.
     fn pop(&self, home: usize) -> Option<Job> {
         let s = self.stripes.len();
-        if let Some(job) = self.stripes[home].lock().expect("pool stripe poisoned").pop_front() {
+        let lock_stripe = |i: usize| self.stripes[i].lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(job) = lock_stripe(home).pop_front() {
             return Some(job);
         }
         for k in 1..s {
             let victim = (home + k) % s;
             let mut run: VecDeque<Job> = {
-                let mut q = self.stripes[victim].lock().expect("pool stripe poisoned");
+                let mut q = lock_stripe(victim);
                 let take = q.len().div_ceil(2);
                 q.drain(..take).collect()
             };
             if let Some(job) = run.pop_front() {
                 if !run.is_empty() {
-                    let mut mine = self.stripes[home].lock().expect("pool stripe poisoned");
+                    let mut mine = lock_stripe(home);
                     mine.extend(run);
                 }
                 return Some(job);
@@ -87,7 +94,9 @@ impl PoolState {
 
     /// Push `jobs` onto stripe `idx` under one lock acquisition.
     fn push_batch(&self, idx: usize, jobs: impl IntoIterator<Item = Job>) {
-        let mut q = self.stripes[idx % self.stripes.len()].lock().expect("pool stripe poisoned");
+        let mut q = self.stripes[idx % self.stripes.len()]
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
         q.extend(jobs);
     }
 
@@ -99,7 +108,7 @@ impl PoolState {
             let mut guard = self.lock_sleep();
             self.waiters.fetch_add(1, Ordering::SeqCst);
             if self.pending.load(Ordering::SeqCst) > want && !self.closed.load(Ordering::SeqCst) {
-                guard = self.space_cv.wait(guard).expect("pool space wait");
+                guard = self.space_cv.wait(guard).unwrap_or_else(|e| e.into_inner());
             }
             self.waiters.fetch_sub(1, Ordering::SeqCst);
             drop(guard);
@@ -280,7 +289,7 @@ fn worker_loop(state: &PoolState, home: usize) {
                         state.sleepers.fetch_sub(1, Ordering::SeqCst);
                         return;
                     }
-                    let guard = state.work_cv.wait(guard).expect("pool work wait");
+                    let guard = state.work_cv.wait(guard).unwrap_or_else(|e| e.into_inner());
                     drop(guard);
                 } else {
                     // pending is counted before jobs are published, so a
@@ -475,6 +484,30 @@ mod tests {
         pool.shutdown();
         assert_eq!(counter.load(Ordering::Relaxed), 4 * 525);
         assert_eq!(pool.stats(), (4 * 525, 4 * 525));
+    }
+
+    /// A panicking job poisons whichever stripe lock its worker touches
+    /// next and kills that worker thread, but the pool must not wedge:
+    /// later `submit_many` batches drain completely on the surviving
+    /// workers (poison recovery instead of `expect` aborts), and the
+    /// accounting shows exactly one submitted-but-never-completed job.
+    #[test]
+    fn faulty_job_does_not_wedge_subsequent_batches() {
+        let mut pool = ThreadPool::new(2, 64);
+        let counter = Arc::new(AtomicU64::new(0));
+        pool.submit(|| panic!("injected job fault"));
+        for _ in 0..3 {
+            pool.submit_many((0..50u64).map(|_| {
+                let c = Arc::clone(&counter);
+                move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::Relaxed), 150);
+        // the injected fault is the one job submitted but never completed
+        assert_eq!(pool.stats(), (151, 150));
     }
 
     #[test]

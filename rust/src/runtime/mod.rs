@@ -400,6 +400,8 @@ pub struct BackendBuilder {
     kv_page_tokens: usize,
     speculative: bool,
     draft_len: usize,
+    max_waiting: usize,
+    faults: crate::server::faults::FaultPlan,
 }
 
 impl Default for BackendBuilder {
@@ -417,6 +419,8 @@ impl BackendBuilder {
             kv_page_tokens: 16,
             speculative: false,
             draft_len: 4,
+            max_waiting: 256,
+            faults: crate::server::faults::FaultPlan::default(),
         }
     }
 
@@ -477,6 +481,32 @@ impl BackendBuilder {
         self.draft_len
     }
 
+    /// Bound on the continuous batcher's waiting queue: admission beyond
+    /// this replies [`crate::server::ServerError::Overloaded`]
+    /// (load-shedding) instead of queueing without limit. Default 256.
+    pub fn max_waiting(mut self, max_waiting: usize) -> BackendBuilder {
+        self.max_waiting = max_waiting.max(1);
+        self
+    }
+
+    /// Deterministic fault-injection script for the serving layer
+    /// ([`crate::server::faults::FaultPlan`]) — scripted step panics, NaN
+    /// logits, drafter panics, and per-step stalls at exact scheduler
+    /// rounds. Default empty (no faults, no overhead beyond one branch
+    /// per seam).
+    pub fn faults(mut self, faults: crate::server::faults::FaultPlan) -> BackendBuilder {
+        self.faults = faults;
+        self
+    }
+
+    pub fn get_max_waiting(&self) -> usize {
+        self.max_waiting
+    }
+
+    pub fn get_faults(&self) -> &crate::server::faults::FaultPlan {
+        &self.faults
+    }
+
     /// The continuous-batching scheduler config these knobs describe —
     /// drivers hand this straight to
     /// [`crate::server::EvalServer::spawn_batched`].
@@ -486,6 +516,8 @@ impl BackendBuilder {
             kv_page_tokens: self.kv_page_tokens,
             speculative: self.speculative,
             draft_len: self.draft_len,
+            max_waiting: self.max_waiting,
+            faults: self.faults.clone(),
             ..crate::server::BatchConfig::default()
         }
     }
@@ -681,21 +713,30 @@ mod tests {
 
     #[test]
     fn builder_speculative_knobs_flow_into_batch_config() {
+        let plan = crate::server::faults::FaultPlan::new().panic_at(3, 1);
         let b = BackendBuilder::new()
             .speculative(true)
             .draft_len(0)
             .max_streams(3)
-            .kv_page_tokens(8);
+            .kv_page_tokens(8)
+            .max_waiting(0)
+            .faults(plan.clone());
         assert!(b.get_speculative());
         assert_eq!(b.get_draft_len(), 1, "draft_len clamps to >= 1");
+        assert_eq!(b.get_max_waiting(), 1, "max_waiting clamps to >= 1");
+        assert_eq!(b.get_faults(), &plan);
         let cfg = b.batch_config();
         assert!(cfg.speculative);
         assert_eq!(cfg.draft_len, 1);
         assert_eq!(cfg.max_streams, 3);
         assert_eq!(cfg.kv_page_tokens, 8);
+        assert_eq!(cfg.max_waiting, 1);
+        assert_eq!(cfg.faults, plan);
         let d = BackendBuilder::new().batch_config();
         assert!(!d.speculative, "speculative decode is opt-in");
         assert_eq!(d.draft_len, 4);
+        assert_eq!(d.max_waiting, 256);
+        assert!(d.faults.is_empty(), "fault injection is opt-in");
     }
 
     /// MAC-mode plumbing: `Auto` on a non-affine payload (msb-wgm) falls

@@ -1,0 +1,268 @@
+//! Deterministic fault injection for the serving layer.
+//!
+//! A [`FaultPlan`] scripts faults at exact scheduler rounds so the
+//! fault-tolerance machinery — per-stream panic isolation, stream
+//! quarantine, deadline enforcement — is exercised by *hard-asserted
+//! tests* instead of hoped-for behavior. The plan is carried by
+//! [`crate::server::BatchConfig`] (and threaded through
+//! [`crate::runtime::BackendBuilder`]), consulted by the continuous
+//! batcher at fixed seams, and is exposed on the CLI as
+//! `msb serve-bench --inject` / `serve_eval --inject`.
+//!
+//! Streams are addressed by **admission ordinal**: the 0-based index a
+//! request gets when it is admitted into a stream slot (FIFO admission
+//! makes this the request send order when one thread submits). Rounds
+//! are the scheduler's coalesced-step counter, starting at 0.
+//!
+//! Everything here is deterministic: a fault either fires at its exact
+//! `(round, stream)` coordinate or — when the target is not active at
+//! that round — not at all. No randomness, no time dependence (the only
+//! time-shaped knob, [`FaultPlan::with_step_delay`], *stretches* rounds
+//! uniformly to create deadline pressure; it never reorders anything).
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// One scripted fault at a `(round, stream-ordinal)` coordinate.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Fault {
+    /// Panic inside the fused step (caught by the scheduler's
+    /// `catch_unwind`, quarantining only this stream).
+    Panic { step: u64, stream: u64 },
+    /// Overwrite the stream's step logits with NaN — simulating a
+    /// NaN-poisoned projection surfacing in the output; the scheduler's
+    /// non-finite detector must quarantine the stream.
+    Nan { step: u64, stream: u64 },
+    /// Panic inside the drafter's propose call — the scheduler must
+    /// demote the stream to plain greedy decode, never kill it.
+    DraftPanic { step: u64, stream: u64 },
+}
+
+/// A deterministic script of serving-layer faults. Empty by default
+/// (the scheduler's fast path never pays for an empty plan beyond a
+/// branch per seam).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+    /// Artificial stall before every coalesced step — deadline
+    /// pressure: with a stall of `d`, any request whose deadline is
+    /// closer than `steps_left * d` will expire mid-flight.
+    step_delay: Duration,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// No faults scripted and no step delay.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty() && self.step_delay.is_zero()
+    }
+
+    /// Script a panic inside the fused step at round `step` while the
+    /// stream with admission ordinal `stream` is being stepped.
+    pub fn panic_at(mut self, step: u64, stream: u64) -> FaultPlan {
+        self.faults.push(Fault::Panic { step, stream });
+        self
+    }
+
+    /// Script NaN logits for stream `stream` at round `step`.
+    pub fn nan_at(mut self, step: u64, stream: u64) -> FaultPlan {
+        self.faults.push(Fault::Nan { step, stream });
+        self
+    }
+
+    /// Script a drafter panic for stream `stream` at round `step`.
+    pub fn draft_panic_at(mut self, step: u64, stream: u64) -> FaultPlan {
+        self.faults.push(Fault::DraftPanic { step, stream });
+        self
+    }
+
+    /// Stall every scheduler round by `d` (deadline pressure).
+    pub fn with_step_delay(mut self, d: Duration) -> FaultPlan {
+        self.step_delay = d;
+        self
+    }
+
+    /// Parse a comma-separated injection spec, the `--inject` format:
+    ///
+    /// * `panic@STEP:STREAM` — scripted panic in the fused step
+    /// * `nan@STEP:STREAM` — NaN logits for one stream
+    /// * `draft-panic@STEP:STREAM` — drafter panic (demotes the stream)
+    /// * `delay@MILLIS` — per-step stall in milliseconds
+    ///
+    /// Example: `--inject panic@3:1,nan@5:0,delay@10`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((kind, coord)) = part.split_once('@') else {
+                bail!("fault '{part}': expected KIND@ARGS (e.g. panic@3:1, delay@10)");
+            };
+            if kind == "delay" {
+                let ms: u64 = coord
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault '{part}': bad millisecond count"))?;
+                plan.step_delay = Duration::from_millis(ms);
+                continue;
+            }
+            let Some((step, stream)) = coord.split_once(':') else {
+                bail!("fault '{part}': expected {kind}@STEP:STREAM");
+            };
+            let step: u64 = step
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault '{part}': bad step number '{step}'"))?;
+            let stream: u64 = stream
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault '{part}': bad stream ordinal '{stream}'"))?;
+            plan.faults.push(match kind {
+                "panic" => Fault::Panic { step, stream },
+                "nan" => Fault::Nan { step, stream },
+                "draft-panic" => Fault::DraftPanic { step, stream },
+                other => bail!("unknown fault kind '{other}' (panic|nan|draft-panic|delay)"),
+            });
+        }
+        Ok(plan)
+    }
+
+    /// Human-readable echo of the plan for CLI banners.
+    pub fn describe(&self) -> String {
+        let mut parts: Vec<String> = self
+            .faults
+            .iter()
+            .map(|f| match f {
+                Fault::Panic { step, stream } => format!("panic@{step}:{stream}"),
+                Fault::Nan { step, stream } => format!("nan@{step}:{stream}"),
+                Fault::DraftPanic { step, stream } => format!("draft-panic@{step}:{stream}"),
+            })
+            .collect();
+        if !self.step_delay.is_zero() {
+            parts.push(format!("delay@{}", self.step_delay.as_millis()));
+        }
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join(",")
+        }
+    }
+
+    // -- scheduler seams -------------------------------------------------
+
+    /// Panic if a [`Fault::Panic`] is scripted for round `step` against
+    /// any of `ordinals`. Called *inside* the scheduler's `catch_unwind`
+    /// region, immediately before the fused step, so the injected panic
+    /// takes exactly the path a real kernel/arena panic would. The same
+    /// coordinate match makes the faulting stream re-panic in its solo
+    /// isolation replay (so the scheduler can attribute the fault) while
+    /// siblings replay clean.
+    pub fn maybe_panic(&self, step: u64, ordinals: &[u64]) {
+        for f in &self.faults {
+            if let Fault::Panic { step: s, stream } = f {
+                if *s == step && ordinals.contains(stream) {
+                    panic!("injected fault: scripted panic at step {s} for stream {stream}");
+                }
+            }
+        }
+    }
+
+    /// Panic if a [`Fault::DraftPanic`] is scripted for `(step, ordinal)`.
+    /// Called inside the `catch_unwind` around the drafter's propose.
+    pub fn maybe_panic_draft(&self, step: u64, ordinal: u64) {
+        for f in &self.faults {
+            if let Fault::DraftPanic { step: s, stream } = f {
+                if *s == step && *stream == ordinal {
+                    panic!(
+                        "injected fault: scripted drafter panic at step {s} for stream {stream}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Overwrite `row` with NaN if a [`Fault::Nan`] is scripted for
+    /// `(step, ordinal)`. Returns whether poison was applied.
+    pub fn poison_logits(&self, step: u64, ordinal: u64, row: &mut [f32]) -> bool {
+        for f in &self.faults {
+            if let Fault::Nan { step: s, stream } = f {
+                if *s == step && *stream == ordinal {
+                    row.fill(f32::NAN);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Stall one scheduler round (no-op without a scripted delay).
+    pub fn stall(&self) {
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let p = FaultPlan::new();
+        assert!(p.is_empty());
+        p.maybe_panic(0, &[0, 1, 2]);
+        p.maybe_panic_draft(5, 1);
+        let mut row = vec![1.0f32; 4];
+        assert!(!p.poison_logits(0, 0, &mut row));
+        assert!(row.iter().all(|v| v.is_finite()));
+        assert_eq!(p.describe(), "none");
+    }
+
+    #[test]
+    fn parse_roundtrips_through_describe() {
+        let p = FaultPlan::parse("panic@3:1, nan@5:0,draft-panic@2:2,delay@10").unwrap();
+        assert!(!p.is_empty());
+        assert_eq!(p.describe(), "panic@3:1,nan@5:0,draft-panic@2:2,delay@10");
+        assert_eq!(FaultPlan::parse(&p.describe()).unwrap(), p);
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::new());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in ["panic", "panic@x:1", "panic@1:y", "panic@1", "zap@1:2", "delay@ms"] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' must not parse");
+        }
+    }
+
+    #[test]
+    fn panic_fires_only_at_its_exact_coordinate() {
+        let p = FaultPlan::new().panic_at(3, 1);
+        p.maybe_panic(2, &[0, 1]); // wrong round
+        p.maybe_panic(3, &[0, 2]); // right round, target absent
+        let r = std::panic::catch_unwind(|| p.maybe_panic(3, &[0, 1]));
+        let payload = r.expect_err("must panic at its coordinate");
+        let msg = payload.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("injected fault"), "{msg}");
+        assert!(msg.contains("stream 1"), "{msg}");
+    }
+
+    #[test]
+    fn draft_panic_targets_one_stream() {
+        let p = FaultPlan::new().draft_panic_at(1, 0);
+        p.maybe_panic_draft(1, 1);
+        p.maybe_panic_draft(0, 0);
+        assert!(std::panic::catch_unwind(|| p.maybe_panic_draft(1, 0)).is_err());
+    }
+
+    #[test]
+    fn nan_poison_hits_the_addressed_row_only() {
+        let p = FaultPlan::new().nan_at(2, 1);
+        let mut a = vec![1.0f32; 3];
+        let mut b = vec![1.0f32; 3];
+        assert!(!p.poison_logits(2, 0, &mut a));
+        assert!(p.poison_logits(2, 1, &mut b));
+        assert!(a.iter().all(|v| v.is_finite()));
+        assert!(b.iter().all(|v| v.is_nan()));
+    }
+}

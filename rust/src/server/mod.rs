@@ -28,25 +28,103 @@
 //!   `PackedLinear::gemm_pooled` call, so each block tile is decoded once
 //!   per batch instead of once per request; exercised by
 //!   `serve_eval fused`.
+//!
+//! # Fault tolerance
+//!
+//! Every reply is a `Result<_, `[`ServerError`]`>`: invalid requests,
+//! overload shedding, deadline expiry, quarantined streams and shutdown
+//! all surface as typed errors instead of silently-closed channels. The
+//! continuous batcher wraps the fused step and the drafter in
+//! `catch_unwind`: a panic (or non-finite logits) quarantines *only* the
+//! faulting stream — survivors are rolled back page-wise and replayed
+//! solo, so their outputs stay bit-identical to the no-fault run — and a
+//! drafter fault demotes its stream to plain greedy decode. Admission is
+//! bounded ([`BatchConfig::max_waiting`]) and deadline-checked both at
+//! admission and between steps. All of it is driven deterministically by
+//! the [`faults`] injection harness (`--inject` on `msb serve-bench` /
+//! `serve_eval`).
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod draft;
+pub mod faults;
 
+use std::any::Any;
 use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use self::faults::FaultPlan;
 use crate::forward::{argmax_row, argmax_rows, ForwardModel, KvArena, StreamSlot};
 use crate::pool::ThreadPool;
 use crate::runtime::{FusedModel, LogitsFn};
+
+/// Typed serving errors: every terminal reply a client can receive that
+/// is not a successful response. Clients surface these through `anyhow`
+/// (`err.downcast_ref::<ServerError>()` recovers the variant).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServerError {
+    /// The request can never be served honestly (overlong sequence,
+    /// out-of-vocab token, empty prompt, zero budget): rejected up front
+    /// at admission, before it touches a stream slot.
+    InvalidRequest(String),
+    /// Load shedding: the bounded waiting queue
+    /// ([`BatchConfig::max_waiting`]) was full when the request arrived.
+    Overloaded { waiting: usize, limit: usize },
+    /// The request's deadline passed — in the waiting queue, at
+    /// admission, or between coalesced steps mid-flight (the stream's
+    /// pages are freed immediately).
+    DeadlineExceeded,
+    /// The stream hit an internal fault (a panic inside the fused step,
+    /// or non-finite logits) and was quarantined; the payload describes
+    /// the fault. Sibling streams are unaffected.
+    StreamFaulted(String),
+    /// The server is draining: in-flight streams finish, everything else
+    /// is refused.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServerError::InvalidRequest(m) => write!(f, "invalid request: {m}"),
+            ServerError::Overloaded { waiting, limit } => {
+                write!(f, "overloaded: {waiting} requests waiting (limit {limit})")
+            }
+            ServerError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            ServerError::StreamFaulted(m) => write!(f, "stream faulted: {m}"),
+            ServerError::ShuttingDown => write!(f, "server shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServerError {}
+
+/// Best-effort text of a panic payload (panics carry `&str` or `String`
+/// in practice; anything else gets a placeholder).
+fn panic_text(p: &(dyn Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
 
 /// One scoring request: a (≤ seq)-token sequence; the response is the
 /// per-position next-token logprob of the sequence under the model.
 pub struct Request {
     pub tokens: Vec<i32>,
-    pub resp: Sender<Response>,
+    /// Refuse the request (with [`ServerError::DeadlineExceeded`]) once
+    /// this instant passes — checked in the queue, at admission, and
+    /// between coalesced steps.
+    pub deadline: Option<Instant>,
+    pub resp: Sender<Result<Response, ServerError>>,
 }
 
 /// One greedy-generation request: a non-empty (≤ seq) prompt plus a
@@ -56,7 +134,9 @@ pub struct Request {
 pub struct GenRequest {
     pub prompt: Vec<i32>,
     pub max_new: usize,
-    pub resp: Sender<GenResponse>,
+    /// Same contract as [`Request::deadline`].
+    pub deadline: Option<Instant>,
+    pub resp: Sender<Result<GenResponse, ServerError>>,
 }
 
 /// Channel protocol: scoring or generation work, or an explicit stop (so
@@ -107,6 +187,18 @@ pub struct ServerStats {
     /// Pages still held by live streams at shutdown — 0 unless the loop
     /// exited with streams in flight (page-balance telemetry).
     pub leaked_pages: usize,
+    // -- fault tolerance --
+    /// Requests refused up front with [`ServerError::InvalidRequest`].
+    pub rejected: u64,
+    /// Requests shed at the channel edge ([`ServerError::Overloaded`]).
+    pub shed: u64,
+    /// Requests whose deadline expired (queued or mid-flight).
+    pub deadline_missed: u64,
+    /// Streams quarantined with [`ServerError::StreamFaulted`].
+    pub faulted: u64,
+    /// Generation streams demoted to plain greedy decode after a drafter
+    /// fault (the stream itself survives and completes).
+    pub degraded: u64,
     // -- speculative decode only --
     /// Draft tokens fed for verification.
     pub drafted: u64,
@@ -121,6 +213,28 @@ impl ServerStats {
     }
 }
 
+/// A submitted request that has not been waited on yet — the
+/// non-blocking half of the client API. One thread can submit many
+/// requests in send order (FIFO channel → FIFO admission, so admission
+/// ordinals are deterministic — the fault-injection tests address
+/// streams that way) and collect the replies later.
+pub struct Pending<T> {
+    rx: Receiver<Result<T, ServerError>>,
+}
+
+impl<T> Pending<T> {
+    /// Block until the server replies. Typed failures
+    /// ([`ServerError`]) come back as downcastable `anyhow` errors; a
+    /// dropped reply (server thread died) is its own error.
+    pub fn wait(self) -> Result<T> {
+        match self.rx.recv() {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(e)) => Err(anyhow::Error::from(e)),
+            Err(_) => Err(anyhow::anyhow!("server dropped the request")),
+        }
+    }
+}
+
 /// Client handle: cloneable, thread-safe.
 #[derive(Clone)]
 pub struct EvalClient {
@@ -128,13 +242,43 @@ pub struct EvalClient {
 }
 
 impl EvalClient {
-    /// Blocking scoring call.
-    pub fn score(&self, tokens: Vec<i32>) -> Result<Response> {
+    /// Non-blocking scoring submission; pair with [`Pending::wait`].
+    pub fn submit_score(
+        &self,
+        tokens: Vec<i32>,
+        deadline: Option<Instant>,
+    ) -> Result<Pending<Response>> {
         let (tx, rx) = channel();
         self.tx
-            .send(Msg::Score(Request { tokens, resp: tx }))
+            .send(Msg::Score(Request { tokens, deadline, resp: tx }))
             .map_err(|_| anyhow::anyhow!("server gone"))?;
-        Ok(rx.recv()?)
+        Ok(Pending { rx })
+    }
+
+    /// Blocking scoring call.
+    pub fn score(&self, tokens: Vec<i32>) -> Result<Response> {
+        self.submit_score(tokens, None)?.wait()
+    }
+
+    /// Blocking scoring call that the server refuses (with
+    /// [`ServerError::DeadlineExceeded`]) once `deadline` passes —
+    /// whether the request is still queued or already mid-flight.
+    pub fn score_deadline(&self, tokens: Vec<i32>, deadline: Instant) -> Result<Response> {
+        self.submit_score(tokens, Some(deadline))?.wait()
+    }
+
+    /// Non-blocking generation submission; pair with [`Pending::wait`].
+    pub fn submit_generate(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        deadline: Option<Instant>,
+    ) -> Result<Pending<GenResponse>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Generate(GenRequest { prompt, max_new, deadline, resp: tx }))
+            .map_err(|_| anyhow::anyhow!("server gone"))?;
+        Ok(Pending { rx })
     }
 
     /// Blocking greedy-generation call: up to `max_new` tokens continuing
@@ -144,11 +288,18 @@ impl EvalClient {
     /// runs speculative decode is invisible here — the tokens are
     /// bit-identical either way.
     pub fn generate(&self, prompt: Vec<i32>, max_new: usize) -> Result<GenResponse> {
-        let (tx, rx) = channel();
-        self.tx
-            .send(Msg::Generate(GenRequest { prompt, max_new, resp: tx }))
-            .map_err(|_| anyhow::anyhow!("server gone"))?;
-        Ok(rx.recv()?)
+        self.submit_generate(prompt, max_new, None)?.wait()
+    }
+
+    /// [`EvalClient::generate`] with a deadline (same contract as
+    /// [`EvalClient::score_deadline`]).
+    pub fn generate_deadline(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        deadline: Instant,
+    ) -> Result<GenResponse> {
+        self.submit_generate(prompt, max_new, Some(deadline))?.wait()
     }
 }
 
@@ -184,6 +335,15 @@ pub struct BatchConfig {
     /// accept). Also capped by the step's chunk budget so the fairness
     /// bound keeps holding.
     pub draft_len: usize,
+    /// Admission-control bound on the waiting queue: requests arriving
+    /// while this many are already queued are shed immediately with
+    /// [`ServerError::Overloaded`] instead of growing the queue without
+    /// bound.
+    pub max_waiting: usize,
+    /// Deterministic fault-injection script (empty by default — the
+    /// no-fault fast path only pays a branch per seam). See
+    /// [`faults::FaultPlan`].
+    pub faults: FaultPlan,
 }
 
 impl Default for BatchConfig {
@@ -196,6 +356,8 @@ impl Default for BatchConfig {
             linger: Duration::from_millis(1),
             speculative: false,
             draft_len: 4,
+            max_waiting: 256,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -228,7 +390,7 @@ impl EvalServer {
         let handle = std::thread::Builder::new()
             .name("msb-eval-server".into())
             .spawn(move || serve(factory(), rx, linger))
-            .expect("spawn server");
+            .unwrap_or_else(|e| panic!("spawn server thread: {e}"));
         (EvalServer { handle: Some(handle), tx: Some(tx) }, client)
     }
 
@@ -250,17 +412,27 @@ impl EvalServer {
         let handle = std::thread::Builder::new()
             .name("msb-batch-server".into())
             .spawn(move || serve_batched(model, arena, rx, cfg))
-            .expect("spawn batch server");
+            .unwrap_or_else(|e| panic!("spawn batch server thread: {e}"));
         Ok((EvalServer { handle: Some(handle), tx: Some(tx) }, client))
     }
 
     /// Stop the server and collect telemetry. Safe to call with client
-    /// handles still alive: an explicit stop message ends the loop.
-    pub fn shutdown(mut self) -> ServerStats {
+    /// handles still alive: an explicit stop message ends the loop. The
+    /// continuous batcher drains: in-flight streams finish, queued and
+    /// late requests are refused with [`ServerError::ShuttingDown`].
+    /// Returns `Err` when the server thread itself died of a panic — a
+    /// dead server is never mistaken for a clean zero-stat run (the
+    /// panic payload rides the error).
+    pub fn shutdown(mut self) -> Result<ServerStats> {
         if let Some(tx) = self.tx.take() {
             let _ = tx.send(Msg::Stop);
         }
-        self.handle.take().map(|h| h.join().unwrap_or_default()).unwrap_or_default()
+        match self.handle.take() {
+            Some(h) => h.join().map_err(|p| {
+                anyhow::anyhow!("server thread panicked: {}", panic_text(p.as_ref()))
+            }),
+            None => Err(anyhow::anyhow!("server already shut down")),
+        }
     }
 }
 
@@ -275,6 +447,16 @@ impl Drop for EvalServer {
     }
 }
 
+/// Typed refusal of a generation request on the static batcher, which
+/// has no stream state to decode with.
+fn refuse_static_generate(g: GenRequest, stats: &mut ServerStats) {
+    stats.requests += 1;
+    stats.rejected += 1;
+    let _ = g.resp.send(Err(ServerError::InvalidRequest(
+        "generation requires the continuous batcher (spawn_batched)".into(),
+    )));
+}
+
 fn serve<M: LogitsFn>(model: M, rx: Receiver<Msg>, linger: Duration) -> ServerStats {
     let (b, t, v) = (model.batch(), model.seq(), model.vocab());
     let mut stats = ServerStats::default();
@@ -284,9 +466,7 @@ fn serve<M: LogitsFn>(model: M, rx: Receiver<Msg>, linger: Duration) -> ServerSt
         let first = loop {
             match rx.recv() {
                 Ok(Msg::Score(r)) => break r,
-                // generation needs the continuous batcher's stream state;
-                // dropping the sender tells the client "unsupported"
-                Ok(Msg::Generate(_)) => continue,
+                Ok(Msg::Generate(g)) => refuse_static_generate(g, &mut stats),
                 Ok(Msg::Stop) | Err(_) => return stats,
             }
         };
@@ -301,7 +481,7 @@ fn serve<M: LogitsFn>(model: M, rx: Receiver<Msg>, linger: Duration) -> ServerSt
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(Msg::Score(r)) => pending.push(r),
-                Ok(Msg::Generate(_)) => continue,
+                Ok(Msg::Generate(g)) => refuse_static_generate(g, &mut stats),
                 Ok(Msg::Stop) => {
                     stop_after = true;
                     break;
@@ -311,28 +491,79 @@ fn serve<M: LogitsFn>(model: M, rx: Receiver<Msg>, linger: Duration) -> ServerSt
             }
         }
 
+        // Up-front validation and deadline enforcement: a request that
+        // cannot be served honestly gets a typed refusal instead of
+        // riding (and possibly poisoning) the batch. The static batcher
+        // keeps its documented fixed-shape truncation contract, so
+        // tokens are validated post-truncation.
+        let now = Instant::now();
+        let mut batch: Vec<Request> = Vec::with_capacity(pending.len());
+        for req in pending {
+            if req.deadline.is_some_and(|d| now >= d) {
+                stats.requests += 1;
+                stats.deadline_missed += 1;
+                let _ = req.resp.send(Err(ServerError::DeadlineExceeded));
+                continue;
+            }
+            let n = req.tokens.len().min(t);
+            if let Some(&bad) = req.tokens[..n].iter().find(|&&tok| tok < 0 || tok as usize >= v)
+            {
+                stats.requests += 1;
+                stats.rejected += 1;
+                let _ = req.resp.send(Err(ServerError::InvalidRequest(format!(
+                    "token {bad} outside the vocab (0..{v})"
+                ))));
+                continue;
+            }
+            batch.push(req);
+        }
+        if batch.is_empty() {
+            if stop_after {
+                return stats;
+            }
+            continue;
+        }
+
         // assemble the batch
         let mut tokens = vec![0i32; b * t];
-        for (row, req) in pending.iter().enumerate() {
+        for (row, req) in batch.iter().enumerate() {
             let n = req.tokens.len().min(t);
             tokens[row * t..row * t + n].copy_from_slice(&req.tokens[..n]);
         }
-        let logits = match model.logits(&tokens) {
+        // Panic isolation: a fault inside the forward (poisoned weights,
+        // kernel bug) fails this batch with a typed error instead of
+        // killing the server thread and every future request with it.
+        let outcome = match catch_unwind(AssertUnwindSafe(|| model.logits(&tokens))) {
+            Ok(Ok(l)) => Ok(l),
+            Ok(Err(e)) => Err(format!("forward error: {e:#}")),
+            Err(p) => Err(format!("panic in forward: {}", panic_text(p.as_ref()))),
+        };
+        let logits = match outcome {
             Ok(l) => l,
-            Err(_) => continue, // drop the batch; clients see closed channel
+            Err(fault) => {
+                stats.requests += batch.len() as u64;
+                stats.faulted += batch.len() as u64;
+                for req in batch {
+                    let _ = req.resp.send(Err(ServerError::StreamFaulted(fault.clone())));
+                }
+                if stop_after {
+                    return stats;
+                }
+                continue;
+            }
         };
         let lp = crate::eval::LogProbs::new(&logits, v);
         batch_id += 1;
         stats.batches += 1;
-        stats.requests += pending.len() as u64;
-        stats.max_batch_fill = stats.max_batch_fill.max(pending.len());
-        for (row, req) in pending.into_iter().enumerate() {
+        stats.requests += batch.len() as u64;
+        stats.max_batch_fill = stats.max_batch_fill.max(batch.len());
+        for (row, req) in batch.into_iter().enumerate() {
             let n = req.tokens.len().min(t);
             let mut logprobs = Vec::with_capacity(n.saturating_sub(1));
             for p in 1..n {
                 logprobs.push(lp.logp(row * t + p - 1, req.tokens[p] as usize));
             }
-            let _ = req.resp.send(Response { logprobs, batch_id });
+            let _ = req.resp.send(Ok(Response { logprobs, batch_id }));
         }
         if stop_after {
             return stats;
@@ -342,8 +573,22 @@ fn serve<M: LogitsFn>(model: M, rx: Receiver<Msg>, linger: Duration) -> ServerSt
 
 /// What a stream owes its client when it retires.
 enum Reply {
-    Score(Sender<Response>),
-    Gen(Sender<GenResponse>),
+    Score(Sender<Result<Response, ServerError>>),
+    Gen(Sender<Result<GenResponse, ServerError>>),
+}
+
+impl Reply {
+    /// Terminal typed failure, scoring or generation alike.
+    fn send_err(self, e: ServerError) {
+        match self {
+            Reply::Score(tx) => {
+                let _ = tx.send(Err(e));
+            }
+            Reply::Gen(tx) => {
+                let _ = tx.send(Err(e));
+            }
+        }
+    }
 }
 
 /// Decode-side state of a generation stream.
@@ -361,15 +606,24 @@ struct GenState {
     /// reject, +1 on a full accept, so streams the drafter reads well
     /// speculate deep and hostile streams pay ~1 wasted position.
     draft_len: usize,
+    /// Set after a drafter fault: the stream finishes on plain greedy
+    /// decode (graceful degradation — a drafter bug costs speed, never
+    /// the stream, and the output is bit-identical anyway).
+    degraded: bool,
 }
 
 /// One live stream of the continuous batcher: the request it came from,
 /// how far it has decoded, and the running logprob/generation state.
 struct Active {
     id: crate::forward::StreamId,
-    /// Committed tokens: the (truncated) request for scoring streams;
-    /// prompt + verified greedy output for generation streams. Draft
-    /// tokens never enter here until they pass verification.
+    /// Admission ordinal (0-based, FIFO): how [`FaultPlan`] addresses
+    /// streams, and stable across the stream's whole life.
+    ordinal: u64,
+    /// The request's deadline; checked between coalesced steps.
+    deadline: Option<Instant>,
+    /// Committed tokens: the request for scoring streams; prompt +
+    /// verified greedy output for generation streams. Draft tokens never
+    /// enter here until they pass verification.
     tokens: Vec<i32>,
     /// Positions already fed through `step_batch` (== the stream's KV
     /// length; speculative rejects roll both back together).
@@ -392,6 +646,87 @@ enum Plan {
     Decode { k: usize },
 }
 
+/// Post-step fate of one stream, decided index-aligned with `active`
+/// and applied in a single descending `swap_remove` sweep (so earlier
+/// removals never shift later indices).
+enum Fate {
+    Keep,
+    /// Scoring stream fully fed: reply with its logprobs.
+    Retire,
+    /// Internal fault attributed to this stream: free its pages, reply
+    /// [`ServerError::StreamFaulted`] with the payload.
+    Quarantine(String),
+}
+
+/// `true` once `d` has passed (requests without a deadline never expire).
+fn expired(d: Option<Instant>, now: Instant) -> bool {
+    d.is_some_and(|d| now >= d)
+}
+
+fn msg_deadline(m: &Msg) -> Option<Instant> {
+    match m {
+        Msg::Score(r) => r.deadline,
+        Msg::Generate(r) => r.deadline,
+        Msg::Stop => None,
+    }
+}
+
+/// Terminal typed reply for a request that never reaches a stream slot.
+fn reject_msg(msg: Msg, err: ServerError, stats: &mut ServerStats) {
+    match msg {
+        Msg::Score(req) => {
+            let _ = req.resp.send(Err(err));
+        }
+        Msg::Generate(req) => {
+            let _ = req.resp.send(Err(err));
+        }
+        Msg::Stop => return,
+    }
+    stats.requests += 1;
+}
+
+/// Admission control at the channel edge: queue the request, or shed it
+/// with [`ServerError::Overloaded`] when the waiting line is full.
+fn enqueue(
+    m: Msg,
+    waiting: &mut VecDeque<(Msg, u64)>,
+    step_idx: u64,
+    max_waiting: usize,
+    stats: &mut ServerStats,
+) {
+    if waiting.len() >= max_waiting {
+        stats.shed += 1;
+        let err = ServerError::Overloaded { waiting: waiting.len(), limit: max_waiting };
+        reject_msg(m, err, stats);
+    } else {
+        waiting.push_back((m, step_idx));
+    }
+}
+
+/// One fused step under a panic shield: a panic anywhere inside
+/// `step_batch` (kernel, arena invariant, injected fault) becomes an
+/// `Err` carrying the payload instead of killing the scheduler thread.
+/// The injection seam fires inside the shield, so scripted panics take
+/// exactly the path a real one would.
+fn catch_step(
+    model: &ForwardModel,
+    arena: &mut KvArena,
+    slots: &[StreamSlot<'_>],
+    plan: &FaultPlan,
+    step: u64,
+    ordinals: &[u64],
+) -> Result<Vec<Vec<f32>>, String> {
+    let attempt = catch_unwind(AssertUnwindSafe(|| {
+        plan.maybe_panic(step, ordinals);
+        model.step_batch(arena, slots)
+    }));
+    match attempt {
+        Ok(Ok(outs)) => Ok(outs),
+        Ok(Err(e)) => Err(format!("step error: {e:#}")),
+        Err(p) => Err(format!("panic in fused step: {}", panic_text(p.as_ref()))),
+    }
+}
+
 fn serve_batched(
     model: ForwardModel,
     mut arena: KvArena,
@@ -402,6 +737,7 @@ fn serve_batched(
     let max_streams = cfg.max_streams.max(1);
     let prefill_chunk = cfg.prefill_chunk.max(1);
     let draft_cap = cfg.draft_len.max(1);
+    let max_waiting = cfg.max_waiting.max(1);
     let mut stats = ServerStats::default();
     let mut waiting: VecDeque<(Msg, u64)> = VecDeque::new();
     let mut active: Vec<Active> = Vec::new();
@@ -409,11 +745,16 @@ fn serve_batched(
     let mut stop = false;
     loop {
         // Ingest: block (with linger) only when there is nothing to run;
-        // otherwise drain whatever has arrived between steps.
+        // otherwise drain whatever has arrived between steps. Arrivals
+        // beyond the waiting bound shed immediately; after a stop the
+        // server drains — in-flight streams finish, everything else is
+        // refused.
         if !stop {
             if active.is_empty() && waiting.is_empty() {
                 match rx.recv() {
-                    Ok(m @ (Msg::Score(_) | Msg::Generate(_))) => waiting.push_back((m, step_idx)),
+                    Ok(m @ (Msg::Score(_) | Msg::Generate(_))) => {
+                        enqueue(m, &mut waiting, step_idx, max_waiting, &mut stats);
+                    }
                     Ok(Msg::Stop) | Err(_) => break,
                 }
                 let deadline = Instant::now() + cfg.linger;
@@ -424,7 +765,7 @@ fn serve_batched(
                     }
                     match rx.recv_timeout(deadline - now) {
                         Ok(m @ (Msg::Score(_) | Msg::Generate(_))) => {
-                            waiting.push_back((m, step_idx));
+                            enqueue(m, &mut waiting, step_idx, max_waiting, &mut stats);
                         }
                         Ok(Msg::Stop) => {
                             stop = true;
@@ -441,7 +782,7 @@ fn serve_batched(
                 loop {
                     match rx.try_recv() {
                         Ok(m @ (Msg::Score(_) | Msg::Generate(_))) => {
-                            waiting.push_back((m, step_idx));
+                            enqueue(m, &mut waiting, step_idx, max_waiting, &mut stats);
                         }
                         Ok(Msg::Stop) | Err(TryRecvError::Disconnected) => {
                             stop = true;
@@ -451,36 +792,90 @@ fn serve_batched(
                     }
                 }
             }
+        } else {
+            loop {
+                match rx.try_recv() {
+                    Ok(m @ (Msg::Score(_) | Msg::Generate(_))) => {
+                        reject_msg(m, ServerError::ShuttingDown, &mut stats);
+                    }
+                    Ok(Msg::Stop) => {}
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
+            }
+        }
+        if stop && !waiting.is_empty() {
+            // Drain semantics: only already-admitted streams finish, so
+            // shutdown latency is bounded by the in-flight work; the
+            // waiting line is refused, not silently run.
+            for (m, _) in waiting.drain(..) {
+                reject_msg(m, ServerError::ShuttingDown, &mut stats);
+            }
         }
 
-        // FIFO admission into open slots. Requests already queued when
-        // the stop arrived still run; only the channel closes.
+        // Deadlines expire in the queue too — sweep before admission so
+        // an expired waiter neither occupies a slot nor pays a prefill.
+        let queue_now = Instant::now();
+        if waiting.iter().any(|(m, _)| expired(msg_deadline(m), queue_now)) {
+            let mut kept = VecDeque::with_capacity(waiting.len());
+            for (m, e) in waiting.drain(..) {
+                if expired(msg_deadline(&m), queue_now) {
+                    stats.deadline_missed += 1;
+                    reject_msg(m, ServerError::DeadlineExceeded, &mut stats);
+                } else {
+                    kept.push_back((m, e));
+                }
+            }
+            waiting = kept;
+        }
+
+        // FIFO admission into open slots, validating up front: a request
+        // that cannot be served honestly is refused with a typed
+        // [`ServerError::InvalidRequest`] instead of silently truncated
+        // or dropped with a closed channel.
         while active.len() < max_streams {
             let Some((msg, enqueued)) = waiting.pop_front() else { break };
             stats.max_wait_steps = stats.max_wait_steps.max(step_idx - enqueued);
+            if expired(msg_deadline(&msg), Instant::now()) {
+                stats.deadline_missed += 1;
+                reject_msg(msg, ServerError::DeadlineExceeded, &mut stats);
+                continue;
+            }
             match msg {
                 Msg::Score(req) => {
-                    let mut tokens = req.tokens;
-                    tokens.truncate(seq);
-                    if tokens.is_empty() {
+                    if req.tokens.len() > seq {
+                        stats.rejected += 1;
+                        stats.requests += 1;
+                        let _ = req.resp.send(Err(ServerError::InvalidRequest(format!(
+                            "request length {} exceeds the context window ({seq})",
+                            req.tokens.len()
+                        ))));
+                        continue;
+                    }
+                    if req.tokens.is_empty() {
                         // same contract as the static batcher: no predictions
                         stats.requests += 1;
                         let _ = req
                             .resp
-                            .send(Response { logprobs: Vec::new(), batch_id: step_idx });
+                            .send(Ok(Response { logprobs: Vec::new(), batch_id: step_idx }));
                         continue;
                     }
-                    if tokens.iter().any(|&t| t < 0 || t as usize >= vocab) {
-                        // reject at admission (sender drops; client sees a
-                        // closed channel) instead of poisoning a whole
-                        // coalesced step
+                    if let Some(&bad) =
+                        req.tokens.iter().find(|&&t| t < 0 || t as usize >= vocab)
+                    {
+                        stats.rejected += 1;
                         stats.requests += 1;
+                        let _ = req.resp.send(Err(ServerError::InvalidRequest(format!(
+                            "token {bad} outside the vocab (0..{vocab})"
+                        ))));
                         continue;
                     }
+                    let ordinal = stats.admitted;
                     stats.admitted += 1;
                     active.push(Active {
                         id: arena.alloc_stream(),
-                        tokens,
+                        ordinal,
+                        deadline: req.deadline,
+                        tokens: req.tokens,
                         fed: 0,
                         logprobs: Vec::new(),
                         last_row: None,
@@ -489,28 +884,47 @@ fn serve_batched(
                     });
                 }
                 Msg::Generate(req) => {
-                    let mut prompt = req.prompt;
-                    prompt.truncate(seq);
-                    if prompt.is_empty() || req.max_new == 0 {
+                    if req.prompt.is_empty() || req.max_new == 0 {
+                        stats.rejected += 1;
                         stats.requests += 1;
-                        let _ = req
-                            .resp
-                            .send(GenResponse { tokens: Vec::new(), batch_id: step_idx });
+                        let _ = req.resp.send(Err(ServerError::InvalidRequest(
+                            "generation needs a non-empty prompt and max_new > 0".into(),
+                        )));
                         continue;
                     }
-                    if prompt.iter().any(|&t| t < 0 || t as usize >= vocab) {
+                    if req.prompt.len() > seq {
+                        stats.rejected += 1;
                         stats.requests += 1;
+                        let _ = req.resp.send(Err(ServerError::InvalidRequest(format!(
+                            "prompt length {} exceeds the context window ({seq})",
+                            req.prompt.len()
+                        ))));
                         continue;
                     }
+                    if let Some(&bad) =
+                        req.prompt.iter().find(|&&t| t < 0 || t as usize >= vocab)
+                    {
+                        stats.rejected += 1;
+                        stats.requests += 1;
+                        let _ = req.resp.send(Err(ServerError::InvalidRequest(format!(
+                            "token {bad} outside the vocab (0..{vocab})"
+                        ))));
+                        continue;
+                    }
+                    let ordinal = stats.admitted;
                     stats.admitted += 1;
                     // the final token comes off the last in-window logits
-                    // row without being fed back, hence the +1
-                    let max_new = req.max_new.min(seq - prompt.len() + 1);
+                    // row without being fed back, hence the +1; a budget
+                    // beyond the window clamps (documented), it does not
+                    // reject
+                    let max_new = req.max_new.min(seq - req.prompt.len() + 1);
                     let mut drafter = draft::Drafter::new(draft::DEFAULT_NGRAM);
-                    drafter.extend(&prompt);
+                    drafter.extend(&req.prompt);
                     active.push(Active {
                         id: arena.alloc_stream(),
-                        tokens: prompt,
+                        ordinal,
+                        deadline: req.deadline,
+                        tokens: req.prompt,
                         fed: 0,
                         logprobs: Vec::new(),
                         last_row: None,
@@ -519,6 +933,7 @@ fn serve_batched(
                             max_new,
                             drafter,
                             draft_len: draft_cap,
+                            degraded: false,
                         }),
                         reply: Reply::Gen(req.resp),
                     });
@@ -548,11 +963,15 @@ fn serve_batched(
                 finished.push(ai);
                 continue;
             }
-            let row = a.last_row.as_ref().expect("decode phase keeps a last row");
+            let Some(row) = a.last_row.as_ref() else {
+                unreachable!("decode phase keeps a last row")
+            };
             let next = argmax_row(row) as i32;
             a.tokens.push(next);
             g.generated.push(next);
-            g.drafter.extend(&[next]);
+            if !g.degraded {
+                g.drafter.extend(&[next]);
+            }
             if g.generated.len() >= g.max_new {
                 finished.push(ai);
             }
@@ -563,7 +982,24 @@ fn serve_batched(
             stats.requests += 1;
             stats.retired += 1;
             if let (Reply::Gen(tx), Some(g)) = (a.reply, a.gen) {
-                let _ = tx.send(GenResponse { tokens: g.generated, batch_id: step_idx });
+                let _ = tx.send(Ok(GenResponse { tokens: g.generated, batch_id: step_idx }));
+            }
+        }
+
+        // Mid-flight deadline enforcement: an expired stream is cut
+        // between steps — its pages come back immediately and the slot
+        // admits a waiter next turn, so one slow client can't hold a
+        // slot past its own budget.
+        let now = Instant::now();
+        if active.iter().any(|a| expired(a.deadline, now)) {
+            for ai in (0..active.len()).rev() {
+                if expired(active[ai].deadline, now) {
+                    let a = active.swap_remove(ai);
+                    arena.free_stream(a.id);
+                    stats.requests += 1;
+                    stats.deadline_missed += 1;
+                    a.reply.send_err(ServerError::DeadlineExceeded);
+                }
             }
         }
         if active.is_empty() {
@@ -589,15 +1025,32 @@ fn serve_batched(
         for a in active.iter_mut() {
             match a.gen.as_mut() {
                 Some(g) if !g.generated.is_empty() => {
-                    let next = *a.tokens.last().expect("decode stream has tokens");
+                    let Some(&next) = a.tokens.last() else {
+                        unreachable!("decode stream has tokens")
+                    };
                     let mut staged = vec![next];
-                    if cfg.speculative {
+                    if cfg.speculative && !g.degraded {
                         let cap = g
                             .draft_len
                             .min(chunk.saturating_sub(1))
                             .min(g.max_new - g.generated.len())
                             .min(seq - a.fed - 1);
-                        staged.extend(g.drafter.propose(cap));
+                        // Drafter shield: the drafter is heuristic
+                        // scaffolding, so a panic in it demotes the
+                        // stream to plain greedy decode (same tokens,
+                        // more steps) instead of faulting anything.
+                        let ordinal = a.ordinal;
+                        let proposed = catch_unwind(AssertUnwindSafe(|| {
+                            cfg.faults.maybe_panic_draft(step_idx, ordinal);
+                            g.drafter.propose(cap)
+                        }));
+                        match proposed {
+                            Ok(d) => staged.extend(d),
+                            Err(_) => {
+                                g.degraded = true;
+                                stats.degraded += 1;
+                            }
+                        }
                     }
                     plans.push(Plan::Decode { k: staged.len() - 1 });
                     chunks.push(staged);
@@ -609,22 +1062,51 @@ fn serve_batched(
                 }
             }
         }
+        // Deterministic fault pressure (no-op without an injection plan).
+        cfg.faults.stall();
         let slots: Vec<StreamSlot<'_>> = active
             .iter()
             .zip(&chunks)
             .map(|(a, c)| StreamSlot { id: a.id, tokens: c })
             .collect();
-        let outs = match model.step_batch(&mut arena, &slots) {
-            Ok(o) => o,
-            Err(_) => {
-                // defensive: tokens are pre-validated and the arena is
-                // sized for max_streams full-context streams, so this is
-                // unreachable in normal operation — fail the affected
-                // streams, keep serving
-                for a in active.drain(..) {
-                    arena.free_stream(a.id);
+        let ordinals: Vec<u64> = active.iter().map(|a| a.ordinal).collect();
+        let round = step_idx;
+        let attempt = catch_step(&model, &mut arena, &slots, &cfg.faults, round, &ordinals);
+        let outcomes: Vec<Result<Vec<f32>, String>> = match attempt {
+            Ok(outs) if outs.len() == active.len() => outs.into_iter().map(Ok).collect(),
+            Ok(outs) => {
+                // contract breach — fault every stream rather than risk
+                // misattributing rows across streams
+                let msg =
+                    format!("step returned {} outputs for {} streams", outs.len(), active.len());
+                active.iter().map(|_| Err(msg.clone())).collect()
+            }
+            Err(batch_fault) => {
+                // Panic isolation: the coalesced step died. No stream's
+                // `fed` has advanced (arena lengths only move at the end
+                // of a clean fused pass), so truncating each stream back
+                // to `fed` restores its pre-step KV bookkeeping exactly.
+                // Replaying every stream solo is bit-identical to the
+                // coalesced step by the per-stream identity contract, so
+                // whichever stream fails alone is the faulty one — it is
+                // quarantined below while its siblings keep their rows.
+                let mut v: Vec<Result<Vec<f32>, String>> = Vec::with_capacity(active.len());
+                for (ai, a) in active.iter().enumerate() {
+                    if let Err(e) = arena.truncate_stream(a.id, a.fed) {
+                        v.push(Err(format!("{batch_fault}; pre-replay rollback failed: {e:#}")));
+                        continue;
+                    }
+                    let solo = [StreamSlot { id: a.id, tokens: &chunks[ai] }];
+                    match catch_step(&model, &mut arena, &solo, &cfg.faults, round, &[a.ordinal])
+                    {
+                        Ok(outs) => match outs.into_iter().next() {
+                            Some(rows) => v.push(Ok(rows)),
+                            None => v.push(Err("solo replay returned no logits".into())),
+                        },
+                        Err(fault) => v.push(Err(fault)),
+                    }
                 }
-                continue;
+                v
             }
         };
         step_idx += 1;
@@ -636,10 +1118,25 @@ fn serve_batched(
         }
         stats.step_width_hist[width - 1] += 1;
 
-        // Per-stream output processing.
-        let mut done = Vec::new();
-        for (ai, out) in outs.into_iter().enumerate() {
+        // Per-stream output processing, index-aligned with `active`.
+        let mut fates: Vec<Fate> = Vec::with_capacity(active.len());
+        for (ai, outcome) in outcomes.into_iter().enumerate() {
             let a = &mut active[ai];
+            let mut out = match outcome {
+                Ok(rows) => rows,
+                Err(fault) => {
+                    fates.push(Fate::Quarantine(fault));
+                    continue;
+                }
+            };
+            // NaN quarantine: scripted poison lands here; a real
+            // non-finite activation surfacing in the logits takes the
+            // same door.
+            cfg.faults.poison_logits(round, a.ordinal, &mut out);
+            if out.iter().any(|v| !v.is_finite()) {
+                fates.push(Fate::Quarantine(format!("non-finite logits at step {round}")));
+                continue;
+            }
             let w = out.len() / vocab;
             match plans[ai] {
                 // Speculative verification: row i's argmax is the true
@@ -649,7 +1146,9 @@ fn serve_batched(
                 // wrong prefix; their pages roll back below.
                 Plan::Decode { k } => {
                     let staged = &chunks[ai];
-                    let g = a.gen.as_mut().expect("decode plan implies gen state");
+                    let Some(g) = a.gen.as_mut() else {
+                        unreachable!("decode plan implies gen state")
+                    };
                     let preds: Vec<i32> =
                         argmax_rows(&out, vocab).into_iter().map(|p| p as i32).collect();
                     let j = draft::longest_accept(&staged[1..], &preds);
@@ -660,7 +1159,9 @@ fn serve_batched(
                     // already in place from the fused pass
                     a.tokens.extend_from_slice(&staged[1..1 + j]);
                     g.generated.extend_from_slice(&staged[1..1 + j]);
-                    g.drafter.extend(&staged[1..1 + j]);
+                    if !g.degraded {
+                        g.drafter.extend(&staged[1..1 + j]);
+                    }
                     if k > 0 {
                         g.draft_len = if j == k {
                             (g.draft_len + 1).min(draft_cap)
@@ -672,16 +1173,21 @@ fn serve_batched(
                     a.fed += 1 + j;
                     if j < k {
                         // page-level rollback of the rejected tail
-                        arena
-                            .truncate_stream(a.id, a.fed)
-                            .expect("rollback within the stream's fed length");
+                        if let Err(e) = arena.truncate_stream(a.id, a.fed) {
+                            fates.push(Fate::Quarantine(format!(
+                                "speculative rollback failed: {e:#}"
+                            )));
+                            continue;
+                        }
                     }
+                    fates.push(Fate::Keep);
                 }
                 Plan::Committed if a.gen.is_some() => {
                     // generation prefill: advance; the commit pass above
                     // turns the last row into the first generated token
                     a.last_row = Some(out[(w - 1) * vocab..w * vocab].to_vec());
                     a.fed += w;
+                    fates.push(Fate::Keep);
                 }
                 // Scoring logprob assembly: the chunk's first token is
                 // scored by the previous chunk's last row, the rest by
@@ -689,7 +1195,9 @@ fn serve_batched(
                 // unbatched path.
                 Plan::Committed => {
                     if a.fed > 0 {
-                        let last = a.last_row.as_ref().expect("fed > 0 keeps a last row");
+                        let Some(last) = a.last_row.as_ref() else {
+                            unreachable!("fed > 0 keeps a last row")
+                        };
                         let lp = crate::eval::LogProbs::new(last, vocab);
                         a.logprobs.push(lp.logp(0, a.tokens[a.fed] as usize));
                     }
@@ -699,27 +1207,43 @@ fn serve_batched(
                     }
                     a.last_row = Some(out[(w - 1) * vocab..w * vocab].to_vec());
                     a.fed += w;
-                    if a.fed == a.tokens.len() {
-                        done.push(ai);
-                    }
+                    fates.push(if a.fed == a.tokens.len() { Fate::Retire } else { Fate::Keep });
                 }
             }
         }
-        // Retire finished scoring streams; their pages recycle
-        // immediately, and the freed slots admit waiters on the next loop
-        // turn. (Generation streams retire in the commit pass.)
-        for ai in done.into_iter().rev() {
-            let a = active.swap_remove(ai);
-            arena.free_stream(a.id);
-            stats.requests += 1;
-            stats.retired += 1;
-            if let Reply::Score(tx) = a.reply {
-                let _ = tx.send(Response { logprobs: a.logprobs, batch_id: step_idx });
+        // One descending sweep applies every fate; retired and
+        // quarantined pages recycle immediately, and the freed slots
+        // admit waiters on the next loop turn. (Generation streams
+        // retire in the commit pass.)
+        for (ai, fate) in fates.into_iter().enumerate().rev() {
+            match fate {
+                Fate::Keep => {}
+                Fate::Retire => {
+                    let a = active.swap_remove(ai);
+                    arena.free_stream(a.id);
+                    stats.requests += 1;
+                    stats.retired += 1;
+                    if let Reply::Score(tx) = a.reply {
+                        let _ = tx.send(Ok(Response { logprobs: a.logprobs, batch_id: step_idx }));
+                    }
+                }
+                Fate::Quarantine(fault) => {
+                    let a = active.swap_remove(ai);
+                    arena.free_stream(a.id);
+                    stats.requests += 1;
+                    stats.faulted += 1;
+                    a.reply.send_err(ServerError::StreamFaulted(fault));
+                    debug_assert!(arena.balanced(), "page imbalance after quarantine");
+                }
             }
         }
         if stop && active.is_empty() && waiting.is_empty() {
             break;
         }
+    }
+    // Refuse anything that raced the stop message into the channel.
+    while let Ok(m) = rx.try_recv() {
+        reject_msg(m, ServerError::ShuttingDown, &mut stats);
     }
     stats.peak_pages = arena.peak_pages();
     stats.total_pages = arena.total_pages();
@@ -737,7 +1261,7 @@ fn serve_batched(
 struct GemvRequest {
     layer: String,
     x: Vec<f32>,
-    resp: Sender<Result<Vec<f32>>>,
+    resp: Sender<Result<Vec<f32>, ServerError>>,
 }
 
 enum GemvMsg {
@@ -751,6 +1275,11 @@ pub struct GemvStats {
     /// Fused `gemm` dispatches — coalescing makes this < `requests`.
     pub batches: u64,
     pub max_batch_fill: usize,
+    /// Requests refused up front ([`ServerError::InvalidRequest`]).
+    pub rejected: u64,
+    /// Requests that died to a panic in the fused gemm
+    /// ([`ServerError::StreamFaulted`]).
+    pub faulted: u64,
 }
 
 /// Client handle for [`GemvServer`]: cloneable, thread-safe.
@@ -760,13 +1289,17 @@ pub struct GemvClient {
 }
 
 impl GemvClient {
-    /// Blocking fused-matvec call against a packed layer.
+    /// Blocking fused-matvec call against a packed layer. Refusals and
+    /// faults surface as a typed [`ServerError`] inside the `anyhow`
+    /// chain (`downcast_ref::<ServerError>` to branch on them).
     pub fn infer(&self, layer: &str, x: Vec<f32>) -> Result<Vec<f32>> {
         let (tx, rx) = channel();
         self.tx
             .send(GemvMsg::Infer(GemvRequest { layer: layer.to_string(), x, resp: tx }))
             .map_err(|_| anyhow::anyhow!("gemv server gone"))?;
-        rx.recv()?
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("gemv server dropped the request"))?
+            .map_err(anyhow::Error::from)
     }
 }
 
@@ -797,16 +1330,24 @@ impl GemvServer {
         let handle = std::thread::Builder::new()
             .name("msb-gemv-server".into())
             .spawn(move || serve_gemv(model, rx, threads, cap, linger))
-            .expect("spawn gemv server");
+            .unwrap_or_else(|e| panic!("spawn gemv server thread: {e}"));
         (GemvServer { handle: Some(handle), tx: Some(tx) }, client)
     }
 
     /// Stop the server and collect telemetry (safe with live clients).
-    pub fn shutdown(mut self) -> GemvStats {
+    /// A server thread that died to a panic surfaces that panic's
+    /// payload as the error — it is never mistaken for a clean
+    /// zero-stat run.
+    pub fn shutdown(mut self) -> Result<GemvStats> {
         if let Some(tx) = self.tx.take() {
             let _ = tx.send(GemvMsg::Stop);
         }
-        self.handle.take().map(|h| h.join().unwrap_or_default()).unwrap_or_default()
+        match self.handle.take() {
+            Some(h) => h.join().map_err(|p| {
+                anyhow::anyhow!("gemv server thread panicked: {}", panic_text(p.as_ref()))
+            }),
+            None => Err(anyhow::anyhow!("gemv server already shut down")),
+        }
     }
 }
 
@@ -862,7 +1403,10 @@ fn serve_gemv(
         for (layer, reqs) in groups {
             let Some(l) = model.linear(&layer) else {
                 for r in reqs {
-                    let _ = r.resp.send(Err(anyhow::anyhow!("no packed layer '{layer}'")));
+                    stats.rejected += 1;
+                    let _ = r.resp.send(Err(ServerError::InvalidRequest(format!(
+                        "no packed layer '{layer}'"
+                    ))));
                 }
                 continue;
             };
@@ -872,8 +1416,11 @@ fn serve_gemv(
                 if r.x.len() == cols {
                     valid.push(r);
                 } else {
-                    let msg = anyhow::anyhow!("{layer}: x len {} != cols {cols}", r.x.len());
-                    let _ = r.resp.send(Err(msg));
+                    stats.rejected += 1;
+                    let _ = r.resp.send(Err(ServerError::InvalidRequest(format!(
+                        "{layer}: x len {} != cols {cols}",
+                        r.x.len()
+                    ))));
                 }
             }
             if valid.is_empty() {
@@ -885,12 +1432,27 @@ fn serve_gemv(
                 xs[b * cols..(b + 1) * cols].copy_from_slice(&r.x);
             }
             // the batch buffer is handed to the jobs as-is (gemm_shared):
-            // assembling it above was the only copy
-            let ys = l.gemm_shared(std::sync::Arc::new(xs), batch, &pool);
+            // assembling it above was the only copy. A panic inside the
+            // fused kernels faults this one batch, not the server: the
+            // pool recovers poisoned stripes, so the next batch runs.
+            let ys = catch_unwind(AssertUnwindSafe(|| {
+                l.gemm_shared(std::sync::Arc::new(xs), batch, &pool)
+            }));
             stats.batches += 1;
             stats.max_batch_fill = stats.max_batch_fill.max(batch);
-            for (b, r) in valid.into_iter().enumerate() {
-                let _ = r.resp.send(Ok(ys[b * rows..(b + 1) * rows].to_vec()));
+            match ys {
+                Ok(ys) => {
+                    for (b, r) in valid.into_iter().enumerate() {
+                        let _ = r.resp.send(Ok(ys[b * rows..(b + 1) * rows].to_vec()));
+                    }
+                }
+                Err(p) => {
+                    let msg = format!("panic in fused gemm: {}", panic_text(p.as_ref()));
+                    for r in valid {
+                        stats.faulted += 1;
+                        let _ = r.resp.send(Err(ServerError::StreamFaulted(msg.clone())));
+                    }
+                }
             }
         }
         if stop_after {
@@ -900,6 +1462,7 @@ fn serve_gemv(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::eval::mock::SuccessorModel;
@@ -915,7 +1478,7 @@ mod tests {
         assert_eq!(r.logprobs.len(), 3);
         // successor tokens are high-probability
         assert!(r.logprobs.iter().all(|&lp| lp > -0.5), "{:?}", r.logprobs);
-        let stats = server.shutdown();
+        let stats = server.shutdown().unwrap();
         assert_eq!(stats.requests, 1);
     }
 
@@ -932,7 +1495,7 @@ mod tests {
         let responses: Vec<Response> =
             handles.into_iter().map(|h| h.join().unwrap()).collect();
         drop(client);
-        let stats = server.shutdown();
+        let stats = server.shutdown().unwrap();
         assert_eq!(stats.requests, 4);
         assert!(stats.batches < 4, "requests must coalesce: {stats:?}");
         // at least two shared a batch id
@@ -948,7 +1511,7 @@ mod tests {
         let r = client.score((0..50).collect()).unwrap();
         assert_eq!(r.logprobs.len(), 7); // seq=8 -> 7 predictions
         drop(client);
-        server.shutdown();
+        server.shutdown().unwrap();
     }
 
     #[test]
@@ -986,8 +1549,9 @@ mod tests {
         use crate::forward::{synth, ForwardModel};
         use crate::kernels::MacMode;
         let (fs, map) = forward_payload();
-        // uneven lengths; one overlong request exercises truncation
-        let reqs: Vec<Vec<i32>> = [5usize, 8, 3, 6, 10, 4]
+        // uneven lengths, all within the window (overlong requests are
+        // refused up front now, covered separately)
+        let reqs: Vec<Vec<i32>> = [5usize, 8, 3, 6, 7, 4]
             .iter()
             .enumerate()
             .map(|(i, &len)| synth::synth_tokens(&fs, len, 50 + i as u64))
@@ -1008,7 +1572,7 @@ mod tests {
                     .map(|t| solo_cli.score(t.clone()).unwrap().logprobs)
                     .collect();
                 drop(solo_cli);
-                solo_srv.shutdown();
+                solo_srv.shutdown().unwrap();
 
                 // 3 slots for 6 requests: admission queue + retirement
                 // churn; page_tokens 3 leaves partial pages; chunk 2
@@ -1037,7 +1601,7 @@ mod tests {
                     );
                 }
                 drop(cli);
-                let stats = srv.shutdown();
+                let stats = srv.shutdown().unwrap();
                 assert_eq!(stats.admitted, 6, "{stats:?}");
                 assert_eq!(stats.retired, 6, "every stream must retire: {stats:?}");
                 assert_eq!(stats.requests, 6);
@@ -1061,15 +1625,23 @@ mod tests {
             EvalServer::spawn_batched(model, BatchConfig::default()).unwrap();
         // empty request: empty logprobs, same as the static batcher
         assert!(cli.score(vec![]).unwrap().logprobs.is_empty());
-        // out-of-vocab tokens are rejected (closed channel), and the
+        // out-of-vocab tokens are rejected with a typed error, and the
         // server keeps serving afterwards
-        assert!(cli.score(vec![1, 999]).is_err());
+        let err = cli.score(vec![1, 999]).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<ServerError>(),
+                Some(ServerError::InvalidRequest(_))
+            ),
+            "{err:#}"
+        );
         let ok = cli.score(vec![1, 2, 3]).unwrap();
         assert_eq!(ok.logprobs.len(), 2);
         drop(cli);
-        let stats = srv.shutdown();
+        let stats = srv.shutdown().unwrap();
         assert_eq!(stats.requests, 3);
         assert_eq!(stats.admitted, 1, "only the valid non-empty request ran: {stats:?}");
+        assert_eq!(stats.rejected, 1, "{stats:?}");
     }
 
     // -----------------------------------------------------------------------
@@ -1132,7 +1704,7 @@ mod tests {
         }
         let outs = handles.into_iter().map(|h| h.join().unwrap()).collect();
         drop(cli);
-        (outs, srv.shutdown())
+        (outs, srv.shutdown().unwrap())
     }
 
     /// Exact mirror of the single-stream speculative schedule: given the
@@ -1380,11 +1952,18 @@ mod tests {
             BatchConfig { speculative: true, ..BatchConfig::default() },
         )
         .unwrap();
-        // empty prompt / zero budget: empty generation, not an error
-        assert!(cli.generate(vec![], 5).unwrap().tokens.is_empty());
-        assert!(cli.generate(vec![1, 2], 0).unwrap().tokens.is_empty());
-        // out-of-vocab prompt: rejected (closed channel), server survives
-        assert!(cli.generate(vec![1, 999], 3).is_err());
+        // empty prompt / zero budget / out-of-vocab prompt: all refused
+        // up front with a typed error, server survives every one
+        for bad in [(vec![], 5usize), (vec![1, 2], 0), (vec![1, 999], 3)] {
+            let err = cli.generate(bad.0, bad.1).unwrap_err();
+            assert!(
+                matches!(
+                    err.downcast_ref::<ServerError>(),
+                    Some(ServerError::InvalidRequest(_))
+                ),
+                "{err:#}"
+            );
+        }
         // budget clamps to the context window: seq=8, prompt 3 -> <= 6 new
         let clamped = cli.generate(vec![1, 2, 3], 100).unwrap();
         assert_eq!(clamped.tokens.len(), 6);
@@ -1392,19 +1971,29 @@ mod tests {
         // scoring and generation interleave on the same server
         assert_eq!(cli.score(vec![1, 2, 3]).unwrap().logprobs.len(), 2);
         drop(cli);
-        let stats = srv.shutdown();
+        let stats = srv.shutdown().unwrap();
         assert_eq!(stats.leaked_pages, 0);
         assert_eq!(stats.requests, 6);
+        assert_eq!(stats.rejected, 3, "{stats:?}");
+        assert_eq!(stats.admitted, 3, "{stats:?}");
+        assert_eq!(stats.retired, 3, "{stats:?}");
 
         // the static batcher has no stream state: generation errors
         let (ssrv, scli) = EvalServer::spawn(
             crate::eval::mock::SuccessorModel { batch: 2, seq: 8, vocab: 16, boost: 6.0 },
             Duration::from_millis(1),
         );
-        assert!(scli.generate(vec![1, 2], 3).is_err());
+        let serr = scli.generate(vec![1, 2], 3).unwrap_err();
+        assert!(
+            matches!(
+                serr.downcast_ref::<ServerError>(),
+                Some(ServerError::InvalidRequest(_))
+            ),
+            "{serr:#}"
+        );
         assert_eq!(scli.score(vec![1, 2, 3]).unwrap().logprobs.len(), 2);
         drop(scli);
-        ssrv.shutdown();
+        ssrv.shutdown().unwrap();
     }
 
     // -----------------------------------------------------------------------
@@ -1474,7 +2063,7 @@ mod tests {
             assert_eq!(&got, y, "{name}: served != serial gemv");
         }
         drop(client);
-        let stats = server.shutdown();
+        let stats = server.shutdown().unwrap();
         assert_eq!(stats.requests, expect.len() as u64);
     }
 
@@ -1496,7 +2085,7 @@ mod tests {
             assert_eq!(h.join().unwrap(), serial[i], "request {i}");
         }
         drop(client);
-        let stats = server.shutdown();
+        let stats = server.shutdown().unwrap();
         assert_eq!(stats.requests, 4);
         assert!(stats.batches < 4, "same-layer requests must coalesce: {stats:?}");
         assert!(stats.max_batch_fill >= 2);
@@ -1553,7 +2142,7 @@ mod tests {
                 );
             }
             drop(client);
-            let stats = server.shutdown();
+            let stats = server.shutdown().unwrap();
             assert_eq!(stats.requests, 8, "mac={}", mac.name());
             assert!(
                 stats.batches < 8,
@@ -1569,12 +2158,470 @@ mod tests {
         let fm = fused_model();
         let cols = fm.linear("wq").unwrap().cols();
         let (server, client) = GemvServer::spawn(fm, 1, 4, Duration::from_millis(1));
-        assert!(client.infer("nope", probe(8, 1)).is_err());
-        assert!(client.infer("wq", probe(cols + 1, 2)).is_err());
+        for err in [
+            client.infer("nope", probe(8, 1)).unwrap_err(),
+            client.infer("wq", probe(cols + 1, 2)).unwrap_err(),
+        ] {
+            assert!(
+                matches!(
+                    err.downcast_ref::<ServerError>(),
+                    Some(ServerError::InvalidRequest(_))
+                ),
+                "{err:#}"
+            );
+        }
         // the server survives bad requests and keeps serving good ones
         assert_eq!(client.infer("wq", probe(cols, 3)).unwrap().len(), 24);
         drop(client);
-        let stats = server.shutdown();
+        let stats = server.shutdown().unwrap();
         assert_eq!(stats.requests, 3);
+        assert_eq!(stats.rejected, 2, "{stats:?}");
+    }
+
+    // -----------------------------------------------------------------------
+    // fault tolerance (deterministic injection)
+    // -----------------------------------------------------------------------
+
+    /// Submit scoring requests from one thread — FIFO channel + FIFO
+    /// admission makes the admission ordinals exactly the submission
+    /// order — and collect every outcome.
+    fn run_scores(cli: &EvalClient, reqs: &[Vec<i32>]) -> Vec<Result<Response>> {
+        let pending: Vec<Pending<Response>> = reqs
+            .iter()
+            .map(|t| cli.submit_score(t.clone(), None).unwrap())
+            .collect();
+        pending.into_iter().map(|p| p.wait()).collect()
+    }
+
+    fn assert_stream_faulted(r: &Result<Response>, needle: &str, ctx: &str) {
+        let err = r.as_ref().unwrap_err();
+        match err.downcast_ref::<ServerError>() {
+            Some(ServerError::StreamFaulted(m)) => {
+                assert!(m.contains(needle), "{ctx}: fault payload missing '{needle}': {m}")
+            }
+            other => panic!("{ctx}: expected StreamFaulted, got {other:?} / {err:#}"),
+        }
+    }
+
+    /// Acceptance grid: a scripted panic inside the fused step at round 1
+    /// against admission ordinal 1 kills ONLY that stream — the siblings'
+    /// logprobs stay bit-identical to a clean run, the arena leaks no
+    /// pages, and the server answers new requests afterwards — across
+    /// MacMode {F32, Int8} x threads {1, 4}.
+    #[test]
+    fn fault_injection_grid_quarantines_only_the_faulted_stream() {
+        use crate::forward::{synth, ForwardModel};
+        use crate::kernels::MacMode;
+        let (fs, map) = forward_payload();
+        let reqs: Vec<Vec<i32>> = [5usize, 7, 6]
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| synth::synth_tokens(&fs, len, 90 + i as u64))
+            .collect();
+        // chunk 2 keeps every stream alive through round 1 (where the
+        // fault is scripted); the linger window lets all three requests
+        // join the first admission wave
+        let cfg = |faults: FaultPlan| BatchConfig {
+            max_streams: 3,
+            kv_page_tokens: 3,
+            prefill_chunk: 2,
+            linger: Duration::from_millis(200),
+            faults,
+            ..BatchConfig::default()
+        };
+        for mac in [MacMode::F32, MacMode::Int8] {
+            for threads in [1usize, 4] {
+                let ctx = format!("mac {mac:?}, threads {threads}");
+                let build = || {
+                    ForwardModel::from_packed_map_with(fs.clone(), &map, mac)
+                        .unwrap()
+                        .with_threads(threads)
+                };
+                let (srv, cli) =
+                    EvalServer::spawn_batched(build(), cfg(FaultPlan::new())).unwrap();
+                let clean: Vec<Vec<f64>> = run_scores(&cli, &reqs)
+                    .into_iter()
+                    .map(|r| r.unwrap().logprobs)
+                    .collect();
+                drop(cli);
+                srv.shutdown().unwrap();
+
+                let plan = FaultPlan::new().panic_at(1, 1);
+                let (srv, cli) = EvalServer::spawn_batched(build(), cfg(plan)).unwrap();
+                let got = run_scores(&cli, &reqs);
+                assert_stream_faulted(&got[1], "injected fault", &ctx);
+                for i in [0usize, 2] {
+                    assert_eq!(
+                        got[i].as_ref().unwrap().logprobs,
+                        clean[i],
+                        "survivor {i} diverged from the clean run ({ctx})"
+                    );
+                }
+                // the server keeps serving after the quarantine
+                let after = cli.score(reqs[0].clone()).unwrap();
+                assert_eq!(after.logprobs, clean[0], "post-fault request ({ctx})");
+                drop(cli);
+                let stats = srv.shutdown().unwrap();
+                assert_eq!(stats.faulted, 1, "{ctx}: {stats:?}");
+                assert_eq!(stats.admitted, 4, "{ctx}: {stats:?}");
+                assert_eq!(stats.retired, 3, "{ctx}: {stats:?}");
+                assert_eq!(stats.requests, 4, "{ctx}: {stats:?}");
+                assert_eq!(stats.leaked_pages, 0, "{ctx}: {stats:?}");
+            }
+        }
+    }
+
+    /// Scripted NaN logits take the non-finite detector's door: the
+    /// poisoned stream is quarantined, its sibling is untouched.
+    #[test]
+    fn fault_nan_logits_quarantine_the_poisoned_stream() {
+        use crate::forward::{synth, ForwardModel};
+        let (fs, map) = forward_payload();
+        let reqs: Vec<Vec<i32>> = [5usize, 6]
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| synth::synth_tokens(&fs, len, 90 + i as u64))
+            .collect();
+        let cfg = |faults: FaultPlan| BatchConfig {
+            max_streams: 2,
+            kv_page_tokens: 3,
+            prefill_chunk: 2,
+            linger: Duration::from_millis(200),
+            faults,
+            ..BatchConfig::default()
+        };
+        let build = || ForwardModel::from_packed_map(fs.clone(), &map).unwrap();
+        let (srv, cli) = EvalServer::spawn_batched(build(), cfg(FaultPlan::new())).unwrap();
+        let clean: Vec<Vec<f64>> =
+            run_scores(&cli, &reqs).into_iter().map(|r| r.unwrap().logprobs).collect();
+        drop(cli);
+        srv.shutdown().unwrap();
+
+        let plan = FaultPlan::new().nan_at(1, 0);
+        let (srv, cli) = EvalServer::spawn_batched(build(), cfg(plan)).unwrap();
+        let got = run_scores(&cli, &reqs);
+        assert_stream_faulted(&got[0], "non-finite", "nan injection");
+        assert_eq!(got[1].as_ref().unwrap().logprobs, clean[1], "sibling diverged");
+        drop(cli);
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.faulted, 1, "{stats:?}");
+        assert_eq!(stats.leaked_pages, 0, "{stats:?}");
+    }
+
+    /// Deadlines are enforced both before a request ever occupies a slot
+    /// and between coalesced steps once it is running.
+    #[test]
+    fn fault_deadline_checked_at_admission_and_mid_flight() {
+        use crate::forward::{synth, ForwardModel};
+        let (fs, map) = forward_payload_seq(64);
+        let model = ForwardModel::from_packed_map(fs.clone(), &map).unwrap();
+        let cfg = BatchConfig {
+            prefill_chunk: 2,
+            faults: FaultPlan::new().with_step_delay(Duration::from_millis(30)),
+            ..BatchConfig::default()
+        };
+        let (srv, cli) = EvalServer::spawn_batched(model, cfg).unwrap();
+        // already expired: refused before touching a stream slot
+        let err = cli.score_deadline(vec![1, 2, 3], Instant::now()).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServerError>(), Some(ServerError::DeadlineExceeded)),
+            "{err:#}"
+        );
+        // expires mid-flight: 40 new tokens at >= 30ms per step cannot
+        // finish inside 100ms, so the stream is cut between steps
+        let prompt = synth::synth_tokens(&fs, 4, 7);
+        let err = cli
+            .generate_deadline(prompt, 40, Instant::now() + Duration::from_millis(100))
+            .unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServerError>(), Some(ServerError::DeadlineExceeded)),
+            "{err:#}"
+        );
+        // deadline-free requests still serve
+        assert_eq!(cli.score(vec![1, 2, 3]).unwrap().logprobs.len(), 2);
+        drop(cli);
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.deadline_missed, 2, "{stats:?}");
+        assert_eq!(stats.requests, 3, "{stats:?}");
+        assert_eq!(stats.leaked_pages, 0, "{stats:?}");
+    }
+
+    /// Admission control: with one slot, two waiting spots and a stalled
+    /// step, six back-to-back requests resolve deterministically into
+    /// three served and three shed with [`ServerError::Overloaded`].
+    #[test]
+    fn fault_overload_sheds_excess_requests() {
+        use crate::forward::{synth, ForwardModel};
+        let (fs, map) = forward_payload();
+        let model = ForwardModel::from_packed_map(fs.clone(), &map).unwrap();
+        // 4-token prompts at chunk 2 take two rounds each; the 60ms
+        // stall guarantees requests 1..6 are all drained while request 0
+        // is still stepping, so the queue decides: 2 wait, 3 shed.
+        let cfg = BatchConfig {
+            max_streams: 1,
+            prefill_chunk: 2,
+            max_waiting: 2,
+            linger: Duration::from_millis(1),
+            faults: FaultPlan::new().with_step_delay(Duration::from_millis(60)),
+            ..BatchConfig::default()
+        };
+        let (srv, cli) = EvalServer::spawn_batched(model, cfg).unwrap();
+        let reqs: Vec<Vec<i32>> =
+            (0..6u64).map(|i| synth::synth_tokens(&fs, 4, 30 + i)).collect();
+        let results = run_scores(&cli, &reqs);
+        for (i, r) in results.iter().enumerate() {
+            if i < 3 {
+                assert!(r.is_ok(), "request {i} should have served: {r:?}");
+            } else {
+                let err = r.as_ref().unwrap_err();
+                assert!(
+                    matches!(
+                        err.downcast_ref::<ServerError>(),
+                        Some(ServerError::Overloaded { limit: 2, .. })
+                    ),
+                    "request {i}: {err:#}"
+                );
+            }
+        }
+        drop(cli);
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.shed, 3, "{stats:?}");
+        assert_eq!(stats.admitted, 3, "{stats:?}");
+        assert_eq!(stats.retired, 3, "{stats:?}");
+        assert_eq!(stats.requests, 6, "{stats:?}");
+    }
+
+    /// Every class of unservable request is refused up front with
+    /// [`ServerError::InvalidRequest`] — no silent truncation, no closed
+    /// channels — and the server keeps serving.
+    #[test]
+    fn fault_invalid_requests_rejected_up_front() {
+        use crate::forward::ForwardModel;
+        let (fs, map) = forward_payload(); // seq = 8, vocab = 48
+        let model = ForwardModel::from_packed_map(fs, &map).unwrap();
+        let (srv, cli) = EvalServer::spawn_batched(model, BatchConfig::default()).unwrap();
+        let errs = [
+            cli.score((0..9).collect()).unwrap_err(), // overlong
+            cli.score(vec![1, 999]).unwrap_err(),     // out-of-vocab
+            cli.generate(vec![], 5).unwrap_err(),     // empty prompt
+            cli.generate(vec![1, 2], 0).unwrap_err(), // zero budget
+            cli.generate((0..9).collect(), 2).unwrap_err(), // overlong prompt
+        ];
+        for err in &errs {
+            assert!(
+                matches!(err.downcast_ref::<ServerError>(), Some(ServerError::InvalidRequest(_))),
+                "{err:#}"
+            );
+        }
+        assert_eq!(cli.score(vec![1, 2, 3]).unwrap().logprobs.len(), 2);
+        drop(cli);
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.rejected, 5, "{stats:?}");
+        assert_eq!(stats.admitted, 1, "{stats:?}");
+        assert_eq!(stats.requests, 6, "{stats:?}");
+    }
+
+    /// Shutdown drains: the in-flight generation finishes bit-identical
+    /// to solo greedy decode while concurrent new work is refused with
+    /// [`ServerError::ShuttingDown`].
+    #[test]
+    fn fault_drain_finishes_in_flight_and_rejects_new() {
+        use crate::forward::{synth, ForwardModel};
+        let (fs, map) = forward_payload_seq(32);
+        let build = || ForwardModel::from_packed_map(fs.clone(), &map).unwrap();
+        let prompt = synth::synth_tokens(&fs, 4, 9);
+        let want = solo_greedy(&build(), &prompt, 10);
+        let cfg = BatchConfig {
+            prefill_chunk: 4,
+            faults: FaultPlan::new().with_step_delay(Duration::from_millis(25)),
+            ..BatchConfig::default()
+        };
+        let (srv, cli) = EvalServer::spawn_batched(build(), cfg).unwrap();
+        let gen = cli.submit_generate(prompt, 10, None).unwrap();
+        // let the stream get going, then stop the server while it runs
+        std::thread::sleep(Duration::from_millis(40));
+        let drainer = std::thread::spawn(move || srv.shutdown().unwrap());
+        std::thread::sleep(Duration::from_millis(30));
+        // new work during the drain is refused...
+        let err = cli.score(vec![1, 2, 3]).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServerError>(), Some(ServerError::ShuttingDown)),
+            "{err:#}"
+        );
+        // ...while the in-flight stream still finishes, exactly
+        assert_eq!(gen.wait().unwrap().tokens, want);
+        let stats = drainer.join().unwrap();
+        assert_eq!(stats.retired, 1, "{stats:?}");
+        assert_eq!(stats.requests, 2, "{stats:?}");
+        assert_eq!(stats.leaked_pages, 0, "{stats:?}");
+    }
+
+    /// A drafter panic demotes its stream to plain greedy decode: no
+    /// draft is ever proposed, the output is unchanged, nothing faults.
+    #[test]
+    fn fault_drafter_panic_demotes_stream_to_plain_decode() {
+        use crate::forward::ForwardModel;
+        let (fs, map) = forward_payload_seq(32);
+        let build = || ForwardModel::from_packed_map(fs.clone(), &map).unwrap();
+        let (chunk, draft_cap) = (4usize, 3usize);
+        let (prompt, max_new, _) = find_accepting_workload(&build(), chunk, draft_cap, 12);
+        let want = solo_greedy(&build(), &prompt, max_new);
+        let cfg = |faults: FaultPlan| BatchConfig {
+            speculative: true,
+            draft_len: draft_cap,
+            prefill_chunk: chunk,
+            faults,
+            ..BatchConfig::default()
+        };
+        let jobs = vec![(prompt.clone(), max_new)];
+        let (out, stats) = run_generate(build(), cfg(FaultPlan::new()), &jobs);
+        assert_eq!(out[0], want);
+        assert!(stats.drafted > 0, "workload must draft: {stats:?}");
+        assert_eq!(stats.degraded, 0, "{stats:?}");
+
+        // the first decode staging happens right after the last prefill
+        // round — a drafter panic there means no proposal ever lands
+        let demote_round = prompt.len().div_ceil(chunk) as u64;
+        let plan = FaultPlan::new().draft_panic_at(demote_round, 0);
+        let (out, stats) = run_generate(build(), cfg(plan), &jobs);
+        assert_eq!(out[0], want, "demoted stream must still decode exactly");
+        assert_eq!(stats.drafted, 0, "demotion must precede any draft: {stats:?}");
+        assert_eq!(stats.degraded, 1, "{stats:?}");
+        assert_eq!(stats.faulted, 0, "{stats:?}");
+        assert_eq!(stats.retired, 1, "{stats:?}");
+    }
+
+    /// Speculative decode under a scripted mid-decode panic: the
+    /// faulting generation stream is quarantined (pages freed), its
+    /// sibling finishes bit-identical to solo greedy decode.
+    #[test]
+    fn fault_panic_during_speculative_decode_spares_the_sibling() {
+        use crate::forward::{synth, ForwardModel};
+        let (fs, map) = forward_payload_seq(32);
+        let build = || ForwardModel::from_packed_map(fs.clone(), &map).unwrap();
+        let jobs: Vec<(Vec<i32>, usize)> = vec![
+            (synth::synth_tokens(&fs, 6, 11), 10),
+            (synth::synth_tokens(&fs, 6, 12), 10),
+        ];
+        let want1 = solo_greedy(&build(), &jobs[1].0, jobs[1].1);
+        // 6-token prompts at chunk 3 prefill through round 1, and decode
+        // commits at most 3 tokens per round — so both streams are still
+        // decoding at round 4, where stream 0's panic is scripted
+        let cfg = BatchConfig {
+            max_streams: 2,
+            kv_page_tokens: 4,
+            prefill_chunk: 3,
+            linger: Duration::from_millis(100),
+            speculative: true,
+            draft_len: 3,
+            faults: FaultPlan::new().panic_at(4, 0),
+            ..BatchConfig::default()
+        };
+        let (srv, cli) = EvalServer::spawn_batched(build(), cfg).unwrap();
+        let pending: Vec<Pending<GenResponse>> = jobs
+            .iter()
+            .map(|(p, m)| cli.submit_generate(p.clone(), *m, None).unwrap())
+            .collect();
+        let results: Vec<Result<GenResponse>> =
+            pending.into_iter().map(|p| p.wait()).collect();
+        let err = results[0].as_ref().unwrap_err();
+        match err.downcast_ref::<ServerError>() {
+            Some(ServerError::StreamFaulted(m)) => {
+                assert!(m.contains("injected fault"), "{m}")
+            }
+            other => panic!("expected StreamFaulted, got {other:?} / {err:#}"),
+        }
+        assert_eq!(results[1].as_ref().unwrap().tokens, want1, "sibling diverged");
+        drop(cli);
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.faulted, 1, "{stats:?}");
+        assert_eq!(stats.retired, 1, "{stats:?}");
+        assert_eq!(stats.leaked_pages, 0, "{stats:?}");
+    }
+
+    /// A panic outside the shielded regions (here: model setup inside
+    /// the server thread) kills the server — and `shutdown` surfaces
+    /// that panic instead of reporting a clean zero-stat run.
+    #[test]
+    fn fault_dead_server_thread_surfaces_its_panic() {
+        struct PanickyModel;
+        impl LogitsFn for PanickyModel {
+            fn batch(&self) -> usize {
+                panic!("injected construction fault")
+            }
+            fn seq(&self) -> usize {
+                8
+            }
+            fn vocab(&self) -> usize {
+                16
+            }
+            fn logits(&self, _tokens: &[i32]) -> Result<Vec<f32>> {
+                anyhow::bail!("unreachable")
+            }
+        }
+        let (srv, cli) = EvalServer::spawn(PanickyModel, Duration::from_millis(1));
+        assert!(cli.score(vec![1, 2]).is_err(), "a dead server must not answer");
+        let err = srv.shutdown().unwrap_err();
+        assert!(err.to_string().contains("injected construction fault"), "{err:#}");
+    }
+
+    /// Static batcher: a panic inside the forward faults that batch with
+    /// a typed error and the server keeps serving afterwards.
+    #[test]
+    fn fault_static_batcher_quarantines_panicking_forward() {
+        struct PanicOnToken {
+            inner: SuccessorModel,
+        }
+        impl LogitsFn for PanicOnToken {
+            fn batch(&self) -> usize {
+                self.inner.batch()
+            }
+            fn seq(&self) -> usize {
+                self.inner.seq()
+            }
+            fn vocab(&self) -> usize {
+                self.inner.vocab()
+            }
+            fn logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+                assert!(!tokens.contains(&7), "injected forward fault");
+                self.inner.logits(tokens)
+            }
+        }
+        let (srv, cli) =
+            EvalServer::spawn(PanicOnToken { inner: model() }, Duration::from_millis(1));
+        let err = cli.score(vec![1, 7]).unwrap_err();
+        match err.downcast_ref::<ServerError>() {
+            Some(ServerError::StreamFaulted(m)) => {
+                assert!(m.contains("injected forward fault"), "{m}")
+            }
+            other => panic!("expected StreamFaulted, got {other:?} / {err:#}"),
+        }
+        assert_eq!(cli.score(vec![1, 2, 3]).unwrap().logprobs.len(), 2);
+        drop(cli);
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.requests, 2, "{stats:?}");
+        assert_eq!(stats.faulted, 1, "{stats:?}");
+    }
+
+    /// Static batcher: typed refusals for invalid and expired requests.
+    #[test]
+    fn fault_static_batcher_rejects_invalid_and_expired_requests() {
+        let (srv, cli) = EvalServer::spawn(model(), Duration::from_millis(1));
+        let err = cli.score(vec![1, 999]).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServerError>(), Some(ServerError::InvalidRequest(_))),
+            "{err:#}"
+        );
+        let err = cli.score_deadline(vec![1, 2, 3], Instant::now()).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServerError>(), Some(ServerError::DeadlineExceeded)),
+            "{err:#}"
+        );
+        assert_eq!(cli.score(vec![1, 2, 3]).unwrap().logprobs.len(), 2);
+        drop(cli);
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.requests, 3, "{stats:?}");
+        assert_eq!(stats.rejected, 1, "{stats:?}");
+        assert_eq!(stats.deadline_missed, 1, "{stats:?}");
     }
 }

@@ -225,7 +225,7 @@ fn fused_gemv_serves_packed_file_end_to_end() {
         assert_eq!(&got, want, "{name}: served != serial fused gemv");
     }
     drop(client);
-    let stats = server.shutdown();
+    let stats = server.shutdown().unwrap();
     assert_eq!(stats.requests, probes.len() as u64);
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -2,24 +2,29 @@
 //!
 //! The container this repo builds in has no crates.io access, so the crate
 //! set must be fully offline. This shim implements exactly the surface the
-//! workspace uses — [`Error`], [`Result`], the [`Context`] trait and the
+//! workspace uses — [`Error`], [`Result`], the [`Context`] trait,
+//! [`Error::downcast_ref`] for typed-error recovery, and the
 //! `anyhow!` / `bail!` / `ensure!` macros — with string-based context
 //! frames instead of `anyhow`'s type-erased backtrace machinery. Swapping
 //! back to the real crate is a one-line `Cargo.toml` change; no call site
 //! depends on anything beyond the real crate's semantics.
 
+use std::any::Any;
 use std::fmt;
 
 /// A string-chained error: `frames[0]` is the outermost context, the last
-/// frame is the root cause.
+/// frame is the root cause. When built from a typed `std::error::Error`
+/// (the `?` / `From` path), the original value rides along so
+/// [`Error::downcast_ref`] can recover it through any context layers.
 pub struct Error {
     frames: Vec<String>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Create an error from a printable message (the `anyhow!` entry point).
     pub fn msg<M: fmt::Display>(message: M) -> Self {
-        Error { frames: vec![message.to_string()] }
+        Error { frames: vec![message.to_string()], payload: None }
     }
 
     fn push_context(mut self, context: impl fmt::Display) -> Self {
@@ -35,6 +40,18 @@ impl Error {
     /// Iterate over the context chain, outermost first.
     pub fn chain(&self) -> impl Iterator<Item = &str> {
         self.frames.iter().map(String::as_str)
+    }
+
+    /// The typed root cause, if this error was converted from a `T` via
+    /// `?` / `From`. Context frames added later don't hide it — the same
+    /// contract as the real crate's downcast through the cause chain.
+    pub fn downcast_ref<T: Any>(&self) -> Option<&T> {
+        self.payload.as_deref().and_then(|p| p.downcast_ref::<T>())
+    }
+
+    /// Whether the typed root cause is a `T` (see [`Error::downcast_ref`]).
+    pub fn is<T: Any>(&self) -> bool {
+        self.downcast_ref::<T>().is_some()
     }
 }
 
@@ -76,7 +93,7 @@ where
             frames.push(cause.to_string());
             source = cause.source();
         }
-        Error { frames }
+        Error { frames, payload: Some(Box::new(err)) }
     }
 }
 
@@ -183,6 +200,34 @@ mod tests {
     fn from_std_error_via_question_mark() {
         let err = io_fail().unwrap_err();
         assert!(!err.root_message().is_empty());
+    }
+
+    #[derive(Debug, PartialEq)]
+    struct Typed(u32);
+
+    impl fmt::Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.0)
+        }
+    }
+
+    impl std::error::Error for Typed {}
+
+    #[test]
+    fn downcast_ref_recovers_typed_root_cause() {
+        let err = Error::from(Typed(7));
+        assert!(err.is::<Typed>());
+        assert_eq!(err.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(err.downcast_ref::<std::io::Error>().is_none());
+
+        // Context layers change what `{}` prints but not the typed root.
+        let res: Result<()> = Err(err);
+        let wrapped = res.context("outer").unwrap_err();
+        assert_eq!(wrapped.root_message(), "outer");
+        assert_eq!(wrapped.downcast_ref::<Typed>(), Some(&Typed(7)));
+
+        // Message-built errors carry no typed payload.
+        assert!(anyhow!("plain {}", 1).downcast_ref::<Typed>().is_none());
     }
 
     #[test]
